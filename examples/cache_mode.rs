@@ -1,0 +1,80 @@
+//! Cache-mode walkthrough: one graph workload (PageRank over a
+//! synthetic power-law graph with a footprint ~2x the in-package
+//! memory) on four in-package systems, reporting execution cycles,
+//! hit rates, Monarch wear-rotation activity and the estimated
+//! lifetime — the Fig 9/10/11 machinery on a single workload.
+//!
+//! Run: `cargo run --release --example cache_mode -- [--scale S]`
+
+use anyhow::Result;
+use monarch::config::{InPackageKind, SystemConfig};
+use monarch::monarch::LifetimeEstimator;
+use monarch::prelude::*;
+use monarch::sim::{InPackage, System};
+use monarch::workloads::graph;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let scale = args.f64_or("scale", 1.0 / 2048.0)?;
+    let ops = args.usize_or("trace-ops", 30_000)?;
+    let cfg0 = SystemConfig::scaled(InPackageKind::DramCache, scale);
+    let target = 2 * cfg0.monarch.total_bytes();
+    let n = (target / 36).max(1024);
+    println!("building graph: {n} vertices (~{} MB CSR)", target >> 20);
+    let g = graph::Graph::random(n, 8, 42);
+    let wl = graph::pagerank(&g, 16, ops, 3);
+
+    let systems = [
+        InPackageKind::DramCache,
+        InPackageKind::DramCacheIdeal,
+        InPackageKind::MonarchUnbound,
+        InPackageKind::Monarch { m: 3 },
+    ];
+    let mut t = Table::new("PageRank in cache mode").header(vec![
+        "system",
+        "cycles",
+        "L3 hit",
+        "L4 hit",
+        "rotations",
+        "energy (mJ)",
+        "speedup",
+    ]);
+    let mut base_cycles = 0u64;
+    for kind in systems {
+        let mut sys = System::build(SystemConfig::scaled(kind, scale));
+        let mut replay = wl.replay();
+        let r = sys.run(&mut replay, u64::MAX);
+        if base_cycles == 0 {
+            base_cycles = r.cycles;
+        }
+        t.row(vec![
+            r.system.clone(),
+            r.cycles.to_string(),
+            format!("{:.1}%", 100.0 * r.l3_hit_rate),
+            format!("{:.1}%", 100.0 * r.inpkg_hit_rate),
+            r.rotations.to_string(),
+            format!("{:.2}", r.energy_nj / 1e6),
+            format!("{:.2}x", base_cycles as f64 / r.cycles as f64),
+        ]);
+        // lifetime estimate from the Monarch run's wear snapshots
+        if let InPackage::Monarch(mc) = &sys.inpkg {
+            if kind == (InPackageKind::Monarch { m: 3 }) {
+                let est = LifetimeEstimator::default();
+                let intra = mc.intra_imbalance();
+                for intervals in mc.wear_intervals() {
+                    if !intervals.is_empty() {
+                        let lr = est.estimate(&intervals, r.cycles, intra);
+                        println!(
+                            "  lifetime (worst vault sample): ideal {:.1}y, \
+                             Monarch {:.1}y (intra-imbalance {:.2})",
+                            lr.ideal_years, lr.monarch_years, lr.imbalance
+                        );
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    t.print();
+    Ok(())
+}

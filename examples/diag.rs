@@ -1,0 +1,48 @@
+//! Wear/install diagnostics: one PageRank run on RC-Unbound,
+//! M-Unbound and Monarch(M=3), dumping the controller counters that
+//! explain Fig 9's ordering — install dedup, D/R skips, t_MWW
+//! bypasses and rotations.
+//!
+//! Run: `cargo run --release --example diag`
+
+use monarch::config::{InPackageKind, SystemConfig};
+use monarch::sim::{InPackage, System};
+use monarch::workloads::graph;
+
+fn main() {
+    let g = graph::Graph::random(500_000, 8, 0xBEEF);
+    let wl = graph::pagerank(&g, 16, 30_000, 3);
+    for kind in [
+        InPackageKind::RramUnbound,
+        InPackageKind::MonarchUnbound,
+        InPackageKind::Monarch { m: 3 },
+    ] {
+        let mut sys = System::build(SystemConfig::scaled(kind, 1.0 / 2048.0));
+        let mut r = wl.replay();
+        let rep = sys.run(&mut r, u64::MAX);
+        println!(
+            "== {} cycles={} hit={:.1}%",
+            rep.system,
+            rep.cycles,
+            100.0 * rep.inpkg_hit_rate
+        );
+        match &sys.inpkg {
+            InPackage::Monarch(mc) => {
+                for (k, v) in mc.stats.iter() {
+                    println!("   {k}={v}");
+                }
+            }
+            InPackage::Tech(t) => {
+                for (k, v) in t.stats.iter() {
+                    println!("   {k}={v}");
+                }
+            }
+            _ => {}
+        }
+        println!(
+            "   ddr reads={} writes={}",
+            rep.counters.get("ddr4.reads"),
+            rep.counters.get("ddr4.writes")
+        );
+    }
+}

@@ -1,0 +1,77 @@
+//! End-to-end driver (DESIGN.md: the validation run recorded in
+//! EXPERIMENTS.md): hopscotch hashing under YCSB-B (zipfian, 95%/5%
+//! read/write) executed on all five memory systems — HBM-C, HBM-SP,
+//! CMOS, RRAM(flat) and Monarch — reporting throughput, speedups over
+//! HBM-C, and energy, i.e. the paper's §10.4 headline experiment.
+//!
+//! Run: `cargo run --release --example hashing_ycsb -- [--ops N]
+//!       [--table-pow2 K] [--window W]`
+
+use anyhow::Result;
+use monarch::config::MonarchGeom;
+use monarch::coordinator::hash_systems;
+use monarch::prelude::*;
+use monarch::workloads::hashing::{run_ycsb, YcsbConfig};
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let cfg = YcsbConfig {
+        table_pow2: args.usize_or("table-pow2", 15)?,
+        window: args.usize_or("window", 64)?,
+        ops: args.usize_or("ops", 40_000)?,
+        read_pct: args.f64_or("read-pct", 0.95)?,
+        prefill_density: 0.5,
+        threads: 8,
+        zipf_theta: 0.99,
+        seed: args.u64_or("seed", 0x5CB)?,
+    };
+    println!(
+        "YCSB-B hopscotch: 2^{} buckets, window {}, {} ops, {:.0}% reads",
+        cfg.table_pow2,
+        cfg.window,
+        cfg.ops,
+        cfg.read_pct * 100.0
+    );
+    let geom = MonarchGeom::FULL.scaled(1.0 / 512.0);
+    let mut reports = Vec::new();
+    for mut sys in hash_systems(cfg.table_pow2, geom) {
+        let label = sys.label();
+        let start = std::time::Instant::now();
+        let r = run_ycsb(&mut sys, &cfg);
+        println!("  {label:<8} simulated in {:?}", start.elapsed());
+        reports.push(r);
+    }
+    let base = reports[0].clone(); // HBM-C
+    let mut t = Table::new("Hashing YCSB-B — paper §10.4 (Fig 13 point)")
+        .header(vec![
+            "system",
+            "cycles",
+            "ops/Mcycle",
+            "speedup vs HBM-C",
+            "energy (uJ)",
+            "hits",
+        ]);
+    for r in &reports {
+        t.row(vec![
+            r.system.clone(),
+            r.cycles.to_string(),
+            format!("{:.1}", r.ops as f64 / (r.cycles as f64 / 1e6)),
+            format!("{:.2}x", r.speedup_vs(&base)),
+            format!("{:.1}", r.energy_nj / 1000.0),
+            r.hits.to_string(),
+        ]);
+    }
+    t.print();
+    // All systems performed identical logical work.
+    for r in &reports {
+        assert_eq!(r.ops, base.ops);
+        assert_eq!(r.hits, base.hits, "{} diverged functionally", r.system);
+    }
+    let monarch = reports.iter().find(|r| r.system == "Monarch").unwrap();
+    println!(
+        "Monarch speedup vs HBM-C: {:.2}x (paper Fig 13: >1x, growing \
+         with window size)",
+        monarch.speedup_vs(&base)
+    );
+    Ok(())
+}

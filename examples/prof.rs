@@ -1,0 +1,35 @@
+//! §Perf micro-profiler: times workload generation and one
+//! representative run per system class, reporting simulated
+//! memops/second — the number tracked in EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo run --release --example prof`
+
+use monarch::config::{InPackageKind, SystemConfig};
+use monarch::coordinator::{cache_workloads, Budget};
+use monarch::sim::System;
+use std::time::Instant;
+
+fn main() {
+    let budget = Budget { trace_ops: 5000, threads: 16, ..Budget::default() };
+    let t0 = Instant::now();
+    let wls = cache_workloads(&budget);
+    println!("workload gen: {:?} ({} workloads)", t0.elapsed(), wls.len());
+    for kind in [
+        InPackageKind::DramCache,
+        InPackageKind::Sram,
+        InPackageKind::MonarchUnbound,
+        InPackageKind::Monarch { m: 3 },
+    ] {
+        let t = Instant::now();
+        let mut sys = System::build(SystemConfig::scaled(kind, budget.scale));
+        let mut wl = wls[5].replay(); // PR
+        let r = sys.run(&mut wl, u64::MAX);
+        println!(
+            "{}: {:?} for {} memops ({:.0} ops/s)",
+            r.system,
+            t.elapsed(),
+            r.mem_ops,
+            r.mem_ops as f64 / t.elapsed().as_secs_f64()
+        );
+    }
+}

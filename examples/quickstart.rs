@@ -1,0 +1,80 @@
+//! Quickstart — the paper's Fig 6 key-value store on Monarch flat-CAM.
+//!
+//! Allocates key storage in the CAM scratchpad and values in the RAM
+//! scratchpad (`flat_cam_malloc` / `flat_ram_malloc`), populates them,
+//! sets the key/mask registers, and reads the match pointer to search
+//! — then cross-checks the search result against the AOT-compiled
+//! Pallas kernel through the PJRT runtime (if `make artifacts` ran).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use monarch::config::{MonarchGeom, WearConfig};
+use monarch::monarch::alloc::{Allocator, MATCH_REG_ADDR};
+use monarch::monarch::MonarchFlat;
+use monarch::runtime::SearchEngine;
+
+fn main() -> Result<()> {
+    // A small Monarch: 4 vaults, 64-row x 512-column XAM sets.
+    let geom = MonarchGeom {
+        vaults: 4,
+        banks_per_vault: 8,
+        supersets_per_bank: 8,
+        sets_per_superset: 8,
+        rows_per_set: 64,
+        cols_per_set: 512,
+        layers: 1,
+    };
+    let mut m =
+        MonarchFlat::new(geom, 8, WearConfig::default_m(3), u64::MAX / 4, true);
+
+    // memkind-style allocation (§7 OS Support).
+    let mut alloc = Allocator::new(1 << 30, 1 << 20, 1 << 20);
+    let keys_region = alloc.flat_cam_malloc(512 * 8)?;
+    let vals_region = alloc.flat_ram_malloc(512 * 8)?;
+    println!(
+        "flat_CAM_malloc -> {:#x}, flat_RAM_malloc -> {:#x}, match ptr {:#x}",
+        keys_region.base, vals_region.base, MATCH_REG_ADDR
+    );
+
+    // Populate 64 key/value pairs (data writes in ColumnIn CAM mode).
+    let kv: Vec<(u64, u64)> =
+        (0..64u64).map(|i| (0x1000 + i * 77, i * 1000)).collect();
+    let mut t = 0;
+    for (col, (key, _val)) in kv.iter().enumerate() {
+        t = m.cam_write(0, col, *key, t).expect("within t_MWW budget").done_at;
+        t = m.ram_access(col as u64, true, t).unwrap().done_at;
+    }
+    println!("populated {} pairs in {} cycles", kv.len(), t);
+
+    // Search: myKEY = kv[42].key, full mask (Fig 6 flow).
+    let needle = kv[42].0;
+    t = m.write_key(needle, t).done_at;
+    t = m.write_mask(!0, t).done_at;
+    let (acc, hit) = m.search(0, t);
+    println!(
+        "search completed at cycle {} -> match index {:?}",
+        acc.done_at, hit
+    );
+    assert_eq!(hit, Some(42));
+    let (a, _) = (m.ram_access(42, false, acc.done_at).unwrap(), ());
+    println!("value fetched by match pointer at cycle {}", a.done_at);
+
+    // Partial search with a byte mask (the paper's 0x0FF00 example).
+    m.write_key(needle & 0xFF00, a.done_at);
+    m.write_mask(0xFF00, a.done_at + 8);
+    let (_, partial) = m.search(0, a.done_at + 16);
+    println!("partial (one-byte) search -> first match {partial:?}");
+
+    // Cross-check against the compiled Pallas kernel (L1/L2 artifact).
+    match SearchEngine::load(&SearchEngine::default_dir()) {
+        Ok(engine) => {
+            let got = engine.search_sets(&[m.set_array(0)], &[needle], &[!0])?;
+            assert_eq!(got, vec![Some(42)]);
+            println!("PJRT kernel agrees: match index {:?}", got[0]);
+        }
+        Err(e) => println!("(skipping kernel cross-check: {e})"),
+    }
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,65 @@
+"""Pure-jnp (and pure-numpy) oracles for the XAM kernels.
+
+The CORE correctness contract: ``xam_search`` must agree bit-for-bit
+with ``search_ref`` for every shape/content. The rust array model
+(`rust/src/xam/array.rs`) is differential-tested against the same
+semantics through the AOT artifacts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def search_ref(data, key, mask):
+    """Reference masked associative search.
+
+    data: int32[B, W, C]; key, mask: int32[B, W].
+    Returns (match int32[B, C], mismatch_bits int32[B, C]).
+    """
+    data = data.astype(jnp.uint32)
+    key = key.astype(jnp.uint32)[:, :, None]
+    mask = mask.astype(jnp.uint32)[:, :, None]
+    diff = jnp.bitwise_xor(data, key) & mask
+    mism = jnp.sum(jax.lax.population_count(diff).astype(jnp.int32), axis=1)
+    return (mism == 0).astype(jnp.int32), mism
+
+
+def search_ref_np(data, key, mask):
+    """Numpy oracle (independent of jax) for the hypothesis tests."""
+    data = np.asarray(data).astype(np.uint32)
+    key = np.asarray(key).astype(np.uint32)[:, :, None]
+    mask = np.asarray(mask).astype(np.uint32)[:, :, None]
+    diff = (data ^ key) & mask  # (B, W, C)
+    b, w, c = diff.shape
+    # popcount via unpackbits over the little-endian byte view
+    bytes_ = diff.astype("<u4").view(np.uint8).reshape(b, w, c, 4)
+    bits = np.unpackbits(bytes_, axis=-1)  # (B, W, C, 32)
+    mism = bits.sum(axis=(-1, 1)).astype(np.int32)  # (B, C)
+    return (mism == 0).astype(np.int32), mism
+
+
+def first_match_ref(match):
+    """Reference priority encoder: first matching column index or -1.
+
+    match: int32[B, C] -> int32[B]
+    """
+    c = match.shape[-1]
+    idx = jnp.where(match != 0, jnp.arange(c, dtype=jnp.int32), c)
+    first = jnp.min(idx, axis=-1)
+    return jnp.where(first == c, -1, first).astype(jnp.int32)
+
+
+def write_row_ref(data, row, bits):
+    """Reference for xam_write_row: write bit-plane `row` of columns 0..31."""
+    data = np.asarray(data).astype(np.uint32).copy()
+    w, c = data.shape
+    word, bit = divmod(int(row), 32)
+    for j in range(min(c, 32)):
+        newbit = (int(bits) >> j) & 1
+        data[word, j] = (data[word, j] & ~np.uint32(1 << bit)) | np.uint32(
+            newbit << bit
+        )
+    return data.astype(np.int32)

@@ -1,0 +1,148 @@
+"""L1 — Pallas kernel for the XAM associative search (paper §4.2.2).
+
+An XAM set is an R-row x C-column crosspoint of differential 2R cells;
+a *search* applies a key (with bit mask) to the horizontal lines and
+senses every column in parallel: column j matches iff every unmasked
+key bit equals the stored bit, i.e. the in-situ XNOR of the paper.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): on TPU-class
+hardware the single-cycle analog compare becomes a bit-packed XNOR+mask
+over `uint32` lanes (VPU) with a reduction along the packed-word axis.
+Rows are packed W = R/32 words deep, so the set is a (W, C) uint32
+matrix, the key/mask are (W,) words, and one grid step processes one
+(batch, column-tile) block — the BlockSpec HBM->VMEM schedule plays the
+role of the superset H-tree.
+
+The kernel is lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); real-TPU efficiency is estimated from the VMEM
+footprint in DESIGN.md.
+
+All I/O is int32 (the rust `xla` crate round-trips i32 literals); the
+bit patterns are reinterpreted as uint32 internally.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default column-tile: one 64x512 set packed as (2, 512) u32 fits VMEM
+# trivially; tiles of 512 keep the lane dimension MXU/VPU friendly.
+DEFAULT_COL_TILE = 512
+
+
+def _search_kernel(data_ref, key_ref, mask_ref, match_ref, mism_ref):
+    """One (batch, column-tile) block of the masked-XNOR search.
+
+    data_ref : (1, W, CT) int32 — stored bits, rows packed into words
+    key_ref  : (1, W)     int32 — search key words
+    mask_ref : (1, W)     int32 — 1-bits participate in the compare
+    match_ref: (1, CT)    int32 — 1 where the column fully matches
+    mism_ref : (1, CT)    int32 — number of mismatching *bits* (sense
+                                   margin input for the analog model)
+    """
+    data = data_ref[...].astype(jnp.uint32)  # (1, W, CT)
+    key = key_ref[...].astype(jnp.uint32)  # (1, W)
+    mask = mask_ref[...].astype(jnp.uint32)  # (1, W)
+    # Broadcast the key/mask words over the column dimension.
+    diff = jnp.bitwise_xor(data, key[:, :, None]) & mask[:, :, None]
+    # Mismatching-bit count per column: the paper's pull-down strength —
+    # a single mismatching bit already drops the line below Ref_S.
+    bits = jax.lax.population_count(diff).astype(jnp.int32)  # (1, W, CT)
+    mism = jnp.sum(bits, axis=1)  # (1, CT)
+    mism_ref[...] = mism
+    match_ref[...] = (mism == 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("col_tile", "interpret"))
+def xam_search(data, key, mask, *, col_tile=DEFAULT_COL_TILE, interpret=True):
+    """Batched masked associative search over XAM sets.
+
+    Args:
+      data: int32[B, W, C] — B sets, rows packed W words deep, C columns.
+      key:  int32[B, W]    — one key per set.
+      mask: int32[B, W]    — one mask per set (1 = compare this bit).
+      col_tile: columns per grid step (must divide C).
+      interpret: run the Pallas interpreter (required on CPU PJRT).
+
+    Returns:
+      (match int32[B, C], mismatch_bits int32[B, C])
+    """
+    b, w, c = data.shape
+    col_tile = min(col_tile, c)
+    if c % col_tile:
+        raise ValueError(f"C={c} not divisible by col_tile={col_tile}")
+    grid = (b, c // col_tile)
+    return pl.pallas_call(
+        _search_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, w, col_tile), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, w), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, col_tile), lambda i, j: (i, j)),
+            pl.BlockSpec((1, col_tile), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, c), jnp.int32),
+            jax.ShapeDtypeStruct((b, c), jnp.int32),
+        ],
+        interpret=interpret,
+    )(data, key, mask)
+
+
+def _write_row_kernel(data_ref, row_word_ref, bits_ref, out_ref):
+    """Functional model of the two-step XAM row write (paper §4.1.1).
+
+    Writes `bits` (one int32 word of column-bits) into packed word
+    `row_word` of every column: first 0s then 1s — functionally a
+    read-modify-write of one bit plane. Used to validate the rust
+    array model against jax; not on any hot path.
+
+    data_ref: (W, CT) int32, row_word_ref/bits_ref: (1, 1) int32 scalars
+    broadcast per tile; out_ref: (W, CT) int32.
+    """
+    data = data_ref[...].astype(jnp.uint32)
+    w = data.shape[0]
+    row_word = row_word_ref[0, 0]
+    bit_in_word = row_word % 32
+    word_idx = row_word // 32
+    col_bits = bits_ref[0, 0].astype(jnp.uint32)  # bit j = new bit for col j
+    ct = data.shape[1]
+    lanes = jax.lax.broadcasted_iota(jnp.uint32, (ct,), 0)
+    newbits = (col_bits >> lanes) & jnp.uint32(1)  # (CT,)
+    sel = jax.lax.broadcasted_iota(jnp.uint32, (w, ct), 0) == word_idx.astype(
+        jnp.uint32
+    )
+    bitmask = jnp.uint32(1) << bit_in_word.astype(jnp.uint32)
+    updated = (data & ~bitmask) | (newbits[None, :] * bitmask)
+    out_ref[...] = jnp.where(sel, updated, data).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def xam_write_row(data, row, bits, *, interpret=True):
+    """Write one bit-plane (row) across the first 32 columns of a set.
+
+    data: int32[W, C]; row: int32 scalar; bits: int32 scalar (bit j ->
+    column j, C <= 32 semantics used by the validation tests).
+    """
+    w, c = data.shape
+    row2 = jnp.reshape(row.astype(jnp.int32), (1, 1))
+    bits2 = jnp.reshape(bits.astype(jnp.int32), (1, 1))
+    return pl.pallas_call(
+        _write_row_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((w, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((w, c), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((w, c), jnp.int32),
+        interpret=interpret,
+    )(data, row2, bits2)

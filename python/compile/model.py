@@ -1,0 +1,80 @@
+"""L2 — the JAX compute-graph around the Pallas XAM search kernel.
+
+This is the *functional* model of Monarch's hot-spot: a batched masked
+associative search across the sets of a superset, plus the priority
+encoder (match pointer, paper Fig 6) and the cache-mode tag check built
+on top of it. ``aot.py`` lowers :func:`batched_search` once per shape
+variant to HLO text; the rust runtime (`rust/src/runtime/`) loads and
+executes the artifacts on the PJRT CPU client — python never runs on
+the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.xam_search import xam_search
+
+# Canonical Monarch set geometry (Table 3): 64 rows x 512 columns per
+# set (8 subarrays of 64x64 selected diagonally), rows packed into
+# W = 64/32 = 2 uint32 words; 512 columns = the paper's 512-way
+# associativity / one data block per column.
+SET_ROWS = 64
+SET_WORDS = SET_ROWS // 32
+SET_COLS = 512
+
+
+def batched_search(data, key, mask):
+    """Search B sets in parallel and encode the match pointer.
+
+    Args:
+      data: int32[B, W, C] packed set contents.
+      key:  int32[B, W] search keys (one per set).
+      mask: int32[B, W] search masks (1 = compare).
+
+    Returns:
+      match:     int32[B, C] — per-column match vector.
+      index:     int32[B]    — first matching column or -1 (match ptr).
+      mismatch:  int32[B, C] — mismatching-bit counts (sense margin).
+    """
+    match, mism = xam_search(data, key, mask)
+    c = match.shape[-1]
+    cols = jnp.arange(c, dtype=jnp.int32)
+    idx = jnp.where(match != 0, cols, c)
+    first = jnp.min(idx, axis=-1)
+    index = jnp.where(first == c, -1, first).astype(jnp.int32)
+    return match, index, mism
+
+
+def tag_check(tags, key):
+    """Cache-mode tag lookup (paper §7 Cache Control).
+
+    Each column of a CAM set stores two 32-bit tags (64-bit column);
+    the key ID selects which half to compare via the mask. Here the
+    caller pre-splices key+mask; this wrapper checks a full-column
+    (unmasked) tag+valid compare.
+
+    tags: int32[B, W, C]; key: int32[B, W] -> (hit int32[B], way int32[B])
+    """
+    mask = jnp.full_like(key, -1)  # compare all 64 bits
+    _, index, _ = batched_search(tags, key, mask)
+    hit = (index >= 0).astype(jnp.int32)
+    return hit, index
+
+
+def search_sweep(data, keys, masks):
+    """Scan-based multi-key search: K keys against the same B sets.
+
+    Used by the string-match workload model where one 4KB broadcast
+    search compares a pattern at every alignment. keys/masks:
+    int32[K, B, W]; returns index int32[K, B].
+    """
+
+    def step(_, km):
+        k, m = km
+        _, idx, _ = batched_search(data, k, m)
+        return None, idx
+
+    _, idxs = jax.lax.scan(step, None, (keys, masks))
+    return idxs

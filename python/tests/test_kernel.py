@@ -1,0 +1,143 @@
+"""L1 correctness: Pallas xam_search vs the pure-jnp/numpy oracles.
+
+Hypothesis sweeps shapes and bit contents; dedicated cases pin the
+paper-relevant behaviours (full match, single-bit mismatch => miss,
+masking, multi-match).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import (
+    first_match_ref,
+    search_ref,
+    search_ref_np,
+    write_row_ref,
+)
+from compile.kernels.xam_search import xam_search, xam_write_row
+
+
+def rnd_i32(rng, shape):
+    return rng.integers(-(2**31), 2**31, size=shape, dtype=np.int64).astype(
+        np.int32
+    )
+
+
+def run_search(data, key, mask, col_tile):
+    m, c = xam_search(
+        jnp.asarray(data), jnp.asarray(key), jnp.asarray(mask),
+        col_tile=col_tile,
+    )
+    return np.asarray(m), np.asarray(c)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    w=st.integers(1, 4),
+    ct_pow=st.integers(3, 7),  # col_tile in {8..128}
+    tiles=st.integers(1, 3),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_search_matches_oracle(b, w, ct_pow, tiles, seed):
+    rng = np.random.default_rng(seed)
+    ct = 1 << ct_pow
+    c = ct * tiles
+    data = rnd_i32(rng, (b, w, c))
+    key = rnd_i32(rng, (b, w))
+    mask = rnd_i32(rng, (b, w))
+    got_m, got_c = run_search(data, key, mask, ct)
+    ref_m, ref_c = search_ref_np(data, key, mask)
+    np.testing.assert_array_equal(got_m, ref_m)
+    np.testing.assert_array_equal(got_c, ref_c)
+    # jnp oracle agrees with the numpy oracle too
+    jm, jc = search_ref(jnp.asarray(data), jnp.asarray(key), jnp.asarray(mask))
+    np.testing.assert_array_equal(np.asarray(jm), ref_m)
+    np.testing.assert_array_equal(np.asarray(jc), ref_c)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    w=st.integers(1, 3),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_planted_key_always_matches(b, w, seed):
+    """A column equal to the key must match under any mask."""
+    rng = np.random.default_rng(seed)
+    c = 64
+    data = rnd_i32(rng, (b, w, c))
+    key = rnd_i32(rng, (b, w))
+    mask = rnd_i32(rng, (b, w))
+    plant = rng.integers(0, c)
+    data[:, :, plant] = key
+    m, cnt = run_search(data, key, mask, 64)
+    assert (m[:, plant] == 1).all()
+    assert (cnt[:, plant] == 0).all()
+
+
+def test_single_bit_mismatch_is_miss():
+    """Paper §4.2.2: even a single mismatching bit drops the column."""
+    w, c = 2, 512
+    key = np.zeros((1, w), dtype=np.int32)
+    mask = np.full((1, w), -1, dtype=np.int32)
+    data = np.zeros((1, w, c), dtype=np.int32)
+    for bit in [0, 1, 31, 32, 63]:
+        d = data.copy()
+        col = bit % c
+        d[0, bit // 32, col] = np.int32(np.uint32(1 << (bit % 32)).view(np.int32))
+        m, cnt = run_search(d, key, mask, 512)
+        m = m.copy()
+        assert m[0, col] == 0
+        assert cnt[0, col] == 1
+        # all untouched columns still match
+        m[0, col] = 1
+        assert m.all()
+
+
+def test_mask_hides_mismatch():
+    """Masked-off bits never cause a mismatch (partial search, §7)."""
+    w, c = 2, 64
+    data = np.full((1, w, c), -1, dtype=np.int32)  # all ones stored
+    key = np.zeros((1, w), dtype=np.int32)  # all zero key
+    mask = np.zeros((1, w), dtype=np.int32)  # compare nothing
+    m, cnt = run_search(data, key, mask, 64)
+    assert m.all() and (cnt == 0).all()
+    # compare only byte 1 (paper's 0x0FF00 example, scaled to word 0)
+    mask[0, 0] = 0x0FF00
+    m, cnt = run_search(data, key, mask, 64)
+    assert not m.any()
+    assert (cnt == 8).all()
+
+
+def test_first_match_encoder():
+    match = np.zeros((3, 16), dtype=np.int32)
+    match[0, 5] = 1
+    match[0, 9] = 1  # first wins
+    match[2, 0] = 1
+    idx = np.asarray(first_match_ref(jnp.asarray(match)))
+    np.testing.assert_array_equal(idx, [5, -1, 0])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1), row=st.integers(0, 63))
+def test_write_row_kernel(seed, row):
+    rng = np.random.default_rng(seed)
+    w, c = 2, 32
+    data = rnd_i32(rng, (w, c))
+    bits = rnd_i32(rng, ())
+    got = np.asarray(
+        xam_write_row(jnp.asarray(data), jnp.asarray(row), jnp.asarray(bits))
+    )
+    ref = write_row_ref(data, row, bits)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_col_tile_must_divide():
+    data = jnp.zeros((1, 2, 100), jnp.int32)
+    kv = jnp.zeros((1, 2), jnp.int32)
+    with pytest.raises(ValueError):
+        xam_search(data, kv, kv, col_tile=64)

@@ -1,0 +1,78 @@
+"""L2 correctness: batched_search / tag_check / search_sweep semantics."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels.ref import search_ref_np
+
+
+def test_geometry_constants():
+    # Table 3: 64 rows/set, 512-way sets; rows pack into 2 u32 words.
+    assert model.SET_ROWS == 64
+    assert model.SET_WORDS == 2
+    assert model.SET_COLS == 512
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_batched_search_index(seed):
+    rng = np.random.default_rng(seed)
+    b, w, c = 4, model.SET_WORDS, model.SET_COLS
+    data = rng.integers(-(2**31), 2**31, (b, w, c)).astype(np.int32)
+    key = rng.integers(-(2**31), 2**31, (b, w)).astype(np.int32)
+    mask = np.full((b, w), -1, dtype=np.int32)
+    # plant the key at a known column in sets 0 and 2
+    data[0, :, 17] = key[0]
+    data[2, :, 3] = key[2]
+    data[2, :, 400] = key[2]  # second match; first must win
+    match, index, mism = model.batched_search(
+        jnp.asarray(data), jnp.asarray(key), jnp.asarray(mask)
+    )
+    match, index = np.asarray(match), np.asarray(index)
+    ref_m, ref_c = search_ref_np(data, key, mask)
+    np.testing.assert_array_equal(match, ref_m)
+    assert index[0] == 17
+    assert index[2] == 3
+    # a random 64-bit key is absent from sets 1,3 w.h.p. unless planted
+    for bset in (1, 3):
+        expect = -1
+        hits = np.nonzero(ref_m[bset])[0]
+        if hits.size:
+            expect = hits[0]
+        assert index[bset] == expect
+    np.testing.assert_array_equal(np.asarray(mism), ref_c)
+
+
+def test_tag_check_hit_and_miss():
+    b, w, c = 2, model.SET_WORDS, 64
+    rng = np.random.default_rng(7)
+    tags = rng.integers(-(2**31), 2**31, (b, w, c)).astype(np.int32)
+    key = rng.integers(-(2**31), 2**31, (b, w)).astype(np.int32)
+    tags[1, :, 42] = key[1]
+    hit, way = model.tag_check(jnp.asarray(tags), jnp.asarray(key))
+    hit, way = np.asarray(hit), np.asarray(way)
+    assert hit[1] == 1 and way[1] == 42
+    # set 0: hit only if collision (unlikely); consistency check
+    assert (hit[0] == 1) == (way[0] >= 0)
+
+
+def test_search_sweep_multi_key():
+    b, w, c = 2, 2, 64
+    rng = np.random.default_rng(11)
+    data = rng.integers(-(2**31), 2**31, (b, w, c)).astype(np.int32)
+    k0 = data[:, :, 10].T.copy()  # (w,b) -> transpose to (b,w)
+    k0 = data[:, :, 10]
+    keys = np.stack([data[:, :, 10], data[:, :, 20]])  # (K=2, B, W)? wrong axes
+    # data[:, :, j] has shape (b, w) already — exactly one key per set.
+    masks = np.full_like(keys, -1)
+    idxs = np.asarray(
+        model.search_sweep(
+            jnp.asarray(data), jnp.asarray(keys), jnp.asarray(masks)
+        )
+    )
+    assert idxs.shape == (2, b)
+    np.testing.assert_array_equal(idxs[0], [10, 10])
+    np.testing.assert_array_equal(idxs[1], [20, 20])

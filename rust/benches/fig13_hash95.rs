@@ -1,0 +1,24 @@
+//! Fig 13 — hashing performance relative to HBM-C at **95% lookups**
+//! (YCSB-B, the paper's primary hashing workload).
+
+use monarch::coordinator::{self, Budget};
+
+fn main() {
+    let budget = Budget::default();
+    let rows =
+        coordinator::hash_figure(&budget, 0.95, &[32, 64, 128], &[12, 14, 16]);
+    coordinator::hash_table(
+        "Fig 13 — perf relative to HBM-C, 95% lookups (YCSB-B)",
+        &rows,
+    )
+    .print();
+    for (w, tp, reports) in &rows {
+        let base = &reports[0];
+        let monarch = reports.iter().find(|r| r.system == "Monarch").unwrap();
+        assert!(
+            monarch.speedup_vs(base) > 0.9,
+            "window {w} table 2^{tp}: Monarch should stay competitive"
+        );
+    }
+    println!("Fig 13 series complete");
+}

@@ -1,0 +1,37 @@
+//! Fig 14 — hashing performance relative to HBM-C at **75% lookups**
+//! (paper: the RRAM-flat baseline closes in on HBM-C/HBM-SP as the
+//! write percentage grows, and Monarch's advantage narrows vs the
+//! read-dominated mixes).
+
+use monarch::coordinator::{self, Budget};
+
+fn main() {
+    let budget = Budget::default();
+    let rows75 =
+        coordinator::hash_figure(&budget, 0.75, &[32, 64, 128], &[12, 14, 16]);
+    coordinator::hash_table(
+        "Fig 14 — perf relative to HBM-C, 75% lookups",
+        &rows75,
+    )
+    .print();
+    // cross-figure shape: Monarch relative performance at 75% reads
+    // must not exceed its 100%-read performance on the same point
+    let rows100 = coordinator::hash_figure(&budget, 1.0, &[64], &[14]);
+    let pick = |rows: &[(usize, usize, Vec<monarch::workloads::hashing::HashReport>)]| {
+        let (_, _, reports) =
+            rows.iter().find(|(w, tp, _)| *w == 64 && *tp == 14).unwrap();
+        let base = &reports[0];
+        reports
+            .iter()
+            .find(|r| r.system == "Monarch")
+            .unwrap()
+            .speedup_vs(base)
+    };
+    let s75 = pick(&rows75);
+    let s100 = pick(&rows100);
+    println!("Monarch vs HBM-C @64/2^14: 100%R {s100:.2}x, 75%R {s75:.2}x");
+    assert!(
+        s75 <= s100 * 1.1,
+        "inserts must not improve Monarch's relative standing"
+    );
+}

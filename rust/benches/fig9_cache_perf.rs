@@ -1,0 +1,96 @@
+//! Fig 9 + §10.2 + §8 — cache-mode performance of the 11 workloads
+//! (8 CRONO + 3 NAS) on every in-package system, with the write-
+//! mitigation and energy side-tables. The paper's headline: M-Unbound
+//! +61% over D-Cache (1.21x over Ideal), M=3 +25%, RC-Unbound +24%;
+//! D/R install rules cut in-package write traffic by ~31%; Monarch
+//! (M=3) saves ~21% system energy.
+
+use monarch::coordinator::{self, Budget};
+use monarch::util::stats::geomean;
+use monarch::util::table::Table;
+
+fn main() {
+    let budget = Budget {
+        trace_ops: std::env::var("MONARCH_TRACE_OPS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(15_000),
+        ..Budget::default()
+    };
+    let start = std::time::Instant::now();
+    let results = coordinator::run_cache_mode(&budget);
+    coordinator::fig9_table(&results).print();
+    coordinator::fig10_table(&results).print();
+
+    // §10.2 energy: system energy relative to D-Cache
+    let mut e = Table::new("§10.2 — System energy relative to D-Cache")
+        .header(vec!["workload", "D-Cache(Ideal)", "RC-Unbound", "Monarch(M=3)"]);
+    let mut savings = Vec::new();
+    for row in &results {
+        let base = row[0].energy_nj;
+        let mut get = |label: &str| {
+            row.iter()
+                .find(|r| r.system == label)
+                .map(|r| {
+                    let ratio = r.energy_nj / base;
+                    if label == "Monarch(M=3)" {
+                        savings.push(1.0 - ratio);
+                    }
+                    format!("{:.2}", ratio)
+                })
+                .unwrap_or_default()
+        };
+        e.row(vec![
+            row[0].workload.clone(),
+            get("D-Cache(Ideal)"),
+            get("RC-Unbound"),
+            get("Monarch(M=3)"),
+        ]);
+    }
+    e.print();
+    println!(
+        "Monarch(M=3) mean energy saving vs D-Cache: {:.0}% (paper: 21%)",
+        100.0 * savings.iter().sum::<f64>() / savings.len().max(1) as f64
+    );
+
+    // §8 write mitigation: installs skipped by the D/R rules
+    let mut skipped = 0u64;
+    let mut total = 0u64;
+    for row in &results {
+        if let Some(r) = row.iter().find(|r| r.system == "Monarch(M=3)") {
+            let inst = r.counters.get("installs");
+            let skip =
+                r.counters.get("skip_dead") + r.counters.get("forward_d");
+            skipped += skip;
+            total += inst + skip;
+            let _ = inst;
+        }
+    }
+    if total > 0 {
+        println!(
+            "§8 — write traffic skipped by D/R rules: {:.0}% (paper: ~31%)",
+            100.0 * skipped as f64 / total as f64
+        );
+    }
+    // the ordering the paper reports, on geomeans
+    let gm = |label: &str| {
+        let v: Vec<f64> = results
+            .iter()
+            .map(|row| {
+                let base = row[0].cycles as f64;
+                let r = row.iter().find(|r| r.system == label).unwrap();
+                base / r.cycles as f64
+            })
+            .collect();
+        geomean(&v)
+    };
+    println!(
+        "geomeans: Ideal {:.2}x, RC-Unbound {:.2}x, M-Unbound {:.2}x, \
+         M=3 {:.2}x  (paper: 1.40x / 1.24x / 1.61x / 1.25x)",
+        gm("D-Cache(Ideal)"),
+        gm("RC-Unbound"),
+        gm("M-Unbound"),
+        gm("Monarch(M=3)")
+    );
+    println!("bench wall time: {:?}", start.elapsed());
+}

@@ -1,0 +1,72 @@
+//! Runtime perf (§Perf deliverable): throughput of the AOT-compiled
+//! Pallas search kernel via PJRT vs the pure-rust array fast path,
+//! across batch sizes. Measures searches/s and columns/s so the
+//! batching-amortization of PJRT dispatch is visible.
+
+use std::time::Instant;
+
+use monarch::runtime::SearchEngine;
+use monarch::util::rng::Rng;
+use monarch::util::table::Table;
+use monarch::xam::XamArray;
+
+fn main() {
+    let dir = SearchEngine::default_dir();
+    let engine = match SearchEngine::load(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("skipping runtime bench (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let mut rng = Rng::new(0xBEEF);
+    let mut arrays = Vec::new();
+    for _ in 0..64 {
+        let mut a = XamArray::new(64, 512);
+        for c in 0..512 {
+            a.write_col(c, rng.next_u64());
+        }
+        arrays.push(a);
+    }
+    let mut t = Table::new("PJRT kernel vs rust fast path (64x512 sets)")
+        .header(vec![
+            "batch",
+            "kernel searches/s",
+            "rust searches/s",
+            "kernel Gcol/s",
+        ]);
+    for batch in [1usize, 8, 64] {
+        let sets: Vec<&XamArray> = arrays.iter().take(batch).collect();
+        let keys: Vec<u64> = (0..batch).map(|i| arrays[i].read_col(7)).collect();
+        let masks = vec![!0u64; batch];
+        // warm up + correctness
+        let got = engine.search_sets(&sets, &keys, &masks).unwrap();
+        let want = SearchEngine::search_sets_fallback(&sets, &keys, &masks);
+        assert_eq!(got, want);
+        let iters = 2000 / batch.max(1) + 20;
+        let start = Instant::now();
+        for _ in 0..iters {
+            let _ = engine.search_sets(&sets, &keys, &masks).unwrap();
+        }
+        let k_elapsed = start.elapsed().as_secs_f64();
+        let k_rate = (iters * batch) as f64 / k_elapsed;
+        let start = Instant::now();
+        let r_iters = iters * 100;
+        for _ in 0..r_iters {
+            let _ = SearchEngine::search_sets_fallback(&sets, &keys, &masks);
+        }
+        let r_rate = (r_iters * batch) as f64 / start.elapsed().as_secs_f64();
+        t.row(vec![
+            batch.to_string(),
+            format!("{k_rate:.0}"),
+            format!("{r_rate:.0}"),
+            format!("{:.2}", k_rate * 512.0 / 1e9),
+        ]);
+    }
+    t.print();
+    println!(
+        "note: interpret-mode Pallas on CPU measures *dispatch+functional* \
+         cost; real-TPU throughput is estimated from VMEM/MXU structure in \
+         DESIGN.md §Perf"
+    );
+}

@@ -1,0 +1,480 @@
+//! System configuration — the paper's Table 3 encoded as typed presets
+//! plus a `key=value` override parser (the offline vendor set has no
+//! serde/toml; the format is intentionally trivial).
+
+pub mod tech;
+
+use anyhow::{bail, Context, Result};
+
+/// Interface timing parameters in CPU cycles (Table 3 rows). The same
+/// struct describes DDR4, in-package DRAM, Monarch/RRAM, and the CMOS
+/// stack — only the values differ.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Timing {
+    pub t_rcd: u32,
+    pub t_cas: u32,
+    pub t_ccd: u32,
+    pub t_wtr: u32,
+    pub t_wr: u32,
+    pub t_rtp: u32,
+    pub t_bl: u32,
+    pub t_cwd: u32,
+    pub t_rp: u32,
+    pub t_rrd: u32,
+    pub t_ras: u32,
+    pub t_rc: u32,
+    pub t_faw: u32,
+}
+
+impl Timing {
+    /// In-package DRAM / off-chip DDR4 core timings (Table 3; DDR4
+    /// differs only in burst length).
+    pub const fn dram(t_bl: u32) -> Self {
+        Self {
+            t_rcd: 44,
+            t_cas: 44,
+            t_ccd: 16,
+            t_wtr: 31,
+            t_wr: 4,
+            t_rtp: 46,
+            t_bl,
+            t_cwd: 61,
+            t_rp: 44,
+            t_rrd: 16,
+            t_ras: 112,
+            t_rc: 271,
+            t_faw: 181,
+        }
+    }
+
+    /// In-package RRAM / Monarch timings (Table 3): no refresh, cheap
+    /// prepare/activate, slow two-step write (t_WR = 162 cycles).
+    pub const fn monarch() -> Self {
+        Self {
+            t_rcd: 4,
+            t_cas: 4,
+            t_ccd: 1,
+            t_wtr: 31,
+            t_wr: 162,
+            t_rtp: 1,
+            t_bl: 4,
+            t_cwd: 4,
+            t_rp: 8,
+            t_rrd: 1,
+            t_ras: 4,
+            t_rc: 12,
+            t_faw: 181,
+        }
+    }
+
+    /// In-package CMOS SRAM+SCAM stack: Monarch-like control but a
+    /// fast (3-cycle) write.
+    pub const fn cmos() -> Self {
+        Self { t_wr: 3, ..Self::monarch() }
+    }
+
+    /// Random-access read service time: command + array + burst.
+    pub fn read_latency(&self) -> u64 {
+        (self.t_rcd + self.t_cas + self.t_bl) as u64
+    }
+
+    /// Write service time: command + write + burst.
+    pub fn write_latency(&self) -> u64 {
+        (self.t_cwd + self.t_wr + self.t_bl) as u64
+    }
+}
+
+/// In-package memory technology selector for a simulated system.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InPackageKind {
+    /// DRAM HBM cache (D-Cache baseline).
+    DramCache,
+    /// DRAM HBM cache with zero activate/precharge/refresh overheads.
+    DramCacheIdeal,
+    /// DRAM HBM as software scratchpad (HBM-SP baseline).
+    DramScratchpad,
+    /// Iso-area CMOS SRAM+SCAM stack (S-Cache / CMOS baseline).
+    Sram,
+    /// 1R RRAM cache without lifetime bounds (RC-Unbound baseline).
+    RramUnbound,
+    /// Monarch (XAM) without t_MWW/wear constraints (M-Unbound).
+    MonarchUnbound,
+    /// Monarch with t_MWW enforced; `m` = writes allowed per window.
+    Monarch { m: u32 },
+    /// Monarch in pure flat-RAM mode (paper's "RRAM" hashing baseline).
+    MonarchFlatRam,
+}
+
+impl InPackageKind {
+    pub fn label(&self) -> String {
+        match self {
+            Self::DramCache => "D-Cache".into(),
+            Self::DramCacheIdeal => "D-Cache(Ideal)".into(),
+            Self::DramScratchpad => "HBM-SP".into(),
+            Self::Sram => "S-Cache".into(),
+            Self::RramUnbound => "RC-Unbound".into(),
+            Self::MonarchUnbound => "M-Unbound".into(),
+            Self::Monarch { m } => format!("Monarch(M={m})"),
+            Self::MonarchFlatRam => "RRAM(flat)".into(),
+        }
+    }
+
+    pub fn is_monarch(&self) -> bool {
+        matches!(
+            self,
+            Self::MonarchUnbound | Self::Monarch { .. } | Self::MonarchFlatRam
+        )
+    }
+}
+
+/// On-die cache geometry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheGeom {
+    pub size_bytes: usize,
+    pub ways: usize,
+    pub block_bytes: usize,
+}
+
+impl CacheGeom {
+    pub fn sets(&self) -> usize {
+        self.size_bytes / (self.ways * self.block_bytes)
+    }
+}
+
+/// Monarch physical geometry (Table 3). A set is 64 rows x 512 columns
+/// of differential 2R cells spread over 8 diagonal 64x64 subarrays;
+/// 8 sets form a superset; `layers` stacked XAM dies double capacity
+/// to the paper's 8GB at full scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MonarchGeom {
+    pub vaults: usize,
+    pub banks_per_vault: usize,
+    pub supersets_per_bank: usize,
+    pub sets_per_superset: usize,
+    pub rows_per_set: usize,
+    pub cols_per_set: usize,
+    pub layers: usize,
+}
+
+impl MonarchGeom {
+    pub const FULL: Self = Self {
+        vaults: 8,
+        banks_per_vault: 64,
+        supersets_per_bank: 256,
+        sets_per_superset: 8,
+        rows_per_set: 64,
+        cols_per_set: 512,
+        layers: 2,
+    };
+
+    /// Bytes stored per set (each column is one rows_per_set-bit word).
+    pub fn set_bytes(&self) -> usize {
+        self.rows_per_set * self.cols_per_set / 8
+    }
+
+    pub fn superset_bytes(&self) -> usize {
+        self.set_bytes() * self.sets_per_superset
+    }
+
+    pub fn bank_bytes(&self) -> usize {
+        self.superset_bytes() * self.supersets_per_bank
+    }
+
+    pub fn vault_bytes(&self) -> usize {
+        self.bank_bytes() * self.banks_per_vault * self.layers
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.vault_bytes() * self.vaults
+    }
+
+    pub fn supersets_total(&self) -> usize {
+        self.vaults * self.banks_per_vault * self.layers
+            * self.supersets_per_bank
+    }
+
+    /// Scale capacity down for tractable simulation, preserving the
+    /// set geometry and the vault count. The scale factor is absorbed
+    /// by supersets_per_bank first, then banks_per_vault, then layers,
+    /// each kept >= 1, so the total capacity tracks `scale` closely
+    /// even for tiny factors.
+    pub fn scaled(&self, scale: f64) -> Self {
+        let mut g = *self;
+        let mut remaining = scale;
+        for field in [
+            &mut g.supersets_per_bank,
+            &mut g.banks_per_vault,
+            &mut g.layers,
+        ] {
+            let old = *field as f64;
+            let new = (old * remaining).round().max(1.0);
+            remaining *= old / new;
+            *field = new as usize;
+        }
+        g
+    }
+}
+
+/// Lifetime / wear-leveling knobs (§6.2, §8).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WearConfig {
+    /// Cell write endurance n_W (1e8 default).
+    pub endurance: u64,
+    /// Target lifetime in years (10 by default, §10.2).
+    pub target_years: f64,
+    /// Writes allowed per superset per window (M).
+    pub m: u32,
+    /// Dirty-counter rotate threshold DC (§10.3: 8192).
+    pub dc_limit: u64,
+    /// Write-counter rotate threshold WC.
+    pub wc_limit: u64,
+    /// WR trip point: rotate when the write counter's MSB is this many
+    /// binary orders above the superset counter's (§8: 9 = 512x).
+    /// 63 disables the WR path (ablation).
+    pub wr_shift: u32,
+}
+
+impl WearConfig {
+    pub const fn default_m(m: u32) -> Self {
+        Self {
+            endurance: 100_000_000,
+            target_years: 10.0,
+            m,
+            dc_limit: 8192,
+            wc_limit: 1 << 20,
+            wr_shift: 9,
+        }
+    }
+
+    /// `t_MWW = M * T_life / n_W` (§6.2), in seconds.
+    pub fn t_mww_seconds(&self) -> f64 {
+        const SECONDS_PER_YEAR: f64 = 365.25 * 24.0 * 3600.0;
+        self.m as f64 * self.target_years * SECONDS_PER_YEAR
+            / self.endurance as f64
+    }
+
+    /// t_MWW in CPU cycles at `freq_ghz`.
+    pub fn t_mww_cycles(&self, freq_ghz: f64) -> u64 {
+        (self.t_mww_seconds() * freq_ghz * 1e9) as u64
+    }
+}
+
+/// Full simulated-system configuration (Table 3).
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    pub cores: usize,
+    pub threads_per_core: usize,
+    pub rob_entries: usize,
+    pub freq_ghz: f64,
+    pub l1d: CacheGeom,
+    pub l2: CacheGeom,
+    pub l3: CacheGeom,
+    pub inpkg: InPackageKind,
+    pub monarch: MonarchGeom,
+    pub dram_timing: Timing,
+    pub monarch_timing: Timing,
+    pub cmos_timing: Timing,
+    pub ddr4_timing: Timing,
+    /// In-package DRAM capacity at full scale (4GB).
+    pub inpkg_dram_bytes: usize,
+    /// Iso-area CMOS stack capacity (73.28MB at full scale).
+    pub inpkg_cmos_bytes: usize,
+    /// Off-chip capacity (32GB full scale).
+    pub offchip_bytes: usize,
+    pub offchip_channels: usize,
+    pub wear: WearConfig,
+    /// Capacity scale factor applied to every memory (simulation size).
+    pub scale: f64,
+    pub seed: u64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self::full_scale(InPackageKind::Monarch { m: 3 })
+    }
+}
+
+impl SystemConfig {
+    /// The paper's full-scale testbed (Table 3).
+    pub fn full_scale(inpkg: InPackageKind) -> Self {
+        Self {
+            cores: 8,
+            threads_per_core: 2,
+            rob_entries: 256,
+            freq_ghz: 3.2,
+            l1d: CacheGeom { size_bytes: 64 << 10, ways: 4, block_bytes: 64 },
+            l2: CacheGeom { size_bytes: 128 << 10, ways: 8, block_bytes: 64 },
+            l3: CacheGeom { size_bytes: 8 << 20, ways: 16, block_bytes: 64 },
+            inpkg,
+            monarch: MonarchGeom::FULL,
+            dram_timing: Timing::dram(4),
+            monarch_timing: Timing::monarch(),
+            cmos_timing: Timing::cmos(),
+            ddr4_timing: Timing::dram(10),
+            inpkg_dram_bytes: 4 << 30,
+            inpkg_cmos_bytes: (73.28 * 1024.0 * 1024.0) as usize,
+            offchip_bytes: 32usize << 30,
+            offchip_channels: 2,
+            wear: WearConfig::default_m(3),
+            scale: 1.0,
+            seed: 0xA0A0,
+        }
+    }
+
+    /// A laptop-tractable configuration preserving all capacity ratios:
+    /// every memory is scaled by `scale` (default 1/1024 => 8MB Monarch,
+    /// 4MB HBM, 8KB L3 per-ratio etc. are NOT scaled — only the
+    /// in-package/off-chip capacities and the L3, so miss behaviour
+    /// stays realistic against scaled workloads).
+    pub fn scaled(inpkg: InPackageKind, scale: f64) -> Self {
+        let mut c = Self::full_scale(inpkg);
+        c.scale = scale;
+        c.monarch = c.monarch.scaled(scale);
+        c.inpkg_dram_bytes =
+            ((c.inpkg_dram_bytes as f64 * scale) as usize).max(1 << 16);
+        c.inpkg_cmos_bytes =
+            ((c.inpkg_cmos_bytes as f64 * scale) as usize).max(1 << 14);
+        c.offchip_bytes =
+            ((c.offchip_bytes as f64 * scale) as usize).max(1 << 20);
+        // The on-die hierarchy shrinks with the system so that L3
+        // reuse (and hence the R flags driving Monarch's install
+        // policy) is realistic at reduced scale.
+        c.l1d.size_bytes =
+            ((c.l1d.size_bytes as f64 * scale) as usize).max(1 << 10);
+        c.l2.size_bytes =
+            ((c.l2.size_bytes as f64 * scale) as usize).max(2 << 10);
+        c.l3.size_bytes =
+            ((c.l3.size_bytes as f64 * scale) as usize).max(16 << 10);
+        c
+    }
+
+    /// Apply a `key=value` override (see `parse_overrides`).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let vu = || -> Result<u64> {
+            value
+                .parse::<u64>()
+                .with_context(|| format!("{key}: expected integer, got {value:?}"))
+        };
+        let vf = || -> Result<f64> {
+            value
+                .parse::<f64>()
+                .with_context(|| format!("{key}: expected float, got {value:?}"))
+        };
+        match key {
+            "cores" => self.cores = vu()? as usize,
+            "threads_per_core" => self.threads_per_core = vu()? as usize,
+            "rob_entries" => self.rob_entries = vu()? as usize,
+            "freq_ghz" => self.freq_ghz = vf()?,
+            "seed" => self.seed = vu()?,
+            "scale" => self.scale = vf()?,
+            "wear.m" => self.wear.m = vu()? as u32,
+            "wear.endurance" => self.wear.endurance = vu()?,
+            "wear.target_years" => self.wear.target_years = vf()?,
+            "wear.dc_limit" => self.wear.dc_limit = vu()?,
+            "l3.size_bytes" => self.l3.size_bytes = vu()? as usize,
+            "l3.ways" => self.l3.ways = vu()? as usize,
+            "monarch.vaults" => self.monarch.vaults = vu()? as usize,
+            "monarch.banks_per_vault" => {
+                self.monarch.banks_per_vault = vu()? as usize
+            }
+            "monarch.supersets_per_bank" => {
+                self.monarch.supersets_per_bank = vu()? as usize
+            }
+            "offchip_bytes" => self.offchip_bytes = vu()? as usize,
+            "inpkg_dram_bytes" => self.inpkg_dram_bytes = vu()? as usize,
+            _ => bail!("unknown config key {key:?}"),
+        }
+        Ok(())
+    }
+
+    /// Parse newline- or comma-separated `key=value` overrides.
+    pub fn parse_overrides(&mut self, text: &str) -> Result<()> {
+        for raw in text.split(|c| c == '\n' || c == ',') {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("expected key=value, got {line:?}"))?;
+            self.set(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_scale_capacities_match_paper() {
+        let c = SystemConfig::full_scale(InPackageKind::Monarch { m: 3 });
+        // 8GB Monarch (Table 3)
+        assert_eq!(c.monarch.total_bytes(), 8 << 30);
+        assert_eq!(c.monarch.set_bytes(), 4096);
+        assert_eq!(c.monarch.superset_bytes(), 32 << 10);
+        assert_eq!(c.inpkg_dram_bytes, 4 << 30);
+        assert_eq!(c.offchip_bytes, 32usize << 30);
+        // L3 8MB 16-way 64B
+        assert_eq!(c.l3.sets(), 8192);
+    }
+
+    #[test]
+    fn timing_presets_match_table3() {
+        let m = Timing::monarch();
+        assert_eq!((m.t_rcd, m.t_cas, m.t_wr, m.t_rp), (4, 4, 162, 8));
+        let d = Timing::dram(4);
+        assert_eq!((d.t_rcd, d.t_ras, d.t_rc), (44, 112, 271));
+        let c = Timing::cmos();
+        assert_eq!(c.t_wr, 3);
+        assert_eq!(c.t_rcd, 4);
+        // Monarch reads are far cheaper than DRAM reads; writes dearer.
+        assert!(m.read_latency() < d.read_latency() / 5);
+        assert!(m.write_latency() > d.write_latency());
+    }
+
+    #[test]
+    fn t_mww_formula_matches_paper_example() {
+        // §6.2: 3-year lifetime, 1e8 endurance => t_MWW = 0.94M seconds
+        // for M writes (M=1 => 0.94 s... the paper's "0.94M seconds"
+        // reads as 0.94*M seconds).
+        let mut w = WearConfig::default_m(1);
+        w.target_years = 3.0;
+        // paper uses 94.6e6 seconds for 3 years
+        let secs = w.t_mww_seconds();
+        assert!((secs - 0.946).abs() < 0.01, "secs={secs}");
+        w.m = 4;
+        assert!((w.t_mww_seconds() - 4.0 * 0.946).abs() < 0.04);
+    }
+
+    #[test]
+    fn scaled_preserves_ratios() {
+        let full = SystemConfig::full_scale(InPackageKind::DramCache);
+        let s = SystemConfig::scaled(InPackageKind::DramCache, 1.0 / 1024.0);
+        let r_full =
+            full.monarch.total_bytes() as f64 / full.inpkg_dram_bytes as f64;
+        let r_scaled =
+            s.monarch.total_bytes() as f64 / s.inpkg_dram_bytes as f64;
+        assert!((r_full - r_scaled).abs() / r_full < 0.3);
+        assert!(s.monarch.supersets_per_bank >= 1);
+    }
+
+    #[test]
+    fn overrides_parse() {
+        let mut c = SystemConfig::default();
+        c.parse_overrides("cores=4, wear.m=2\nseed=99 # comment").unwrap();
+        assert_eq!(c.cores, 4);
+        assert_eq!(c.wear.m, 2);
+        assert_eq!(c.seed, 99);
+        assert!(c.parse_overrides("nope=1").is_err());
+        assert!(c.parse_overrides("cores=abc").is_err());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(InPackageKind::Monarch { m: 3 }.label(), "Monarch(M=3)");
+        assert!(InPackageKind::MonarchUnbound.is_monarch());
+        assert!(!InPackageKind::DramCache.is_monarch());
+    }
+}

@@ -1,0 +1,247 @@
+//! Technology model — the paper's Table 1: latency, energy, and area
+//! of a 32KB reconfigurable RAM/CAM building block in each candidate
+//! technology (CACTI 7 + NVSIM + SPICE at 22nm in the paper; embedded
+//! here as the ground-truth constants the rest of the simulator
+//! consumes for latency/energy accounting).
+
+/// Per-operation latency (ns), energy (nJ) and area (mm^2) of a 32KB
+/// building block (Table 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TechParams {
+    pub name: &'static str,
+    pub read_ns: f64,
+    pub write_ns: f64,
+    pub search_ns: f64,
+    pub read_nj: f64,
+    pub write_nj: f64,
+    pub search_nj: f64,
+    pub area_mm2: f64,
+}
+
+pub const SRAM: TechParams = TechParams {
+    name: "SRAM",
+    read_ns: 0.2334,
+    write_ns: 0.1892,
+    search_ns: 14.9395,
+    read_nj: 0.015,
+    write_nj: 0.0196,
+    search_nj: 0.9627,
+    area_mm2: 0.0331,
+};
+
+pub const SCAM: TechParams = TechParams {
+    name: "SCAM",
+    read_ns: 32.2385,
+    write_ns: 0.2167,
+    search_ns: 0.5037,
+    read_nj: 0.2329,
+    write_nj: 0.0139,
+    search_nj: 0.1273,
+    area_mm2: 0.111,
+};
+
+pub const SRAM_SCAM: TechParams = TechParams {
+    name: "SRAM+SCAM",
+    read_ns: 0.2334,
+    write_ns: 0.2167,
+    search_ns: 0.5037,
+    read_nj: 0.015,
+    write_nj: 0.0335,
+    search_nj: 0.1273,
+    area_mm2: 0.144,
+};
+
+pub const DRAM: TechParams = TechParams {
+    name: "DRAM",
+    read_ns: 2.5945,
+    write_ns: 2.1874,
+    search_ns: 166.0499,
+    read_nj: 0.0657,
+    write_nj: 0.058,
+    search_nj: 4.4544,
+    area_mm2: 0.0169,
+};
+
+pub const RRAM_1R: TechParams = TechParams {
+    name: "1R RAM",
+    read_ns: 1.654,
+    write_ns: 20.258,
+    search_ns: 105.856,
+    read_nj: 0.0214,
+    write_nj: 0.325,
+    search_nj: 1.623,
+    area_mm2: 0.0104,
+};
+
+pub const CAM_2T2R: TechParams = TechParams {
+    name: "2T2R CAM",
+    read_ns: 122.048,
+    write_ns: 20.825,
+    search_ns: 3.36,
+    read_nj: 2.7156,
+    write_nj: 1.29,
+    search_nj: 0.0472,
+    area_mm2: 0.0153,
+};
+
+pub const RRAM_1R_2T2R: TechParams = TechParams {
+    name: "1R+2T2R",
+    read_ns: 1.654,
+    write_ns: 20.825,
+    search_ns: 3.36,
+    read_nj: 0.0214,
+    write_nj: 1.61,
+    search_nj: 0.0472,
+    area_mm2: 0.0258,
+};
+
+pub const XAM_2R: TechParams = TechParams {
+    name: "2R XAM",
+    read_ns: 1.7734,
+    write_ns: 20.323,
+    search_ns: 3.2264,
+    read_nj: 0.0215,
+    write_nj: 0.652,
+    search_nj: 0.0263,
+    area_mm2: 0.0124,
+};
+
+/// All Table 1 rows in the paper's order.
+pub const ALL: [&TechParams; 8] = [
+    &SRAM,
+    &SCAM,
+    &SRAM_SCAM,
+    &DRAM,
+    &RRAM_1R,
+    &CAM_2T2R,
+    &RRAM_1R_2T2R,
+    &XAM_2R,
+];
+
+/// RRAM device parameters (§9.1): read 1.0V, write 2.2V,
+/// R_lo = 300K, R_hi = 1G; cell write endurance 1e8 (§8).
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceParams {
+    pub v_read: f64,
+    pub v_write: f64,
+    pub r_lo_ohm: f64,
+    pub r_hi_ohm: f64,
+    pub endurance: u64,
+}
+
+pub const RRAM_DEVICE: DeviceParams = DeviceParams {
+    v_read: 1.0,
+    v_write: 2.2,
+    r_lo_ohm: 300e3,
+    r_hi_ohm: 1e9,
+    endurance: 100_000_000,
+};
+
+impl DeviceParams {
+    /// Read-mode sense voltage of a stored bit (voltage divider,
+    /// §4.2.1): the cell divides `V_R` between its two resistive
+    /// elements; a stored 1 (R = high on the pull-down side) develops
+    /// near `V_R`, a stored 0 (Rbar = low) near ground.
+    pub fn read_voltage(&self, bit: bool) -> f64 {
+        let divider = if bit { self.r_hi_ohm } else { self.r_lo_ohm };
+        divider / (self.r_lo_ohm + self.r_hi_ohm) * self.v_read
+    }
+
+    /// Search-mode column voltage with `mismatches` mismatching bits
+    /// among `rows` compared bits (§4.2.2): all-match stays near
+    /// `H/(L+H) * V_R`; each mismatch adds a pull-down path.
+    pub fn search_voltage(&self, rows: usize, mismatches: usize) -> f64 {
+        let h = self.r_hi_ohm;
+        let l = self.r_lo_ohm;
+        if mismatches == 0 {
+            h / (l + h) * self.v_read
+        } else {
+            // `mismatches` low-resistance pull-down paths to ground in
+            // parallel against (rows - mismatches) high-resistance
+            // hold-up paths to V_R: the line settles at the conductance
+            // divider between the two groups.
+            let g_down = mismatches as f64 / l;
+            let g_up = (rows - mismatches) as f64 / h + 1e-30;
+            g_up / (g_up + g_down) * self.v_read
+        }
+    }
+
+    /// The sensing reference for search must sit between the all-match
+    /// voltage and the worst-case single-mismatch voltage (§4.2.2).
+    pub fn ref_search(&self, rows: usize) -> f64 {
+        let all = self.search_voltage(rows, 0);
+        let one = self.search_voltage(rows, 1);
+        0.5 * (all + one)
+    }
+
+    /// Sense margin for a search outcome (volts).
+    pub fn search_margin(&self, rows: usize, mismatches: usize) -> f64 {
+        (self.search_voltage(rows, mismatches) - self.ref_search(rows)).abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_rows_present_and_ordered() {
+        let names: Vec<&str> = ALL.iter().map(|t| t.name).collect();
+        assert_eq!(
+            names,
+            [
+                "SRAM", "SCAM", "SRAM+SCAM", "DRAM", "1R RAM", "2T2R CAM",
+                "1R+2T2R", "2R XAM"
+            ]
+        );
+    }
+
+    #[test]
+    fn paper_claims_hold_in_constants() {
+        // §5 Latency: SRAM ~10x better write than DRAM, ~100x than RRAM.
+        assert!(DRAM.write_ns / SRAM.write_ns > 8.0);
+        assert!(XAM_2R.write_ns / SRAM.write_ns > 80.0);
+        // §5 Area: XAM ~10x smaller than SRAM+SCAM.
+        assert!(SRAM_SCAM.area_mm2 / XAM_2R.area_mm2 > 9.0);
+        // Search energy: XAM and 2T2R lowest.
+        assert!(XAM_2R.search_nj < SRAM.search_nj / 10.0);
+        assert!(XAM_2R.search_nj < DRAM.search_nj / 100.0);
+        // 1R has least area, similar to XAM.
+        assert!(RRAM_1R.area_mm2 <= XAM_2R.area_mm2);
+    }
+
+    #[test]
+    fn read_voltages_separate_around_half_vr() {
+        let d = RRAM_DEVICE;
+        let v0 = d.read_voltage(false);
+        let v1 = d.read_voltage(true);
+        assert!(v0 < 0.5 * d.v_read && v1 > 0.5 * d.v_read);
+        assert!(v1 - v0 > 0.9 * d.v_read); // 300K vs 1G: huge margin
+    }
+
+    #[test]
+    fn search_margin_shrinks_with_rows_but_stays_positive() {
+        let d = RRAM_DEVICE;
+        for rows in [8usize, 64, 512] {
+            let all = d.search_voltage(rows, 0);
+            let one = d.search_voltage(rows, 1);
+            assert!(all > one, "rows={rows}");
+            assert!(d.search_margin(rows, 0) > 0.0);
+            assert!(d.search_margin(rows, 1) > 0.0);
+        }
+        // single mismatch must drop the line below Ref_S even at 64 rows
+        let v = d.search_voltage(64, 1);
+        assert!(v < d.ref_search(64));
+    }
+
+    #[test]
+    fn more_mismatches_pull_lower() {
+        let d = RRAM_DEVICE;
+        let mut prev = d.search_voltage(64, 0);
+        for m in 1..10 {
+            let v = d.search_voltage(64, m);
+            assert!(v < prev);
+            prev = v;
+        }
+    }
+}

@@ -1,0 +1,367 @@
+//! Experiment coordinator: builds the paper's experiments from the
+//! simulator pieces, fans runs out across OS threads, and renders the
+//! tables/figures. Both the CLI (`main.rs`) and the benches call in
+//! here, so every published artifact is regenerable from one place
+//! (DESIGN.md §4 experiment index).
+
+use std::sync::Mutex;
+
+use crate::config::{InPackageKind, MonarchGeom, SystemConfig};
+use crate::monarch::{LifetimeEstimator, LifetimeReport};
+use crate::sim::{InPackage, SimReport, System};
+use crate::util::stats::geomean;
+use crate::util::table::{x, Table};
+use crate::workloads::hashing::{run_ycsb, HashMemory, HashReport, YcsbConfig};
+use crate::workloads::stringmatch::{
+    run_string_match, StringMatchConfig, StringReport,
+};
+use crate::workloads::{graph, nas, TraceWorkload};
+
+/// Experiment scale/budget knobs shared by the CLI and benches.
+#[derive(Clone, Copy, Debug)]
+pub struct Budget {
+    /// Capacity scale vs. the paper's full system (DESIGN.md §2).
+    pub scale: f64,
+    /// Per-thread trace budget for the cache-mode workloads.
+    pub trace_ops: usize,
+    /// Hardware threads simulated.
+    pub threads: usize,
+    /// YCSB operations per hashing point.
+    pub hash_ops: usize,
+    pub seed: u64,
+}
+
+impl Default for Budget {
+    fn default() -> Self {
+        Self {
+            scale: 1.0 / 2048.0,
+            trace_ops: 30_000,
+            threads: 16,
+            hash_ops: 20_000,
+            seed: 0xBEEF,
+        }
+    }
+}
+
+impl Budget {
+    pub fn quick() -> Self {
+        Self { trace_ops: 6_000, hash_ops: 4_000, ..Self::default() }
+    }
+}
+
+/// The in-package systems of Fig 9, in the paper's legend order.
+pub fn fig9_systems() -> Vec<InPackageKind> {
+    vec![
+        InPackageKind::DramCache,
+        InPackageKind::Sram,
+        InPackageKind::RramUnbound,
+        InPackageKind::DramCacheIdeal,
+        InPackageKind::MonarchUnbound,
+        InPackageKind::Monarch { m: 1 },
+        InPackageKind::Monarch { m: 2 },
+        InPackageKind::Monarch { m: 3 },
+        InPackageKind::Monarch { m: 4 },
+    ]
+}
+
+/// Build the 11 cache-mode workloads (8 CRONO + 3 NAS), sized so the
+/// graph footprint is >= 2x the in-package capacity at `scale`.
+pub fn cache_workloads(budget: &Budget) -> Vec<TraceWorkload> {
+    let cfg = SystemConfig::scaled(InPackageKind::DramCache, budget.scale);
+    let target_bytes = 2 * cfg.monarch.total_bytes().max(cfg.inpkg_dram_bytes);
+    // CSR bytes ~ 4*(n + n*deg); pick n for the target footprint
+    let deg = 8usize;
+    let n = (target_bytes / (4 * (1 + deg))).max(1024);
+    let g = graph::Graph::random(n, deg, budget.seed);
+    let mut wls = graph::all_crono(&g, budget.threads, budget.trace_ops);
+    let arr_bytes = (target_bytes as u64).max(1 << 20);
+    wls.push(nas::ft(arr_bytes, budget.threads, budget.trace_ops));
+    wls.push(nas::cg(
+        (arr_bytes / 128).max(64),
+        8,
+        3,
+        budget.threads,
+        budget.trace_ops,
+        budget.seed,
+    ));
+    wls.push(nas::ep(
+        arr_bytes / 16,
+        budget.threads,
+        budget.trace_ops,
+        budget.seed,
+    ));
+    wls
+}
+
+/// One full Fig 9/10 sweep: every workload on every system.
+/// Returns `results[workload][system]` in the orders of
+/// `cache_workloads` / `fig9_systems`. Runs fan out over OS threads.
+pub fn run_cache_mode(budget: &Budget) -> Vec<Vec<SimReport>> {
+    let workloads = cache_workloads(budget);
+    let systems = fig9_systems();
+    let n_wl = workloads.len();
+    let n_sys = systems.len();
+    let results: Mutex<Vec<Vec<Option<SimReport>>>> =
+        Mutex::new(vec![vec![None; n_sys]; n_wl]);
+    let jobs: Vec<(usize, usize)> = (0..n_wl)
+        .flat_map(|w| (0..n_sys).map(move |s| (w, s)))
+        .collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(jobs.len().max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i =
+                    next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let Some(&(w, s)) = jobs.get(i) else { break };
+                let mut wl = workloads[w].replay();
+                let cfg = SystemConfig::scaled(systems[s], budget.scale);
+                let mut sys = System::build(cfg);
+                let report = sys.run(&mut wl, u64::MAX);
+                results.lock().unwrap()[w][s] = Some(report);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|row| row.into_iter().map(|r| r.unwrap()).collect())
+        .collect()
+}
+
+/// Fig 9 table: speedup over D-Cache per workload, plus the geomean
+/// row the paper's §10.2 headline numbers come from.
+pub fn fig9_table(results: &[Vec<SimReport>]) -> Table {
+    let t = Table::new("Fig 9 — Performance relative to D-Cache (cache mode)");
+    let mut header = vec!["workload".to_string()];
+    header.extend(results[0].iter().skip(1).map(|r| r.system.clone()));
+    let mut table = t.header(header);
+    let mut cols: Vec<Vec<f64>> = vec![Vec::new(); results[0].len() - 1];
+    for row in results {
+        let base = &row[0];
+        let mut cells = vec![row[0].workload.clone()];
+        for (i, r) in row.iter().skip(1).enumerate() {
+            let s = r.speedup_vs(base);
+            cols[i].push(s);
+            cells.push(x(s));
+        }
+        table.row(cells);
+    }
+    let mut gm = vec!["GEOMEAN".to_string()];
+    gm.extend(cols.iter().map(|c| x(geomean(c))));
+    table.row(gm);
+    table.row(vec![
+        "paper(avg)".to_string(),
+        "<1.24x".into(),
+        "1.24x".into(),
+        "1.40x".into(),
+        "1.61x".into(),
+        "<M=3".into(),
+        "<M=3".into(),
+        "1.25x".into(),
+        "~M=3".into(),
+    ]);
+    table
+}
+
+/// Fig 10 table: in-package hit rates.
+pub fn fig10_table(results: &[Vec<SimReport>]) -> Table {
+    let mut table = Table::new("Fig 10 — In-package cache hit rates")
+        .header(vec!["workload", "D-Cache", "RC-Unbound", "Monarch(M=3)"]);
+    for row in results {
+        let get = |label: &str| {
+            row.iter()
+                .find(|r| r.system == label)
+                .map(|r| format!("{:.1}%", 100.0 * r.inpkg_hit_rate))
+                .unwrap_or_default()
+        };
+        table.row(vec![
+            row[0].workload.clone(),
+            get("D-Cache"),
+            get("RC-Unbound"),
+            get("Monarch(M=3)"),
+        ]);
+    }
+    table
+}
+
+/// Fig 11: lifetime per workload for Monarch (M=3) vs ideal wear
+/// leveling, from the recorded rotation snapshots (§10.3 methodology).
+pub fn fig11_lifetimes(budget: &Budget) -> Vec<(String, LifetimeReport)> {
+    let workloads = cache_workloads(budget);
+    let mut out = Vec::new();
+    for wl in &workloads {
+        let mut replay = wl.replay();
+        let cfg =
+            SystemConfig::scaled(InPackageKind::Monarch { m: 3 }, budget.scale);
+        let mut sys = System::build(cfg);
+        let report = sys.run(&mut replay, u64::MAX);
+        let InPackage::Monarch(mc) = &sys.inpkg else { unreachable!() };
+        let est = LifetimeEstimator {
+            blocks_per_superset: 512.0,
+            ..Default::default()
+        };
+        let intra = mc.intra_imbalance();
+        // the worst vault bounds the lifetime (first cell death)
+        let mut worst: Option<LifetimeReport> = None;
+        for intervals in mc.wear_intervals() {
+            if intervals.is_empty() {
+                continue;
+            }
+            let r = est.estimate(&intervals, report.cycles, intra);
+            worst = Some(match worst {
+                None => r,
+                Some(w) if r.monarch_years < w.monarch_years => r,
+                Some(w) => w,
+            });
+        }
+        out.push((
+            report.workload.clone(),
+            worst.unwrap_or(LifetimeReport {
+                ideal_years: f64::INFINITY,
+                monarch_years: f64::INFINITY,
+                imbalance: 1.0,
+            }),
+        ));
+    }
+    out
+}
+
+/// The hashing systems of Figs 12-14, paper order (relative to HBM-C).
+pub fn hash_systems(table_pow2: usize, geom: MonarchGeom) -> Vec<HashMemory> {
+    let table_bytes = (1usize << table_pow2) * 24;
+    let cam_sets = ((1usize << table_pow2) / 512 + 1)
+        .min(geom.vaults * geom.banks_per_vault * geom.supersets_per_bank * 8);
+    vec![
+        HashMemory::hbm_c(table_bytes.max(1 << 16)),
+        HashMemory::hbm_sp(table_bytes.max(1 << 16)),
+        // iso-area CMOS is ~100x smaller: overflow spills to DDR
+        HashMemory::cmos((table_bytes / 8).max(1 << 14)),
+        HashMemory::rram_flat(2 * table_bytes.max(1 << 16)),
+        HashMemory::monarch(geom, cam_sets),
+    ]
+}
+
+/// One hashing figure (12/13/14): sweep table sizes and window sizes
+/// at a fixed read percentage; report speedup over HBM-C.
+pub fn hash_figure(
+    budget: &Budget,
+    read_pct: f64,
+    windows: &[usize],
+    table_pow2s: &[usize],
+) -> Vec<(usize, usize, Vec<HashReport>)> {
+    let geom = MonarchGeom::FULL.scaled(budget.scale * 4.0);
+    let mut out = Vec::new();
+    for &w in windows {
+        for &tp in table_pow2s {
+            let cfg = YcsbConfig {
+                table_pow2: tp,
+                window: w,
+                ops: budget.hash_ops,
+                read_pct,
+                prefill_density: 0.5,
+                threads: 8,
+                zipf_theta: 0.99,
+                seed: budget.seed,
+            };
+            let mut reports = Vec::new();
+            for mut sys in hash_systems(tp, geom) {
+                reports.push(run_ycsb(&mut sys, &cfg));
+            }
+            out.push((w, tp, reports));
+        }
+    }
+    out
+}
+
+pub fn hash_table(
+    title: &str,
+    rows: &[(usize, usize, Vec<HashReport>)],
+) -> Table {
+    let mut table = Table::new(title).header(vec![
+        "window",
+        "table(2^k)",
+        "HBM-SP",
+        "CMOS",
+        "RRAM",
+        "Monarch",
+    ]);
+    for (w, tp, reports) in rows {
+        let base = &reports[0]; // HBM-C
+        let mut cells = vec![w.to_string(), tp.to_string()];
+        for r in &reports[1..] {
+            cells.push(x(r.speedup_vs(base)));
+        }
+        table.row(cells);
+    }
+    table
+}
+
+/// §10.5 string match across the five systems.
+pub fn stringmatch_reports(budget: &Budget) -> Vec<StringReport> {
+    let cfg = StringMatchConfig {
+        corpus_words: (1usize << 16).max(budget.hash_ops),
+        targets: 24,
+        threads: 8,
+        seed: budget.seed,
+    };
+    let corpus_bytes = cfg.corpus_words * 8;
+    let geom = MonarchGeom::FULL.scaled(budget.scale * 8.0);
+    let cam_sets = cfg.corpus_words / 512 + 1;
+    let mut systems = vec![
+        HashMemory::hbm_c(corpus_bytes / 2),
+        HashMemory::hbm_sp(corpus_bytes * 2),
+        HashMemory::cmos(corpus_bytes / 8),
+        HashMemory::rram_flat(corpus_bytes * 2),
+        HashMemory::monarch(geom, cam_sets),
+    ];
+    systems.iter_mut().map(|s| run_string_match(s, &cfg)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_sweep_shapes() {
+        let budget = Budget {
+            trace_ops: 1200,
+            hash_ops: 1000,
+            threads: 4,
+            ..Budget::quick()
+        };
+        let results = run_cache_mode(&budget);
+        assert_eq!(results.len(), 11, "8 CRONO + 3 NAS");
+        assert_eq!(results[0].len(), fig9_systems().len());
+        let names: Vec<&str> =
+            results.iter().map(|r| r[0].workload.as_str()).collect();
+        assert_eq!(
+            names,
+            ["BC", "BFS", "COM", "CON", "DFS", "PR", "SSSP", "TRI", "FT",
+             "CG", "EP"]
+        );
+        for row in &results {
+            for r in row {
+                assert!(r.cycles > 0, "{}:{}", r.workload, r.system);
+            }
+        }
+        let t = fig9_table(&results);
+        assert!(t.render().contains("GEOMEAN"));
+        let t10 = fig10_table(&results);
+        assert_eq!(t10.num_rows(), 11);
+    }
+
+    #[test]
+    fn hash_figure_runs_all_systems() {
+        let budget = Budget { hash_ops: 800, ..Budget::quick() };
+        let rows = hash_figure(&budget, 0.95, &[32], &[12]);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].2.len(), 5);
+        let t = hash_table("Fig 13", &rows);
+        assert!(t.render().contains("Monarch"));
+    }
+}

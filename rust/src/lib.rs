@@ -1,0 +1,41 @@
+//! # Monarch — a durable polymorphic (RAM/CAM) 3D-stacked resistive memory
+//!
+//! Full-system reproduction of *"Monarch: A Durable Polymorphic Memory
+//! For Data Intensive Applications"* (Prasad & Bojnordi, 2021) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — a cycle-level memory-system simulator: XAM
+//!   arrays, Monarch vault controllers (flat-RAM / flat-CAM / cache
+//!   modes with `t_MWW` lifetime enforcement and rotary wear leveling),
+//!   baseline in-package memories (HBM DRAM, SRAM stack, 1R RRAM),
+//!   DDR4 main memory, an on-die cache hierarchy, trace-driven cores,
+//!   real workload kernels, and the experiment coordinator.
+//! - **L2/L1 (python, build-time only)** — the functional model of the
+//!   XAM associative search as a JAX graph around a Pallas kernel,
+//!   AOT-lowered to HLO text in `artifacts/`.
+//! - **runtime** — loads the artifacts via the `xla` crate (PJRT CPU)
+//!   and services functional search requests on the rust hot path.
+//!
+//! See `DESIGN.md` for the module inventory and the experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod cachehier;
+pub mod config;
+pub mod coordinator;
+pub mod cpu;
+pub mod mem;
+pub mod monarch;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workloads;
+pub mod xam;
+
+pub mod prelude {
+    //! Common imports for examples and benches.
+    pub use crate::config::SystemConfig;
+    pub use crate::util::cli::Args;
+    pub use crate::util::rng::Rng;
+    pub use crate::util::stats::Counters;
+    pub use crate::util::table::Table;
+}

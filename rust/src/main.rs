@@ -1,0 +1,146 @@
+//! `monarch` — leader CLI: regenerate any of the paper's experiments.
+//!
+//! ```text
+//! monarch fig9     [--scale 0.00048828125] [--trace-ops 30000]
+//! monarch fig10    (same flags; shares the fig9 sweep)
+//! monarch fig11    lifetime (ideal WL vs Monarch M=3)
+//! monarch fig12|fig13|fig14   hashing at 100/95/75% lookups
+//! monarch stringmatch          §10.5
+//! monarch table1               technology comparison
+//! monarch selfcheck            load artifacts, kernel-vs-rust check
+//! ```
+
+use anyhow::Result;
+use monarch::config::tech;
+use monarch::coordinator::{self, Budget};
+use monarch::prelude::*;
+use monarch::runtime::SearchEngine;
+use monarch::util::table::f;
+
+fn budget_from(args: &Args) -> Result<Budget> {
+    let mut b = Budget::default();
+    if args.flag("quick") {
+        b = Budget::quick();
+    }
+    b.scale = args.f64_or("scale", b.scale)?;
+    b.trace_ops = args.usize_or("trace-ops", b.trace_ops)?;
+    b.hash_ops = args.usize_or("hash-ops", b.hash_ops)?;
+    b.threads = args.usize_or("threads", b.threads)?;
+    b.seed = args.u64_or("seed", b.seed)?;
+    Ok(b)
+}
+
+fn table1() {
+    let mut t = Table::new(
+        "Table 1 — 32KB building block (latency ns / energy nJ / area mm2)",
+    )
+    .header(vec![
+        "tech", "read", "write", "search", "readE", "writeE", "searchE",
+        "area",
+    ]);
+    for p in tech::ALL {
+        t.row(vec![
+            p.name.to_string(),
+            f(p.read_ns),
+            f(p.write_ns),
+            f(p.search_ns),
+            f(p.read_nj),
+            f(p.write_nj),
+            f(p.search_nj),
+            f(p.area_mm2),
+        ]);
+    }
+    t.print();
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let budget = budget_from(&args)?;
+    match args.subcommand().unwrap_or("help") {
+        "table1" => table1(),
+        "fig9" | "fig10" => {
+            let results = coordinator::run_cache_mode(&budget);
+            coordinator::fig9_table(&results).print();
+            coordinator::fig10_table(&results).print();
+        }
+        "fig11" => {
+            let rows = coordinator::fig11_lifetimes(&budget);
+            let mut t = Table::new("Fig 11 — Lifetime (years)")
+                .header(vec!["workload", "ideal", "Monarch(M=3)"]);
+            for (wl, r) in rows {
+                t.row(vec![wl, f(r.ideal_years), f(r.monarch_years)]);
+            }
+            t.print();
+        }
+        sub @ ("fig12" | "fig13" | "fig14") => {
+            let read_pct = match sub {
+                "fig12" => 1.0,
+                "fig13" => 0.95,
+                _ => 0.75,
+            };
+            let rows = coordinator::hash_figure(
+                &budget,
+                read_pct,
+                &[32, 64, 128],
+                &[12, 14, 16],
+            );
+            coordinator::hash_table(
+                &format!(
+                    "{} — hashing perf relative to HBM-C ({}% lookups)",
+                    sub,
+                    (read_pct * 100.0) as u32
+                ),
+                &rows,
+            )
+            .print();
+        }
+        "stringmatch" => {
+            let reports = coordinator::stringmatch_reports(&budget);
+            let base = reports
+                .iter()
+                .find(|r| r.system == "HBM-C")
+                .expect("HBM-C baseline");
+            let mut t = Table::new("§10.5 — String-Match").header(vec![
+                "system", "cycles", "matches", "speedup vs HBM-C",
+            ]);
+            for r in &reports {
+                t.row(vec![
+                    r.system.clone(),
+                    r.cycles.to_string(),
+                    r.matches.to_string(),
+                    format!("{:.2}x", base.cycles as f64 / r.cycles as f64),
+                ]);
+            }
+            t.print();
+        }
+        "selfcheck" => {
+            let engine = SearchEngine::load(&SearchEngine::default_dir())?;
+            println!("artifacts loaded:");
+            for (name, b, w, c) in engine.variants() {
+                println!("  {name}: b={b} w={w} c={c}");
+            }
+            // quick kernel-vs-rust differential check
+            use monarch::xam::XamArray;
+            let mut a = XamArray::new(64, 512);
+            let mut rng = Rng::new(1);
+            for col in 0..512 {
+                a.write_col(col, rng.next_u64());
+            }
+            let key = a.read_col(300);
+            let got = engine.search_sets(&[&a], &[key], &[!0])?;
+            assert_eq!(got, vec![Some(300)]);
+            println!("selfcheck OK (kernel agrees with the array model)");
+        }
+        other => {
+            if other != "help" {
+                eprintln!("unknown subcommand {other:?}");
+            }
+            println!(
+                "usage: monarch <table1|fig9|fig10|fig11|fig12|fig13|fig14|\
+                 stringmatch|selfcheck> [--quick] [--scale S] \
+                 [--trace-ops N] [--hash-ops N] [--threads N] [--seed N]"
+            );
+        }
+    }
+    Ok(())
+}

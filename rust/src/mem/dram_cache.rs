@@ -1,0 +1,311 @@
+//! Baseline in-package caches: a generic technology-parameterized
+//! block cache (`TechCache`) covering the paper's D-Cache (DRAM,
+//! Loh-Hill-style tags-in-memory), D-Cache(Ideal) (zero act/pre/
+//! refresh), and RC-Unbound (1R RRAM, same cache architecture as
+//! D-Cache — the paper notes they share hit rates). The SRAM+SCAM
+//! S-Cache specializes the tag path (see `sram_cache.rs`).
+//!
+//! Tag management: conventional technologies keep tags in the memory
+//! arrays (one extra read per lookup, Qureshi/Loh style); a CAM tag
+//! path replaces that read with a constant-latency search.
+
+use crate::config::tech::TechParams;
+use crate::config::{CacheGeom, Timing};
+use crate::cachehier::{Eviction, TagStore};
+use crate::mem::timing::{BankEngine, BankState, ChannelState, EngineOpts, Op};
+use crate::mem::{Access, MemReq};
+use crate::util::stats::{Counters, Log2Hist};
+
+/// Result of an in-package cache lookup.
+#[derive(Clone, Copy, Debug)]
+pub struct LookupResult {
+    pub hit: bool,
+    /// Cycle the in-package part is finished (hit: data ready; miss:
+    /// tag check done and the request may be forwarded).
+    pub done_at: u64,
+    pub energy_nj: f64,
+}
+
+/// How tags are checked.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TagMode {
+    /// Tags stored in the memory arrays: one array read per lookup
+    /// before the data access (Loh-Hill).
+    InMemory,
+    /// Content-addressable tag path: constant search latency (cycles)
+    /// and energy (nJ) per lookup.
+    Cam { search_cycles: u64, search_nj: f64 },
+}
+
+/// A technology-parameterized in-package block cache over vaults/banks.
+#[derive(Clone, Debug)]
+pub struct TechCache {
+    pub tags: TagStore,
+    engine: BankEngine,
+    banks: Vec<BankState>,
+    chans: Vec<ChannelState>,
+    vaults: usize,
+    banks_per_vault: usize,
+    tag_mode: TagMode,
+    tech: TechParams,
+    pub stats: Counters,
+    pub hit_lat: Log2Hist,
+    pub label: &'static str,
+}
+
+impl TechCache {
+    pub fn new(
+        label: &'static str,
+        capacity_bytes: usize,
+        ways: usize,
+        timing: Timing,
+        opts: EngineOpts,
+        tech: TechParams,
+        tag_mode: TagMode,
+        vaults: usize,
+        banks_per_vault: usize,
+    ) -> Self {
+        let geom =
+            CacheGeom { size_bytes: capacity_bytes, ways, block_bytes: 64 };
+        Self {
+            tags: TagStore::new(geom),
+            engine: BankEngine::new(timing, opts),
+            banks: vec![BankState::default(); vaults * banks_per_vault],
+            chans: vec![ChannelState::default(); vaults],
+            vaults,
+            banks_per_vault,
+            tag_mode,
+            tech,
+            stats: Counters::new(),
+            hit_lat: Log2Hist::new(),
+            label,
+        }
+    }
+
+    /// The paper's D-Cache: 4GB 8-layer HBM2-style DRAM cache.
+    pub fn dram(capacity: usize) -> Self {
+        Self::new(
+            "D-Cache",
+            capacity,
+            16,
+            Timing::dram(4),
+            EngineOpts::dram(),
+            crate::config::tech::DRAM,
+            TagMode::InMemory,
+            8,
+            8,
+        )
+    }
+
+    /// D-Cache(Ideal): zero activate/precharge/refresh overheads.
+    pub fn dram_ideal(capacity: usize) -> Self {
+        Self::new(
+            "D-Cache(Ideal)",
+            capacity,
+            16,
+            Timing::dram(4),
+            EngineOpts::dram_ideal(),
+            crate::config::tech::DRAM,
+            TagMode::InMemory,
+            8,
+            8,
+        )
+    }
+
+    /// RC-Unbound: 1R RRAM cache, D-Cache architecture, RRAM timing.
+    pub fn rram_unbound(capacity: usize) -> Self {
+        Self::new(
+            "RC-Unbound",
+            capacity,
+            16,
+            Timing::monarch(),
+            EngineOpts::flat(),
+            crate::config::tech::RRAM_1R,
+            TagMode::InMemory,
+            8,
+            64,
+        )
+    }
+
+    #[inline]
+    fn route(&self, addr: u64) -> (usize, usize) {
+        let block = addr / 64;
+        let vault = (block % self.vaults as u64) as usize;
+        let bank = ((block / self.vaults as u64)
+            % self.banks_per_vault as u64) as usize;
+        (vault, bank)
+    }
+
+    #[inline]
+    fn schedule(&mut self, addr: u64, op: Op, now: u64) -> u64 {
+        let (vault, bank) = self.route(addr);
+        let row = self.engine.row_of(addr / 64 / self.vaults as u64);
+        self.engine.schedule(
+            &mut self.banks[vault * self.banks_per_vault + bank],
+            &mut self.chans[vault],
+            op,
+            row,
+            now,
+        )
+    }
+
+    /// Tag-check cost starting at `now`.
+    fn tag_check(&mut self, addr: u64, now: u64) -> (u64, f64) {
+        match self.tag_mode {
+            TagMode::InMemory => {
+                let done = self.schedule(addr, Op::Read, now);
+                (done, self.tech.read_nj)
+            }
+            TagMode::Cam { search_cycles, search_nj } => {
+                (now + search_cycles, search_nj)
+            }
+        }
+    }
+
+    /// Look up `req`: tag check, then data access on hit.
+    pub fn lookup(&mut self, req: &MemReq) -> LookupResult {
+        let write = req.kind.is_write();
+        let (tag_done, tag_nj) = self.tag_check(req.addr, req.at);
+        let hit = self.tags.access(req.addr, write);
+        if hit {
+            let op = if write { Op::Write } else { Op::Read };
+            let done_at = self.schedule(req.addr, op, tag_done);
+            let nj = tag_nj
+                + if write { self.tech.write_nj } else { self.tech.read_nj };
+            self.stats.inc(if write { "hit_w" } else { "hit_r" });
+            self.hit_lat.record(done_at - req.at);
+            LookupResult { hit: true, done_at, energy_nj: nj }
+        } else {
+            self.stats.inc("miss");
+            LookupResult { hit: false, done_at: tag_done, energy_nj: tag_nj }
+        }
+    }
+
+    /// Install a block (fetch fill or L3 write-back). Returns the
+    /// access and a dirty victim the caller must write back to main
+    /// memory.
+    pub fn install(
+        &mut self,
+        addr: u64,
+        dirty: bool,
+        now: u64,
+    ) -> (Access, Option<Eviction>) {
+        let done_at = self.schedule(addr, Op::Write, now);
+        let victim =
+            self.tags.install(addr, dirty).filter(|v| v.dirty);
+        self.stats.inc("installs");
+        (Access { done_at, energy_nj: self.tech.write_nj }, victim)
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        self.tags.hit_rate()
+    }
+
+    /// Background power (W): DRAM refresh/peripheries vs. zero-static
+    /// resistive arrays. Charged by the system energy model.
+    pub fn static_watts(&self) -> f64 {
+        match self.tech.name {
+            "DRAM" => 1.2,
+            "SRAM" | "SRAM+SCAM" => 0.6,
+            _ => 0.05, // RRAM/XAM leakage only
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::ReqKind;
+
+    fn req(addr: u64, kind: ReqKind, at: u64) -> MemReq {
+        MemReq { addr, kind, at, thread: 0 }
+    }
+
+    #[test]
+    fn miss_then_install_then_hit() {
+        let mut c = TechCache::dram(1 << 20);
+        let r = c.lookup(&req(0x40, ReqKind::Read, 1_000_000));
+        assert!(!r.hit);
+        let (a, v) = c.install(0x40, false, r.done_at);
+        assert!(a.done_at > r.done_at);
+        assert!(v.is_none());
+        let r2 = c.lookup(&req(0x40, ReqKind::Read, a.done_at));
+        assert!(r2.hit);
+        assert!(r2.done_at > a.done_at);
+    }
+
+    #[test]
+    fn ideal_lookup_is_faster_than_real_dram() {
+        let mut real = TechCache::dram(1 << 20);
+        let mut ideal = TechCache::dram_ideal(1 << 20);
+        // two blocks in the same vault+bank but different rows:
+        // vault = block % 8, bank = (block/8) % 8, row = (block/8)/32
+        let a = 0u64;
+        let b = 64 * 64 * 32; // block 2048 -> same vault/bank, row 8
+        for addr in [a, b] {
+            real.install(addr, false, 0);
+            ideal.install(addr, false, 0);
+        }
+        // ping-pong between the rows: real DRAM pays pre+act each time
+        let t0 = 1_000_000;
+        let mut tr = t0;
+        let mut ti = t0;
+        for i in 0..6u64 {
+            let addr = if i % 2 == 0 { a } else { b };
+            tr = real.lookup(&req(addr, ReqKind::Read, tr)).done_at;
+            ti = ideal.lookup(&req(addr, ReqKind::Read, ti)).done_at;
+        }
+        assert!(ti - t0 < tr - t0, "ideal {} real {}", ti - t0, tr - t0);
+    }
+
+    #[test]
+    fn rram_reads_cheap_writes_dear() {
+        let mut c = TechCache::rram_unbound(1 << 20);
+        c.install(0, false, 0);
+        let quiet = 10_000;
+        let r = c.lookup(&req(0, ReqKind::Read, quiet));
+        assert!(r.hit);
+        let read_lat = r.done_at - quiet;
+        let w = c.lookup(&req(0, ReqKind::Write, r.done_at + 1000));
+        let write_lat = w.done_at - (r.done_at + 1000);
+        assert!(write_lat > 3 * read_lat, "w={write_lat} r={read_lat}");
+    }
+
+    #[test]
+    fn dirty_victims_surface() {
+        // tiny cache: 2 ways x 1 set per... force same set evictions
+        let mut c = TechCache::new(
+            "tiny",
+            128,
+            2,
+            Timing::monarch(),
+            EngineOpts::flat(),
+            crate::config::tech::XAM_2R,
+            TagMode::InMemory,
+            1,
+            1,
+        );
+        c.install(0, true, 0);
+        c.install(64, false, 0);
+        let (_, v) = c.install(128, false, 0);
+        assert_eq!(v.map(|e| e.addr), Some(0));
+    }
+
+    #[test]
+    fn cam_tagpath_is_constant_cost() {
+        let mut c = TechCache::new(
+            "cam",
+            1 << 20,
+            16,
+            Timing::cmos(),
+            EngineOpts::flat(),
+            crate::config::tech::SRAM_SCAM,
+            TagMode::Cam { search_cycles: 2, search_nj: 0.1273 },
+            8,
+            8,
+        );
+        let r = c.lookup(&req(0x999940, ReqKind::Read, 500));
+        assert!(!r.hit);
+        assert_eq!(r.done_at, 502); // search only, no array read
+    }
+}

@@ -1,0 +1,54 @@
+//! Memory-system substrates: the command/timing engine, the off-chip
+//! DDR4 channel model, and the baseline in-package memories (HBM DRAM
+//! cache/scratchpad, iso-area SRAM stack, unbound 1R RRAM cache) the
+//! paper compares Monarch against.
+
+pub mod ddr4;
+pub mod dram_cache;
+pub mod scratchpad;
+pub mod sram_cache;
+pub mod timing;
+
+/// A memory request as seen below the L3 (block granularity).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemReq {
+    pub addr: u64,
+    pub kind: ReqKind,
+    /// CPU cycle the request reaches this component.
+    pub at: u64,
+    /// Issuing hardware thread (for per-thread stats).
+    pub thread: u16,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqKind {
+    Read,
+    Write,
+    /// Flat-CAM associative search (Monarch only); the payload lives
+    /// in the controller's key/mask registers.
+    Search,
+    /// Key/mask register update (Monarch flat-CAM only).
+    KeyMaskWrite,
+}
+
+impl ReqKind {
+    #[inline]
+    pub fn is_write(&self) -> bool {
+        matches!(self, ReqKind::Write | ReqKind::KeyMaskWrite)
+    }
+}
+
+/// Completion report of a memory access.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Access {
+    /// Cycle the data is available / write is accepted.
+    pub done_at: u64,
+    /// Dynamic energy spent by this access (nJ).
+    pub energy_nj: f64,
+}
+
+impl Access {
+    pub fn latency(&self, req_at: u64) -> u64 {
+        self.done_at.saturating_sub(req_at)
+    }
+}

@@ -1,0 +1,172 @@
+//! Software-managed in-package scratchpads (KNL flat-mode analogue):
+//! HBM-SP (DRAM), the CMOS stack in scratchpad mode, and the flat-RAM
+//! view of an RRAM stack. Requests inside the scratchpad window are
+//! serviced in-package; everything else belongs to DDR4 (the caller
+//! routes). Software controls placement via `flat_ram_malloc`-style
+//! allocation (`monarch::alloc`).
+
+use crate::config::tech::TechParams;
+use crate::config::Timing;
+use crate::mem::timing::{BankEngine, BankState, ChannelState, EngineOpts, Op};
+use crate::mem::{Access, MemReq};
+use crate::util::stats::{Counters, Log2Hist};
+
+/// A flat in-package memory of `capacity_bytes`, mapped at a base
+/// address chosen by the allocator.
+#[derive(Clone, Debug)]
+pub struct Scratchpad {
+    pub label: &'static str,
+    pub capacity_bytes: usize,
+    engine: BankEngine,
+    banks: Vec<BankState>,
+    chans: Vec<ChannelState>,
+    vaults: usize,
+    banks_per_vault: usize,
+    tech: TechParams,
+    pub stats: Counters,
+    pub lat: Log2Hist,
+}
+
+impl Scratchpad {
+    pub fn new(
+        label: &'static str,
+        capacity_bytes: usize,
+        timing: Timing,
+        opts: EngineOpts,
+        tech: TechParams,
+        vaults: usize,
+        banks_per_vault: usize,
+    ) -> Self {
+        Self {
+            label,
+            capacity_bytes,
+            engine: BankEngine::new(timing, opts),
+            banks: vec![BankState::default(); vaults * banks_per_vault],
+            chans: vec![ChannelState::default(); vaults],
+            vaults,
+            banks_per_vault,
+            tech,
+            stats: Counters::new(),
+            lat: Log2Hist::new(),
+        }
+    }
+
+    /// HBM-SP: in-package DRAM in pure scratchpad mode.
+    pub fn hbm_sp(capacity: usize) -> Self {
+        Self::new(
+            "HBM-SP",
+            capacity,
+            Timing::dram(4),
+            EngineOpts::dram(),
+            crate::config::tech::DRAM,
+            8,
+            8,
+        )
+    }
+
+    /// CMOS SRAM stack as scratchpad.
+    pub fn cmos(capacity: usize) -> Self {
+        Self::new(
+            "CMOS",
+            capacity,
+            Timing::cmos(),
+            EngineOpts::flat(),
+            crate::config::tech::SRAM,
+            8,
+            8,
+        )
+    }
+
+    /// Monarch as pure flat-RAM (the paper's "RRAM" hashing baseline).
+    pub fn rram_flat(capacity: usize) -> Self {
+        Self::new(
+            "RRAM",
+            capacity,
+            Timing::monarch(),
+            EngineOpts::flat(),
+            crate::config::tech::XAM_2R,
+            8,
+            64,
+        )
+    }
+
+    pub fn access(&mut self, req: &MemReq) -> Access {
+        let block = req.addr / 64;
+        let vault = (block % self.vaults as u64) as usize;
+        let bank = ((block / self.vaults as u64)
+            % self.banks_per_vault as u64) as usize;
+        let row = self.engine.row_of(block / self.vaults as u64);
+        let op = if req.kind.is_write() { Op::Write } else { Op::Read };
+        let done_at = self.engine.schedule(
+            &mut self.banks[vault * self.banks_per_vault + bank],
+            &mut self.chans[vault],
+            op,
+            row,
+            req.at,
+        );
+        self.lat.record(done_at - req.at);
+        let energy_nj = if req.kind.is_write() {
+            self.stats.inc("writes");
+            self.tech.write_nj
+        } else {
+            self.stats.inc("reads");
+            self.tech.read_nj
+        };
+        Access { done_at, energy_nj }
+    }
+
+    pub fn static_watts(&self) -> f64 {
+        match self.tech.name {
+            "DRAM" => 1.2,
+            "SRAM" | "SRAM+SCAM" => 0.6,
+            _ => 0.05,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::ReqKind;
+
+    fn r(addr: u64, at: u64) -> MemReq {
+        MemReq { addr, kind: ReqKind::Read, at, thread: 0 }
+    }
+
+    #[test]
+    fn technologies_order_as_expected_on_reads() {
+        let mut cmos = Scratchpad::cmos(1 << 20);
+        let mut rram = Scratchpad::rram_flat(1 << 20);
+        let mut hbm = Scratchpad::hbm_sp(1 << 20);
+        let at = 1_000_000;
+        let lc = cmos.access(&r(0, at)).done_at - at;
+        let lr = rram.access(&r(0, at)).done_at - at;
+        let lh = hbm.access(&r(0, at)).done_at - at;
+        assert!(lc <= lr, "cmos {lc} vs rram {lr}");
+        assert!(lr < lh, "rram {lr} vs hbm {lh}");
+    }
+
+    #[test]
+    fn vault_parallelism_overlaps_requests() {
+        let mut sp = Scratchpad::rram_flat(1 << 20);
+        // 8 blocks hitting 8 different vaults at once
+        let at = 50_000;
+        let dones: Vec<u64> =
+            (0..8).map(|i| sp.access(&r(i * 64, at)).done_at).collect();
+        let serial = dones[0] - at;
+        assert!(
+            dones[7] - at < 8 * serial,
+            "vault parallelism should overlap: {dones:?}"
+        );
+    }
+
+    #[test]
+    fn write_energy_exceeds_read_energy_on_rram() {
+        let mut sp = Scratchpad::rram_flat(1 << 20);
+        let re = sp.access(&r(0, 0)).energy_nj;
+        let we = sp
+            .access(&MemReq { addr: 64, kind: ReqKind::Write, at: 0, thread: 0 })
+            .energy_nj;
+        assert!(we > 10.0 * re);
+    }
+}

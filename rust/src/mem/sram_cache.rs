@@ -1,0 +1,57 @@
+//! S-Cache — the iso-area 3D stacked CMOS baseline (§5, §10.2): an
+//! SRAM data array paired with an SCAM tag path. Fast accesses, tiny
+//! capacity (73.28MB at full scale vs. 8GB Monarch), which is exactly
+//! the trade the paper evaluates.
+
+use crate::config::tech::{SRAM_SCAM, SCAM};
+use crate::config::Timing;
+use crate::mem::dram_cache::{TagMode, TechCache};
+use crate::mem::timing::EngineOpts;
+
+/// SCAM search latency in CPU cycles @3.2GHz (0.5037ns, Table 1).
+pub const SCAM_SEARCH_CYCLES: u64 = 2;
+
+/// Build the S-Cache over the shared `TechCache` machinery.
+pub fn s_cache(capacity_bytes: usize) -> TechCache {
+    TechCache::new(
+        "S-Cache",
+        capacity_bytes,
+        16,
+        Timing::cmos(),
+        EngineOpts::flat(),
+        SRAM_SCAM,
+        TagMode::Cam {
+            search_cycles: SCAM_SEARCH_CYCLES,
+            search_nj: SCAM.search_nj,
+        },
+        8,
+        8,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::{MemReq, ReqKind};
+
+    #[test]
+    fn sram_lookup_beats_dram_lookup() {
+        let mut s = s_cache(1 << 20);
+        let mut d = TechCache::dram(1 << 20);
+        s.install(0, false, 0);
+        d.install(0, false, 0);
+        let at = 1_000_000;
+        let rs = s.lookup(&MemReq { addr: 0, kind: ReqKind::Read, at, thread: 0 });
+        let rd = d.lookup(&MemReq { addr: 0, kind: ReqKind::Read, at, thread: 0 });
+        assert!(rs.hit && rd.hit);
+        assert!(rs.done_at < rd.done_at);
+    }
+
+    #[test]
+    fn capacity_is_the_weakness() {
+        // at iso-area the CMOS stack is ~100x smaller than Monarch
+        let full_monarch = 8usize << 30;
+        let full_cmos = (73.28 * 1024.0 * 1024.0) as usize;
+        assert!(full_monarch / full_cmos > 100);
+    }
+}

@@ -1,0 +1,156 @@
+//! memkind-style allocation API (paper §7 "OS Support"): the simulated
+//! address space is partitioned into off-chip DDR, Monarch flat-RAM,
+//! and Monarch flat-CAM windows; `flat_ram_malloc` / `flat_cam_malloc`
+//! hand out regions inside the in-package windows, and the extended
+//! library exposes "pointers" to the match and key/mask registers of
+//! each vault controller (modeled as reserved addresses at the top of
+//! the CAM window).
+
+use anyhow::{bail, Result};
+
+/// Fixed window bases (simulated physical address space).
+pub const DDR_BASE: u64 = 0;
+pub const FLAT_RAM_BASE: u64 = 1 << 40;
+pub const FLAT_CAM_BASE: u64 = 1 << 41;
+/// Register window at the top of the CAM space (key, mask, match).
+pub const REG_BASE: u64 = FLAT_CAM_BASE + (1 << 40) - 4096;
+pub const KEY_REG_ADDR: u64 = REG_BASE;
+pub const MASK_REG_ADDR: u64 = REG_BASE + 8;
+pub const MATCH_REG_ADDR: u64 = REG_BASE + 16;
+
+/// Which memory services an address.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Space {
+    Ddr,
+    FlatRam,
+    FlatCam,
+    Register,
+}
+
+/// Classify an address into its space.
+pub fn space_of(addr: u64) -> Space {
+    if addr >= REG_BASE {
+        Space::Register
+    } else if addr >= FLAT_CAM_BASE {
+        Space::FlatCam
+    } else if addr >= FLAT_RAM_BASE {
+        Space::FlatRam
+    } else {
+        Space::Ddr
+    }
+}
+
+/// An allocated region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Region {
+    pub base: u64,
+    pub size: u64,
+    pub space: Space,
+}
+
+impl Region {
+    pub fn contains(&self, addr: u64) -> bool {
+        addr >= self.base && addr < self.base + self.size
+    }
+
+    /// Offset of `addr` inside the region.
+    pub fn offset(&self, addr: u64) -> u64 {
+        debug_assert!(self.contains(addr));
+        addr - self.base
+    }
+}
+
+/// Bump allocator over the three windows.
+#[derive(Clone, Debug)]
+pub struct Allocator {
+    ddr_next: u64,
+    ddr_cap: u64,
+    ram_next: u64,
+    ram_cap: u64,
+    cam_next: u64,
+    cam_cap: u64,
+}
+
+impl Allocator {
+    pub fn new(ddr_bytes: u64, flat_ram_bytes: u64, flat_cam_bytes: u64) -> Self {
+        Self {
+            ddr_next: DDR_BASE,
+            ddr_cap: ddr_bytes,
+            ram_next: FLAT_RAM_BASE,
+            ram_cap: flat_ram_bytes,
+            cam_next: FLAT_CAM_BASE,
+            cam_cap: flat_cam_bytes,
+        }
+    }
+
+    fn bump(next: &mut u64, base: u64, cap: u64, size: u64) -> Result<u64> {
+        let aligned = (*next + 63) & !63; // 64B block alignment
+        if aligned + size > base + cap {
+            bail!(
+                "allocation of {size} bytes exceeds window \
+                 (used {} of {cap})",
+                aligned - base
+            );
+        }
+        *next = aligned + size;
+        Ok(aligned)
+    }
+
+    /// Conventional main-memory allocation.
+    pub fn malloc(&mut self, size: u64) -> Result<Region> {
+        let base = Self::bump(&mut self.ddr_next, DDR_BASE, self.ddr_cap, size)?;
+        Ok(Region { base, size, space: Space::Ddr })
+    }
+
+    /// `flat_RAM_malloc` (§7): allocate in the Monarch RAM scratchpad.
+    pub fn flat_ram_malloc(&mut self, size: u64) -> Result<Region> {
+        let base =
+            Self::bump(&mut self.ram_next, FLAT_RAM_BASE, self.ram_cap, size)?;
+        Ok(Region { base, size, space: Space::FlatRam })
+    }
+
+    /// `flat_CAM_malloc` (§7): allocate in the Monarch CAM scratchpad.
+    pub fn flat_cam_malloc(&mut self, size: u64) -> Result<Region> {
+        let base =
+            Self::bump(&mut self.cam_next, FLAT_CAM_BASE, self.cam_cap, size)?;
+        Ok(Region { base, size, space: Space::FlatCam })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spaces_are_disjoint_and_classified() {
+        assert_eq!(space_of(0), Space::Ddr);
+        assert_eq!(space_of(FLAT_RAM_BASE), Space::FlatRam);
+        assert_eq!(space_of(FLAT_CAM_BASE), Space::FlatCam);
+        assert_eq!(space_of(KEY_REG_ADDR), Space::Register);
+        assert_eq!(space_of(MATCH_REG_ADDR), Space::Register);
+        assert!(KEY_REG_ADDR > FLAT_CAM_BASE);
+    }
+
+    #[test]
+    fn alloc_is_aligned_and_bounded() {
+        let mut a = Allocator::new(1 << 20, 1 << 20, 1 << 20);
+        let r1 = a.flat_cam_malloc(100).unwrap();
+        assert_eq!(r1.base % 64, 0);
+        let r2 = a.flat_cam_malloc(100).unwrap();
+        assert!(r2.base >= r1.base + 100);
+        assert_eq!(r2.base % 64, 0);
+        assert!(a.flat_cam_malloc(2 << 20).is_err(), "window overflow");
+        // other windows unaffected
+        assert!(a.flat_ram_malloc(1 << 19).is_ok());
+        assert!(a.malloc(1 << 19).is_ok());
+    }
+
+    #[test]
+    fn region_contains_offsets() {
+        let mut a = Allocator::new(1 << 20, 1 << 20, 1 << 20);
+        let r = a.flat_ram_malloc(256).unwrap();
+        assert!(r.contains(r.base) && r.contains(r.base + 255));
+        assert!(!r.contains(r.base + 256));
+        assert_eq!(r.offset(r.base + 17), 17);
+    }
+}

@@ -1,0 +1,467 @@
+//! Software-managed flat modes (paper §7): **flat-RAM** (scratchpad
+//! reads/writes) and **flat-CAM** (data writes, key/mask register
+//! writes, searches via the match pointer, and RAM-mode reads of the
+//! stored keys).
+//!
+//! Controller behaviour reproduced from §7 "Flat-CAM Control":
+//! - key/mask pointers map to two global registers in the vault
+//!   controller; their contents are pushed to a target superset only
+//!   when that superset is stale (tracked per superset);
+//! - a search is triggered by a read of the match pointer; the
+//!   controller re-issues the search only if the match register does
+//!   not already hold the result for the current key/mask;
+//! - key/mask writes need the superset in RowIn CAM; data writes need
+//!   ColumnIn CAM; searches need the bank's `Ref_S` — prepare/activate
+//!   toggles are issued (and costed) on demand;
+//! - t_MWW follows the strict blocking policy for flat-mode writes.
+
+use crate::config::{MonarchGeom, Timing, WearConfig};
+use crate::mem::timing::{BankEngine, BankState, ChannelState, EngineOpts, Op};
+use crate::mem::Access;
+use crate::monarch::wear::WearLeveler;
+use crate::util::stats::Counters;
+use crate::xam::{PortMode, SenseMode, XamArray};
+
+const XAM_READ_NJ: f64 = 0.0215;
+const XAM_WRITE_NJ: f64 = 0.652;
+const XAM_SEARCH_NJ: f64 = 0.0263;
+
+/// Per-bank mode latches (sense reference + port selector).
+#[derive(Clone, Copy, Debug)]
+struct BankMode {
+    sense: SenseMode,
+    port: PortMode,
+    state: BankState,
+}
+
+impl Default for BankMode {
+    fn default() -> Self {
+        Self {
+            sense: SenseMode::Read,
+            port: PortMode::RowIn,
+            state: BankState::default(),
+        }
+    }
+}
+
+/// The flat-mode Monarch controller: a CAM region of real XAM sets
+/// plus a flat-RAM region (timing-only).
+#[derive(Clone, Debug)]
+pub struct MonarchFlat {
+    pub geom: MonarchGeom,
+    engine: BankEngine,
+    /// CAM sets (column-addressed stored words, searchable).
+    sets: Vec<XamArray>,
+    banks: Vec<BankMode>,
+    chans: Vec<ChannelState>,
+    /// RAM-region bank states (shared vault channels with CAM).
+    ram_banks: Vec<BankState>,
+    /// Global key/mask registers + monotonically increasing version.
+    key_reg: u64,
+    mask_reg: u64,
+    version: u64,
+    /// Key/mask version latched at each superset (stale tracking).
+    ss_version: Vec<u64>,
+    /// Sub-block write accumulators: t_MWW counts 64B-*block* writes
+    /// (§6.2 "the 512-block supersets"); a 64-bit column write is 1/8
+    /// of a block, so wear is charged once per 8 column writes.
+    subwrites: Vec<u8>,
+    /// Match register: (version, set, result) of the last search.
+    match_reg: Option<(u64, usize, Option<usize>)>,
+    wear: WearLeveler,
+    bounded: bool,
+    pub stats: Counters,
+    pub energy_nj: f64,
+}
+
+impl MonarchFlat {
+    /// `cam_sets` real searchable sets; the remainder of the vault
+    /// space is flat-RAM (timing only). `window_cycles` = effective
+    /// t_MWW; `bounded=false` disables it (unbound RRAM baselines).
+    pub fn new(
+        geom: MonarchGeom,
+        cam_sets: usize,
+        wear_cfg: WearConfig,
+        window_cycles: u64,
+        bounded: bool,
+    ) -> Self {
+        let banks = geom.vaults * geom.banks_per_vault;
+        let supersets = cam_sets.div_ceil(geom.sets_per_superset).max(1);
+        Self {
+            geom,
+            engine: BankEngine::new(Timing::monarch(), EngineOpts::flat()),
+            sets: (0..cam_sets)
+                .map(|_| XamArray::new(geom.rows_per_set, geom.cols_per_set))
+                .collect(),
+            banks: vec![BankMode::default(); banks.max(1)],
+            chans: vec![ChannelState::default(); geom.vaults],
+            ram_banks: vec![BankState::default(); banks.max(1)],
+            key_reg: 0,
+            mask_reg: 0,
+            version: 0,
+            ss_version: vec![u64::MAX; supersets],
+            subwrites: vec![0; supersets],
+            match_reg: None,
+            wear: WearLeveler::new(wear_cfg, supersets, window_cycles),
+            bounded,
+            stats: Counters::new(),
+            energy_nj: 0.0,
+        }
+    }
+
+    pub fn num_cam_sets(&self) -> usize {
+        self.sets.len()
+    }
+
+    pub fn cols_per_set(&self) -> usize {
+        self.geom.cols_per_set
+    }
+
+    /// CAM set -> (vault, bank) routing: sets interleave across vaults
+    /// for search parallelism.
+    #[inline]
+    fn route_set(&self, set: usize) -> (usize, usize) {
+        let vault = set % self.geom.vaults;
+        let bank = (set / self.geom.vaults) % self.geom.banks_per_vault;
+        (vault, vault * self.geom.banks_per_vault + bank)
+    }
+
+    #[inline]
+    fn superset_of(&self, set: usize) -> usize {
+        (set / self.geom.sets_per_superset) % self.ss_version.len()
+    }
+
+    /// Update the global key register (a recognized write to the key
+    /// pointer, Fig 6). Register write: command + burst only. The
+    /// controller tracks the current value (§7 "to eliminate any
+    /// unnecessary key/mask updates"): rewriting the same value is a
+    /// no-op that keeps the match register valid.
+    pub fn write_key(&mut self, key: u64, now: u64) -> Access {
+        if key == self.key_reg && self.version != 0 {
+            return Access { done_at: now + 1, energy_nj: 0.0 };
+        }
+        self.key_reg = key;
+        self.version += 1;
+        self.match_reg = None;
+        self.stats.inc("key_writes");
+        let t = self.engine.timing;
+        Access {
+            done_at: now + (t.t_cwd + t.t_bl) as u64,
+            energy_nj: 0.001,
+        }
+    }
+
+    /// Update the global mask register (same dedup as the key).
+    pub fn write_mask(&mut self, mask: u64, now: u64) -> Access {
+        if mask == self.mask_reg && self.version != 0 {
+            return Access { done_at: now + 1, energy_nj: 0.0 };
+        }
+        self.mask_reg = mask;
+        self.version += 1;
+        self.match_reg = None;
+        self.stats.inc("mask_writes");
+        let t = self.engine.timing;
+        Access {
+            done_at: now + (t.t_cwd + t.t_bl) as u64,
+            energy_nj: 0.001,
+        }
+    }
+
+    /// Flat-CAM data write: store `word` into column `col` of `set`
+    /// (ColumnIn CAM). Returns `None` when t_MWW strictly blocks it.
+    pub fn cam_write(
+        &mut self,
+        set: usize,
+        col: usize,
+        word: u64,
+        now: u64,
+    ) -> Option<Access> {
+        let ss = self.superset_of(set);
+        if self.bounded {
+            if self.wear.locked(ss, now) {
+                self.stats.inc("cam_write_blocked");
+                return None;
+            }
+            self.subwrites[ss] += 1;
+            if self.subwrites[ss] >= 8 {
+                self.subwrites[ss] = 0;
+                let (ok, _) = self.wear.on_write(ss, false, now);
+                if !ok {
+                    self.stats.inc("cam_write_blocked");
+                    return None;
+                }
+            }
+        }
+        let (vault, bank) = self.route_set(set);
+        let mut t = now;
+        // the superset must be in ColumnIn CAM (§7): activate if not
+        if self.banks[bank].port != PortMode::ColumnIn {
+            self.banks[bank].port = PortMode::ColumnIn;
+            t += self.engine.timing.t_ras as u64;
+            self.stats.inc("activates");
+        }
+        let done_at = {
+            let b = &mut self.banks[bank];
+            self.engine.schedule(&mut b.state, &mut self.chans[vault], Op::Write, 0, t)
+        };
+        self.sets[set].write_col(col, word);
+        self.energy_nj += XAM_WRITE_NJ;
+        self.stats.inc("cam_writes");
+        Some(Access { done_at, energy_nj: XAM_WRITE_NJ })
+    }
+
+    /// A read of the match pointer for `set` (§7): issues the search
+    /// if the match register is stale, pushing key/mask first when the
+    /// superset has not seen the latest values. Returns the access and
+    /// the matching column (None = no match in this set).
+    pub fn search(&mut self, set: usize, now: u64) -> (Access, Option<usize>) {
+        // result already latched for this key/mask + set?
+        if let Some((v, s, r)) = self.match_reg {
+            if v == self.version && s == set {
+                self.stats.inc("match_reg_hits");
+                return (
+                    Access { done_at: now + 1, energy_nj: 0.0 },
+                    r,
+                );
+            }
+        }
+        let (vault, bank) = self.route_set(set);
+        let ss = self.superset_of(set);
+        let mut t = now;
+        // push key/mask to the superset if stale (RowIn CAM transfer)
+        if self.ss_version[ss] != self.version {
+            if self.banks[bank].port != PortMode::RowIn {
+                self.banks[bank].port = PortMode::RowIn;
+                t += self.engine.timing.t_ras as u64;
+                self.stats.inc("activates");
+            }
+            t += (self.engine.timing.t_cwd + 2 * self.engine.timing.t_bl) as u64;
+            self.ss_version[ss] = self.version;
+            self.stats.inc("keymask_pushes");
+        }
+        // bank must sense against Ref_S
+        if self.banks[bank].sense != SenseMode::Search {
+            self.banks[bank].sense = SenseMode::Search;
+            t += self.engine.timing.t_rp as u64;
+            self.stats.inc("prepares");
+        }
+        let done_at = {
+            let b = &mut self.banks[bank];
+            self.engine.schedule(&mut b.state, &mut self.chans[vault], Op::Search, 0, t)
+        };
+        let hit = self.sets[set].search_first(self.key_reg, self.mask_reg);
+        self.match_reg = Some((self.version, set, hit));
+        self.energy_nj += XAM_SEARCH_NJ;
+        self.stats.inc("searches");
+        (Access { done_at, energy_nj: XAM_SEARCH_NJ }, hit)
+    }
+
+    /// RAM-mode read of a stored CAM word (footnote 1: reading actual
+    /// keys uses row-mode reads; needs the bank back at Ref_R).
+    pub fn cam_read(&mut self, set: usize, col: usize, now: u64) -> (Access, u64) {
+        let (vault, bank) = self.route_set(set);
+        let mut t = now;
+        if self.banks[bank].sense != SenseMode::Read {
+            self.banks[bank].sense = SenseMode::Read;
+            t += self.engine.timing.t_rp as u64;
+            self.stats.inc("prepares");
+        }
+        let done_at = {
+            let b = &mut self.banks[bank];
+            self.engine.schedule(&mut b.state, &mut self.chans[vault], Op::Read, 0, t)
+        };
+        self.energy_nj += XAM_READ_NJ;
+        self.stats.inc("cam_reads");
+        (
+            Access { done_at, energy_nj: XAM_READ_NJ },
+            self.sets[set].read_col(col),
+        )
+    }
+
+    /// Flat-RAM access (timing only; data lives with the workload).
+    pub fn ram_access(&mut self, block: u64, write: bool, now: u64) -> Option<Access> {
+        let vault = (block % self.geom.vaults as u64) as usize;
+        let bank_in_vault = ((block / self.geom.vaults as u64)
+            % self.geom.banks_per_vault as u64) as usize;
+        let bank = vault * self.geom.banks_per_vault + bank_in_vault;
+        if write && self.bounded {
+            // flat-RAM writes share the t_MWW budget of their superset
+            let n = self.ss_version.len() as u64;
+            let ss = (block / self.geom.sets_per_superset as u64 % n) as usize;
+            let (ok, _) = self.wear.on_write(ss, false, now);
+            if !ok {
+                self.stats.inc("ram_write_blocked");
+                return None;
+            }
+        }
+        let op = if write { Op::Write } else { Op::Read };
+        let done_at = self.engine.schedule(
+            &mut self.ram_banks[bank],
+            &mut self.chans[vault],
+            op,
+            0,
+            now,
+        );
+        let nj = if write { XAM_WRITE_NJ } else { XAM_READ_NJ };
+        self.energy_nj += nj;
+        self.stats.inc(if write { "ram_writes" } else { "ram_reads" });
+        Some(Access { done_at, energy_nj: nj })
+    }
+
+    /// Direct functional access to a set (tests / runtime bridge).
+    pub fn set_array(&self, set: usize) -> &XamArray {
+        &self.sets[set]
+    }
+
+    /// Reset all bank/channel reservation state (measurement epoch
+    /// boundary: e.g. after a table-population phase that the
+    /// experiment does not charge). Functional contents, wear and
+    /// register state are untouched.
+    pub fn reset_timing(&mut self) {
+        for b in self.banks.iter_mut() {
+            b.state = BankState::default();
+        }
+        for b in self.ram_banks.iter_mut() {
+            *b = BankState::default();
+        }
+        for c in self.chans.iter_mut() {
+            *c = ChannelState::default();
+        }
+    }
+
+    pub fn keymask(&self) -> (u64, u64) {
+        (self.key_reg, self.mask_reg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(cam_sets: usize) -> MonarchFlat {
+        let geom = MonarchGeom {
+            vaults: 4,
+            banks_per_vault: 8,
+            supersets_per_bank: 8,
+            sets_per_superset: 8,
+            rows_per_set: 64,
+            cols_per_set: 512,
+            layers: 1,
+        };
+        MonarchFlat::new(geom, cam_sets, WearConfig::default_m(3), 1 << 40, true)
+    }
+
+    #[test]
+    fn fig6_key_value_store_flow() {
+        // the paper's Fig 6 example: populate a set, set key/mask,
+        // read the match pointer, fetch data by the returned index
+        let mut m = flat(8);
+        let mut t = 0;
+        for (i, key) in [111u64, 222, 333, 444].iter().enumerate() {
+            t = m.cam_write(0, i, *key, t).unwrap().done_at;
+        }
+        t = m.write_key(333, t).done_at;
+        t = m.write_mask(!0, t).done_at;
+        let (a, hit) = m.search(0, t);
+        assert_eq!(hit, Some(2));
+        // data access by match index would now go to flat-RAM
+        let d = m.ram_access(2, false, a.done_at).unwrap();
+        assert!(d.done_at > a.done_at);
+    }
+
+    #[test]
+    fn match_register_caches_result() {
+        let mut m = flat(4);
+        m.cam_write(1, 7, 0xFEED, 0);
+        m.write_key(0xFEED, 100);
+        m.write_mask(!0, 110);
+        let (_, h1) = m.search(1, 200);
+        assert_eq!(h1, Some(7));
+        let before = m.stats.get("searches");
+        let (a2, h2) = m.search(1, 300);
+        assert_eq!(h2, Some(7));
+        assert_eq!(m.stats.get("searches"), before, "served from match reg");
+        assert_eq!(a2.done_at, 301);
+        // a new key invalidates the match register
+        m.write_key(0xBEEF, 400);
+        let (_, h3) = m.search(1, 500);
+        assert_eq!(h3, None);
+        assert_eq!(m.stats.get("searches"), before + 1);
+    }
+
+    #[test]
+    fn keymask_pushed_once_per_superset_per_version() {
+        let mut m = flat(16); // sets 0..8 = superset 0, 8..16 = ss 1
+        m.cam_write(0, 0, 5, 0);
+        m.cam_write(1, 0, 5, 0);
+        m.write_key(5, 100);
+        m.write_mask(!0, 110);
+        m.search(0, 200);
+        let p1 = m.stats.get("keymask_pushes");
+        assert_eq!(p1, 1);
+        // consecutive sets of the same superset reuse the registers (§7)
+        m.search(1, 300);
+        assert_eq!(m.stats.get("keymask_pushes"), p1);
+        // a set in another superset needs its own push
+        m.search(8, 400);
+        assert_eq!(m.stats.get("keymask_pushes"), p1 + 1);
+    }
+
+    #[test]
+    fn masked_search_matches_partial_key() {
+        let mut m = flat(2);
+        m.cam_write(0, 3, 0xAABB_CCDD, 0);
+        m.cam_write(0, 9, 0x1122_CCDD, 0);
+        m.write_key(0x0000_CCDD, 100);
+        m.write_mask(0xFFFF, 100); // compare low 16 bits only
+        let (_, hit) = m.search(0, 200);
+        assert_eq!(hit, Some(3), "first matching column wins");
+    }
+
+    #[test]
+    fn mode_toggles_are_costed_once() {
+        let mut m = flat(2);
+        m.cam_write(0, 0, 1, 0); // activate to ColumnIn
+        let acts = m.stats.get("activates");
+        m.cam_write(0, 1, 2, 1000);
+        assert_eq!(m.stats.get("activates"), acts, "already ColumnIn");
+        m.write_key(1, 2000);
+        m.search(0, 3000); // push key (RowIn) + prepare (Ref_S)
+        assert!(m.stats.get("activates") > acts);
+        assert_eq!(m.stats.get("prepares"), 1);
+        m.write_key(2, 4000);
+        m.search(0, 5000);
+        assert_eq!(m.stats.get("prepares"), 1, "bank already at Ref_S");
+    }
+
+    #[test]
+    fn strict_blocking_in_flat_mode() {
+        let geom = flat(1).geom;
+        let mut m =
+            MonarchFlat::new(geom, 8, WearConfig::default_m(1), 1 << 40, true);
+        let mut blocked = false;
+        // t_MWW counts 64B blocks (8 columns); M=1 allows 512 block
+        // writes = 4096 column writes per superset per window
+        for i in 0..10_000u64 {
+            if m.cam_write(0, (i % 512) as usize, i, i * 200).is_none() {
+                blocked = true;
+                assert!(i >= 4096, "blocked too early at {i}");
+                break;
+            }
+        }
+        assert!(blocked, "t_MWW must strictly block flat-mode writes");
+        assert!(m.stats.get("cam_write_blocked") > 0);
+    }
+
+    #[test]
+    fn cam_read_returns_stored_word_and_toggles_ref() {
+        let mut m = flat(2);
+        m.cam_write(1, 5, 0xC0FFEE, 0);
+        m.write_key(0xC0FFEE, 10);
+        m.write_mask(!0, 10);
+        m.search(1, 100); // bank now at Ref_S
+        let (_, w) = m.cam_read(1, 5, 2000);
+        assert_eq!(w, 0xC0FFEE);
+        assert_eq!(m.stats.get("prepares"), 2, "Ref_S -> Ref_R toggle");
+    }
+}

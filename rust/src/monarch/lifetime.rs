@@ -1,0 +1,214 @@
+//! Lifetime estimation (paper §10.3, Fig 11).
+//!
+//! "Performing a cycle accurate simulation till RRAM cells die seems
+//! impractical ... Instead, we use the recorded memory snapshots for
+//! lifetime estimation. ... We model a constantly repeated execution
+//! of each application while applying the offset addressing on every
+//! rotation. The lifetime estimation stops when a XAM cell exceeds
+//! the maximum number of cell writes."
+//!
+//! Input: per-rotation-interval, per-superset block-write snapshots
+//! (`WearLeveler::all_intervals`). A block write programs each cell of
+//! its column once, and the rotary replacement counter evens writes
+//! across the blocks *inside* a superset (§8), so per-cell wear at
+//! superset granularity is `writes / blocks_per_superset`. The
+//! estimator replays the intervals with the prime-stride superset
+//! offset advancing at every rotation, accumulates physical-location
+//! wear, and converts the steady-state maximum rate into years. The
+//! "ideal" wear-leveled lifetime uses the perfectly even rate (total
+//! writes spread over every location), as the paper's Fig 11 baseline.
+
+use crate::monarch::wear::Offsets;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LifetimeReport {
+    pub ideal_years: f64,
+    pub monarch_years: f64,
+    /// Worst physical superset's share vs. perfectly even (1.0 = even).
+    pub imbalance: f64,
+}
+
+pub struct LifetimeEstimator {
+    pub endurance: u64,
+    pub freq_ghz: f64,
+    pub blocks_per_superset: f64,
+    /// Replays of the recorded run (enough for the offset pattern to
+    /// reach steady state).
+    pub repeats: usize,
+}
+
+impl Default for LifetimeEstimator {
+    fn default() -> Self {
+        Self {
+            endurance: 100_000_000,
+            freq_ghz: 3.2,
+            blocks_per_superset: 512.0,
+            repeats: 64,
+        }
+    }
+}
+
+const SECONDS_PER_YEAR: f64 = 365.25 * 24.0 * 3600.0;
+
+impl LifetimeEstimator {
+    /// `intervals[k][s]` = block writes to logical superset `s` during
+    /// rotation interval `k`; `run_cycles` = total simulated cycles;
+    /// `intra_imbalance` = measured max/mean block-write ratio *inside*
+    /// supersets (>= 1.0; the rotary replacement counter evens writes
+    /// within a superset but not perfectly — the caller measures it
+    /// from the XAM column wear counters; the ideal baseline assumes
+    /// 1.0 by definition).
+    pub fn estimate(
+        &self,
+        intervals: &[Vec<u64>],
+        run_cycles: u64,
+        intra_imbalance: f64,
+    ) -> LifetimeReport {
+        let intra_imbalance = intra_imbalance.max(1.0);
+        let s = intervals.first().map(|v| v.len()).unwrap_or(0);
+        if s == 0 || run_cycles == 0 {
+            return LifetimeReport {
+                ideal_years: f64::INFINITY,
+                monarch_years: f64::INFINITY,
+                imbalance: 1.0,
+            };
+        }
+        let total: u64 = intervals.iter().flatten().sum();
+        if total == 0 {
+            return LifetimeReport {
+                ideal_years: f64::INFINITY,
+                monarch_years: f64::INFINITY,
+                imbalance: 1.0,
+            };
+        }
+        let run_seconds = run_cycles as f64 / (self.freq_ghz * 1e9);
+
+        // Ideal: every cell location receives the even share.
+        let cell_writes_per_run_ideal =
+            total as f64 / s as f64 / self.blocks_per_superset;
+        let ideal_years = self.endurance as f64
+            / (cell_writes_per_run_ideal / run_seconds)
+            / SECONDS_PER_YEAR;
+
+        // Monarch: replay with the superset offset advancing per
+        // rotation (logical superset l maps to physical
+        // (l + offset) % s during each interval).
+        let mut phys = vec![0u64; s];
+        let mut off = Offsets::default();
+        for _ in 0..self.repeats {
+            for interval in intervals {
+                let o = off.superset as usize % s;
+                for (l, &w) in interval.iter().enumerate() {
+                    phys[(l + o) % s] += w;
+                }
+                off.rotate();
+            }
+        }
+        let max_phys = *phys.iter().max().unwrap() as f64;
+        let cell_writes_per_run_monarch = max_phys / self.repeats as f64
+            / self.blocks_per_superset
+            * intra_imbalance;
+        let monarch_years = self.endurance as f64
+            / (cell_writes_per_run_monarch / run_seconds)
+            / SECONDS_PER_YEAR;
+        let even = total as f64 / s as f64;
+        LifetimeReport {
+            ideal_years,
+            monarch_years,
+            imbalance: max_phys / self.repeats as f64 / even
+                * intra_imbalance,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est() -> LifetimeEstimator {
+        LifetimeEstimator::default()
+    }
+
+    #[test]
+    fn even_traffic_matches_ideal() {
+        // uniform writes: wear leveling can't be beaten, monarch ~ ideal
+        let intervals = vec![vec![100u64; 64]; 4];
+        let r = est().estimate(&intervals, 1_000_000_000, 1.0);
+        assert!(r.monarch_years > 0.0 && r.ideal_years > 0.0);
+        let ratio = r.monarch_years / r.ideal_years;
+        assert!(ratio > 0.95 && ratio <= 1.01, "ratio={ratio}");
+        assert!((r.imbalance - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn skewed_traffic_converges_via_rotation() {
+        // all writes hammer one logical superset per interval; the
+        // prime-stride rotation spreads them across locations over
+        // repeats, so superset-level wear converges to even — the
+        // residual gap to ideal is the intra-superset imbalance
+        let mut intervals = vec![];
+        for _ in 0..8 {
+            let mut v = vec![0u64; 64];
+            v[0] = 6400;
+            intervals.push(v);
+        }
+        let r = est().estimate(&intervals, 1_000_000_000, 1.0);
+        assert!(r.monarch_years <= r.ideal_years * 1.001);
+        assert!(r.monarch_years > 0.5 * r.ideal_years);
+        // with measured intra-superset imbalance the gap is real
+        let r2 = est().estimate(&intervals, 1_000_000_000, 1.64);
+        assert!(r2.monarch_years < 0.75 * r2.ideal_years);
+        assert!(r2.imbalance > 1.5);
+    }
+
+    #[test]
+    fn more_writes_mean_less_lifetime() {
+        let light = vec![vec![10u64; 16]];
+        let heavy = vec![vec![1000u64; 16]];
+        let rl = est().estimate(&light, 1 << 30, 1.2);
+        let rh = est().estimate(&heavy, 1 << 30, 1.2);
+        assert!(rl.ideal_years > rh.ideal_years * 50.0);
+        assert!(rl.monarch_years > rh.monarch_years * 50.0);
+    }
+
+    #[test]
+    fn zero_writes_live_forever() {
+        let r = est().estimate(&[vec![0u64; 8]], 1000, 1.0);
+        assert!(r.ideal_years.is_infinite());
+        assert!(r.monarch_years.is_infinite());
+    }
+
+    #[test]
+    fn paper_scale_sanity() {
+        // EP-like shape (Fig 11 worst case): pick write intensities
+        // that give an O(10)-year ideal lifetime and check Monarch
+        // lands between 30% and 100% of it with a measured
+        // intra-superset imbalance (the paper: 10.22 vs 16.72 years).
+        let s = 4096;
+        let w = 25u64;
+        let mut intervals = vec![vec![w; s]; 2];
+        for v in intervals.iter_mut() {
+            for (i, x) in v.iter_mut().enumerate() {
+                if i % 7 == 0 {
+                    *x *= 3;
+                }
+            }
+        }
+        let r = est().estimate(&intervals, 2_000_000_000, 1.63);
+        assert!(
+            r.ideal_years > 5.0 && r.ideal_years < 50.0,
+            "ideal={}",
+            r.ideal_years
+        );
+        let frac = r.monarch_years / r.ideal_years;
+        assert!(frac > 0.15 && frac < 1.0, "frac={frac}");
+        // with enough repeats for the offsets to cycle all 4096
+        // positions, the superset-level replay converges and the gap
+        // approaches the intra-superset imbalance (paper: ~0.61)
+        let mut long = est();
+        long.repeats = 4096;
+        let r2 = long.estimate(&intervals, 2_000_000_000, 1.63);
+        let frac2 = r2.monarch_years / r2.ideal_years;
+        assert!(frac2 > 0.5 && frac2 < 0.75, "frac2={frac2}");
+    }
+}

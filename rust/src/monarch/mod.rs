@@ -1,0 +1,16 @@
+//! Monarch — the paper's contribution: vault controllers for the
+//! flat-RAM / flat-CAM / hardware-cache operating modes over XAM
+//! arrays, with `t_MWW` durability enforcement, rotary wear leveling,
+//! and snapshot-based lifetime estimation.
+
+pub mod alloc;
+pub mod cache;
+pub mod flat;
+pub mod lifetime;
+pub mod wear;
+
+pub use alloc::{Allocator, Region, Space};
+pub use cache::MonarchCache;
+pub use flat::MonarchFlat;
+pub use lifetime::{LifetimeEstimator, LifetimeReport};
+pub use wear::{WearEvent, WearLeveler};

@@ -1,0 +1,308 @@
+//! Runtime bridge to the AOT-compiled L1/L2 artifacts.
+//!
+//! Loads the HLO-*text* artifacts emitted by `python/compile/aot.py`
+//! (the Pallas XAM-search kernel inside the JAX `batched_search`
+//! graph), compiles each shape variant ONCE on the PJRT CPU client at
+//! startup, and services batched functional searches from the rust
+//! hot path. Python never runs at request time; the rust binary is
+//! self-contained once `make artifacts` has been run.
+//!
+//! A pure-rust fallback (`XamArray::search`) covers environments
+//! without artifacts and doubles as the differential-test oracle: the
+//! kernel and the array model must agree bit-for-bit.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::xam::XamArray;
+
+/// One compiled shape variant of the search computation.
+pub struct Variant {
+    pub name: String,
+    pub b: usize,
+    pub w: usize,
+    pub c: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Result of one batched search.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchSearchOut {
+    /// Per-set per-column match flags (0/1), row-major `[b][c]`.
+    pub match_vec: Vec<i32>,
+    /// First matching column per set, -1 if none.
+    pub index: Vec<i32>,
+    /// Mismatching-bit counts per column, row-major `[b][c]`.
+    pub mismatch: Vec<i32>,
+}
+
+/// The PJRT-backed search engine.
+pub struct SearchEngine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    variants: Vec<Variant>,
+    pub executions: std::cell::Cell<u64>,
+}
+
+impl SearchEngine {
+    /// Default artifact directory (repo-local `artifacts/`, or
+    /// `$MONARCH_ARTIFACTS`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("MONARCH_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Load every variant listed in `<dir>/manifest.txt` and compile
+    /// on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| {
+                format!(
+                    "missing {}/manifest.txt — run `make artifacts`",
+                    dir.display()
+                )
+            })?;
+        let client =
+            xla::PjRtClient::cpu().context("PJRT CPU client creation")?;
+        let mut variants = Vec::new();
+        for line in manifest.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 5 {
+                bail!("malformed manifest line: {line:?}");
+            }
+            let (name, b, w, c, file) = (
+                parts[0].to_string(),
+                parts[1].parse::<usize>()?,
+                parts[2].parse::<usize>()?,
+                parts[3].parse::<usize>()?,
+                parts[4],
+            );
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            variants.push(Variant { name, b, w, c, exe });
+        }
+        if variants.is_empty() {
+            bail!("manifest listed no variants");
+        }
+        Ok(Self { client, variants, executions: std::cell::Cell::new(0) })
+    }
+
+    pub fn variants(
+        &self,
+    ) -> impl Iterator<Item = (&str, usize, usize, usize)> {
+        self.variants.iter().map(|v| (v.name.as_str(), v.b, v.w, v.c))
+    }
+
+    /// Smallest variant that fits `b` sets of geometry (w, c).
+    fn pick(&self, b: usize, w: usize, c: usize) -> Result<&Variant> {
+        self.variants
+            .iter()
+            .filter(|v| v.w == w && v.c == c && v.b >= b)
+            .min_by_key(|v| v.b)
+            .with_context(|| {
+                format!("no artifact variant fits b={b} w={w} c={c}")
+            })
+    }
+
+    /// Execute a batched search over packed i32 words.
+    pub fn search_raw(
+        &self,
+        data: &[i32],
+        keys: &[i32],
+        masks: &[i32],
+        b: usize,
+        w: usize,
+        c: usize,
+    ) -> Result<BatchSearchOut> {
+        assert_eq!(data.len(), b * w * c);
+        assert_eq!(keys.len(), b * w);
+        assert_eq!(masks.len(), b * w);
+        let v = self.pick(b, w, c)?;
+        // pad the batch up to the variant's size
+        let vb = v.b;
+        let mut d = vec![0i32; vb * w * c];
+        let mut k = vec![0i32; vb * w];
+        let mut m = vec![0i32; vb * w]; // padded sets compare nothing
+        d[..data.len()].copy_from_slice(data);
+        k[..keys.len()].copy_from_slice(keys);
+        m[..masks.len()].copy_from_slice(masks);
+        let dl = xla::Literal::vec1(&d).reshape(&[
+            vb as i64,
+            w as i64,
+            c as i64,
+        ])?;
+        let kl = xla::Literal::vec1(&k).reshape(&[vb as i64, w as i64])?;
+        let ml = xla::Literal::vec1(&m).reshape(&[vb as i64, w as i64])?;
+        let result = v.exe.execute::<xla::Literal>(&[dl, kl, ml])?[0][0]
+            .to_literal_sync()?;
+        self.executions.set(self.executions.get() + 1);
+        let (mv, idx, mism) = result.to_tuple3()?;
+        let mut match_vec = mv.to_vec::<i32>()?;
+        let mut index = idx.to_vec::<i32>()?;
+        let mut mismatch = mism.to_vec::<i32>()?;
+        match_vec.truncate(b * c);
+        index.truncate(b);
+        mismatch.truncate(b * c);
+        Ok(BatchSearchOut { match_vec, index, mismatch })
+    }
+
+    /// Search a batch of XAM sets with one key/mask each, via the
+    /// compiled kernel. Returns the first-match column per set.
+    pub fn search_sets(
+        &self,
+        sets: &[&XamArray],
+        keys: &[u64],
+        masks: &[u64],
+    ) -> Result<Vec<Option<usize>>> {
+        assert_eq!(sets.len(), keys.len());
+        assert_eq!(sets.len(), masks.len());
+        if sets.is_empty() {
+            return Ok(Vec::new());
+        }
+        let rows = sets[0].rows();
+        let c = sets[0].cols();
+        let w = rows.div_ceil(32);
+        let b = sets.len();
+        let mut data = vec![0i32; b * w * c];
+        let mut ks = vec![0i32; b * w];
+        let mut ms = vec![0i32; b * w];
+        for (i, set) in sets.iter().enumerate() {
+            assert_eq!(set.rows(), rows);
+            assert_eq!(set.cols(), c);
+            for (j, &col) in set.columns().iter().enumerate() {
+                for word in 0..w {
+                    data[i * w * c + word * c + j] =
+                        ((col >> (32 * word)) & 0xFFFF_FFFF) as u32 as i32;
+                }
+            }
+            for word in 0..w {
+                ks[i * w + word] =
+                    ((keys[i] >> (32 * word)) & 0xFFFF_FFFF) as u32 as i32;
+                ms[i * w + word] =
+                    ((masks[i] >> (32 * word)) & 0xFFFF_FFFF) as u32 as i32;
+            }
+        }
+        let out = self.search_raw(&data, &ks, &ms, b, w, c)?;
+        Ok(out
+            .index
+            .iter()
+            .map(|&i| (i >= 0).then_some(i as usize))
+            .collect())
+    }
+
+    /// Pure-rust reference for differential testing.
+    pub fn search_sets_fallback(
+        sets: &[&XamArray],
+        keys: &[u64],
+        masks: &[u64],
+    ) -> Vec<Option<usize>> {
+        sets.iter()
+            .zip(keys.iter().zip(masks))
+            .map(|(s, (&k, &m))| s.search_first(k, m))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        // unit tests run from the crate root; integration from target/
+        for cand in [SearchEngine::default_dir(), PathBuf::from("../artifacts")]
+        {
+            if cand.join("manifest.txt").exists() {
+                return Some(cand);
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn kernel_agrees_with_rust_arrays() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = SearchEngine::load(&dir).expect("load artifacts");
+        let mut rng = Rng::new(0xD1FF);
+        for trial in 0..8 {
+            let b = 1 + (trial % 4);
+            let mut arrays = Vec::new();
+            let mut keys = Vec::new();
+            let mut masks = Vec::new();
+            for i in 0..b {
+                let mut a = XamArray::new(64, 512);
+                for col in 0..512 {
+                    a.write_col(col, rng.next_u64());
+                }
+                // plant a guaranteed match in half the sets
+                let key = if i % 2 == 0 {
+                    let c = rng.usize_below(512);
+                    a.read_col(c)
+                } else {
+                    rng.next_u64()
+                };
+                keys.push(key);
+                masks.push(if trial % 3 == 0 { 0xFFFF } else { !0u64 });
+                arrays.push(a);
+            }
+            let refs: Vec<&XamArray> = arrays.iter().collect();
+            let got = engine.search_sets(&refs, &keys, &masks).unwrap();
+            let want =
+                SearchEngine::search_sets_fallback(&refs, &keys, &masks);
+            assert_eq!(got, want, "trial {trial}");
+        }
+        assert!(engine.executions.get() >= 8);
+    }
+
+    #[test]
+    fn batch_padding_works() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = SearchEngine::load(&dir).expect("load artifacts");
+        // b=3 needs the b=8 variant with padding
+        let b = 3;
+        let (w, c) = (2, 512);
+        let data = vec![0i32; b * w * c];
+        let keys = vec![0i32; b * w];
+        let masks = vec![-1i32; b * w];
+        let out = engine.search_raw(&data, &keys, &masks, b, w, c).unwrap();
+        assert_eq!(out.index.len(), b);
+        // all-zero data vs all-zero key under full mask: every column
+        // matches, first match = 0
+        assert!(out.index.iter().all(|&i| i == 0));
+        assert_eq!(out.match_vec.len(), b * c);
+        assert!(out.match_vec.iter().all(|&m| m == 1));
+        assert!(out.mismatch.iter().all(|&m| m == 0));
+    }
+
+    #[test]
+    fn manifest_lists_expected_variants() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let engine = SearchEngine::load(&dir).expect("load artifacts");
+        let names: Vec<&str> =
+            engine.variants().map(|(n, _, _, _)| n).collect();
+        assert!(names.contains(&"xam_search_b1"));
+        assert!(names.contains(&"xam_search_b64"));
+    }
+}

@@ -1,0 +1,164 @@
+//! Packed bit vectors and small bit matrices.
+//!
+//! The XAM array model stores cell states bit-packed in u64 words so
+//! that the rust fast-path search is a word-wide XNOR+mask — the same
+//! operation the Pallas kernel performs in u32 lanes.
+
+/// A fixed-size packed bit vector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    pub fn zeros(len: usize) -> Self {
+        Self { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    pub fn ones(len: usize) -> Self {
+        let mut v = Self { words: vec![!0u64; len.div_ceil(64)], len };
+        v.trim_tail();
+        v
+    }
+
+    fn trim_tail(&mut self) {
+        let tail = self.len % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[i / 64];
+        let m = 1u64 << (i % 64);
+        if v {
+            *w |= m;
+        } else {
+            *w &= !m;
+        }
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    pub fn clear(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// Index of the first set bit, if any.
+    pub fn first_one(&self) -> Option<usize> {
+        for (wi, &w) in self.words.iter().enumerate() {
+            if w != 0 {
+                let idx = wi * 64 + w.trailing_zeros() as usize;
+                return (idx < self.len).then_some(idx);
+            }
+        }
+        None
+    }
+
+    /// Index of the first clear bit, if any.
+    pub fn first_zero(&self) -> Option<usize> {
+        for (wi, &w) in self.words.iter().enumerate() {
+            if w != !0u64 {
+                let idx = wi * 64 + (!w).trailing_zeros() as usize;
+                return (idx < self.len).then_some(idx);
+            }
+        }
+        None
+    }
+
+    /// Iterate indices of set bits.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(move |(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+        .filter(move |&i| i < self.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut v = BitVec::zeros(130);
+        v.set(0, true);
+        v.set(64, true);
+        v.set(129, true);
+        assert!(v.get(0) && v.get(64) && v.get(129));
+        assert!(!v.get(1) && !v.get(128));
+        assert_eq!(v.count_ones(), 3);
+        v.set(64, false);
+        assert_eq!(v.count_ones(), 2);
+    }
+
+    #[test]
+    fn ones_respects_length() {
+        let v = BitVec::ones(70);
+        assert_eq!(v.count_ones(), 70);
+        assert_eq!(v.first_zero(), None);
+    }
+
+    #[test]
+    fn first_one_zero() {
+        let mut v = BitVec::zeros(100);
+        assert_eq!(v.first_one(), None);
+        assert_eq!(v.first_zero(), Some(0));
+        v.set(67, true);
+        assert_eq!(v.first_one(), Some(67));
+        let o = BitVec::ones(65);
+        assert_eq!(o.first_zero(), None);
+        assert_eq!(o.first_one(), Some(0));
+    }
+
+    #[test]
+    fn iter_ones_matches_gets() {
+        let mut v = BitVec::zeros(200);
+        let idxs = [0usize, 3, 63, 64, 65, 127, 128, 199];
+        for &i in &idxs {
+            v.set(i, true);
+        }
+        let got: Vec<usize> = v.iter_ones().collect();
+        assert_eq!(got, idxs);
+    }
+}

@@ -1,0 +1,141 @@
+//! Minimal CLI argument parser (the vendor set has no `clap`).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positional arguments. Typed getters parse on demand and report
+//! helpful errors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (not including argv[0]).
+    pub fn parse_from<I, S>(iter: I) -> Self
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args: Vec<String> = iter.into_iter().map(Into::into).collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < args.len() {
+            let a = std::mem::take(&mut args[i]);
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < args.len() && !args[i + 1].starts_with("--")
+                {
+                    let v = std::mem::take(&mut args[i + 1]);
+                    out.opts.insert(stripped.to_string(), v);
+                    i += 1;
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn parse_env() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || matches!(
+                self.opts.get(name).map(String::as_str),
+                Some("true") | Some("1") | Some("yes")
+            )
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .with_context(|| format!("--{name} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(name, default as u64)? as usize)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .with_context(|| format!("--{name} expects a float, got {s:?}")),
+        }
+    }
+
+    pub fn required(&self, name: &str) -> Result<&str> {
+        match self.get(name) {
+            Some(v) => Ok(v),
+            None => bail!("missing required option --{name}"),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_forms() {
+        // NB: a bare `--flag` greedily consumes a following non-`--`
+        // token as its value, so flags go last or use `--flag=true`.
+        let a = Args::parse_from([
+            "run", "extra", "--steps", "100", "--scale=0.5", "--verbose",
+        ]);
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.u64_or("steps", 1).unwrap(), 100);
+        assert!((a.f64_or("scale", 1.0).unwrap() - 0.5).abs() < 1e-12);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.positional(), &["run".to_string(), "extra".to_string()]);
+        let b = Args::parse_from(["--verbose=true", "--debug=1"]);
+        assert!(b.flag("verbose") && b.flag("debug"));
+    }
+
+    #[test]
+    fn trailing_flag_and_defaults() {
+        let a = Args::parse_from(["--fast"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.u64_or("steps", 7).unwrap(), 7);
+        assert!(a.required("missing").is_err());
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = Args::parse_from(["--steps", "abc"]);
+        assert!(a.u64_or("steps", 1).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Foundation utilities built from scratch for the offline environment:
+//! RNG/zipfian sampling, metrics, packed bit storage, Murmur3, a mini
+//! CLI parser, a table renderer, and a property-testing driver.
+
+pub mod bitvec;
+pub mod cli;
+pub mod murmur3;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,128 @@
+//! Minimal property-based testing driver (the vendor set has no
+//! `proptest`), used by the coordinator-invariant tests.
+//!
+//! `check(name, cases, |g| ...)` runs the property over `cases`
+//! generated inputs; on failure it retries the failing seed with a
+//! simple input-shrinking loop over the generator's `size` knob and
+//! reports the smallest reproducing seed/size.
+
+use crate::util::rng::Rng;
+
+/// A generation context handed to properties: a seeded RNG plus a size
+/// hint the shrinker lowers when hunting for minimal failures.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self { rng: Rng::new(seed), size, seed }
+    }
+
+    /// A "sized" integer in [0, max(1, scaled bound)).
+    pub fn int(&mut self, bound: usize) -> usize {
+        let b = bound.min(self.size.max(1));
+        self.rng.usize_below(b.max(1))
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn vec_u64(&mut self, len: usize) -> Vec<u64> {
+        (0..len).map(|_| self.rng.next_u64()).collect()
+    }
+}
+
+/// Outcome of a property: Ok or a failure message.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` for `cases` seeds; panic with the minimal failing case.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    const BASE_SIZE: usize = 256;
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 ^ (case.wrapping_mul(0x9E37_79B9));
+        let mut g = Gen::new(seed, BASE_SIZE);
+        if let Err(msg) = prop(&mut g) {
+            // shrink: halve size while still failing
+            let mut best = (BASE_SIZE, msg);
+            let mut size = BASE_SIZE / 2;
+            while size >= 1 {
+                let mut g = Gen::new(seed, size);
+                match prop(&mut g) {
+                    Err(m) => {
+                        best = (size, m);
+                        size /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property {name} failed (seed={seed:#x}, case={case}, \
+                 min_size={}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Assert-style helper returning PropResult.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut runs = 0;
+        check("trivial", 25, |g| {
+            runs += 1;
+            let a = g.u64();
+            if a ^ a == 0 {
+                Ok(())
+            } else {
+                Err("xor broke".into())
+            }
+        });
+        assert_eq!(runs, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property always_fails failed")]
+    fn failing_property_panics_with_seed() {
+        check("always_fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinker_reduces_size() {
+        let result = std::panic::catch_unwind(|| {
+            check("size_sensitive", 1, |g| {
+                // fails whenever size >= 2, so shrinking lands at size 2
+                if g.size >= 2 {
+                    Err(format!("size {}", g.size))
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("min_size=2"), "{msg}");
+    }
+}

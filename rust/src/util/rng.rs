@@ -1,0 +1,282 @@
+//! Deterministic pseudo-random number generation for the simulator.
+//!
+//! The offline vendor set has no `rand` crate, so the substrate ships
+//! its own: SplitMix64 for seeding, Xoshiro256** as the workhorse
+//! generator, and a Zipfian sampler (rejection-inversion, Hormann &
+//! Derflinger) used by the YCSB workload generator. All generators are
+//! fully deterministic from their seed so every experiment is
+//! reproducible.
+
+/// SplitMix64 — used to expand a single `u64` seed into generator state.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Xoshiro256** — fast, high-quality, 2^256-1 period.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for w in s.iter_mut() {
+            *w = sm.next_u64();
+        }
+        // avoid the all-zero state (probability ~0 but cheap to guard)
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x1234_5678_9ABC_DEF0;
+        }
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, bound)` (Lemire's multiply-shift, no modulo bias
+    /// worth caring about at simulator scale).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    #[inline]
+    pub fn usize_below(&mut self, bound: usize) -> usize {
+        self.below(bound as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Zipfian sampler over `[0, n)` with exponent `theta` (YCSB uses
+/// theta = 0.99). Implemented with the YCSB/Gray "scrambled zipfian"
+/// closed form: cheap per-sample, exact zeta via precomputation.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    zeta2: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0 && theta > 0.0 && theta < 1.0);
+        let zetan = Self::zeta(n, theta);
+        let zeta2 = Self::zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta =
+            (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Self { n, theta, alpha, zetan, eta, zeta2 }
+    }
+
+    fn zeta(n: u64, theta: f64) -> f64 {
+        // Exact for n <= 10M; beyond that use the Euler-Maclaurin tail
+        // approximation (error < 1e-9 for theta in (0,1)).
+        const EXACT: u64 = 10_000_000;
+        if n <= EXACT {
+            (1..=n).map(|i| 1.0 / (i as f64).powf(theta)).sum()
+        } else {
+            let head: f64 =
+                (1..=EXACT).map(|i| 1.0 / (i as f64).powf(theta)).sum();
+            let a = EXACT as f64;
+            let b = n as f64;
+            let tail = (b.powf(1.0 - theta) - a.powf(1.0 - theta))
+                / (1.0 - theta)
+                + 0.5 * (b.powf(-theta) - a.powf(-theta));
+            head + tail
+        }
+    }
+
+    /// Draw a rank in `[0, n)`; rank 0 is the hottest key.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let spread = (self.eta * u - self.eta + 1.0).powf(self.alpha);
+        ((self.n as f64) * spread) as u64 % self.n
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn theta(&self) -> f64 {
+        self.theta
+    }
+
+    pub fn zeta2(&self) -> f64 {
+        self.zeta2
+    }
+}
+
+/// YCSB-style scrambled zipfian: spreads the hot ranks across the key
+/// space with an FNV-style hash so hot keys are not adjacent.
+#[derive(Clone, Debug)]
+pub struct ScrambledZipf {
+    zipf: Zipf,
+}
+
+impl ScrambledZipf {
+    pub fn new(n: u64, theta: f64) -> Self {
+        Self { zipf: Zipf::new(n, theta) }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let rank = self.zipf.sample(rng);
+        fnv1a64(rank) % self.zipf.n()
+    }
+}
+
+#[inline]
+pub fn fnv1a64(x: u64) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for i in 0..8 {
+        h ^= (x >> (8 * i)) & 0xFF;
+        h = h.wrapping_mul(0x100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn xoshiro_uniform_mean() {
+        let mut rng = Rng::new(7);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut rng = Rng::new(3);
+        for bound in [1u64, 2, 7, 1000, 1 << 40] {
+            for _ in 0..200 {
+                assert!(rng.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(9);
+        let mut v: Vec<u32> = (0..64).collect();
+        rng.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let z = Zipf::new(1000, 0.99);
+        let mut rng = Rng::new(1);
+        let mut counts = vec![0u64; 1000];
+        for _ in 0..200_000 {
+            let k = z.sample(&mut rng) as usize;
+            assert!(k < 1000);
+            counts[k] += 1;
+        }
+        // rank 0 must dominate the median key by a large factor
+        assert!(counts[0] > 20 * counts[500].max(1));
+        // head concentration: top-10 ranks well above uniform share
+        let head: u64 = counts[..10].iter().sum();
+        assert!(head as f64 / 200_000.0 > 0.2);
+    }
+
+    #[test]
+    fn scrambled_zipf_spreads_hot_keys() {
+        let z = ScrambledZipf::new(1 << 20, 0.99);
+        let mut rng = Rng::new(2);
+        let a = z.sample(&mut rng);
+        let mut seen_far = false;
+        for _ in 0..100 {
+            let b = z.sample(&mut rng);
+            if a.abs_diff(b) > 1000 {
+                seen_far = true;
+            }
+        }
+        assert!(seen_far);
+    }
+
+    #[test]
+    fn zeta_tail_approximation_is_close() {
+        // compare approximate zeta against exact at the switch boundary
+        let exact = Zipf::zeta(10_000_000, 0.99);
+        let approx = Zipf::zeta(10_000_001, 0.99);
+        assert!((approx - exact) < 1e-3 + 1.0 / 10_000_000f64.powf(0.99));
+        assert!(approx > exact);
+    }
+}

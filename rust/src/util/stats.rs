@@ -1,0 +1,256 @@
+//! Lightweight metrics: counters, running means, and log2 histograms.
+//!
+//! Every component of the simulator exposes its behaviour through these
+//! primitives; the coordinator collects them into the per-experiment
+//! reports that regenerate the paper's tables and figures.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A named bag of u64 counters with insertion-stable ordering.
+#[derive(Clone, Debug, Default)]
+pub struct Counters {
+    map: BTreeMap<&'static str, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, key: &'static str, v: u64) {
+        *self.map.entry(key).or_insert(0) += v;
+    }
+
+    #[inline]
+    pub fn inc(&mut self, key: &'static str) {
+        self.add(key, 1);
+    }
+
+    pub fn get(&self, key: &str) -> u64 {
+        self.map.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn set(&mut self, key: &'static str, v: u64) {
+        self.map.insert(key, v);
+    }
+
+    pub fn merge(&mut self, other: &Counters) {
+        for (k, v) in &other.map {
+            *self.map.entry(k).or_insert(0) += v;
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.map.iter().map(|(k, v)| (*k, *v))
+    }
+
+    pub fn ratio(&self, num: &str, den: &str) -> f64 {
+        let d = self.get(den);
+        if d == 0 {
+            0.0
+        } else {
+            self.get(num) as f64 / d as f64
+        }
+    }
+}
+
+impl fmt::Display for Counters {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (k, v) in &self.map {
+            writeln!(f, "{k:<40} {v}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Running mean / min / max without storing samples.
+#[derive(Clone, Copy, Debug)]
+pub struct Running {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    pub sum_sq: f64,
+}
+
+impl Default for Running {
+    fn default() -> Self {
+        Self { n: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY, sum_sq: 0.0 }
+    }
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.sum_sq += x * x;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.sum_sq / self.n as f64 - m * m).max(0.0)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Power-of-two bucketed latency histogram: bucket i holds values in
+/// `[2^i, 2^(i+1))`; bucket 0 holds 0 and 1.
+#[derive(Clone, Debug)]
+pub struct Log2Hist {
+    buckets: [u64; 64],
+    pub count: u64,
+    pub total: u128,
+}
+
+impl Default for Log2Hist {
+    fn default() -> Self {
+        Self { buckets: [0; 64], count: 0, total: 0 }
+    }
+}
+
+impl Log2Hist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        let idx = 64 - (v | 1).leading_zeros() as usize - 1;
+        self.buckets[idx.min(63)] += 1;
+        self.count += 1;
+        self.total += v as u128;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from bucket midpoints (q in [0,1]).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            acc += b;
+            if acc >= target {
+                // midpoint of [2^i, 2^(i+1))
+                return if i == 0 { 1 } else { (1u64 << i) + (1u64 << (i - 1)) };
+            }
+        }
+        1u64 << 63
+    }
+
+    pub fn merge(&mut self, other: &Log2Hist) {
+        for i in 0..64 {
+            self.buckets[i] += other.buckets[i];
+        }
+        self.count += other.count;
+        self.total += other.total;
+    }
+}
+
+/// Geometric mean over a slice of positive numbers (used for the
+/// paper-style "average speedup" rows).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs.iter().map(|x| x.max(1e-300).ln()).sum();
+    (s / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_add_merge() {
+        let mut a = Counters::new();
+        a.inc("reads");
+        a.add("reads", 2);
+        a.add("writes", 5);
+        let mut b = Counters::new();
+        b.add("reads", 7);
+        a.merge(&b);
+        assert_eq!(a.get("reads"), 10);
+        assert_eq!(a.get("writes"), 5);
+        assert_eq!(a.get("missing"), 0);
+        assert!((a.ratio("writes", "reads") - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn running_stats() {
+        let mut r = Running::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            r.push(x);
+        }
+        assert_eq!(r.n, 4);
+        assert!((r.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(r.min, 1.0);
+        assert_eq!(r.max, 4.0);
+        assert!((r.variance() - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hist_mean_and_quantiles() {
+        let mut h = Log2Hist::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count, 1000);
+        assert!((h.mean() - 500.5).abs() < 1e-9);
+        let p50 = h.quantile(0.5);
+        assert!((256..=1024).contains(&p50), "p50={p50}");
+        assert!(h.quantile(1.0) >= p50);
+    }
+
+    #[test]
+    fn hist_merge() {
+        let mut a = Log2Hist::new();
+        let mut b = Log2Hist::new();
+        a.record(10);
+        b.record(100);
+        a.merge(&b);
+        assert_eq!(a.count, 2);
+        assert_eq!(a.total, 110);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 0.0);
+    }
+}

@@ -1,0 +1,538 @@
+//! CRONO-style graph kernels (paper §9.2.1): BC, BFS, COM, CON, DFS,
+//! PR, SSSP, TRI — the real algorithms executed over synthetic
+//! power-law graphs, recording their memory traces against a flat
+//! address map of the data structures (CSR offsets/edges plus the
+//! per-kernel vertex arrays). Inputs are sized by the caller so the
+//! footprint is >= 2x the in-package memory (§9.2.1).
+
+use crate::cpu::TraceOp;
+use crate::util::rng::{Rng, Zipf};
+use crate::workloads::TraceWorkload;
+
+/// CSR graph.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub n: usize,
+    pub offsets: Vec<u32>,
+    pub edges: Vec<u32>,
+}
+
+impl Graph {
+    /// Random graph with zipf-skewed targets (hub structure like the
+    /// CRONO road/social inputs).
+    pub fn random(n: usize, avg_deg: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let zipf = Zipf::new(n as u64, 0.6);
+        let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let m = n * avg_deg;
+        for _ in 0..m {
+            let u = rng.usize_below(n);
+            let v = zipf.sample(&mut rng) as usize;
+            if u != v {
+                adj[u].push(v as u32);
+            }
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut edges = Vec::with_capacity(m);
+        offsets.push(0u32);
+        for a in &adj {
+            edges.extend_from_slice(a);
+            offsets.push(edges.len() as u32);
+        }
+        Self { n, offsets, edges }
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        (self.offsets[v + 1] - self.offsets[v]) as usize
+    }
+
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.edges[self.offsets[v] as usize..self.offsets[v + 1] as usize]
+    }
+
+    /// Bytes of the CSR structure (footprint planning).
+    pub fn bytes(&self) -> usize {
+        4 * (self.offsets.len() + self.edges.len())
+    }
+}
+
+/// Address map of the graph data structures in the simulated DDR
+/// space, plus up to four per-vertex arrays for kernel state.
+#[derive(Clone, Copy, Debug)]
+pub struct AddrMap {
+    pub offsets_base: u64,
+    pub edges_base: u64,
+    pub arrays_base: [u64; 4],
+}
+
+impl AddrMap {
+    pub fn for_graph(g: &Graph) -> Self {
+        let align = |x: u64| (x + 4095) & !4095;
+        let offsets_base = 0x1000_0000;
+        let edges_base = align(offsets_base + 4 * g.offsets.len() as u64);
+        let mut arrays_base = [0u64; 4];
+        let mut next = align(edges_base + 4 * g.edges.len() as u64);
+        for slot in arrays_base.iter_mut() {
+            *slot = next;
+            next = align(next + 8 * g.n as u64);
+        }
+        Self { offsets_base, edges_base, arrays_base }
+    }
+
+    #[inline]
+    pub fn offset_addr(&self, v: usize) -> u64 {
+        self.offsets_base + 4 * v as u64
+    }
+
+    #[inline]
+    pub fn edge_addr(&self, e: usize) -> u64 {
+        self.edges_base + 4 * e as u64
+    }
+
+    #[inline]
+    pub fn arr(&self, k: usize, v: usize) -> u64 {
+        self.arrays_base[k] + 8 * v as u64
+    }
+}
+
+/// Trace recorder for one thread, with a per-thread op budget.
+struct Tracer {
+    ops: Vec<TraceOp>,
+    budget: usize,
+}
+
+impl Tracer {
+    fn new(budget: usize) -> Self {
+        Self { ops: Vec::with_capacity(budget.min(1 << 20)), budget }
+    }
+
+    #[inline]
+    fn full(&self) -> bool {
+        self.ops.len() >= self.budget
+    }
+
+    #[inline]
+    fn read(&mut self, addr: u64, compute: u16) {
+        if !self.full() {
+            self.ops.push(TraceOp::read(addr, compute));
+        }
+    }
+
+    #[inline]
+    fn write(&mut self, addr: u64, compute: u16) {
+        if !self.full() {
+            self.ops.push(TraceOp::write(addr, compute));
+        }
+    }
+
+    #[inline]
+    fn chase(&mut self, addr: u64, compute: u16) {
+        if !self.full() {
+            self.ops.push(TraceOp::chase(addr, compute));
+        }
+    }
+}
+
+fn finish(name: &str, tracers: Vec<Tracer>) -> TraceWorkload {
+    TraceWorkload::new(name, tracers.into_iter().map(|t| t.ops).collect())
+}
+
+/// Breadth First Search: level-synchronous; the frontier is split
+/// across threads each level.
+pub fn bfs(g: &Graph, threads: usize, budget: usize) -> TraceWorkload {
+    let map = AddrMap::for_graph(g);
+    let mut tr: Vec<Tracer> =
+        (0..threads).map(|_| Tracer::new(budget)).collect();
+    let mut visited = vec![false; g.n];
+    let mut frontier = vec![0usize];
+    visited[0] = true;
+    while !frontier.is_empty() && tr.iter().any(|t| !t.full()) {
+        let mut next = Vec::new();
+        for (i, &v) in frontier.iter().enumerate() {
+            let t = &mut tr[i % threads];
+            t.read(map.offset_addr(v), 1);
+            for (k, &u) in g.neighbors(v).iter().enumerate() {
+                let u = u as usize;
+                t.read(map.edge_addr(g.offsets[v] as usize + k), 1);
+                t.read(map.arr(0, u), 1); // visited check
+                if !visited[u] {
+                    visited[u] = true;
+                    t.write(map.arr(0, u), 1);
+                    t.write(map.arr(1, u), 1); // parent
+                    next.push(u);
+                }
+            }
+        }
+        frontier = next;
+    }
+    finish("BFS", tr)
+}
+
+/// Depth First Search: per-thread stacks from distinct roots —
+/// pointer-chasing with dependency barriers.
+pub fn dfs(g: &Graph, threads: usize, budget: usize) -> TraceWorkload {
+    let map = AddrMap::for_graph(g);
+    let mut tr: Vec<Tracer> =
+        (0..threads).map(|_| Tracer::new(budget)).collect();
+    let mut visited = vec![false; g.n];
+    for t in 0..threads {
+        let root = t * (g.n / threads.max(1));
+        let mut stack = vec![root];
+        let tracer = &mut tr[t];
+        while let Some(v) = stack.pop() {
+            if tracer.full() {
+                break;
+            }
+            tracer.chase(map.arr(0, v), 2); // visited check (dependent)
+            if visited[v] {
+                continue;
+            }
+            visited[v] = true;
+            tracer.write(map.arr(0, v), 1);
+            tracer.read(map.offset_addr(v), 1);
+            for (k, &u) in g.neighbors(v).iter().enumerate() {
+                tracer.read(map.edge_addr(g.offsets[v] as usize + k), 1);
+                if !visited[u as usize] {
+                    stack.push(u as usize);
+                }
+            }
+        }
+    }
+    finish("DFS", tr)
+}
+
+/// PageRank: power iterations, vertices split across threads.
+pub fn pagerank(g: &Graph, threads: usize, budget: usize, iters: usize) -> TraceWorkload {
+    let map = AddrMap::for_graph(g);
+    let mut tr: Vec<Tracer> =
+        (0..threads).map(|_| Tracer::new(budget)).collect();
+    for _ in 0..iters {
+        for v in 0..g.n {
+            let t = &mut tr[v % threads];
+            if t.full() {
+                continue;
+            }
+            t.read(map.offset_addr(v), 1);
+            for (k, &u) in g.neighbors(v).iter().enumerate() {
+                t.read(map.edge_addr(g.offsets[v] as usize + k), 1);
+                t.read(map.arr(0, u as usize), 2); // rank[u] / deg[u]
+            }
+            t.write(map.arr(1, v), 3); // new rank
+        }
+        if tr.iter().all(|t| t.full()) {
+            break;
+        }
+    }
+    finish("PR", tr)
+}
+
+/// Single-Source Shortest Path: Bellman-Ford rounds over all edges.
+pub fn sssp(g: &Graph, threads: usize, budget: usize, rounds: usize) -> TraceWorkload {
+    let map = AddrMap::for_graph(g);
+    let mut tr: Vec<Tracer> =
+        (0..threads).map(|_| Tracer::new(budget)).collect();
+    let mut dist = vec![u32::MAX; g.n];
+    dist[0] = 0;
+    for _ in 0..rounds {
+        let mut changed = false;
+        for v in 0..g.n {
+            let t = &mut tr[v % threads];
+            if t.full() {
+                continue;
+            }
+            t.read(map.arr(0, v), 1); // dist[v]
+            if dist[v] == u32::MAX {
+                continue;
+            }
+            t.read(map.offset_addr(v), 1);
+            for (k, &u) in g.neighbors(v).iter().enumerate() {
+                let u = u as usize;
+                t.read(map.edge_addr(g.offsets[v] as usize + k), 1);
+                t.read(map.arr(0, u), 1);
+                let cand = dist[v] + 1;
+                if cand < dist[u] {
+                    dist[u] = cand;
+                    t.write(map.arr(0, u), 1);
+                    changed = true;
+                }
+            }
+        }
+        if !changed || tr.iter().all(|t| t.full()) {
+            break;
+        }
+    }
+    finish("SSSP", tr)
+}
+
+/// Connected Components: label propagation until stable.
+pub fn connected_components(
+    g: &Graph,
+    threads: usize,
+    budget: usize,
+) -> TraceWorkload {
+    let map = AddrMap::for_graph(g);
+    let mut tr: Vec<Tracer> =
+        (0..threads).map(|_| Tracer::new(budget)).collect();
+    let mut label: Vec<u32> = (0..g.n as u32).collect();
+    loop {
+        let mut changed = false;
+        for v in 0..g.n {
+            let t = &mut tr[v % threads];
+            if t.full() {
+                continue;
+            }
+            t.read(map.arr(0, v), 1);
+            t.read(map.offset_addr(v), 1);
+            let mut best = label[v];
+            for (k, &u) in g.neighbors(v).iter().enumerate() {
+                t.read(map.edge_addr(g.offsets[v] as usize + k), 1);
+                t.read(map.arr(0, u as usize), 1);
+                best = best.min(label[u as usize]);
+            }
+            if best < label[v] {
+                label[v] = best;
+                t.write(map.arr(0, v), 1);
+                changed = true;
+            }
+        }
+        if !changed || tr.iter().all(|t| t.full()) {
+            break;
+        }
+    }
+    finish("CON", tr)
+}
+
+/// Community Detection: label propagation by neighbour majority (one
+/// extra histogram array per step vs CON).
+pub fn community(g: &Graph, threads: usize, budget: usize, iters: usize) -> TraceWorkload {
+    let map = AddrMap::for_graph(g);
+    let mut tr: Vec<Tracer> =
+        (0..threads).map(|_| Tracer::new(budget)).collect();
+    let mut label: Vec<u32> = (0..g.n as u32).collect();
+    let mut rng = Rng::new(0xC0DE);
+    for _ in 0..iters {
+        for v in 0..g.n {
+            let t = &mut tr[v % threads];
+            if t.full() {
+                continue;
+            }
+            t.read(map.offset_addr(v), 1);
+            let mut counts: Vec<(u32, u32)> = Vec::new();
+            for (k, &u) in g.neighbors(v).iter().enumerate() {
+                t.read(map.edge_addr(g.offsets[v] as usize + k), 1);
+                t.read(map.arr(0, u as usize), 1);
+                t.write(map.arr(2, (u as usize) % g.n), 2); // histogram bin
+                let l = label[u as usize];
+                match counts.iter_mut().find(|(x, _)| *x == l) {
+                    Some((_, c)) => *c += 1,
+                    None => counts.push((l, 1)),
+                }
+            }
+            if let Some(&(l, _)) = counts.iter().max_by_key(|(_, c)| *c) {
+                if l != label[v] || rng.chance(0.01) {
+                    label[v] = l;
+                    t.write(map.arr(0, v), 1);
+                }
+            }
+        }
+        if tr.iter().all(|t| t.full()) {
+            break;
+        }
+    }
+    finish("COM", tr)
+}
+
+/// Betweenness Centrality: forward BFS + backward dependency pass.
+pub fn betweenness(g: &Graph, threads: usize, budget: usize) -> TraceWorkload {
+    let map = AddrMap::for_graph(g);
+    let mut tr: Vec<Tracer> =
+        (0..threads).map(|_| Tracer::new(budget)).collect();
+    // forward: BFS levels with sigma counts
+    let mut level = vec![u32::MAX; g.n];
+    let mut order: Vec<usize> = Vec::new();
+    level[0] = 0;
+    let mut frontier = vec![0usize];
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for (i, &v) in frontier.iter().enumerate() {
+            let t = &mut tr[i % threads];
+            order.push(v);
+            t.read(map.offset_addr(v), 1);
+            for (k, &u) in g.neighbors(v).iter().enumerate() {
+                let u = u as usize;
+                t.read(map.edge_addr(g.offsets[v] as usize + k), 1);
+                t.read(map.arr(0, u), 1); // level[u]
+                t.write(map.arr(1, u), 2); // sigma[u] update
+                if level[u] == u32::MAX {
+                    level[u] = level[v] + 1;
+                    next.push(u);
+                }
+            }
+        }
+        frontier = next;
+        if tr.iter().all(|t| t.full()) {
+            break;
+        }
+    }
+    // backward: dependency accumulation in reverse order
+    for (i, &v) in order.iter().rev().enumerate() {
+        let t = &mut tr[i % threads];
+        if t.full() {
+            break;
+        }
+        t.read(map.offset_addr(v), 1);
+        for (k, &u) in g.neighbors(v).iter().enumerate() {
+            t.read(map.edge_addr(g.offsets[v] as usize + k), 1);
+            t.read(map.arr(1, u as usize), 1); // sigma
+            t.read(map.arr(2, u as usize), 2); // delta
+        }
+        t.write(map.arr(2, v), 3);
+        t.write(map.arr(3, v), 1); // centrality
+    }
+    finish("BC", tr)
+}
+
+/// Triangle Counting: adjacency-list intersection per edge.
+pub fn triangles(g: &Graph, threads: usize, budget: usize) -> TraceWorkload {
+    let map = AddrMap::for_graph(g);
+    let mut tr: Vec<Tracer> =
+        (0..threads).map(|_| Tracer::new(budget)).collect();
+    for v in 0..g.n {
+        let t = &mut tr[v % threads];
+        if t.full() {
+            continue;
+        }
+        t.read(map.offset_addr(v), 1);
+        let nv = g.neighbors(v);
+        for (k, &u) in nv.iter().enumerate() {
+            let u = u as usize;
+            if u <= v {
+                continue;
+            }
+            t.read(map.edge_addr(g.offsets[v] as usize + k), 1);
+            t.read(map.offset_addr(u), 1);
+            // merge-intersect the two adjacency lists
+            let nu = g.neighbors(u);
+            let steps = nv.len().min(nu.len()).min(16);
+            for s in 0..steps {
+                t.read(map.edge_addr(g.offsets[u] as usize + s), 1);
+            }
+        }
+    }
+    finish("TRI", tr)
+}
+
+/// All eight CRONO kernels over one shared graph, paper order.
+pub fn all_crono(
+    g: &Graph,
+    threads: usize,
+    budget: usize,
+) -> Vec<TraceWorkload> {
+    vec![
+        betweenness(g, threads, budget),
+        bfs(g, threads, budget),
+        community(g, threads, budget, 3),
+        connected_components(g, threads, budget),
+        dfs(g, threads, budget),
+        pagerank(g, threads, budget, 3),
+        sssp(g, threads, budget, 4),
+        triangles(g, threads, budget),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Workload;
+
+    fn g() -> Graph {
+        Graph::random(2000, 8, 42)
+    }
+
+    #[test]
+    fn graph_is_well_formed() {
+        let g = g();
+        assert_eq!(g.offsets.len(), g.n + 1);
+        assert_eq!(*g.offsets.last().unwrap() as usize, g.edges.len());
+        assert!(g.edges.iter().all(|&e| (e as usize) < g.n));
+        // hubs exist (zipf-skewed *in*-degree)
+        let mut indeg = vec![0usize; g.n];
+        for &e in &g.edges {
+            indeg[e as usize] += 1;
+        }
+        let max_in = indeg.iter().copied().max().unwrap();
+        assert!(max_in > 3 * 8, "max in-degree {max_in}");
+    }
+
+    #[test]
+    fn addr_map_regions_do_not_overlap() {
+        let g = g();
+        let m = AddrMap::for_graph(&g);
+        assert!(m.edges_base >= m.offset_addr(g.n) + 4);
+        assert!(m.arrays_base[0] >= m.edge_addr(g.edges.len()));
+        for k in 0..3 {
+            assert!(m.arrays_base[k + 1] >= m.arr(k, g.n));
+        }
+    }
+
+    #[test]
+    fn all_kernels_produce_bounded_nonempty_traces() {
+        let g = g();
+        for mut wl in all_crono(&g, 4, 5_000) {
+            let name = wl.name();
+            let total = wl.total_ops();
+            assert!(total > 1000, "{name}: {total} ops");
+            assert!(total <= 4 * 5_000, "{name}: budget respected");
+            // traces drain
+            let mut n = 0;
+            while wl.next_op(0).is_some() {
+                n += 1;
+            }
+            assert!(n > 0, "{name}: thread 0 has ops");
+        }
+    }
+
+    #[test]
+    fn kernel_names_match_paper() {
+        let g = Graph::random(200, 4, 1);
+        let names: Vec<String> =
+            all_crono(&g, 2, 100).iter().map(|w| w.name()).collect();
+        assert_eq!(
+            names,
+            ["BC", "BFS", "COM", "CON", "DFS", "PR", "SSSP", "TRI"]
+        );
+    }
+
+    #[test]
+    fn dfs_has_dependency_barriers() {
+        let g = g();
+        let mut wl = dfs(&g, 2, 1000);
+        let mut chased = 0;
+        while let Some(op) = wl.next_op(0) {
+            if op.barrier {
+                chased += 1;
+            }
+        }
+        assert!(chased > 50, "DFS is pointer-chasing: {chased}");
+    }
+
+    #[test]
+    fn writes_present_in_propagation_kernels() {
+        let g = g();
+        for mut wl in [
+            connected_components(&g, 2, 5000),
+            sssp(&g, 2, 5000, 4),
+            pagerank(&g, 2, 5000, 2),
+        ] {
+            let mut writes = 0;
+            for t in 0..2 {
+                while let Some(op) = wl.next_op(t) {
+                    if op.write {
+                        writes += 1;
+                    }
+                }
+            }
+            assert!(writes > 50, "{}: {writes} writes", wl.name());
+        }
+    }
+}

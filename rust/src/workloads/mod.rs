@@ -1,0 +1,187 @@
+//! Workload kernels. The CRONO/NAS substitutes *really execute* the
+//! algorithms over synthetic inputs and emit their memory traces
+//! (DESIGN.md §2 Substitutions); the software-managed kernels
+//! (hopscotch hashing, string match) drive the flat-mode controllers
+//! directly via their own runners.
+
+pub mod graph;
+pub mod hashing;
+pub mod nas;
+pub mod stringmatch;
+
+use crate::cpu::TraceOp;
+use crate::util::rng::{Rng, ScrambledZipf};
+
+/// A multi-threaded memory-trace source for the cache-mode system.
+pub trait Workload {
+    fn name(&self) -> String;
+    fn threads(&self) -> usize;
+    /// Next op of `thread`, or None when the thread is finished.
+    fn next_op(&mut self, thread: usize) -> Option<TraceOp>;
+}
+
+/// Pre-materialized per-thread traces (what the kernel generators
+/// produce). Traces are behind an `Arc` so one generated workload can
+/// be replayed against many systems without regeneration.
+pub struct TraceWorkload {
+    name: String,
+    traces: std::sync::Arc<Vec<Vec<TraceOp>>>,
+    pos: Vec<usize>,
+}
+
+impl TraceWorkload {
+    pub fn new(name: impl Into<String>, traces: Vec<Vec<TraceOp>>) -> Self {
+        let pos = vec![0; traces.len()];
+        Self { name: name.into(), traces: std::sync::Arc::new(traces), pos }
+    }
+
+    pub fn total_ops(&self) -> usize {
+        self.traces.iter().map(|t| t.len()).sum()
+    }
+
+    /// A fresh replay handle over the same (shared) traces.
+    pub fn replay(&self) -> Self {
+        Self {
+            name: self.name.clone(),
+            traces: self.traces.clone(),
+            pos: vec![0; self.traces.len()],
+        }
+    }
+}
+
+impl Workload for TraceWorkload {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn threads(&self) -> usize {
+        self.traces.len()
+    }
+
+    fn next_op(&mut self, thread: usize) -> Option<TraceOp> {
+        let p = self.pos[thread];
+        let op = self.traces[thread].get(p).copied();
+        if op.is_some() {
+            self.pos[thread] = p + 1;
+        }
+        op
+    }
+}
+
+/// Synthetic address streams (tests + microbenches).
+pub struct SyntheticStream {
+    threads: usize,
+    remaining: Vec<usize>,
+    rngs: Vec<Rng>,
+    footprint: u64,
+    zipf: Option<ScrambledZipf>,
+    write_pct: f64,
+}
+
+impl SyntheticStream {
+    pub fn uniform(threads: usize, ops: usize, footprint: u64, seed: u64) -> Self {
+        Self {
+            threads,
+            remaining: vec![ops; threads],
+            rngs: (0..threads).map(|t| Rng::new(seed ^ t as u64)).collect(),
+            footprint: footprint.max(64),
+            zipf: None,
+            write_pct: 0.2,
+        }
+    }
+
+    pub fn zipfian(
+        threads: usize,
+        ops: usize,
+        footprint: u64,
+        theta: f64,
+        write_pct: f64,
+        seed: u64,
+    ) -> Self {
+        Self {
+            threads,
+            remaining: vec![ops; threads],
+            rngs: (0..threads).map(|t| Rng::new(seed ^ t as u64)).collect(),
+            footprint: footprint.max(64),
+            zipf: Some(ScrambledZipf::new(footprint / 64, theta)),
+            write_pct,
+        }
+    }
+}
+
+impl Workload for SyntheticStream {
+    fn name(&self) -> String {
+        if self.zipf.is_some() {
+            "synthetic-zipf".into()
+        } else {
+            "synthetic-uniform".into()
+        }
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn next_op(&mut self, thread: usize) -> Option<TraceOp> {
+        if self.remaining[thread] == 0 {
+            return None;
+        }
+        self.remaining[thread] -= 1;
+        let rng = &mut self.rngs[thread];
+        let block = match &self.zipf {
+            Some(z) => z.sample(rng),
+            None => rng.below(self.footprint / 64),
+        };
+        let write = rng.chance(self.write_pct);
+        let op = TraceOp {
+            addr: block * 64,
+            write,
+            compute: 2 + (rng.next_u32() % 6) as u16,
+            barrier: false,
+        };
+        Some(op)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_workload_drains_in_order() {
+        let t0 = vec![TraceOp::read(0, 1), TraceOp::read(64, 1)];
+        let t1 = vec![TraceOp::write(128, 1)];
+        let mut w = TraceWorkload::new("t", vec![t0.clone(), t1]);
+        assert_eq!(w.threads(), 2);
+        assert_eq!(w.total_ops(), 3);
+        assert_eq!(w.next_op(0), Some(t0[0]));
+        assert_eq!(w.next_op(0), Some(t0[1]));
+        assert_eq!(w.next_op(0), None);
+        assert!(w.next_op(1).is_some());
+        assert_eq!(w.next_op(1), None);
+    }
+
+    #[test]
+    fn synthetic_respects_footprint_and_count() {
+        let mut s = SyntheticStream::uniform(2, 100, 1 << 16, 5);
+        let mut n = 0;
+        while let Some(op) = s.next_op(0) {
+            assert!(op.addr < 1 << 16);
+            assert_eq!(op.addr % 64, 0);
+            n += 1;
+        }
+        assert_eq!(n, 100);
+    }
+
+    #[test]
+    fn zipf_stream_is_skewed() {
+        let mut s = SyntheticStream::zipfian(1, 50_000, 1 << 20, 0.99, 0.05, 1);
+        let mut counts = std::collections::HashMap::new();
+        while let Some(op) = s.next_op(0) {
+            *counts.entry(op.addr).or_insert(0u64) += 1;
+        }
+        let max = counts.values().copied().max().unwrap();
+        let blocks = (1u64 << 20) / 64;
+        assert!(max > 10 * (50_000 / blocks).max(1));
+    }
+}

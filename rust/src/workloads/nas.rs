@@ -1,0 +1,163 @@
+//! NAS Parallel Benchmark access-pattern kernels (paper §9.2.1, class
+//! A analogues at reduced scale): FT (3D FFT butterfly sweeps), CG
+//! (sparse conjugate-gradient matvec), EP (embarrassingly parallel —
+//! compute-heavy with frequent private-table writes, the paper's
+//! highest write-bandwidth / minimum-lifetime workload, Fig 11).
+
+use crate::cpu::TraceOp;
+use crate::util::rng::Rng;
+use crate::workloads::TraceWorkload;
+
+const BASE: u64 = 0x4000_0000;
+
+/// FT: `passes` butterfly passes over a `size_bytes` complex array;
+/// each pass reads two strided elements and writes both back, with the
+/// stride doubling per pass (classic FFT data flow).
+pub fn ft(size_bytes: u64, threads: usize, budget: usize) -> TraceWorkload {
+    let elems = (size_bytes / 16).max(2); // complex f64
+    let passes = 63 - elems.leading_zeros() as usize;
+    let mut traces: Vec<Vec<TraceOp>> =
+        (0..threads).map(|_| Vec::with_capacity(budget)).collect();
+    'outer: for p in 0..passes {
+        let stride = 1u64 << p;
+        let mut i = 0u64;
+        let mut lane = 0usize;
+        while i < elems {
+            let j = i + stride;
+            if j < elems {
+                let t = &mut traces[lane % threads];
+                if t.len() + 4 <= budget {
+                    t.push(TraceOp::read(BASE + 16 * i, 2));
+                    t.push(TraceOp::read(BASE + 16 * j, 2));
+                    t.push(TraceOp::write(BASE + 16 * i, 4));
+                    t.push(TraceOp::write(BASE + 16 * j, 1));
+                }
+            }
+            lane += 1;
+            i += 2 * stride;
+            if traces.iter().all(|t| t.len() + 4 > budget) {
+                break 'outer;
+            }
+        }
+    }
+    TraceWorkload::new("FT", traces)
+}
+
+/// CG: conjugate-gradient iterations — CSR sparse matvec (gather) plus
+/// dense vector ops over `rows` rows with ~`nnz_per_row` nonzeros.
+pub fn cg(
+    rows: u64,
+    nnz_per_row: u64,
+    iters: usize,
+    threads: usize,
+    budget: usize,
+    seed: u64,
+) -> TraceWorkload {
+    let mat_base = BASE;
+    let x_base = BASE + rows * nnz_per_row * 12 + 4096;
+    let y_base = x_base + rows * 8 + 4096;
+    let mut traces: Vec<Vec<TraceOp>> =
+        (0..threads).map(|_| Vec::with_capacity(budget)).collect();
+    let mut rng = Rng::new(seed);
+    // fixed sparsity pattern reused across iterations (real CG reuses
+    // the matrix, which is what gives the in-package cache its value)
+    let cols: Vec<u64> = (0..rows * nnz_per_row)
+        .map(|_| rng.below(rows))
+        .collect();
+    'outer: for _ in 0..iters {
+        for r in 0..rows {
+            let t = &mut traces[(r as usize) % threads];
+            if t.len() + nnz_per_row as usize + 2 > budget {
+                if traces
+                    .iter()
+                    .all(|t| t.len() + nnz_per_row as usize + 2 > budget)
+                {
+                    break 'outer;
+                }
+                continue;
+            }
+            for k in 0..nnz_per_row {
+                let idx = r * nnz_per_row + k;
+                t.push(TraceOp::read(mat_base + idx * 12, 1)); // val+col
+                t.push(TraceOp::read(x_base + cols[idx as usize] * 8, 1));
+            }
+            t.push(TraceOp::write(y_base + r * 8, 3));
+        }
+    }
+    TraceWorkload::new("CG", traces)
+}
+
+/// EP: per-thread random-number batches with frequent writes into a
+/// private results table — high write bandwidth, little locality.
+pub fn ep(
+    table_bytes: u64,
+    threads: usize,
+    budget: usize,
+    seed: u64,
+) -> TraceWorkload {
+    let slots = (table_bytes / 8).max(1);
+    let mut traces = Vec::with_capacity(threads);
+    for t in 0..threads {
+        let mut rng = Rng::new(seed ^ (t as u64) << 32);
+        let base = BASE + t as u64 * table_bytes;
+        let mut ops = Vec::with_capacity(budget);
+        while ops.len() + 2 <= budget {
+            // gaussian-pair generation ~ long compute, then tally
+            let slot = rng.below(slots);
+            ops.push(TraceOp::read(base + slot * 8, 24));
+            ops.push(TraceOp::write(base + slot * 8, 2));
+        }
+        traces.push(ops);
+    }
+    TraceWorkload::new("EP", traces)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::Workload;
+
+    #[test]
+    fn ft_strides_double() {
+        let mut wl = ft(1 << 16, 2, 10_000);
+        let mut addrs = Vec::new();
+        while let Some(op) = wl.next_op(0) {
+            addrs.push(op.addr);
+        }
+        assert!(addrs.len() > 100);
+        // early pass: adjacent pairs (stride 16 bytes)
+        assert_eq!(addrs[1] - addrs[0], 16);
+    }
+
+    #[test]
+    fn cg_reuses_vector_across_iterations() {
+        let mut wl = cg(256, 8, 3, 2, 50_000, 5);
+        let mut reads = std::collections::HashMap::new();
+        for t in 0..2 {
+            while let Some(op) = wl.next_op(t) {
+                if !op.write {
+                    *reads.entry(op.addr).or_insert(0u32) += 1;
+                }
+            }
+        }
+        let max_reuse = reads.values().copied().max().unwrap();
+        assert!(max_reuse >= 3, "x-vector reused per iteration: {max_reuse}");
+    }
+
+    #[test]
+    fn ep_is_write_heavy_and_compute_heavy() {
+        let mut wl = ep(1 << 20, 2, 1000, 3);
+        let mut writes = 0;
+        let mut total = 0;
+        let mut compute: u64 = 0;
+        while let Some(op) = wl.next_op(0) {
+            total += 1;
+            compute += op.compute as u64;
+            if op.write {
+                writes += 1;
+            }
+        }
+        assert_eq!(writes * 2, total, "every read is paired with a write");
+        assert!(compute / total > 10, "EP has long compute gaps");
+    }
+}

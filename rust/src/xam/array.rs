@@ -1,0 +1,301 @@
+//! The XAM array (paper §4) — a 2R differential crosspoint that
+//! switches between RAM and CAM behaviour.
+//!
+//! Functional model: cell states are stored bit-packed, one `u64` word
+//! per column (a set is 64 rows x 512 columns: 8 diagonal 64x64
+//! subarrays, Table 3). The rust fast-path search is the same masked
+//! XNOR the Pallas kernel performs; both are differential-tested
+//! against each other through the AOT artifacts.
+//!
+//! Wear model: the lifetime machinery (§8, §10.3) consumes *snapshots
+//! of per-row and per-column write counts* — exactly what the paper
+//! records — so the array maintains those counters on every write.
+
+use crate::config::tech::{DeviceParams, RRAM_DEVICE};
+use crate::util::bitvec::BitVec;
+
+/// Outcome of a search: per-column match plus the mismatching-bit
+/// count (the analog pull-down strength) for sense-margin accounting.
+#[derive(Clone, Debug)]
+pub struct SearchOutcome {
+    pub match_vec: BitVec,
+    /// First matching column, if any (the paper's match pointer).
+    pub first_match: Option<usize>,
+    /// Number of matching columns.
+    pub matches: usize,
+    /// Worst-case (smallest nonzero) mismatch bit count over columns —
+    /// determines the minimum sense margin of this search.
+    pub min_nonzero_mismatch: Option<u32>,
+}
+
+/// A single XAM set: `rows` x `cols` differential 2R cells.
+#[derive(Clone, Debug)]
+pub struct XamArray {
+    rows: usize,
+    cols: usize,
+    /// Column-major packed bits: word `j` holds column j, bit i = row i.
+    data: Vec<u64>,
+    /// Write events per row (row-wise writes touch one row).
+    row_writes: Vec<u64>,
+    /// Write events per column (column-wise writes touch one column).
+    col_writes: Vec<u64>,
+    device: DeviceParams,
+}
+
+impl XamArray {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(
+            (1..=64).contains(&rows),
+            "XAM set rows must fit one u64 word (got {rows})"
+        );
+        Self {
+            rows,
+            cols,
+            data: vec![0; cols],
+            row_writes: vec![0; rows],
+            col_writes: vec![0; cols],
+            device: RRAM_DEVICE,
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    fn row_mask(&self) -> u64 {
+        if self.rows == 64 {
+            !0u64
+        } else {
+            (1u64 << self.rows) - 1
+        }
+    }
+
+    /// Column-wise write (§4.1.2, ColumnIn mode): store a full word
+    /// into one column. The two-step 0s-then-1s programming is one
+    /// write event for wear purposes (both steps address the same
+    /// cells once).
+    pub fn write_col(&mut self, col: usize, word: u64) {
+        debug_assert!(col < self.cols);
+        self.data[col] = word & self.row_mask();
+        self.col_writes[col] += 1;
+    }
+
+    /// Row-wise write (§4.1.1, RowIn mode): write bit `i` of `bits`
+    /// into row `row` of column `i` for the first `width` columns.
+    pub fn write_row(&mut self, row: usize, bits: u64, width: usize) {
+        debug_assert!(row < self.rows);
+        let width = width.min(self.cols).min(64);
+        let m = 1u64 << row;
+        for (j, d) in self.data[..width].iter_mut().enumerate() {
+            if (bits >> j) & 1 == 1 {
+                *d |= m;
+            } else {
+                *d &= !m;
+            }
+        }
+        self.row_writes[row] += 1;
+    }
+
+    /// Row read (§4.2.1): bit `j` of the result is row `row` of column
+    /// `j` (first 64 columns, or fewer).
+    pub fn read_row(&self, row: usize) -> u64 {
+        debug_assert!(row < self.rows);
+        let mut out = 0u64;
+        for (j, &d) in self.data.iter().take(64).enumerate() {
+            out |= ((d >> row) & 1) << j;
+        }
+        out
+    }
+
+    /// Column read: the stored word of column `col`.
+    #[inline]
+    pub fn read_col(&self, col: usize) -> u64 {
+        debug_assert!(col < self.cols);
+        self.data[col]
+    }
+
+    /// Parallel masked search (§4.2.2): column j matches iff all
+    /// unmasked key bits equal the stored bits. Reads do not wear.
+    pub fn search(&self, key: u64, mask: u64) -> SearchOutcome {
+        let mask = mask & self.row_mask();
+        let key = key & self.row_mask();
+        let mut match_vec = BitVec::zeros(self.cols);
+        let mut matches = 0usize;
+        let mut first = None;
+        let mut min_mism: Option<u32> = None;
+        for (j, &d) in self.data.iter().enumerate() {
+            let mism = ((d ^ key) & mask).count_ones();
+            if mism == 0 {
+                match_vec.set(j, true);
+                matches += 1;
+                if first.is_none() {
+                    first = Some(j);
+                }
+            } else {
+                min_mism = Some(match min_mism {
+                    Some(m) => m.min(mism),
+                    None => mism,
+                });
+            }
+        }
+        SearchOutcome {
+            match_vec,
+            first_match: first,
+            matches,
+            min_nonzero_mismatch: min_mism,
+        }
+    }
+
+    /// Fast-path search returning only the first match (hot loop of
+    /// the flat-CAM controller; no allocation).
+    #[inline]
+    pub fn search_first(&self, key: u64, mask: u64) -> Option<usize> {
+        let mask = mask & self.row_mask();
+        let key = key & self.row_mask();
+        self.data.iter().position(|&d| (d ^ key) & mask == 0)
+    }
+
+    /// Analog sense margin (volts) of the worst column in a search —
+    /// validates that even one mismatching bit separates from Ref_S.
+    pub fn sense_margin(&self, outcome: &SearchOutcome) -> f64 {
+        let worst_mism =
+            outcome.min_nonzero_mismatch.unwrap_or(self.rows as u32);
+        let m_match = self.device.search_margin(self.rows, 0);
+        let m_miss =
+            self.device.search_margin(self.rows, worst_mism as usize);
+        m_match.min(m_miss)
+    }
+
+    /// Per-row / per-column write-count snapshot (§10.3 lifetime
+    /// estimation input).
+    pub fn wear_snapshot(&self) -> (Vec<u64>, Vec<u64>) {
+        (self.row_writes.clone(), self.col_writes.clone())
+    }
+
+    /// Upper-bound estimate of the most-written cell: a cell (i, j) is
+    /// written by row writes to i and column writes to j.
+    pub fn max_cell_writes(&self) -> u64 {
+        let max_row = self.row_writes.iter().copied().max().unwrap_or(0);
+        let max_col = self.col_writes.iter().copied().max().unwrap_or(0);
+        max_row + max_col
+    }
+
+    pub fn total_writes(&self) -> u64 {
+        self.row_writes.iter().sum::<u64>()
+            + self.col_writes.iter().sum::<u64>()
+    }
+
+    pub fn reset_wear(&mut self) {
+        self.row_writes.iter_mut().for_each(|w| *w = 0);
+        self.col_writes.iter_mut().for_each(|w| *w = 0);
+    }
+
+    /// Raw column words (for the runtime bridge / differential tests).
+    pub fn columns(&self) -> &[u64] {
+        &self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn col_write_then_read_roundtrip() {
+        let mut a = XamArray::new(64, 512);
+        a.write_col(7, 0xDEAD_BEEF_1234_5678);
+        assert_eq!(a.read_col(7), 0xDEAD_BEEF_1234_5678);
+        assert_eq!(a.read_col(8), 0);
+    }
+
+    #[test]
+    fn row_write_sets_one_bit_plane() {
+        let mut a = XamArray::new(64, 64);
+        a.write_row(3, 0b1010, 64);
+        assert_eq!(a.read_col(0), 0);
+        assert_eq!(a.read_col(1), 1 << 3);
+        assert_eq!(a.read_col(3), 1 << 3);
+        assert_eq!(a.read_row(3), 0b1010);
+        // overwrite clears previous bits of the plane
+        a.write_row(3, 0b0100, 64);
+        assert_eq!(a.read_col(1), 0);
+        assert_eq!(a.read_col(2), 1 << 3);
+    }
+
+    #[test]
+    fn rows_below_64_mask_high_bits() {
+        let mut a = XamArray::new(16, 8);
+        a.write_col(0, !0u64);
+        assert_eq!(a.read_col(0), 0xFFFF);
+        let o = a.search(!0u64, !0u64);
+        assert_eq!(o.first_match, Some(0));
+    }
+
+    #[test]
+    fn search_exact_and_masked() {
+        let mut a = XamArray::new(64, 512);
+        let mut rng = Rng::new(5);
+        for j in 0..512 {
+            a.write_col(j, rng.next_u64());
+        }
+        let needle = a.read_col(300);
+        let o = a.search(needle, !0u64);
+        assert!(o.match_vec.get(300));
+        assert_eq!(o.first_match, Some(o.match_vec.first_one().unwrap()));
+        // partial search over one byte (the paper's 0x0FF00-style mask)
+        let mask = 0xFF00u64;
+        let o2 = a.search(needle, mask);
+        assert!(o2.matches >= 1);
+        for j in o2.match_vec.iter_ones() {
+            assert_eq!(a.read_col(j) & mask, needle & mask);
+        }
+        assert_eq!(a.search_first(needle, mask), o2.first_match);
+    }
+
+    #[test]
+    fn search_miss_reports_min_mismatch() {
+        let mut a = XamArray::new(64, 4);
+        a.write_col(0, 0b0001);
+        a.write_col(1, 0b0011);
+        a.write_col(2, 0b0111);
+        a.write_col(3, 0b1111);
+        let o = a.search(0, !0u64);
+        assert_eq!(o.matches, 0);
+        assert_eq!(o.min_nonzero_mismatch, Some(1));
+        assert!(a.sense_margin(&o) > 0.0);
+    }
+
+    #[test]
+    fn wear_counters_track_writes() {
+        let mut a = XamArray::new(64, 64);
+        a.write_col(5, 1);
+        a.write_col(5, 2);
+        a.write_row(9, 0xF, 64);
+        let (rows, cols) = a.wear_snapshot();
+        assert_eq!(cols[5], 2);
+        assert_eq!(rows[9], 1);
+        assert_eq!(a.total_writes(), 3);
+        assert_eq!(a.max_cell_writes(), 2 + 1);
+        a.reset_wear();
+        assert_eq!(a.total_writes(), 0);
+    }
+
+    #[test]
+    fn search_never_wears() {
+        let mut a = XamArray::new(64, 128);
+        a.write_col(0, 42);
+        let before = a.total_writes();
+        for _ in 0..100 {
+            a.search(42, !0);
+        }
+        assert_eq!(a.total_writes(), before);
+    }
+}

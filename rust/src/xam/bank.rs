@@ -1,0 +1,130 @@
+//! Bank-level XAM organization (paper §6.2): a bank holds many
+//! supersets and one *sensing reference* state shared by all of them.
+//! The `prepare` command (replacing DRAM precharge) toggles the bank
+//! between read (`Ref_R`) and search (`Ref_S`) references via
+//! bank-level voltage converters; the default mode of every bank is
+//! read, which is what lets the controller track all bank modes with a
+//! single flag each.
+
+use crate::xam::superset::Superset;
+
+/// Bank sensing mode: which reference the sense amps compare against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SenseMode {
+    /// `Ref_R = V_R / 2` — random-access reads.
+    #[default]
+    Read,
+    /// `Ref_S` between all-match and single-mismatch — searches.
+    Search,
+}
+
+/// A Monarch bank: supersets + one sense-reference latch.
+#[derive(Clone, Debug)]
+pub struct Bank {
+    supersets: Vec<Superset>,
+    pub sense: SenseMode,
+    /// Number of prepare (mode-toggle) commands served — interface
+    /// traffic accounting.
+    pub prepares: u64,
+    /// Number of activate (port-toggle) commands served.
+    pub activates: u64,
+}
+
+impl Bank {
+    pub fn new(supersets: usize, sets: usize, rows: usize, cols: usize) -> Self {
+        Self {
+            supersets: (0..supersets)
+                .map(|_| Superset::new(sets, rows, cols))
+                .collect(),
+            sense: SenseMode::Read,
+            prepares: 0,
+            activates: 0,
+        }
+    }
+
+    pub fn num_supersets(&self) -> usize {
+        self.supersets.len()
+    }
+
+    pub fn superset(&self, i: usize) -> &Superset {
+        &self.supersets[i]
+    }
+
+    pub fn superset_mut(&mut self, i: usize) -> &mut Superset {
+        &mut self.supersets[i]
+    }
+
+    /// The `prepare` command: toggle the sensing reference. Returns
+    /// true if a toggle actually happened (the controller only issues
+    /// prepares on mode change, §6.2).
+    pub fn prepare(&mut self, want: SenseMode) -> bool {
+        if self.sense == want {
+            return false;
+        }
+        self.sense = want;
+        self.prepares += 1;
+        true
+    }
+
+    /// The `activate` command on a superset: toggle its port selector.
+    pub fn activate(&mut self, superset: usize) {
+        self.supersets[superset].toggle_mode();
+        self.activates += 1;
+    }
+
+    /// Aggregate write events (wear-leveling / WR metric input).
+    pub fn total_writes(&self) -> u64 {
+        self.supersets.iter().map(|s| s.total_writes()).sum()
+    }
+
+    pub fn max_cell_writes(&self) -> u64 {
+        self.supersets.iter().map(|s| s.max_cell_writes()).max().unwrap_or(0)
+    }
+
+    pub fn reset_wear(&mut self) {
+        self.supersets.iter_mut().for_each(|s| s.reset_wear());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::xam::superset::PortMode;
+
+    #[test]
+    fn default_mode_is_read() {
+        let b = Bank::new(4, 8, 64, 64);
+        assert_eq!(b.sense, SenseMode::Read);
+    }
+
+    #[test]
+    fn prepare_only_counts_real_toggles() {
+        let mut b = Bank::new(2, 8, 64, 64);
+        assert!(!b.prepare(SenseMode::Read)); // already read
+        assert_eq!(b.prepares, 0);
+        assert!(b.prepare(SenseMode::Search));
+        assert!(!b.prepare(SenseMode::Search));
+        assert!(b.prepare(SenseMode::Read));
+        assert_eq!(b.prepares, 2);
+    }
+
+    #[test]
+    fn activate_toggles_port_selector() {
+        let mut b = Bank::new(2, 8, 64, 64);
+        assert_eq!(b.superset(1).mode, PortMode::RowIn);
+        b.activate(1);
+        assert_eq!(b.superset(1).mode, PortMode::ColumnIn);
+        assert_eq!(b.superset(0).mode, PortMode::RowIn); // untouched
+        assert_eq!(b.activates, 1);
+    }
+
+    #[test]
+    fn wear_rolls_up() {
+        let mut b = Bank::new(2, 2, 64, 8);
+        b.superset_mut(0).set_mut(0).write_col(0, 7);
+        b.superset_mut(1).set_mut(1).write_col(3, 9);
+        b.superset_mut(1).set_mut(1).write_col(3, 10);
+        assert_eq!(b.total_writes(), 3);
+        assert_eq!(b.max_cell_writes(), 2);
+    }
+}

@@ -1,0 +1,11 @@
+//! XAM — the reconfigurable RAM/CAM resistive crosspoint substrate
+//! (paper §4-§6): arrays, diagonal supersets, and banks with
+//! toggle-based sensing/port control.
+
+pub mod array;
+pub mod bank;
+pub mod superset;
+
+pub use array::{SearchOutcome, XamArray};
+pub use bank::{Bank, SenseMode};
+pub use superset::{PortMode, Superset};

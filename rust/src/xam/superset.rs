@@ -1,0 +1,193 @@
+//! Superset organization (paper §6.1): XAM arrays grouped under shared
+//! H-trees with *diagonal set arrangement* and a toggle-based port
+//! selector.
+//!
+//! In an 8x8 superset the subarray at grid position (i, j) belongs to
+//! set `k = (j - i) mod 8`; an access to set k selects the 8 subarrays
+//! on that diagonal, and the port selector (a mode latch + 3-to-8
+//! decoder) routes either the column ports (ColumnIn) or the row ports
+//! (RowIn) to them. We model each *set* as one logical `XamArray`
+//! (64 rows x 512 columns = the 8 diagonal 64x64 subarrays
+//! concatenated column-wise) and keep the diagonal decode explicit for
+//! fidelity tests.
+
+use crate::xam::array::{SearchOutcome, XamArray};
+
+/// Port-selector mode (§6.2 Activating a Superset): an `activate`
+/// toggles between column and row access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PortMode {
+    /// Data enters through column drivers (column writes; CAM data
+    /// population; cache-tag partial updates via the mask register).
+    ColumnIn,
+    /// Data enters through row drivers (row writes in RAM mode;
+    /// key/mask register writes in CAM mode).
+    RowIn,
+}
+
+/// Diagonal decode: subarray (i, j) of the g x g grid belongs to set
+/// `(j + g - i) % g`.
+#[inline]
+pub fn diagonal_set(grid: usize, i: usize, j: usize) -> usize {
+    (j + grid - i) % grid
+}
+
+/// Subarrays selected for set `k`: one per grid row, at column
+/// `(i + k) % g`.
+pub fn diagonal_select(grid: usize, k: usize) -> Vec<(usize, usize)> {
+    (0..grid).map(|i| (i, (i + k) % grid)).collect()
+}
+
+/// A superset: `sets` logical XAM sets sharing data/key/mask buffers
+/// and one port selector.
+#[derive(Clone, Debug)]
+pub struct Superset {
+    sets: Vec<XamArray>,
+    /// Key/mask registers shared by all sets of the superset (§7):
+    /// refreshed from the vault controller before a search when stale.
+    pub key_reg: u64,
+    pub mask_reg: u64,
+    /// Monotonic version of the key/mask held here; the controller
+    /// compares against its global registers to skip redundant updates.
+    pub keymask_version: u64,
+    pub mode: PortMode,
+    grid: usize,
+}
+
+impl Superset {
+    pub fn new(sets: usize, rows: usize, cols: usize) -> Self {
+        Self {
+            sets: (0..sets).map(|_| XamArray::new(rows, cols)).collect(),
+            key_reg: 0,
+            mask_reg: 0,
+            keymask_version: 0,
+            mode: PortMode::RowIn,
+            grid: sets,
+        }
+    }
+
+    pub fn num_sets(&self) -> usize {
+        self.sets.len()
+    }
+
+    pub fn set(&self, k: usize) -> &XamArray {
+        &self.sets[k]
+    }
+
+    pub fn set_mut(&mut self, k: usize) -> &mut XamArray {
+        &mut self.sets[k]
+    }
+
+    /// Toggle the port selector (the `activate` command, §6.2).
+    pub fn toggle_mode(&mut self) {
+        self.mode = match self.mode {
+            PortMode::ColumnIn => PortMode::RowIn,
+            PortMode::RowIn => PortMode::ColumnIn,
+        };
+    }
+
+    /// Latch new key/mask values (RowIn CAM; odd row address = mask,
+    /// even = key, §6.2 Fine-grained XAM Access).
+    pub fn load_keymask(&mut self, key: u64, mask: u64, version: u64) {
+        self.key_reg = key;
+        self.mask_reg = mask;
+        self.keymask_version = version;
+    }
+
+    /// Search set `k` with the latched key/mask.
+    pub fn search_set(&self, k: usize) -> SearchOutcome {
+        self.sets[k].search(self.key_reg, self.mask_reg)
+    }
+
+    /// Fast path: first match only.
+    pub fn search_set_first(&self, k: usize) -> Option<usize> {
+        self.sets[k].search_first(self.key_reg, self.mask_reg)
+    }
+
+    /// Total write events across all sets (wear-leveling input).
+    pub fn total_writes(&self) -> u64 {
+        self.sets.iter().map(|s| s.total_writes()).sum()
+    }
+
+    /// Worst-case per-cell writes across sets.
+    pub fn max_cell_writes(&self) -> u64 {
+        self.sets.iter().map(|s| s.max_cell_writes()).max().unwrap_or(0)
+    }
+
+    pub fn reset_wear(&mut self) {
+        self.sets.iter_mut().for_each(|s| s.reset_wear());
+    }
+
+    /// The subarray grid coordinates an access to set `k` selects.
+    pub fn selected_subarrays(&self, k: usize) -> Vec<(usize, usize)> {
+        diagonal_select(self.grid, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_mapping_is_a_partition() {
+        // every subarray belongs to exactly one set, every set gets
+        // exactly `grid` subarrays, one per row and one per column
+        let g = 8;
+        let mut per_set = vec![0usize; g];
+        for i in 0..g {
+            for j in 0..g {
+                per_set[diagonal_set(g, i, j)] += 1;
+            }
+        }
+        assert!(per_set.iter().all(|&c| c == g));
+        for k in 0..g {
+            let sel = diagonal_select(g, k);
+            assert_eq!(sel.len(), g);
+            // selection agrees with the membership function
+            for &(i, j) in &sel {
+                assert_eq!(diagonal_set(g, i, j), k);
+            }
+            // one subarray per row and per column (H-tree conflict-free)
+            let mut rows: Vec<_> = sel.iter().map(|&(i, _)| i).collect();
+            let mut cols: Vec<_> = sel.iter().map(|&(_, j)| j).collect();
+            rows.sort_unstable();
+            cols.sort_unstable();
+            assert_eq!(rows, (0..g).collect::<Vec<_>>());
+            assert_eq!(cols, (0..g).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn mode_toggles() {
+        let mut ss = Superset::new(8, 64, 512);
+        assert_eq!(ss.mode, PortMode::RowIn);
+        ss.toggle_mode();
+        assert_eq!(ss.mode, PortMode::ColumnIn);
+        ss.toggle_mode();
+        assert_eq!(ss.mode, PortMode::RowIn);
+    }
+
+    #[test]
+    fn keymask_shared_across_sets() {
+        let mut ss = Superset::new(8, 64, 64);
+        ss.set_mut(2).write_col(10, 0xABCD);
+        ss.set_mut(5).write_col(3, 0xABCD);
+        ss.load_keymask(0xABCD, !0, 1);
+        assert_eq!(ss.search_set_first(2), Some(10));
+        assert_eq!(ss.search_set_first(5), Some(3));
+        assert_eq!(ss.search_set_first(0), None);
+        assert_eq!(ss.keymask_version, 1);
+    }
+
+    #[test]
+    fn wear_aggregates_over_sets() {
+        let mut ss = Superset::new(4, 64, 16);
+        ss.set_mut(0).write_col(0, 1);
+        ss.set_mut(3).write_col(1, 2);
+        ss.set_mut(3).write_col(1, 3);
+        assert_eq!(ss.total_writes(), 3);
+        assert_eq!(ss.max_cell_writes(), 2);
+        ss.reset_wear();
+        assert_eq!(ss.total_writes(), 0);
+    }
+}

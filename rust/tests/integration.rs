@@ -1,0 +1,143 @@
+//! Cross-module integration tests: full-system runs, flat-mode flows,
+//! runtime bridge, and determinism.
+
+use monarch::config::{InPackageKind, MonarchGeom, SystemConfig, WearConfig};
+use monarch::monarch::MonarchFlat;
+use monarch::runtime::SearchEngine;
+use monarch::sim::System;
+use monarch::workloads::hashing::{run_ycsb, HashMemory, YcsbConfig};
+use monarch::workloads::{graph, SyntheticStream, Workload};
+
+fn scaled(kind: InPackageKind) -> SystemConfig {
+    SystemConfig::scaled(kind, 1.0 / 4096.0)
+}
+
+#[test]
+fn full_system_graph_run_all_inpkg_kinds() {
+    let g = graph::Graph::random(4000, 6, 11);
+    let wl = graph::bfs(&g, 4, 4000);
+    let kinds = [
+        InPackageKind::DramCache,
+        InPackageKind::DramCacheIdeal,
+        InPackageKind::Sram,
+        InPackageKind::RramUnbound,
+        InPackageKind::MonarchUnbound,
+        InPackageKind::Monarch { m: 1 },
+        InPackageKind::Monarch { m: 3 },
+    ];
+    for kind in kinds {
+        let mut sys = System::build(scaled(kind));
+        let mut replay = wl.replay();
+        let r = sys.run(&mut replay, u64::MAX);
+        assert!(r.cycles > 0, "{kind:?}");
+        assert!(r.mem_ops > 0, "{kind:?}");
+        assert!(r.energy_nj > 0.0, "{kind:?}");
+    }
+}
+
+#[test]
+fn simulation_is_deterministic() {
+    let run = || {
+        let mut sys = System::build(scaled(InPackageKind::Monarch { m: 3 }));
+        let mut wl = SyntheticStream::zipfian(4, 8000, 1 << 21, 0.9, 0.2, 99);
+        sys.run(&mut wl, u64::MAX).cycles
+    };
+    assert_eq!(run(), run(), "same seed must reproduce exactly");
+}
+
+#[test]
+fn ycsb_functional_results_identical_across_systems() {
+    let cfg = YcsbConfig {
+        table_pow2: 12,
+        window: 32,
+        ops: 2500,
+        read_pct: 0.9,
+        ..Default::default()
+    };
+    let geom = MonarchGeom::FULL.scaled(1.0 / 1024.0);
+    let table_bytes = (1usize << cfg.table_pow2) * 24;
+    let mut reports = Vec::new();
+    for mut sys in [
+        HashMemory::hbm_c(table_bytes),
+        HashMemory::hbm_sp(table_bytes),
+        HashMemory::cmos(table_bytes / 8),
+        HashMemory::rram_flat(table_bytes * 2),
+        HashMemory::monarch(geom, (1 << cfg.table_pow2) / 512 + 1),
+    ] {
+        reports.push(run_ycsb(&mut sys, &cfg));
+    }
+    // identical logical work: same hits everywhere
+    for r in &reports[1..] {
+        assert_eq!(r.hits, reports[0].hits, "{} diverged", r.system);
+        assert_eq!(r.ops, reports[0].ops);
+    }
+}
+
+#[test]
+fn flat_cam_full_fig6_flow_with_runtime_crosscheck() {
+    let geom = MonarchGeom {
+        vaults: 2,
+        banks_per_vault: 4,
+        supersets_per_bank: 4,
+        sets_per_superset: 8,
+        rows_per_set: 64,
+        cols_per_set: 512,
+        layers: 1,
+    };
+    let mut m =
+        MonarchFlat::new(geom, 4, WearConfig::default_m(3), u64::MAX / 4, true);
+    let mut t = 0;
+    for col in 0..128 {
+        t = m.cam_write(1, col, 0xAB00 + col as u64, t).unwrap().done_at;
+    }
+    t = m.write_key(0xAB00 + 77, t).done_at;
+    t = m.write_mask(!0, t).done_at;
+    let (_, hit) = m.search(1, t);
+    assert_eq!(hit, Some(77));
+    // cross-check with the compiled kernel when artifacts exist
+    let dir = SearchEngine::default_dir();
+    if dir.join("manifest.txt").exists() {
+        let engine = SearchEngine::load(&dir).unwrap();
+        let (key, mask) = m.keymask();
+        let got =
+            engine.search_sets(&[m.set_array(1)], &[key], &[mask]).unwrap();
+        assert_eq!(got, vec![Some(77)]);
+    }
+}
+
+#[test]
+fn m_sweep_orders_reasonably() {
+    // tighter write budgets can only slow things down (Fig 9 M sweep)
+    let g = graph::Graph::random(3000, 6, 5);
+    let wl = graph::sssp(&g, 4, 6000, 4);
+    let mut cycles = Vec::new();
+    for m in [1u32, 4] {
+        let mut sys = System::build(scaled(InPackageKind::Monarch { m }));
+        let mut replay = wl.replay();
+        cycles.push(sys.run(&mut replay, u64::MAX).cycles);
+    }
+    // M=1 (most restrictive) must not be faster than M=4 by more than
+    // simulator noise
+    assert!(
+        cycles[0] as f64 >= cycles[1] as f64 * 0.98,
+        "M=1 {} vs M=4 {}",
+        cycles[0],
+        cycles[1]
+    );
+}
+
+#[test]
+fn workload_replay_is_stable() {
+    let g = graph::Graph::random(1000, 4, 3);
+    let wl = graph::pagerank(&g, 2, 2000, 2);
+    let drain = |mut w: monarch::workloads::TraceWorkload| {
+        let mut v = Vec::new();
+        for t in 0..2 {
+            while let Some(op) = w.next_op(t) {
+                v.push((t, op.addr, op.write));
+            }
+        }
+        v
+    };
+    assert_eq!(drain(wl.replay()), drain(wl.replay()));
+}

@@ -1,0 +1,233 @@
+//! Property-based tests (hand-rolled driver in `util::prop`) over the
+//! coordinator invariants: address remapping stays a bijection,
+//! diagonal selection is conflict-free, t_MWW never exceeds budget,
+//! the hopscotch table preserves its window rule, and the XAM array
+//! search agrees with a naive bit-by-bit model under arbitrary
+//! write/search sequences.
+
+use monarch::config::WearConfig;
+use monarch::monarch::wear::{MwwWindow, Offsets, WearLeveler};
+use monarch::prop_assert;
+use monarch::util::prop::{check, Gen};
+use monarch::workloads::hashing::{Hopscotch, InsertOutcome};
+use monarch::xam::superset::{diagonal_select, diagonal_set};
+use monarch::xam::XamArray;
+
+#[test]
+fn prop_remap_is_bijective() {
+    check("remap_bijective", 40, |g: &mut Gen| {
+        let nv = 1 + g.int(8);
+        let nb = 1 + g.int(64);
+        let nss = 1 + g.int(64);
+        let nset = 1 + g.int(8);
+        let mut wl = WearLeveler::new(WearConfig::default_m(3), 8, u64::MAX);
+        for _ in 0..g.int(20) {
+            wl.offsets.rotate();
+        }
+        let mut seen = std::collections::HashSet::new();
+        for v in 0..nv {
+            for b in 0..nb {
+                for ss in 0..nss.min(8) {
+                    for s in 0..nset {
+                        let out = wl.remap(v, b, ss, s, nv, nb, nss, nset);
+                        prop_assert!(
+                            seen.insert(out),
+                            "collision at {v},{b},{ss},{s} -> {out:?}"
+                        );
+                        prop_assert!(
+                            out.0 < nv && out.1 < nb && out.2 < nss
+                                && out.3 < nset,
+                            "out of range: {out:?}"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_diagonal_partition() {
+    check("diagonal_partition", 30, |g: &mut Gen| {
+        let grid = 1 + g.int(16);
+        let mut count = vec![0usize; grid];
+        for i in 0..grid {
+            for j in 0..grid {
+                count[diagonal_set(grid, i, j)] += 1;
+            }
+        }
+        prop_assert!(
+            count.iter().all(|&c| c == grid),
+            "not a partition: {count:?}"
+        );
+        for k in 0..grid {
+            let sel = diagonal_select(grid, k);
+            for &(i, j) in &sel {
+                prop_assert!(
+                    diagonal_set(grid, i, j) == k,
+                    "selection disagrees at ({i},{j})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mww_budget_never_exceeded() {
+    check("mww_budget", 50, |g: &mut Gen| {
+        let m = 1 + g.int(4) as u32;
+        let window = 100 + g.u64() % 10_000;
+        let mut w = MwwWindow::default();
+        let mut now = 0u64;
+        let mut in_window = 0u32;
+        let mut window_start = 0u64;
+        for _ in 0..5000 {
+            now += g.u64() % 50;
+            if w.record_write(now, window, m) {
+                if now >= window_start + window {
+                    window_start = now;
+                    in_window = 0;
+                }
+                in_window += 1;
+                prop_assert!(
+                    in_window <= 512 * m,
+                    "budget exceeded: {in_window} > {}",
+                    512 * m
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_offsets_prime_strides() {
+    check("offset_strides", 20, |g: &mut Gen| {
+        let mut o = Offsets::default();
+        let n = 1 + g.int(100) as u64;
+        for _ in 0..n {
+            o.rotate();
+        }
+        prop_assert!(o.bank == n, "bank stride 1");
+        prop_assert!(o.set == 3 * n, "set stride 3");
+        prop_assert!(o.superset == 7 * n, "superset stride 7");
+        prop_assert!(o.vault == 5 * (n / 8), "vault stride 5 every 8");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hopscotch_window_invariant() {
+    check("hopscotch_window", 25, |g: &mut Gen| {
+        let pow = 7 + g.int(3);
+        let window = 8 << g.int(3);
+        let mut t = Hopscotch::new(pow, window);
+        let mut inserted = Vec::new();
+        for _ in 0..(1 << pow) {
+            let key = g.u64() | 1;
+            match t.insert(key) {
+                InsertOutcome::Inserted { .. } => inserted.push(key),
+                InsertOutcome::NeedRehash => break,
+                InsertOutcome::AlreadyPresent => {}
+            }
+        }
+        // every inserted key is findable and within its window
+        let n = t.buckets.len();
+        for key in &inserted {
+            let (found, probes) = t.lookup(*key);
+            prop_assert!(found.is_some(), "lost key {key}");
+            prop_assert!(probes <= window, "probes {probes} > window");
+            let i = found.unwrap();
+            let dist = (i + n - t.home(*key)) & (n - 1);
+            prop_assert!(dist < window, "key {key} at distance {dist}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_xam_search_matches_naive_model() {
+    check("xam_vs_naive", 40, |g: &mut Gen| {
+        let rows = 1 + g.int(64).clamp(0, 63);
+        let cols = 1 + g.int(128);
+        let mut a = XamArray::new(rows, cols);
+        let mut model = vec![0u64; cols];
+        let row_mask =
+            if rows == 64 { !0u64 } else { (1u64 << rows) - 1 };
+        for _ in 0..g.int(200) {
+            match g.int(4) {
+                0 => {
+                    let c = g.int(cols).min(cols - 1);
+                    let w = g.u64();
+                    a.write_col(c, w);
+                    model[c] = w & row_mask;
+                }
+                1 => {
+                    let r = g.int(rows).min(rows - 1);
+                    let bits = g.u64();
+                    a.write_row(r, bits, 64);
+                    for (j, m) in
+                        model.iter_mut().enumerate().take(cols.min(64))
+                    {
+                        if (bits >> j) & 1 == 1 {
+                            *m |= 1 << r;
+                        } else {
+                            *m &= !(1 << r);
+                        }
+                    }
+                }
+                _ => {
+                    let key = g.u64();
+                    let mask = g.u64();
+                    let naive: Option<usize> = model
+                        .iter()
+                        .position(|&w| (w ^ key) & mask & row_mask == 0);
+                    let got = a.search_first(key, mask);
+                    prop_assert!(
+                        got == naive,
+                        "search mismatch: got {got:?} want {naive:?}"
+                    );
+                }
+            }
+        }
+        // full state agreement at the end
+        for (c, &m) in model.iter().enumerate() {
+            prop_assert!(
+                a.read_col(c) == m,
+                "state diverged at column {c}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wear_leveler_counts_consistent() {
+    check("wear_counts", 30, |g: &mut Gen| {
+        let ss = 2 + g.int(32);
+        let cfg = WearConfig {
+            wc_limit: u64::MAX,
+            dc_limit: u64::MAX,
+            wr_shift: 63,
+            ..WearConfig::default_m(4)
+        };
+        let mut wl = WearLeveler::new(cfg, ss, u64::MAX);
+        let mut accepted = 0u64;
+        for i in 0..2000u64 {
+            let target = g.int(ss);
+            let (ok, _) = wl.on_write(target, g.int(2) == 0, i);
+            if ok {
+                accepted += 1;
+            }
+        }
+        let total: u64 =
+            wl.all_intervals().iter().flatten().copied().sum();
+        prop_assert!(
+            total == accepted,
+            "interval snapshots {total} != accepted writes {accepted}"
+        );
+        Ok(())
+    });
+}
