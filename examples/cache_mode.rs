@@ -6,11 +6,10 @@
 //!
 //! Run: `cargo run --release --example cache_mode -- [--scale S]`
 
-use anyhow::Result;
 use monarch::config::{InPackageKind, SystemConfig};
 use monarch::monarch::LifetimeEstimator;
 use monarch::prelude::*;
-use monarch::sim::{InPackage, System};
+use monarch::sim::System;
 use monarch::workloads::graph;
 
 fn main() -> Result<()> {
@@ -57,7 +56,7 @@ fn main() -> Result<()> {
             format!("{:.2}x", base_cycles as f64 / r.cycles as f64),
         ]);
         // lifetime estimate from the Monarch run's wear snapshots
-        if let InPackage::Monarch(mc) = &sys.inpkg {
+        if let Some(mc) = sys.inpkg.monarch() {
             if kind == (InPackageKind::Monarch { m: 3 }) {
                 let est = LifetimeEstimator::default();
                 let intra = mc.intra_imbalance();

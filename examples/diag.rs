@@ -6,7 +6,7 @@
 //! Run: `cargo run --release --example diag`
 
 use monarch::config::{InPackageKind, SystemConfig};
-use monarch::sim::{InPackage, System};
+use monarch::sim::System;
 use monarch::workloads::graph;
 
 fn main() {
@@ -26,18 +26,10 @@ fn main() {
             rep.cycles,
             100.0 * rep.inpkg_hit_rate
         );
-        match &sys.inpkg {
-            InPackage::Monarch(mc) => {
-                for (k, v) in mc.stats.iter() {
-                    println!("   {k}={v}");
-                }
+        if let Some(cs) = sys.inpkg.counters() {
+            for (k, v) in cs.iter() {
+                println!("   {k}={v}");
             }
-            InPackage::Tech(t) => {
-                for (k, v) in t.stats.iter() {
-                    println!("   {k}={v}");
-                }
-            }
-            _ => {}
         }
         println!(
             "   ddr reads={} writes={}",

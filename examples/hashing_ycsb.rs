@@ -5,12 +5,17 @@
 //! HBM-C, and energy, i.e. the paper's §10.4 headline experiment.
 //!
 //! Run: `cargo run --release --example hashing_ycsb -- [--ops N]
-//!       [--table-pow2 K] [--window W]`
+//!       [--table-pow2 K] [--window W] [--pjrt]`
+//!
+//! With `--pjrt` (and compiled artifacts + the `pjrt` feature), the
+//! Monarch system's batched lookups run as real PJRT kernel
+//! executions; otherwise the batched pure-rust fallback serves them.
 
-use anyhow::Result;
 use monarch::config::MonarchGeom;
-use monarch::coordinator::hash_systems;
+use monarch::coordinator::hash_systems_with;
+use monarch::device::DeviceBuilder;
 use monarch::prelude::*;
+use monarch::runtime::SearchEngine;
 use monarch::workloads::hashing::{run_ycsb, YcsbConfig};
 
 fn main() -> Result<()> {
@@ -33,11 +38,19 @@ fn main() -> Result<()> {
         cfg.read_pct * 100.0
     );
     let geom = MonarchGeom::FULL.scaled(1.0 / 512.0);
+    let mut builder = DeviceBuilder::new();
+    if args.flag("pjrt") {
+        // degrades gracefully when artifacts are absent
+        if let Some(engine) = SearchEngine::load_or_none() {
+            builder = builder.with_search_engine(std::rc::Rc::new(engine));
+            println!("PJRT search kernel attached to the Monarch device");
+        }
+    }
     let mut reports = Vec::new();
-    for mut sys in hash_systems(cfg.table_pow2, geom) {
-        let label = sys.label();
+    for mut sys in hash_systems_with(&builder, cfg.table_pow2, geom) {
+        let label = sys.label().to_string();
         let start = std::time::Instant::now();
-        let r = run_ycsb(&mut sys, &cfg);
+        let r = run_ycsb(sys.as_mut(), &cfg);
         println!("  {label:<8} simulated in {:?}", start.elapsed());
         reports.push(r);
     }

@@ -8,11 +8,11 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use anyhow::Result;
 use monarch::config::{MonarchGeom, WearConfig};
 use monarch::monarch::alloc::{Allocator, MATCH_REG_ADDR};
 use monarch::monarch::MonarchFlat;
 use monarch::runtime::SearchEngine;
+use monarch::util::error::Result;
 
 fn main() -> Result<()> {
     // A small Monarch: 4 vaults, 64-row x 512-column XAM sets.
@@ -66,14 +66,23 @@ fn main() -> Result<()> {
     let (_, partial) = m.search(0, a.done_at + 16);
     println!("partial (one-byte) search -> first match {partial:?}");
 
-    // Cross-check against the compiled Pallas kernel (L1/L2 artifact).
-    match SearchEngine::load(&SearchEngine::default_dir()) {
-        Ok(engine) => {
+    // Cross-check against the compiled Pallas kernel (L1/L2 artifact);
+    // degrades to the pure-rust fallback when artifacts are absent.
+    match SearchEngine::load_or_none() {
+        Some(engine) => {
             let got = engine.search_sets(&[m.set_array(0)], &[needle], &[!0])?;
             assert_eq!(got, vec![Some(42)]);
             println!("PJRT kernel agrees: match index {:?}", got[0]);
         }
-        Err(e) => println!("(skipping kernel cross-check: {e})"),
+        None => {
+            let got = SearchEngine::search_sets_fallback(
+                &[m.set_array(0)],
+                &[needle],
+                &[!0],
+            );
+            assert_eq!(got, vec![Some(42)]);
+            println!("pure-rust fallback agrees: match index {:?}", got[0]);
+        }
     }
     println!("quickstart OK");
     Ok(())

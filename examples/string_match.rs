@@ -3,12 +3,12 @@
 //! per search) after the one-time block-aligned copy.
 //!
 //! Run: `cargo run --release --example string_match -- [--words N]
-//!       [--targets T]`
+//!       [--targets T] [--pjrt]`
 
-use anyhow::Result;
 use monarch::config::MonarchGeom;
+use monarch::device::{assoc, AssocDevice};
 use monarch::prelude::*;
-use monarch::workloads::hashing::HashMemory;
+use monarch::runtime::SearchEngine;
 use monarch::workloads::stringmatch::{run_string_match, StringMatchConfig};
 
 fn main() -> Result<()> {
@@ -29,14 +29,26 @@ fn main() -> Result<()> {
     let geom = MonarchGeom::FULL.scaled(1.0 / 256.0);
     let cam_sets = cfg.corpus_words / 512 + 1;
     let mut systems = vec![
-        HashMemory::hbm_c(corpus_bytes / 2),
-        HashMemory::hbm_sp(corpus_bytes * 2),
-        HashMemory::cmos(corpus_bytes / 8),
-        HashMemory::rram_flat(corpus_bytes * 2),
-        HashMemory::monarch(geom, cam_sets),
+        assoc::hbm_c(corpus_bytes / 2),
+        assoc::hbm_sp(corpus_bytes * 2),
+        assoc::cmos(corpus_bytes / 8),
+        assoc::rram_flat(corpus_bytes * 2),
+        assoc::monarch(geom, cam_sets),
     ];
-    let reports: Vec<_> =
-        systems.iter_mut().map(|s| run_string_match(s, &cfg)).collect();
+    if args.flag("pjrt") {
+        // Monarch's broadcast waves as real PJRT batch executions;
+        // degrades gracefully when artifacts are absent
+        if let Some(engine) = SearchEngine::load_or_none() {
+            let engine = std::rc::Rc::new(engine);
+            for s in systems.iter_mut() {
+                s.attach_engine(engine.clone());
+            }
+        }
+    }
+    let reports: Vec<_> = systems
+        .iter_mut()
+        .map(|s| run_string_match(s.as_mut(), &cfg))
+        .collect();
     let base = reports[0].clone();
     let mut t = Table::new("String-Match — paper §10.5").header(vec![
         "system",

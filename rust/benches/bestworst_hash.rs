@@ -24,9 +24,9 @@ fn speedup_at(read_pct: f64, density: f64, window: usize) -> (f64, f64) {
         seed: 0xBE57,
     };
     let mut systems = hash_systems(cfg.table_pow2, geom);
-    let base_c = run_ycsb(&mut systems[0], &cfg); // HBM-C
-    let base_sp = run_ycsb(&mut systems[1], &cfg); // HBM-SP
-    let m = run_ycsb(&mut systems[4], &cfg); // Monarch
+    let base_c = run_ycsb(systems[0].as_mut(), &cfg); // HBM-C
+    let base_sp = run_ycsb(systems[1].as_mut(), &cfg); // HBM-SP
+    let m = run_ycsb(systems[4].as_mut(), &cfg); // Monarch
     (m.speedup_vs(&base_c), m.speedup_vs(&base_sp))
 }
 

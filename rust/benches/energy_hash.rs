@@ -28,8 +28,8 @@ fn main() {
                 seed: 0xE4E,
             };
             let mut systems = hash_systems(cfg.table_pow2, geom);
-            let sp = run_ycsb(&mut systems[1], &cfg); // HBM-SP
-            let m = run_ycsb(&mut systems[4], &cfg); // Monarch
+            let sp = run_ycsb(systems[1].as_mut(), &cfg); // HBM-SP
+            let m = run_ycsb(systems[4].as_mut(), &cfg); // Monarch
             let ratio = sp.energy_nj / m.energy_nj;
             ratios.push(ratio);
             if window == 32 {

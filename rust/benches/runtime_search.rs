@@ -11,13 +11,9 @@ use monarch::util::table::Table;
 use monarch::xam::XamArray;
 
 fn main() {
-    let dir = SearchEngine::default_dir();
-    let engine = match SearchEngine::load(&dir) {
-        Ok(e) => e,
-        Err(e) => {
-            println!("skipping runtime bench (run `make artifacts`): {e}");
-            return;
-        }
+    let Some(engine) = SearchEngine::load_or_none() else {
+        println!("skipping runtime bench (run `make artifacts`)");
+        return;
     };
     let mut rng = Rng::new(0xBEEF);
     let mut arrays = Vec::new();

@@ -4,7 +4,8 @@
 
 pub mod tech;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 /// Interface timing parameters in CPU cycles (Table 3 rows). The same
 /// struct describes DDR4, in-package DRAM, Monarch/RRAM, and the CMOS

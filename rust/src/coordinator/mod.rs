@@ -7,11 +7,12 @@
 use std::sync::Mutex;
 
 use crate::config::{InPackageKind, MonarchGeom, SystemConfig};
+use crate::device::{assoc, AssocDevice, AssocSpec, DeviceBuilder};
 use crate::monarch::{LifetimeEstimator, LifetimeReport};
-use crate::sim::{InPackage, SimReport, System};
+use crate::sim::{SimReport, System};
 use crate::util::stats::geomean;
 use crate::util::table::{x, Table};
-use crate::workloads::hashing::{run_ycsb, HashMemory, HashReport, YcsbConfig};
+use crate::workloads::hashing::{run_ycsb, HashReport, YcsbConfig};
 use crate::workloads::stringmatch::{
     run_string_match, StringMatchConfig, StringReport,
 };
@@ -200,7 +201,7 @@ pub fn fig11_lifetimes(budget: &Budget) -> Vec<(String, LifetimeReport)> {
             SystemConfig::scaled(InPackageKind::Monarch { m: 3 }, budget.scale);
         let mut sys = System::build(cfg);
         let report = sys.run(&mut replay, u64::MAX);
-        let InPackage::Monarch(mc) = &sys.inpkg else { unreachable!() };
+        let mc = sys.inpkg.monarch().expect("Monarch in-package device");
         let est = LifetimeEstimator {
             blocks_per_superset: 512.0,
             ..Default::default()
@@ -231,18 +232,53 @@ pub fn fig11_lifetimes(budget: &Budget) -> Vec<(String, LifetimeReport)> {
     out
 }
 
-/// The hashing systems of Figs 12-14, paper order (relative to HBM-C).
-pub fn hash_systems(table_pow2: usize, geom: MonarchGeom) -> Vec<HashMemory> {
+/// The hashing systems of Figs 12-14, paper order (relative to
+/// HBM-C), constructed through the backend registry. The per-system
+/// capacity policy (e.g. iso-area CMOS being ~8x smaller, overflow
+/// spilling to DDR) is experiment policy and stays here.
+pub fn hash_systems(
+    table_pow2: usize,
+    geom: MonarchGeom,
+) -> Vec<Box<dyn AssocDevice>> {
+    hash_systems_with(&DeviceBuilder::new(), table_pow2, geom)
+}
+
+/// [`hash_systems`] through a caller-configured builder (custom
+/// backends, or an attached PJRT engine via
+/// `DeviceBuilder::with_search_engine`).
+pub fn hash_systems_with(
+    builder: &DeviceBuilder,
+    table_pow2: usize,
+    geom: MonarchGeom,
+) -> Vec<Box<dyn AssocDevice>> {
     let table_bytes = (1usize << table_pow2) * 24;
     let cam_sets = ((1usize << table_pow2) / 512 + 1)
         .min(geom.vaults * geom.banks_per_vault * geom.supersets_per_bank * 8);
+    let spec = |kind, capacity_bytes| AssocSpec {
+        kind,
+        capacity_bytes,
+        geom,
+        cam_sets,
+    };
     vec![
-        HashMemory::hbm_c(table_bytes.max(1 << 16)),
-        HashMemory::hbm_sp(table_bytes.max(1 << 16)),
+        builder.build_assoc(&spec(
+            InPackageKind::DramCache,
+            table_bytes.max(1 << 16),
+        )),
+        builder.build_assoc(&spec(
+            InPackageKind::DramScratchpad,
+            table_bytes.max(1 << 16),
+        )),
         // iso-area CMOS is ~100x smaller: overflow spills to DDR
-        HashMemory::cmos((table_bytes / 8).max(1 << 14)),
-        HashMemory::rram_flat(2 * table_bytes.max(1 << 16)),
-        HashMemory::monarch(geom, cam_sets),
+        builder.build_assoc(&spec(
+            InPackageKind::Sram,
+            (table_bytes / 8).max(1 << 14),
+        )),
+        builder.build_assoc(&spec(
+            InPackageKind::MonarchFlatRam,
+            2 * table_bytes.max(1 << 16),
+        )),
+        builder.build_assoc(&spec(InPackageKind::Monarch { m: 3 }, 0)),
     ]
 }
 
@@ -270,7 +306,7 @@ pub fn hash_figure(
             };
             let mut reports = Vec::new();
             for mut sys in hash_systems(tp, geom) {
-                reports.push(run_ycsb(&mut sys, &cfg));
+                reports.push(run_ycsb(sys.as_mut(), &cfg));
             }
             out.push((w, tp, reports));
         }
@@ -313,13 +349,13 @@ pub fn stringmatch_reports(budget: &Budget) -> Vec<StringReport> {
     let geom = MonarchGeom::FULL.scaled(budget.scale * 8.0);
     let cam_sets = cfg.corpus_words / 512 + 1;
     let mut systems = vec![
-        HashMemory::hbm_c(corpus_bytes / 2),
-        HashMemory::hbm_sp(corpus_bytes * 2),
-        HashMemory::cmos(corpus_bytes / 8),
-        HashMemory::rram_flat(corpus_bytes * 2),
-        HashMemory::monarch(geom, cam_sets),
+        assoc::hbm_c(corpus_bytes / 2),
+        assoc::hbm_sp(corpus_bytes * 2),
+        assoc::cmos(corpus_bytes / 8),
+        assoc::rram_flat(corpus_bytes * 2),
+        assoc::monarch(geom, cam_sets),
     ];
-    systems.iter_mut().map(|s| run_string_match(s, &cfg)).collect()
+    systems.iter_mut().map(|s| run_string_match(s.as_mut(), &cfg)).collect()
 }
 
 #[cfg(test)]

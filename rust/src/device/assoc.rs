@@ -1,0 +1,643 @@
+//! [`AssocDevice`] — the software-managed backend of the hashing and
+//! string-match experiments — and its built-in implementations.
+//!
+//! Three backends cover the paper's five systems:
+//! - [`CachedTable`] (HBM-C): the table lives in DDR4 behind an
+//!   in-package DRAM L4; `access` is lookup → fetch → fill (+ dirty
+//!   victim write-back).
+//! - [`ScratchTable`] (HBM-SP / CMOS / RRAM-flat): addresses below the
+//!   scratchpad capacity are serviced in-package, the spill in DDR4.
+//! - [`MonarchAssoc`]: keys in real flat-CAM sets, values in flat-RAM,
+//!   metadata in DDR4. Implements the associative surface (key/mask
+//!   registers, `search`, `cam_write`, flat-RAM access) and overrides
+//!   the batched ops with a **single functional evaluation per batch**:
+//!   one `SearchEngine::search_sets` PJRT execution when a compiled
+//!   kernel is attached, one batched pure-rust pass otherwise. The
+//!   controller model (register versions, superset key pushes,
+//!   sense-mode toggles, bank/channel reservations, wear, stats) still
+//!   runs per-op in submission order, so batched results are
+//!   bit-identical to the scalar call sequence.
+
+use std::rc::Rc;
+
+use crate::config::{InPackageKind, MonarchGeom, WearConfig};
+use crate::device::{SearchHit, SearchOp};
+use crate::mem::ddr4::MainMemory;
+use crate::mem::dram_cache::TechCache;
+use crate::mem::scratchpad::Scratchpad;
+use crate::mem::{Access, MemReq, ReqKind};
+use crate::monarch::MonarchFlat;
+use crate::runtime::SearchEngine;
+use crate::xam::XamArray;
+
+/// Geometry of the associative region, when the device has one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CamGeom {
+    pub cols_per_set: usize,
+    pub num_sets: usize,
+}
+
+/// One hopscotch-window lookup against the flat-CAM: key/mask
+/// registers, home-set search, spill-set search when the window
+/// crosses a set boundary and the home search missed, and the flat-RAM
+/// value fetch on a hit (paper §10.4.2).
+#[derive(Clone, Copy, Debug)]
+pub struct CamLookup {
+    pub key: u64,
+    pub mask: u64,
+    /// Set holding the window head (the home bucket).
+    pub set0: usize,
+    /// Set holding the window tail; `== set0` when the window does not
+    /// cross a set boundary.
+    pub set1: usize,
+    /// Flat-RAM block holding the value, read on a hit.
+    pub value_block: u64,
+    /// Also fetch the value when the CAM misses but the functional
+    /// table found the key (the driver knows; keeps both paths in
+    /// lock-step).
+    pub fetch_value_on_miss: bool,
+    /// Issue cycle (the owning thread's `issue_at`).
+    pub at: u64,
+}
+
+/// Result of one [`CamLookup`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CamLookupOut {
+    pub done_at: u64,
+    pub hit: bool,
+    pub energy_nj: f64,
+}
+
+/// A software-managed memory system: flat table storage plus an
+/// optional associative (flat-CAM) region.
+pub trait AssocDevice {
+    /// Display label (Fig 12-14 legend name).
+    fn label(&self) -> &str;
+
+    /// Background power of the in-package part (W).
+    fn static_watts(&self) -> f64;
+
+    /// Byte-addressed access to the table region, routed by the
+    /// backend (L4-cached DDR, scratchpad-or-DDR, ...).
+    fn access(&mut self, addr: u64, write: bool, at: u64) -> Access;
+
+    /// Unconditional off-chip (DDR4) access — metadata, rehash
+    /// traffic, and t_MWW spills.
+    fn main_access(&mut self, addr: u64, write: bool, at: u64) -> Access;
+
+    /// Off-chip background energy over the run (nJ).
+    fn main_static_energy_nj(&self, cycles: u64) -> f64;
+
+    /// The associative region's geometry; `None` for conventional
+    /// backends (which must not receive the CAM calls below).
+    fn cam(&self) -> Option<CamGeom> {
+        None
+    }
+
+    /// Write the controller's global key register.
+    fn write_key(&mut self, _key: u64, _at: u64) -> Access {
+        panic!("{}: not an associative device", self.label())
+    }
+
+    /// Write the controller's global mask register.
+    fn write_mask(&mut self, _mask: u64, _at: u64) -> Access {
+        panic!("{}: not an associative device", self.label())
+    }
+
+    /// Read the match pointer of `set` (issues the search if stale).
+    fn search(&mut self, _set: usize, _at: u64) -> (Access, Option<usize>) {
+        panic!("{}: not an associative device", self.label())
+    }
+
+    /// Flat-CAM data write; `None` when t_MWW strictly blocks it.
+    fn cam_write(
+        &mut self,
+        _set: usize,
+        _col: usize,
+        _word: u64,
+        _at: u64,
+    ) -> Option<Access> {
+        panic!("{}: not an associative device", self.label())
+    }
+
+    /// Flat-RAM block access; `None` when t_MWW blocks the write.
+    fn ram_access(
+        &mut self,
+        _block: u64,
+        _write: bool,
+        _at: u64,
+    ) -> Option<Access> {
+        panic!("{}: not an associative device", self.label())
+    }
+
+    /// Batched associative search. Controller-equivalent to issuing,
+    /// per op in order, `write_key(key); write_mask(mask); search(set)`
+    /// — which is exactly what this default does. Backends with a
+    /// batched functional path (one PJRT execution / one batched
+    /// fallback pass) override it; results must stay bit-identical.
+    fn search_many(&mut self, ops: &[SearchOp]) -> Vec<SearchHit> {
+        ops.iter()
+            .map(|op| {
+                let ka = self.write_key(op.key, op.at);
+                let ma = self.write_mask(op.mask, ka.done_at);
+                let (a, hit) = self.search(op.set, ma.done_at);
+                SearchHit {
+                    done_at: a.done_at,
+                    col: hit,
+                    energy_nj: ka.energy_nj + ma.energy_nj + a.energy_nj,
+                }
+            })
+            .collect()
+    }
+
+    /// Batched hopscotch-window lookups. The default composes the
+    /// scalar ops per lookup; [`MonarchAssoc`] overrides it to
+    /// aggregate every search of the batch (home and spill sets) into
+    /// one functional evaluation.
+    fn lookup_many(&mut self, lookups: &[CamLookup]) -> Vec<CamLookupOut> {
+        lookups
+            .iter()
+            .map(|l| {
+                let ka = self.write_key(l.key, l.at);
+                let ma = self.write_mask(l.mask, ka.done_at);
+                let (a, mut hit) = self.search(l.set0, ma.done_at);
+                let mut e = ka.energy_nj + ma.energy_nj + a.energy_nj;
+                let mut t = a.done_at;
+                if hit.is_none() && l.set1 != l.set0 {
+                    let (a2, h2) = self.search(l.set1, t);
+                    e += a2.energy_nj;
+                    t = a2.done_at;
+                    hit = h2;
+                }
+                if hit.is_some() || l.fetch_value_on_miss {
+                    if let Some(va) = self.ram_access(l.value_block, false, t)
+                    {
+                        e += va.energy_nj;
+                        t = va.done_at;
+                    }
+                }
+                CamLookupOut { done_at: t, hit: hit.is_some(), energy_nj: e }
+            })
+            .collect()
+    }
+
+    /// Drain the device's internally accumulated dynamic energy (nJ).
+    /// Used at measurement-epoch boundaries (e.g. after an uncharged
+    /// population phase).
+    fn drain_energy_nj(&mut self) -> f64 {
+        0.0
+    }
+
+    /// Reset bank/channel reservation state (measurement-epoch
+    /// boundary); functional contents and wear are untouched.
+    fn reset_timing(&mut self) {}
+
+    /// Attach a compiled PJRT search kernel; backends without a
+    /// batched functional path ignore it.
+    fn attach_engine(&mut self, _engine: Rc<SearchEngine>) {}
+
+    /// Downcast to the flat-mode controller (tests / diagnostics).
+    fn monarch_flat(&self) -> Option<&MonarchFlat> {
+        None
+    }
+}
+
+/// HBM-C: the table in DDR4 behind an in-package DRAM L4 cache.
+pub struct CachedTable {
+    l4: TechCache,
+    main: MainMemory,
+}
+
+impl AssocDevice for CachedTable {
+    fn label(&self) -> &str {
+        "HBM-C"
+    }
+
+    fn static_watts(&self) -> f64 {
+        self.l4.static_watts()
+    }
+
+    fn access(&mut self, addr: u64, write: bool, at: u64) -> Access {
+        let kind = if write { ReqKind::Write } else { ReqKind::Read };
+        let req = MemReq { addr, kind, at, thread: 0 };
+        let r = self.l4.lookup(&req);
+        let mut e = r.energy_nj;
+        if r.hit {
+            return Access { done_at: r.done_at, energy_nj: e };
+        }
+        let a = self.main.access(&MemReq { at: r.done_at, ..req });
+        e += a.energy_nj;
+        let (acc, victim) = self.l4.install(addr, write, a.done_at);
+        e += acc.energy_nj;
+        if let Some(v) = victim {
+            let wa = self.main.access(&MemReq {
+                addr: v.addr,
+                kind: ReqKind::Write,
+                at: acc.done_at,
+                thread: 0,
+            });
+            e += wa.energy_nj;
+        }
+        Access { done_at: a.done_at, energy_nj: e }
+    }
+
+    fn main_access(&mut self, addr: u64, write: bool, at: u64) -> Access {
+        let kind = if write { ReqKind::Write } else { ReqKind::Read };
+        self.main.access(&MemReq { addr, kind, at, thread: 0 })
+    }
+
+    fn main_static_energy_nj(&self, cycles: u64) -> f64 {
+        self.main.static_energy_nj(cycles)
+    }
+}
+
+/// HBM-SP / CMOS / RRAM-flat: the table in a scratchpad up to its
+/// capacity; the spill lives in DDR4.
+pub struct ScratchTable {
+    sp: Scratchpad,
+    main: MainMemory,
+}
+
+impl AssocDevice for ScratchTable {
+    fn label(&self) -> &str {
+        self.sp.label
+    }
+
+    fn static_watts(&self) -> f64 {
+        self.sp.static_watts()
+    }
+
+    fn access(&mut self, addr: u64, write: bool, at: u64) -> Access {
+        let kind = if write { ReqKind::Write } else { ReqKind::Read };
+        let req = MemReq { addr, kind, at, thread: 0 };
+        if addr < self.sp.capacity_bytes as u64 {
+            self.sp.access(&req)
+        } else {
+            self.main.access(&req)
+        }
+    }
+
+    fn main_access(&mut self, addr: u64, write: bool, at: u64) -> Access {
+        let kind = if write { ReqKind::Write } else { ReqKind::Read };
+        self.main.access(&MemReq { addr, kind, at, thread: 0 })
+    }
+
+    fn main_static_energy_nj(&self, cycles: u64) -> f64 {
+        self.main.static_energy_nj(cycles)
+    }
+}
+
+/// Monarch: keys in flat-CAM (real XAM search), values in flat-RAM,
+/// metadata in main memory.
+pub struct MonarchAssoc {
+    flat: MonarchFlat,
+    main: MainMemory,
+    engine: Option<Rc<SearchEngine>>,
+}
+
+impl MonarchAssoc {
+    /// The paper's default flat-mode configuration (t_MWW bounded,
+    /// M=3).
+    pub fn new(geom: MonarchGeom, cam_sets: usize) -> Self {
+        Self::bounded(geom, cam_sets, 3)
+    }
+
+    /// t_MWW-bounded device with `m` writes per window.
+    pub fn bounded(geom: MonarchGeom, cam_sets: usize, m: u32) -> Self {
+        Self::build(geom, cam_sets, WearConfig::default_m(m), true)
+    }
+
+    /// No durability bounds (the M-Unbound baseline).
+    pub fn unbounded(geom: MonarchGeom, cam_sets: usize) -> Self {
+        Self::build(geom, cam_sets, WearConfig::default_m(3), false)
+    }
+
+    fn build(
+        geom: MonarchGeom,
+        cam_sets: usize,
+        wear: WearConfig,
+        bounded: bool,
+    ) -> Self {
+        Self {
+            flat: MonarchFlat::new(geom, cam_sets, wear, u64::MAX / 4, bounded),
+            main: MainMemory::default(),
+            engine: None,
+        }
+    }
+
+    /// Attach a compiled PJRT search kernel: batched ops route their
+    /// functional evaluation through `SearchEngine::search_sets`.
+    pub fn with_engine(mut self, engine: Rc<SearchEngine>) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    pub fn flat(&self) -> &MonarchFlat {
+        &self.flat
+    }
+
+    pub fn flat_mut(&mut self) -> &mut MonarchFlat {
+        &mut self.flat
+    }
+
+    /// One functional evaluation for a whole batch: chunked PJRT
+    /// executions when an engine is attached (chunk = the largest
+    /// compiled batch variant), the batched pure-rust pass otherwise.
+    fn batch_eval(
+        &self,
+        sets: &[usize],
+        keys: &[u64],
+        masks: &[u64],
+    ) -> Vec<Option<usize>> {
+        let arrays: Vec<&XamArray> =
+            sets.iter().map(|&s| self.flat.set_array(s)).collect();
+        if let Some(engine) = &self.engine {
+            if let Some(got) = eval_with_engine(engine, &arrays, keys, masks)
+            {
+                return got;
+            }
+        }
+        SearchEngine::search_sets_fallback(&arrays, keys, masks)
+    }
+}
+
+fn eval_with_engine(
+    engine: &SearchEngine,
+    arrays: &[&XamArray],
+    keys: &[u64],
+    masks: &[u64],
+) -> Option<Vec<Option<usize>>> {
+    let first = arrays.first()?;
+    let w = first.rows().div_ceil(32);
+    let max_b = engine.max_batch(w, first.cols())?;
+    let mut out = Vec::with_capacity(arrays.len());
+    let mut i = 0;
+    while i < arrays.len() {
+        let j = (i + max_b).min(arrays.len());
+        match engine.search_sets(&arrays[i..j], &keys[i..j], &masks[i..j]) {
+            Ok(mut r) => out.append(&mut r),
+            Err(_) => return None,
+        }
+        i = j;
+    }
+    Some(out)
+}
+
+impl AssocDevice for MonarchAssoc {
+    fn label(&self) -> &str {
+        "Monarch"
+    }
+
+    fn static_watts(&self) -> f64 {
+        0.05 // resistive arrays: leakage only
+    }
+
+    fn access(&mut self, addr: u64, write: bool, at: u64) -> Access {
+        // the table's conventional image (metadata) lives off-chip
+        self.main_access(addr, write, at)
+    }
+
+    fn main_access(&mut self, addr: u64, write: bool, at: u64) -> Access {
+        let kind = if write { ReqKind::Write } else { ReqKind::Read };
+        self.main.access(&MemReq { addr, kind, at, thread: 0 })
+    }
+
+    fn main_static_energy_nj(&self, cycles: u64) -> f64 {
+        self.main.static_energy_nj(cycles)
+    }
+
+    fn cam(&self) -> Option<CamGeom> {
+        Some(CamGeom {
+            cols_per_set: self.flat.cols_per_set(),
+            num_sets: self.flat.num_cam_sets(),
+        })
+    }
+
+    fn write_key(&mut self, key: u64, at: u64) -> Access {
+        self.flat.write_key(key, at)
+    }
+
+    fn write_mask(&mut self, mask: u64, at: u64) -> Access {
+        self.flat.write_mask(mask, at)
+    }
+
+    fn search(&mut self, set: usize, at: u64) -> (Access, Option<usize>) {
+        self.flat.search(set, at)
+    }
+
+    fn cam_write(
+        &mut self,
+        set: usize,
+        col: usize,
+        word: u64,
+        at: u64,
+    ) -> Option<Access> {
+        self.flat.cam_write(set, col, word, at)
+    }
+
+    fn ram_access(
+        &mut self,
+        block: u64,
+        write: bool,
+        at: u64,
+    ) -> Option<Access> {
+        self.flat.ram_access(block, write, at)
+    }
+
+    fn search_many(&mut self, ops: &[SearchOp]) -> Vec<SearchHit> {
+        // one functional evaluation for the whole batch ...
+        let sets: Vec<usize> = ops.iter().map(|o| o.set).collect();
+        let keys: Vec<u64> = ops.iter().map(|o| o.key).collect();
+        let masks: Vec<u64> = ops.iter().map(|o| o.mask).collect();
+        let fresh = self.batch_eval(&sets, &keys, &masks);
+        // ... then the per-op controller pass, in submission order
+        ops.iter()
+            .enumerate()
+            .map(|(i, op)| {
+                let ka = self.flat.write_key(op.key, op.at);
+                let ma = self.flat.write_mask(op.mask, ka.done_at);
+                let (a, hit) = self.flat.search_precomputed(
+                    op.set,
+                    ma.done_at,
+                    Some(fresh[i]),
+                );
+                SearchHit {
+                    done_at: a.done_at,
+                    col: hit,
+                    energy_nj: ka.energy_nj + ma.energy_nj + a.energy_nj,
+                }
+            })
+            .collect()
+    }
+
+    fn lookup_many(&mut self, lookups: &[CamLookup]) -> Vec<CamLookupOut> {
+        // aggregate home + spill searches into one evaluation
+        let mut sets = Vec::with_capacity(2 * lookups.len());
+        let mut keys = Vec::with_capacity(2 * lookups.len());
+        let mut masks = Vec::with_capacity(2 * lookups.len());
+        let mut idx: Vec<(usize, Option<usize>)> =
+            Vec::with_capacity(lookups.len());
+        for l in lookups {
+            let spill = (l.set1 != l.set0).then_some(sets.len() + 1);
+            idx.push((sets.len(), spill));
+            sets.push(l.set0);
+            keys.push(l.key);
+            masks.push(l.mask);
+            if l.set1 != l.set0 {
+                sets.push(l.set1);
+                keys.push(l.key);
+                masks.push(l.mask);
+            }
+        }
+        let fresh = self.batch_eval(&sets, &keys, &masks);
+        lookups
+            .iter()
+            .zip(idx)
+            .map(|(l, (i0, i1))| {
+                let ka = self.flat.write_key(l.key, l.at);
+                let ma = self.flat.write_mask(l.mask, ka.done_at);
+                let (a, mut hit) = self.flat.search_precomputed(
+                    l.set0,
+                    ma.done_at,
+                    Some(fresh[i0]),
+                );
+                let mut e = ka.energy_nj + ma.energy_nj + a.energy_nj;
+                let mut t = a.done_at;
+                if hit.is_none() {
+                    if let Some(i1) = i1 {
+                        let (a2, h2) = self.flat.search_precomputed(
+                            l.set1,
+                            t,
+                            Some(fresh[i1]),
+                        );
+                        e += a2.energy_nj;
+                        t = a2.done_at;
+                        hit = h2;
+                    }
+                }
+                if hit.is_some() || l.fetch_value_on_miss {
+                    if let Some(va) =
+                        self.flat.ram_access(l.value_block, false, t)
+                    {
+                        e += va.energy_nj;
+                        t = va.done_at;
+                    }
+                }
+                CamLookupOut { done_at: t, hit: hit.is_some(), energy_nj: e }
+            })
+            .collect()
+    }
+
+    fn drain_energy_nj(&mut self) -> f64 {
+        let e = self.flat.energy_nj;
+        self.flat.energy_nj = 0.0;
+        e
+    }
+
+    fn reset_timing(&mut self) {
+        self.flat.reset_timing();
+    }
+
+    fn attach_engine(&mut self, engine: Rc<SearchEngine>) {
+        self.engine = Some(engine);
+    }
+
+    fn monarch_flat(&self) -> Option<&MonarchFlat> {
+        Some(&self.flat)
+    }
+}
+
+// ---- convenience constructors (the paper's five hashing systems) ----
+
+/// HBM-C: table in DDR4 cached by an in-package DRAM L4.
+pub fn hbm_c(capacity: usize) -> Box<dyn AssocDevice> {
+    Box::new(CachedTable {
+        l4: TechCache::dram(capacity),
+        main: MainMemory::default(),
+    })
+}
+
+/// HBM-SP: in-package DRAM scratchpad.
+pub fn hbm_sp(capacity: usize) -> Box<dyn AssocDevice> {
+    Box::new(ScratchTable {
+        sp: Scratchpad::hbm_sp(capacity),
+        main: MainMemory::default(),
+    })
+}
+
+/// CMOS: iso-area SRAM stack scratchpad.
+pub fn cmos(capacity: usize) -> Box<dyn AssocDevice> {
+    Box::new(ScratchTable {
+        sp: Scratchpad::cmos(capacity),
+        main: MainMemory::default(),
+    })
+}
+
+/// RRAM: Monarch as pure flat-RAM (no associative search).
+pub fn rram_flat(capacity: usize) -> Box<dyn AssocDevice> {
+    Box::new(ScratchTable {
+        sp: Scratchpad::rram_flat(capacity),
+        main: MainMemory::default(),
+    })
+}
+
+/// Monarch: flat-CAM keys + flat-RAM values.
+pub fn monarch(geom: MonarchGeom, cam_sets: usize) -> Box<dyn AssocDevice> {
+    Box::new(MonarchAssoc::new(geom, cam_sets))
+}
+
+// ---- built-in registry entries -------------------------------------
+
+use crate::device::AssocSpec;
+
+fn b_hbm_c(spec: &AssocSpec) -> Box<dyn AssocDevice> {
+    hbm_c(spec.capacity_bytes)
+}
+fn b_hbm_sp(spec: &AssocSpec) -> Box<dyn AssocDevice> {
+    hbm_sp(spec.capacity_bytes)
+}
+fn b_cmos(spec: &AssocSpec) -> Box<dyn AssocDevice> {
+    cmos(spec.capacity_bytes)
+}
+fn b_rram_flat(spec: &AssocSpec) -> Box<dyn AssocDevice> {
+    rram_flat(spec.capacity_bytes)
+}
+fn b_monarch(spec: &AssocSpec) -> Box<dyn AssocDevice> {
+    // honor the kind's parameters: a wear sweep through the registry
+    // must build distinct devices, and M-Unbound must not be bounded
+    match spec.kind {
+        InPackageKind::Monarch { m } => {
+            Box::new(MonarchAssoc::bounded(spec.geom, spec.cam_sets, m))
+        }
+        _ => Box::new(MonarchAssoc::unbounded(spec.geom, spec.cam_sets)),
+    }
+}
+
+fn is_hbm_c(k: InPackageKind) -> bool {
+    matches!(k, InPackageKind::DramCache)
+}
+fn is_hbm_sp(k: InPackageKind) -> bool {
+    matches!(k, InPackageKind::DramScratchpad)
+}
+fn is_cmos(k: InPackageKind) -> bool {
+    matches!(k, InPackageKind::Sram)
+}
+fn is_rram_flat(k: InPackageKind) -> bool {
+    matches!(k, InPackageKind::MonarchFlatRam)
+}
+fn is_monarch(k: InPackageKind) -> bool {
+    matches!(k, InPackageKind::Monarch { .. } | InPackageKind::MonarchUnbound)
+}
+
+type Entry = (
+    fn(InPackageKind) -> bool,
+    fn(&AssocSpec) -> Box<dyn AssocDevice>,
+);
+
+pub(crate) const BUILTIN_ASSOC_BACKENDS: &[Entry] = &[
+    (is_hbm_c, b_hbm_c),
+    (is_hbm_sp, b_hbm_sp),
+    (is_cmos, b_cmos),
+    (is_rram_flat, b_rram_flat),
+    (is_monarch, b_monarch),
+];

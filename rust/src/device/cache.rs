@@ -1,0 +1,285 @@
+//! [`CacheDevice`] — the in-package memory below the L3 — and its
+//! built-in implementations.
+//!
+//! The trait encodes the three policies the seed enum dispatch spread
+//! over `sim::System`:
+//! - `lookup` / `fill`: Monarch is *no-allocate* on fetch (§8) so its
+//!   `fill` is a no-op; conventional caches fill on miss and may expose
+//!   a dirty victim; scratchpads miss straight through at zero cost.
+//! - `on_l3_evict`: Monarch applies the D/R selective-install rules;
+//!   conventional caches install dirty write-backs; scratchpads (and
+//!   systems with no L4) forward dirty blocks to main memory.
+//!
+//! All main-memory traffic stays with the caller (`sim::System`): the
+//! device only *instructs* write-backs via `(address, cycle)` pairs,
+//! which keeps DDR4 bank/channel state in one place.
+
+use crate::cachehier::Eviction;
+use crate::config::{InPackageKind, SystemConfig};
+use crate::mem::dram_cache::{LookupResult, TechCache};
+use crate::mem::scratchpad::Scratchpad;
+use crate::mem::sram_cache::s_cache;
+use crate::mem::MemReq;
+use crate::monarch::MonarchCache;
+use crate::util::stats::Counters;
+
+/// Outcome of a miss fill performed after the main-memory fetch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FillOutcome {
+    /// Dynamic energy of the install (nJ).
+    pub energy_nj: f64,
+    /// Dirty victim the caller must write back: (block address,
+    /// earliest write-back cycle).
+    pub writeback: Option<(u64, u64)>,
+}
+
+/// Outcome of handing an L3 eviction to the device.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvictOutcome {
+    /// Dynamic energy charged to the system energy model (nJ). Monarch
+    /// accounts its install energy internally, so its outcome carries
+    /// zero here — matching the seed accounting.
+    pub energy_nj: f64,
+    /// Block the caller must write back to main memory: (address,
+    /// earliest write-back cycle).
+    pub writeback: Option<(u64, u64)>,
+}
+
+/// An in-package memory below the L3 in the cache-mode system.
+pub trait CacheDevice: Send {
+    /// Display label (Fig 9 legend name).
+    fn label(&self) -> &str;
+
+    /// Hit rate over the device's lifetime (0 for miss-through
+    /// devices).
+    fn hit_rate(&self) -> f64 {
+        0.0
+    }
+
+    /// Background power (W) charged over the run.
+    fn static_watts(&self) -> f64;
+
+    /// Service an L3 miss. `hit == false` means the request continues
+    /// to main memory at `done_at`.
+    fn lookup(&mut self, req: &MemReq) -> LookupResult;
+
+    /// Install after the main-memory fetch of a missed block.
+    /// No-allocate devices (Monarch, scratchpads) return `None`.
+    fn fill(&mut self, _addr: u64, _write: bool, _now: u64)
+        -> Option<FillOutcome> {
+        None
+    }
+
+    /// Apply the device's L3-eviction policy.
+    fn on_l3_evict(&mut self, ev: &Eviction, now: u64) -> EvictOutcome;
+
+    /// Wear-leveling rotations performed (Monarch only).
+    fn rotations(&self) -> u64 {
+        0
+    }
+
+    /// The device's internal counters, when it keeps any.
+    fn counters(&self) -> Option<&Counters> {
+        None
+    }
+
+    /// Downcast to the Monarch cache controller (lifetime estimation
+    /// and wear diagnostics need its snapshot APIs).
+    fn monarch(&self) -> Option<&MonarchCache> {
+        None
+    }
+}
+
+impl CacheDevice for TechCache {
+    fn label(&self) -> &str {
+        self.label
+    }
+
+    fn hit_rate(&self) -> f64 {
+        TechCache::hit_rate(self)
+    }
+
+    fn static_watts(&self) -> f64 {
+        TechCache::static_watts(self)
+    }
+
+    fn lookup(&mut self, req: &MemReq) -> LookupResult {
+        TechCache::lookup(self, req)
+    }
+
+    fn fill(&mut self, addr: u64, write: bool, now: u64)
+        -> Option<FillOutcome> {
+        // conventional fill on miss; dirty victims go back to DDR
+        let (acc, victim) = self.install(addr, write, now);
+        Some(FillOutcome {
+            energy_nj: acc.energy_nj,
+            writeback: victim.map(|dv| (dv.addr, acc.done_at)),
+        })
+    }
+
+    fn on_l3_evict(&mut self, ev: &Eviction, now: u64) -> EvictOutcome {
+        if !ev.dirty {
+            // clean L3 victims die silently above a conventional L4
+            return EvictOutcome::default();
+        }
+        let (acc, victim) = self.install(ev.addr, true, now);
+        EvictOutcome {
+            energy_nj: acc.energy_nj,
+            writeback: victim.map(|dv| (dv.addr, acc.done_at)),
+        }
+    }
+
+    fn counters(&self) -> Option<&Counters> {
+        Some(&self.stats)
+    }
+}
+
+impl CacheDevice for MonarchCache {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn hit_rate(&self) -> f64 {
+        MonarchCache::hit_rate(self)
+    }
+
+    fn static_watts(&self) -> f64 {
+        MonarchCache::static_watts(self)
+    }
+
+    fn lookup(&mut self, req: &MemReq) -> LookupResult {
+        MonarchCache::lookup(self, req)
+    }
+
+    // no `fill`: Monarch is no-allocate on fetch (§8); installs happen
+    // on L3 evictions only.
+
+    fn on_l3_evict(&mut self, ev: &Eviction, now: u64) -> EvictOutcome {
+        // the inherent method applies the D/R rules and accounts its
+        // energy internally
+        let (_, wb, _) = MonarchCache::on_l3_evict(self, ev, now);
+        EvictOutcome { energy_nj: 0.0, writeback: wb.map(|a| (a, now)) }
+    }
+
+    fn rotations(&self) -> u64 {
+        MonarchCache::rotations(self)
+    }
+
+    fn counters(&self) -> Option<&Counters> {
+        Some(&self.stats)
+    }
+
+    fn monarch(&self) -> Option<&MonarchCache> {
+        Some(self)
+    }
+}
+
+impl CacheDevice for Scratchpad {
+    fn label(&self) -> &str {
+        self.label
+    }
+
+    fn static_watts(&self) -> f64 {
+        Scratchpad::static_watts(self)
+    }
+
+    fn lookup(&mut self, req: &MemReq) -> LookupResult {
+        // scratchpads do not participate in the hardware cache path:
+        // the request continues to main memory immediately
+        LookupResult { hit: false, done_at: req.at, energy_nj: 0.0 }
+    }
+
+    fn on_l3_evict(&mut self, ev: &Eviction, now: u64) -> EvictOutcome {
+        EvictOutcome {
+            energy_nj: 0.0,
+            writeback: ev.dirty.then_some((ev.addr, now)),
+        }
+    }
+
+    fn counters(&self) -> Option<&Counters> {
+        Some(&self.stats)
+    }
+}
+
+// ---- built-in registry entries -------------------------------------
+
+fn dram_cache(cfg: &SystemConfig) -> Box<dyn CacheDevice> {
+    Box::new(TechCache::dram(cfg.inpkg_dram_bytes))
+}
+
+fn dram_cache_ideal(cfg: &SystemConfig) -> Box<dyn CacheDevice> {
+    Box::new(TechCache::dram_ideal(cfg.inpkg_dram_bytes))
+}
+
+fn sram_stack(cfg: &SystemConfig) -> Box<dyn CacheDevice> {
+    Box::new(s_cache(cfg.inpkg_cmos_bytes))
+}
+
+fn rram_unbound(cfg: &SystemConfig) -> Box<dyn CacheDevice> {
+    Box::new(TechCache::rram_unbound(cfg.monarch.total_bytes()))
+}
+
+fn monarch_unbound(cfg: &SystemConfig) -> Box<dyn CacheDevice> {
+    Box::new(MonarchCache::new(cfg.monarch, cfg.wear, u64::MAX / 4, false))
+}
+
+fn monarch_bounded(cfg: &SystemConfig) -> Box<dyn CacheDevice> {
+    let InPackageKind::Monarch { m } = cfg.inpkg else {
+        panic!("monarch_bounded constructor needs InPackageKind::Monarch")
+    };
+    let mut wear = cfg.wear;
+    wear.m = m;
+    // t_MWW scaled with the capacity scale so locking behaviour at
+    // reduced scale matches full scale (DESIGN.md §5)
+    let window = (wear.t_mww_cycles(cfg.freq_ghz) as f64 * cfg.scale) as u64;
+    Box::new(MonarchCache::new(cfg.monarch, wear, window.max(1), true))
+}
+
+fn dram_scratchpad(cfg: &SystemConfig) -> Box<dyn CacheDevice> {
+    Box::new(Scratchpad::hbm_sp(cfg.inpkg_dram_bytes))
+}
+
+fn monarch_flat_ram(cfg: &SystemConfig) -> Box<dyn CacheDevice> {
+    Box::new(Scratchpad::rram_flat(cfg.monarch.total_bytes()))
+}
+
+fn is_dram_cache(k: InPackageKind) -> bool {
+    matches!(k, InPackageKind::DramCache)
+}
+fn is_dram_cache_ideal(k: InPackageKind) -> bool {
+    matches!(k, InPackageKind::DramCacheIdeal)
+}
+fn is_sram(k: InPackageKind) -> bool {
+    matches!(k, InPackageKind::Sram)
+}
+fn is_rram_unbound(k: InPackageKind) -> bool {
+    matches!(k, InPackageKind::RramUnbound)
+}
+fn is_monarch_unbound(k: InPackageKind) -> bool {
+    matches!(k, InPackageKind::MonarchUnbound)
+}
+fn is_monarch_bounded(k: InPackageKind) -> bool {
+    matches!(k, InPackageKind::Monarch { .. })
+}
+fn is_dram_scratchpad(k: InPackageKind) -> bool {
+    matches!(k, InPackageKind::DramScratchpad)
+}
+fn is_monarch_flat_ram(k: InPackageKind) -> bool {
+    matches!(k, InPackageKind::MonarchFlatRam)
+}
+
+type Entry = (
+    fn(InPackageKind) -> bool,
+    fn(&SystemConfig) -> Box<dyn CacheDevice>,
+);
+
+pub(crate) const BUILTIN_CACHE_BACKENDS: &[Entry] = &[
+    (is_dram_cache, dram_cache),
+    (is_dram_cache_ideal, dram_cache_ideal),
+    (is_sram, sram_stack),
+    (is_rram_unbound, rram_unbound),
+    (is_monarch_unbound, monarch_unbound),
+    (is_monarch_bounded, monarch_bounded),
+    (is_dram_scratchpad, dram_scratchpad),
+    (is_monarch_flat_ram, monarch_flat_ram),
+];

@@ -1,0 +1,234 @@
+//! The unified memory-backend surface.
+//!
+//! Monarch's thesis is *polymorphism*: one resistive substrate serving
+//! RAM, CAM and hardware-cache roles. The seed code fragmented that
+//! idea across two ad-hoc enums (`sim::InPackage` for the cache-mode
+//! path, `workloads::hashing::HashMemory` for the software-managed
+//! path), each with hand-written match dispatch at every call site.
+//! This module replaces both with two traits and a builder registry:
+//!
+//! - [`CacheDevice`] — the in-package memory below the L3 in the
+//!   hardware-managed cache experiments (Fig 9/10/11). Implemented by
+//!   `TechCache` (D-Cache / D-Cache(Ideal) / S-Cache / RC-Unbound),
+//!   `MonarchCache`, and `Scratchpad` (miss-through).
+//! - [`AssocDevice`] — the software-managed backend of the hashing and
+//!   string-match experiments (Fig 12-14, §10.5): flat RAM read/write,
+//!   key/mask registers, single [`AssocDevice::search`], and the
+//!   batched [`AssocDevice::search_many`], which aggregates flat-CAM
+//!   searches into **one** functional evaluation (one PJRT execution
+//!   when a compiled kernel is attached; one batched pure-rust pass
+//!   otherwise).
+//! - [`DeviceBuilder`] — a registry keyed by `InPackageKind` that
+//!   constructs any backend from a `SystemConfig` (cache side) or an
+//!   [`AssocSpec`] (flat side). New backends register a matcher plus a
+//!   constructor; no call site changes.
+//!
+//! The batched ops are **sequential-equivalent by construction**: the
+//! controller pass (register writes, superset key pushes, sense-mode
+//! toggles, bank/channel reservations, wear, stats) runs per-op in
+//! submission order exactly as the scalar calls would; only the
+//! functional match evaluation is hoisted into one batch. The property
+//! tests in `tests/device_differential.rs` pin this equivalence.
+
+pub mod assoc;
+pub mod cache;
+
+pub use assoc::{AssocDevice, CamGeom, CamLookup, CamLookupOut, MonarchAssoc};
+pub use cache::{CacheDevice, EvictOutcome, FillOutcome};
+
+use crate::config::{InPackageKind, MonarchGeom, SystemConfig};
+
+/// One flat-CAM search request inside a [`AssocDevice::search_many`]
+/// batch. Semantics are exactly the scalar triple
+/// `write_key(key); write_mask(mask); search(set)` issued at `at`.
+/// (Dependent two-set window lookups — where the spill search chains
+/// off the home search's outcome — go through
+/// [`AssocDevice::lookup_many`] instead.)
+#[derive(Clone, Copy, Debug)]
+pub struct SearchOp {
+    pub set: usize,
+    pub key: u64,
+    pub mask: u64,
+    /// Issue cycle.
+    pub at: u64,
+}
+
+impl SearchOp {
+    pub fn at(set: usize, key: u64, mask: u64, at: u64) -> Self {
+        Self { set, key, mask, at }
+    }
+}
+
+/// Result of one executed [`SearchOp`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SearchHit {
+    /// Completion cycle of the match-pointer read.
+    pub done_at: u64,
+    /// First matching column in the set, if any.
+    pub col: Option<usize>,
+    /// Dynamic energy of this op (register writes + search), nJ.
+    pub energy_nj: f64,
+}
+
+/// Everything an assoc-backend constructor may need; per-backend
+/// capacity policy (e.g. iso-area CMOS being 8x smaller) stays with
+/// the experiment that decides it.
+#[derive(Clone, Copy, Debug)]
+pub struct AssocSpec {
+    pub kind: InPackageKind,
+    /// Scratchpad / L4 capacity for the conventional backends.
+    pub capacity_bytes: usize,
+    /// Monarch geometry for the flat-CAM backends.
+    pub geom: MonarchGeom,
+    /// Number of real searchable CAM sets.
+    pub cam_sets: usize,
+}
+
+type CacheMatch = fn(InPackageKind) -> bool;
+type CacheCtor = fn(&SystemConfig) -> Box<dyn CacheDevice>;
+type AssocMatch = fn(InPackageKind) -> bool;
+type AssocCtor = fn(&AssocSpec) -> Box<dyn AssocDevice>;
+
+/// Registry of backend constructors keyed by `InPackageKind`.
+///
+/// `new()` seeds the built-in backends; [`DeviceBuilder::register_cache`]
+/// / [`DeviceBuilder::register_assoc`] prepend custom entries, which
+/// win over built-ins — a new backend (sharded, async, remote) is one
+/// file plus one `register` call.
+pub struct DeviceBuilder {
+    cache: Vec<(CacheMatch, CacheCtor)>,
+    assoc: Vec<(AssocMatch, AssocCtor)>,
+    engine: Option<std::rc::Rc<crate::runtime::SearchEngine>>,
+}
+
+impl Default for DeviceBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DeviceBuilder {
+    pub fn new() -> Self {
+        let mut b =
+            Self { cache: Vec::new(), assoc: Vec::new(), engine: None };
+        for (m, c) in cache::BUILTIN_CACHE_BACKENDS {
+            b.cache.push((*m, *c));
+        }
+        for (m, c) in assoc::BUILTIN_ASSOC_BACKENDS {
+            b.assoc.push((*m, *c));
+        }
+        b
+    }
+
+    /// Attach a compiled PJRT search kernel: every assoc device this
+    /// builder constructs gets it (backends without a batched
+    /// functional path ignore it), so batched searches run as real
+    /// `SearchEngine::search_sets` executions.
+    pub fn with_search_engine(
+        mut self,
+        engine: std::rc::Rc<crate::runtime::SearchEngine>,
+    ) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// Register a cache-mode backend; custom entries take precedence.
+    pub fn register_cache(&mut self, matches: CacheMatch, ctor: CacheCtor) {
+        self.cache.insert(0, (matches, ctor));
+    }
+
+    /// Register a software-managed backend; custom entries take
+    /// precedence.
+    pub fn register_assoc(&mut self, matches: AssocMatch, ctor: AssocCtor) {
+        self.assoc.insert(0, (matches, ctor));
+    }
+
+    /// Construct the in-package cache-mode device `cfg.inpkg` names.
+    pub fn build_cache(&self, cfg: &SystemConfig) -> Box<dyn CacheDevice> {
+        self.cache
+            .iter()
+            .find(|(m, _)| m(cfg.inpkg))
+            .map(|(_, ctor)| ctor(cfg))
+            .unwrap_or_else(|| {
+                panic!("no cache backend registered for {:?}", cfg.inpkg)
+            })
+    }
+
+    /// Construct the software-managed device `spec.kind` names.
+    pub fn build_assoc(&self, spec: &AssocSpec) -> Box<dyn AssocDevice> {
+        let mut dev = self
+            .assoc
+            .iter()
+            .find(|(m, _)| m(spec.kind))
+            .map(|(_, ctor)| ctor(spec))
+            .unwrap_or_else(|| {
+                panic!("no assoc backend registered for {:?}", spec.kind)
+            });
+        if let Some(engine) = &self.engine {
+            dev.attach_engine(engine.clone());
+        }
+        dev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_covers_every_cache_kind() {
+        let b = DeviceBuilder::new();
+        for kind in [
+            InPackageKind::DramCache,
+            InPackageKind::DramCacheIdeal,
+            InPackageKind::Sram,
+            InPackageKind::RramUnbound,
+            InPackageKind::MonarchUnbound,
+            InPackageKind::Monarch { m: 3 },
+            InPackageKind::DramScratchpad,
+            InPackageKind::MonarchFlatRam,
+        ] {
+            let cfg = SystemConfig::scaled(kind, 1.0 / 4096.0);
+            let dev = b.build_cache(&cfg);
+            assert!(!dev.label().is_empty(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn builder_covers_the_hashing_kinds() {
+        let b = DeviceBuilder::new();
+        let geom = MonarchGeom::FULL.scaled(1.0 / 1024.0);
+        for kind in [
+            InPackageKind::DramCache,
+            InPackageKind::DramScratchpad,
+            InPackageKind::Sram,
+            InPackageKind::MonarchFlatRam,
+            InPackageKind::Monarch { m: 1 },
+            InPackageKind::Monarch { m: 3 },
+            InPackageKind::MonarchUnbound,
+        ] {
+            let spec = AssocSpec {
+                kind,
+                capacity_bytes: 1 << 18,
+                geom,
+                cam_sets: 8,
+            };
+            let dev = b.build_assoc(&spec);
+            assert!(!dev.label().is_empty(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn custom_registration_wins() {
+        let mut b = DeviceBuilder::new();
+        fn is_dram(k: InPackageKind) -> bool {
+            matches!(k, InPackageKind::DramCache)
+        }
+        fn sram_instead(cfg: &SystemConfig) -> Box<dyn CacheDevice> {
+            Box::new(crate::mem::sram_cache::s_cache(cfg.inpkg_cmos_bytes))
+        }
+        b.register_cache(is_dram, sram_instead);
+        let cfg = SystemConfig::scaled(InPackageKind::DramCache, 1.0 / 4096.0);
+        assert_eq!(b.build_cache(&cfg).label(), "S-Cache");
+    }
+}

@@ -23,6 +23,7 @@ pub mod cachehier;
 pub mod config;
 pub mod coordinator;
 pub mod cpu;
+pub mod device;
 pub mod mem;
 pub mod monarch;
 pub mod runtime;
@@ -35,6 +36,7 @@ pub mod prelude {
     //! Common imports for examples and benches.
     pub use crate::config::SystemConfig;
     pub use crate::util::cli::Args;
+    pub use crate::util::error::Result;
     pub use crate::util::rng::Rng;
     pub use crate::util::stats::Counters;
     pub use crate::util::table::Table;

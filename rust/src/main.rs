@@ -10,7 +10,6 @@
 //! monarch selfcheck            load artifacts, kernel-vs-rust check
 //! ```
 
-use anyhow::Result;
 use monarch::config::tech;
 use monarch::coordinator::{self, Budget};
 use monarch::prelude::*;

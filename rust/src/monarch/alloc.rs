@@ -6,7 +6,8 @@
 //! each vault controller (modeled as reserved addresses at the top of
 //! the CAM window).
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 
 /// Fixed window bases (simulated physical address space).
 pub const DDR_BASE: u64 = 0;

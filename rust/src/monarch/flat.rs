@@ -215,6 +215,23 @@ impl MonarchFlat {
     /// superset has not seen the latest values. Returns the access and
     /// the matching column (None = no match in this set).
     pub fn search(&mut self, set: usize, now: u64) -> (Access, Option<usize>) {
+        self.search_precomputed(set, now, None)
+    }
+
+    /// [`MonarchFlat::search`] with an optional pre-evaluated
+    /// functional result for the **current** key/mask registers
+    /// against `set`. Batched paths (`device::AssocDevice::
+    /// search_many`) evaluate all match results of a batch in one pass
+    /// (one PJRT execution, or one batched pure-rust call) and feed
+    /// them through here; the controller behaviour — match-register
+    /// latch, key pushes, sense toggles, bank timing, stats, energy —
+    /// is identical to the scalar call.
+    pub fn search_precomputed(
+        &mut self,
+        set: usize,
+        now: u64,
+        fresh: Option<Option<usize>>,
+    ) -> (Access, Option<usize>) {
         // result already latched for this key/mask + set?
         if let Some((v, s, r)) = self.match_reg {
             if v == self.version && s == set {
@@ -249,7 +266,17 @@ impl MonarchFlat {
             let b = &mut self.banks[bank];
             self.engine.schedule(&mut b.state, &mut self.chans[vault], Op::Search, 0, t)
         };
-        let hit = self.sets[set].search_first(self.key_reg, self.mask_reg);
+        let hit = match fresh {
+            Some(f) => {
+                debug_assert_eq!(
+                    f,
+                    self.sets[set].search_first(self.key_reg, self.mask_reg),
+                    "precomputed batch result diverged from the array model"
+                );
+                f
+            }
+            None => self.sets[set].search_first(self.key_reg, self.mask_reg),
+        };
         self.match_reg = Some((self.version, set, hit));
         self.energy_nj += XAM_SEARCH_NJ;
         self.stats.inc("searches");

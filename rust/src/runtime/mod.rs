@@ -10,21 +10,16 @@
 //! A pure-rust fallback (`XamArray::search`) covers environments
 //! without artifacts and doubles as the differential-test oracle: the
 //! kernel and the array model must agree bit-for-bit.
+//!
+//! The PJRT path needs the `xla` crate and is gated behind the `pjrt`
+//! cargo feature; without it the same API surface exists but `load`
+//! reports the missing feature and every consumer degrades to the
+//! batched pure-rust fallback via [`SearchEngine::load_or_none`].
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
+use crate::util::error::Result;
 use crate::xam::XamArray;
-
-/// One compiled shape variant of the search computation.
-pub struct Variant {
-    pub name: String,
-    pub b: usize,
-    pub w: usize,
-    pub c: usize,
-    exe: xla::PjRtLoadedExecutable,
-}
 
 /// Result of one batched search.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -37,13 +32,43 @@ pub struct BatchSearchOut {
     pub mismatch: Vec<i32>,
 }
 
+/// The PJRT-backed search engine (or its featureless stub).
+#[cfg(not(feature = "pjrt"))]
+pub struct SearchEngine {
+    _private: (),
+}
+
+/// One compiled shape variant of the search computation.
+#[cfg(feature = "pjrt")]
+pub struct Variant {
+    pub name: String,
+    pub b: usize,
+    pub w: usize,
+    pub c: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
 /// The PJRT-backed search engine.
+#[cfg(feature = "pjrt")]
 pub struct SearchEngine {
     #[allow(dead_code)]
     client: xla::PjRtClient,
     variants: Vec<Variant>,
-    pub executions: std::cell::Cell<u64>,
+    executions: std::cell::Cell<u64>,
 }
+
+fn fallback_impl(
+    sets: &[&XamArray],
+    keys: &[u64],
+    masks: &[u64],
+) -> Vec<Option<usize>> {
+    sets.iter()
+        .zip(keys.iter().zip(masks))
+        .map(|(s, (&k, &m))| s.search_first(k, m))
+        .collect()
+}
+
+// ---- feature-independent surface -----------------------------------
 
 impl SearchEngine {
     /// Default artifact directory (repo-local `artifacts/`, or
@@ -54,9 +79,94 @@ impl SearchEngine {
             .unwrap_or_else(|| PathBuf::from("artifacts"))
     }
 
+    /// Best-effort load for examples and benches: try the default
+    /// artifact locations and return `None` — after a one-line notice
+    /// — when artifacts are absent or the PJRT path is unavailable,
+    /// so callers degrade to the pure-rust fallback instead of
+    /// erroring mid-run.
+    pub fn load_or_none() -> Option<Self> {
+        // unit tests run from the crate root, integration tests and
+        // benches may run from `rust/` — check the parent too
+        let mut dir = Self::default_dir();
+        if !dir.join("manifest.txt").exists() {
+            let parent = PathBuf::from("..").join(&dir);
+            if parent.join("manifest.txt").exists() {
+                dir = parent;
+            }
+        }
+        match Self::load(&dir) {
+            Ok(engine) => Some(engine),
+            Err(e) => {
+                eprintln!(
+                    "note: PJRT search kernel unavailable ({e}); \
+                     continuing with the pure-rust fallback"
+                );
+                None
+            }
+        }
+    }
+
+    /// Pure-rust batched reference: evaluates a whole batch in one
+    /// pass over the array models. Differential-testing oracle for the
+    /// kernel, and the functional path of `device::search_many` when
+    /// no engine is attached.
+    pub fn search_sets_fallback(
+        sets: &[&XamArray],
+        keys: &[u64],
+        masks: &[u64],
+    ) -> Vec<Option<usize>> {
+        fallback_impl(sets, keys, masks)
+    }
+}
+
+// ---- featureless stub ----------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+impl SearchEngine {
+    /// Always fails: the binary was built without the `pjrt` feature.
+    pub fn load(_dir: &Path) -> Result<Self> {
+        crate::bail!(
+            "built without the `pjrt` cargo feature — add the `xla` \
+             dependency to rust/Cargo.toml (see its comment) and \
+             rebuild with `--features pjrt` to load compiled artifacts"
+        )
+    }
+
+    /// PJRT executions performed (always 0 without the feature).
+    pub fn executions(&self) -> u64 {
+        0
+    }
+
+    pub fn variants(
+        &self,
+    ) -> impl Iterator<Item = (&str, usize, usize, usize)> {
+        std::iter::empty()
+    }
+
+    /// Largest compiled batch size for geometry `(w, c)`.
+    pub fn max_batch(&self, _w: usize, _c: usize) -> Option<usize> {
+        None
+    }
+
+    /// Unavailable without the `pjrt` feature.
+    pub fn search_sets(
+        &self,
+        _sets: &[&XamArray],
+        _keys: &[u64],
+        _masks: &[u64],
+    ) -> Result<Vec<Option<usize>>> {
+        crate::bail!("PJRT path unavailable (built without `pjrt`)")
+    }
+}
+
+// ---- real PJRT implementation --------------------------------------
+
+#[cfg(feature = "pjrt")]
+impl SearchEngine {
     /// Load every variant listed in `<dir>/manifest.txt` and compile
     /// on the PJRT CPU client.
     pub fn load(dir: &Path) -> Result<Self> {
+        use crate::util::error::Context;
         let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
             .with_context(|| {
                 format!(
@@ -74,7 +184,7 @@ impl SearchEngine {
             }
             let parts: Vec<&str> = line.split_whitespace().collect();
             if parts.len() != 5 {
-                bail!("malformed manifest line: {line:?}");
+                crate::bail!("malformed manifest line: {line:?}");
             }
             let (name, b, w, c, file) = (
                 parts[0].to_string(),
@@ -95,9 +205,14 @@ impl SearchEngine {
             variants.push(Variant { name, b, w, c, exe });
         }
         if variants.is_empty() {
-            bail!("manifest listed no variants");
+            crate::bail!("manifest listed no variants");
         }
         Ok(Self { client, variants, executions: std::cell::Cell::new(0) })
+    }
+
+    /// PJRT executions performed so far.
+    pub fn executions(&self) -> u64 {
+        self.executions.get()
     }
 
     pub fn variants(
@@ -106,8 +221,19 @@ impl SearchEngine {
         self.variants.iter().map(|v| (v.name.as_str(), v.b, v.w, v.c))
     }
 
+    /// Largest compiled batch size for geometry `(w, c)` — batched
+    /// callers chunk their batches to this.
+    pub fn max_batch(&self, w: usize, c: usize) -> Option<usize> {
+        self.variants
+            .iter()
+            .filter(|v| v.w == w && v.c == c)
+            .map(|v| v.b)
+            .max()
+    }
+
     /// Smallest variant that fits `b` sets of geometry (w, c).
     fn pick(&self, b: usize, w: usize, c: usize) -> Result<&Variant> {
+        use crate::util::error::Context;
         self.variants
             .iter()
             .filter(|v| v.w == w && v.c == c && v.b >= b)
@@ -202,18 +328,6 @@ impl SearchEngine {
             .map(|&i| (i >= 0).then_some(i as usize))
             .collect())
     }
-
-    /// Pure-rust reference for differential testing.
-    pub fn search_sets_fallback(
-        sets: &[&XamArray],
-        keys: &[u64],
-        masks: &[u64],
-    ) -> Vec<Option<usize>> {
-        sets.iter()
-            .zip(keys.iter().zip(masks))
-            .map(|(s, (&k, &m))| s.search_first(k, m))
-            .collect()
-    }
 }
 
 #[cfg(test)]
@@ -221,6 +335,33 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
+    #[test]
+    fn fallback_is_batched_and_agrees_with_arrays() {
+        let mut rng = Rng::new(0xFA11);
+        let mut arrays = Vec::new();
+        let mut keys = Vec::new();
+        for i in 0..6 {
+            let mut a = XamArray::new(64, 128);
+            for col in 0..128 {
+                a.write_col(col, rng.next_u64());
+            }
+            let key = if i % 2 == 0 {
+                a.read_col(rng.usize_below(128))
+            } else {
+                rng.next_u64()
+            };
+            keys.push(key);
+            arrays.push(a);
+        }
+        let refs: Vec<&XamArray> = arrays.iter().collect();
+        let masks = vec![!0u64; refs.len()];
+        let got = SearchEngine::search_sets_fallback(&refs, &keys, &masks);
+        for (i, r) in got.iter().enumerate() {
+            assert_eq!(*r, arrays[i].search_first(keys[i], !0), "set {i}");
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
     fn artifacts_dir() -> Option<PathBuf> {
         // unit tests run from the crate root; integration from target/
         for cand in [SearchEngine::default_dir(), PathBuf::from("../artifacts")]
@@ -232,6 +373,7 @@ mod tests {
         None
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn kernel_agrees_with_rust_arrays() {
         let Some(dir) = artifacts_dir() else {
@@ -267,9 +409,10 @@ mod tests {
                 SearchEngine::search_sets_fallback(&refs, &keys, &masks);
             assert_eq!(got, want, "trial {trial}");
         }
-        assert!(engine.executions.get() >= 8);
+        assert!(engine.executions() >= 8);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn batch_padding_works() {
         let Some(dir) = artifacts_dir() else {
@@ -293,6 +436,7 @@ mod tests {
         assert!(out.mismatch.iter().all(|&m| m == 0));
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn manifest_lists_expected_variants() {
         let Some(dir) = artifacts_dir() else {
@@ -304,5 +448,6 @@ mod tests {
             engine.variants().map(|(n, _, _, _)| n).collect();
         assert!(names.contains(&"xam_search_b1"));
         assert!(names.contains(&"xam_search_b64"));
+        assert_eq!(engine.max_batch(2, 512), Some(64));
     }
 }

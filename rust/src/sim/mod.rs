@@ -1,56 +1,20 @@
 //! Full-system assembly and run loop for the hardware-managed cache
 //! experiments (Fig 9/10/11): trace-driven cores -> L1/L2/L3 ->
-//! in-package memory (baseline caches or Monarch) -> off-chip DDR4.
+//! in-package memory (any [`CacheDevice`] backend) -> off-chip DDR4.
+//!
+//! The in-package memory is a trait object built by the
+//! [`DeviceBuilder`] registry, so new backends plug in without
+//! touching this run loop (the seed's `InPackage` enum dispatch is
+//! gone).
 
 use crate::cachehier::{Eviction, Hierarchy, HierOutcome};
-use crate::config::{InPackageKind, SystemConfig};
+use crate::config::SystemConfig;
 use crate::cpu::ThreadTimeline;
+use crate::device::{CacheDevice, DeviceBuilder};
 use crate::mem::ddr4::MainMemory;
-use crate::mem::dram_cache::TechCache;
-use crate::mem::scratchpad::Scratchpad;
-use crate::mem::sram_cache::s_cache;
 use crate::mem::{MemReq, ReqKind};
-use crate::monarch::MonarchCache;
 use crate::util::stats::Counters;
 use crate::workloads::Workload;
-
-/// The in-package memory variant under test.
-pub enum InPackage {
-    Tech(TechCache),
-    Monarch(MonarchCache),
-    /// Scratchpad systems do not participate in the cache-mode path;
-    /// misses go straight to main memory.
-    Scratch(Scratchpad),
-    None,
-}
-
-impl InPackage {
-    pub fn label(&self) -> String {
-        match self {
-            InPackage::Tech(t) => t.label.to_string(),
-            InPackage::Monarch(m) => m.label.clone(),
-            InPackage::Scratch(s) => s.label.to_string(),
-            InPackage::None => "NoL4".into(),
-        }
-    }
-
-    pub fn hit_rate(&self) -> f64 {
-        match self {
-            InPackage::Tech(t) => t.hit_rate(),
-            InPackage::Monarch(m) => m.hit_rate(),
-            _ => 0.0,
-        }
-    }
-
-    fn static_watts(&self) -> f64 {
-        match self {
-            InPackage::Tech(t) => t.static_watts(),
-            InPackage::Monarch(m) => m.static_watts(),
-            InPackage::Scratch(s) => s.static_watts(),
-            InPackage::None => 0.0,
-        }
-    }
-}
 
 /// Result of one simulated run.
 #[derive(Clone, Debug)]
@@ -81,52 +45,23 @@ const CORE_WATTS: f64 = 2.0;
 pub struct System {
     pub cfg: SystemConfig,
     pub hier: Hierarchy,
-    pub inpkg: InPackage,
+    pub inpkg: Box<dyn CacheDevice>,
     pub main: MainMemory,
     pub stats: Counters,
     dynamic_nj: f64,
 }
 
 impl System {
+    /// Build the system `cfg` describes, with the in-package device
+    /// constructed from the built-in backend registry.
     pub fn build(cfg: SystemConfig) -> Self {
-        let inpkg = match cfg.inpkg {
-            InPackageKind::DramCache => {
-                InPackage::Tech(TechCache::dram(cfg.inpkg_dram_bytes))
-            }
-            InPackageKind::DramCacheIdeal => {
-                InPackage::Tech(TechCache::dram_ideal(cfg.inpkg_dram_bytes))
-            }
-            InPackageKind::Sram => {
-                InPackage::Tech(s_cache(cfg.inpkg_cmos_bytes))
-            }
-            InPackageKind::RramUnbound => InPackage::Tech(
-                TechCache::rram_unbound(cfg.monarch.total_bytes()),
-            ),
-            InPackageKind::MonarchUnbound => InPackage::Monarch(
-                MonarchCache::new(cfg.monarch, cfg.wear, u64::MAX / 4, false),
-            ),
-            InPackageKind::Monarch { m } => {
-                let mut wear = cfg.wear;
-                wear.m = m;
-                // t_MWW scaled with the capacity scale so locking
-                // behaviour at reduced scale matches full scale
-                // (DESIGN.md §5)
-                let window = (wear.t_mww_cycles(cfg.freq_ghz) as f64
-                    * cfg.scale) as u64;
-                InPackage::Monarch(MonarchCache::new(
-                    cfg.monarch,
-                    wear,
-                    window.max(1),
-                    true,
-                ))
-            }
-            InPackageKind::DramScratchpad => {
-                InPackage::Scratch(Scratchpad::hbm_sp(cfg.inpkg_dram_bytes))
-            }
-            InPackageKind::MonarchFlatRam => InPackage::Scratch(
-                Scratchpad::rram_flat(cfg.monarch.total_bytes()),
-            ),
-        };
+        let inpkg = DeviceBuilder::new().build_cache(&cfg);
+        Self::with_device(cfg, inpkg)
+    }
+
+    /// Build around an explicitly constructed in-package device
+    /// (custom backends, differential tests).
+    pub fn with_device(cfg: SystemConfig, inpkg: Box<dyn CacheDevice>) -> Self {
         Self {
             hier: Hierarchy::new(cfg.cores, cfg.l1d, cfg.l2, cfg.l3),
             main: MainMemory::new(cfg.ddr4_timing, cfg.offchip_channels, 8),
@@ -137,48 +72,20 @@ impl System {
         }
     }
 
-    /// Handle an L3 eviction below the on-die hierarchy.
+    /// Handle an L3 eviction below the on-die hierarchy: the device
+    /// applies its install policy and instructs any main-memory
+    /// write-back.
     fn handle_l3_victim(&mut self, v: &Eviction, now: u64) {
-        match &mut self.inpkg {
-            InPackage::Monarch(m) => {
-                let (_, wb, _) = m.on_l3_evict(v, now);
-                if let Some(addr) = wb {
-                    let a = self.main.access(&MemReq {
-                        addr,
-                        kind: ReqKind::Write,
-                        at: now,
-                        thread: 0,
-                    });
-                    self.dynamic_nj += a.energy_nj;
-                }
-            }
-            InPackage::Tech(t) => {
-                if v.dirty {
-                    // conventional write-back into the L4 cache
-                    let (acc, victim) = t.install(v.addr, true, now);
-                    self.dynamic_nj += acc.energy_nj;
-                    if let Some(dv) = victim {
-                        let a = self.main.access(&MemReq {
-                            addr: dv.addr,
-                            kind: ReqKind::Write,
-                            at: acc.done_at,
-                            thread: 0,
-                        });
-                        self.dynamic_nj += a.energy_nj;
-                    }
-                }
-            }
-            _ => {
-                if v.dirty {
-                    let a = self.main.access(&MemReq {
-                        addr: v.addr,
-                        kind: ReqKind::Write,
-                        at: now,
-                        thread: 0,
-                    });
-                    self.dynamic_nj += a.energy_nj;
-                }
-            }
+        let out = self.inpkg.on_l3_evict(v, now);
+        self.dynamic_nj += out.energy_nj;
+        if let Some((addr, at)) = out.writeback {
+            let a = self.main.access(&MemReq {
+                addr,
+                kind: ReqKind::Write,
+                at,
+                thread: 0,
+            });
+            self.dynamic_nj += a.energy_nj;
         }
     }
 
@@ -200,55 +107,29 @@ impl System {
                 }
                 let kind = if write { ReqKind::Write } else { ReqKind::Read };
                 let req = MemReq { addr, kind, at: t0, thread };
-                match &mut self.inpkg {
-                    InPackage::Monarch(m) => {
-                        let r = m.lookup(&req);
-                        self.dynamic_nj += r.energy_nj;
-                        if r.hit {
-                            r.done_at
-                        } else {
-                            // no-allocate (§8): fetch goes to L3 only
-                            let a = self.main.access(&MemReq {
-                                at: r.done_at,
-                                ..req
-                            });
-                            self.dynamic_nj += a.energy_nj;
-                            a.done_at
-                        }
-                    }
-                    InPackage::Tech(t) => {
-                        let r = t.lookup(&req);
-                        self.dynamic_nj += r.energy_nj;
-                        if r.hit {
-                            r.done_at
-                        } else {
-                            let a = self.main.access(&MemReq {
-                                at: r.done_at,
-                                ..req
-                            });
-                            self.dynamic_nj += a.energy_nj;
-                            // conventional fill on miss
-                            let (acc, victim) =
-                                t.install(addr, write, a.done_at);
-                            self.dynamic_nj += acc.energy_nj;
-                            if let Some(dv) = victim {
-                                let wa = self.main.access(&MemReq {
-                                    addr: dv.addr,
-                                    kind: ReqKind::Write,
-                                    at: acc.done_at,
-                                    thread,
-                                });
-                                self.dynamic_nj += wa.energy_nj;
-                            }
-                            a.done_at
-                        }
-                    }
-                    InPackage::Scratch(_) | InPackage::None => {
-                        let a = self.main.access(&req);
-                        self.dynamic_nj += a.energy_nj;
-                        a.done_at
+                let r = self.inpkg.lookup(&req);
+                self.dynamic_nj += r.energy_nj;
+                if r.hit {
+                    return r.done_at;
+                }
+                // in-package miss: fetch from main memory, then let
+                // the device apply its fill policy (no-allocate
+                // devices skip it)
+                let a = self.main.access(&MemReq { at: r.done_at, ..req });
+                self.dynamic_nj += a.energy_nj;
+                if let Some(fill) = self.inpkg.fill(addr, write, a.done_at) {
+                    self.dynamic_nj += fill.energy_nj;
+                    if let Some((wb_addr, wb_at)) = fill.writeback {
+                        let wa = self.main.access(&MemReq {
+                            addr: wb_addr,
+                            kind: ReqKind::Write,
+                            at: wb_at,
+                            thread,
+                        });
+                        self.dynamic_nj += wa.energy_nj;
                     }
                 }
+                a.done_at
             }
         }
     }
@@ -301,22 +182,18 @@ impl System {
             * seconds
             * 1e9
             + self.main.static_energy_nj(cycles);
-        let rotations = match &self.inpkg {
-            InPackage::Monarch(m) => m.rotations(),
-            _ => 0,
-        };
         let mut counters = Counters::new();
         counters.merge(&self.stats);
         counters.set("ddr4.reads", self.main.reads);
         counters.set("ddr4.writes", self.main.writes);
         SimReport {
-            workload: wl.name(),
-            system: self.inpkg.label(),
+            workload: wl.name().to_string(),
+            system: self.inpkg.label().to_string(),
             cycles,
             mem_ops,
             l3_hit_rate: self.hier.l3_hit_rate(),
             inpkg_hit_rate: self.inpkg.hit_rate(),
-            rotations,
+            rotations: self.inpkg.rotations(),
             energy_nj: self.dynamic_nj + static_nj,
             counters,
         }
@@ -326,6 +203,7 @@ impl System {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::InPackageKind;
     use crate::cpu::TraceOp;
     use crate::workloads::SyntheticStream;
 
@@ -384,16 +262,21 @@ mod tests {
         let mut m = System::build(scaled(InPackageKind::Monarch { m: 3 }));
         let mut wl = stream(20_000, 1 << 22, 9);
         let r = m.run(&mut wl, u64::MAX);
-        if let InPackage::Monarch(mc) = &m.inpkg {
-            // no-allocate: installs only via D/R rules
-            let installs = mc.stats.get("installs");
-            let skips = mc.stats.get("skip_dead")
-                + mc.stats.get("forward_d");
-            assert!(installs + skips > 0, "eviction path exercised");
-        } else {
-            panic!("expected monarch in-package");
-        }
+        let mc = m.inpkg.monarch().expect("expected monarch in-package");
+        // no-allocate: installs only via D/R rules
+        let installs = mc.stats.get("installs");
+        let skips = mc.stats.get("skip_dead") + mc.stats.get("forward_d");
+        assert!(installs + skips > 0, "eviction path exercised");
         assert!(r.cycles > 0);
+    }
+
+    #[test]
+    fn scratchpads_pass_misses_straight_through() {
+        let mut s = System::build(scaled(InPackageKind::DramScratchpad));
+        let r = s.run(&mut stream(5_000, 1 << 20, 4), u64::MAX);
+        assert!(r.cycles > 0);
+        assert_eq!(r.inpkg_hit_rate, 0.0, "miss-through device");
+        assert_eq!(r.system, "HBM-SP");
     }
 
     #[test]
@@ -401,8 +284,8 @@ mod tests {
         let mut sys = System::build(scaled(InPackageKind::DramCache));
         struct Chain(Vec<TraceOp>, usize);
         impl Workload for Chain {
-            fn name(&self) -> String {
-                "chain".into()
+            fn name(&self) -> &str {
+                "chain"
             }
             fn threads(&self) -> usize {
                 1

@@ -6,7 +6,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {

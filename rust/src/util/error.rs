@@ -1,0 +1,123 @@
+//! Minimal error plumbing for the offline vendor set (no `anyhow`).
+//!
+//! A message-carrying error type plus the two combinators the codebase
+//! actually uses: `bail!` and the `Context` extension trait. Foreign
+//! errors convert via a blanket `From<E: std::error::Error>` so `?`
+//! works on `io`, `parse` and (feature-gated) `xla` results.
+
+use std::fmt;
+
+/// A flat, message-only error. Context is folded into the message at
+/// attachment time (`"context: cause"`), which keeps the type `Copy`-
+/// free and dependency-free while remaining useful in CLI output.
+pub struct Error(Box<str>);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error(m.into().into_boxed_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+// NB: `Error` itself deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion
+// coherent (the same trick `anyhow` uses).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Attach context to a failure, mirroring the `anyhow` surface.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u64> {
+        s.parse::<u64>().with_context(|| format!("bad number {s:?}"))
+    }
+
+    #[test]
+    fn context_folds_into_message() {
+        let e = parse("nope").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.starts_with("bad number \"nope\""), "{msg}");
+        assert!(parse("17").is_ok());
+    }
+
+    #[test]
+    fn bail_and_option_context() {
+        fn f(x: Option<u32>) -> Result<u32> {
+            let v = x.context("missing value")?;
+            if v == 0 {
+                bail!("zero is not allowed");
+            }
+            Ok(v)
+        }
+        assert_eq!(f(Some(3)).unwrap(), 3);
+        assert_eq!(f(None).unwrap_err().to_string(), "missing value");
+        assert_eq!(f(Some(0)).unwrap_err().to_string(), "zero is not allowed");
+    }
+
+    #[test]
+    fn foreign_errors_convert() {
+        fn g() -> Result<u64> {
+            let v: u64 = "8".parse()?; // ParseIntError -> Error via From
+            Ok(v)
+        }
+        assert_eq!(g().unwrap(), 8);
+    }
+}

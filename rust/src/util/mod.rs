@@ -4,6 +4,7 @@
 
 pub mod bitvec;
 pub mod cli;
+pub mod error;
 pub mod murmur3;
 pub mod prop;
 pub mod rng;

@@ -479,7 +479,7 @@ mod tests {
     fn all_kernels_produce_bounded_nonempty_traces() {
         let g = g();
         for mut wl in all_crono(&g, 4, 5_000) {
-            let name = wl.name();
+            let name = wl.name().to_string();
             let total = wl.total_ops();
             assert!(total > 1000, "{name}: {total} ops");
             assert!(total <= 4 * 5_000, "{name}: budget respected");
@@ -496,7 +496,7 @@ mod tests {
     fn kernel_names_match_paper() {
         let g = Graph::random(200, 4, 1);
         let names: Vec<String> =
-            all_crono(&g, 2, 100).iter().map(|w| w.name()).collect();
+            all_crono(&g, 2, 100).iter().map(|w| w.name().to_string()).collect();
         assert_eq!(
             names,
             ["BC", "BFS", "COM", "CON", "DFS", "PR", "SSSP", "TRI"]

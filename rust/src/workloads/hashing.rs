@@ -6,19 +6,22 @@
 //! flat-RAM) and Monarch (keys in flat-CAM, searched associatively).
 //!
 //! The same *functional* hash table runs on every system; only where
-//! the probes/updates go differs. Monarch turns the baseline's
-//! metadata-guided probe sequence into one (or two, if the window
-//! crosses a set boundary) XAM searches and needs no metadata at all
-//! (§10.4.2) — metadata lives in main memory and is never touched on
-//! lookups.
+//! the probes/updates go differs, and that routing lives entirely
+//! behind the [`AssocDevice`] trait — the driver below contains no
+//! per-backend dispatch. Monarch turns the baseline's metadata-guided
+//! probe sequence into one (or two, if the window crosses a set
+//! boundary) XAM searches and needs no metadata at all (§10.4.2).
+//!
+//! Lookups from different hardware threads are aggregated into
+//! [`AssocDevice::lookup_many`] batches (consecutive read ops, flushed
+//! before any table mutation or thread reuse), so an attached PJRT
+//! kernel evaluates a whole batch of flat-CAM searches in one
+//! execution. Batched ops are controller-equivalent to the scalar
+//! sequence, so reports are bit-identical to unbatched runs
+//! (`tests/device_differential.rs`).
 
-use crate::config::{MonarchGeom, WearConfig};
 use crate::cpu::ThreadTimeline;
-use crate::mem::ddr4::MainMemory;
-use crate::mem::dram_cache::TechCache;
-use crate::mem::scratchpad::Scratchpad;
-use crate::mem::{MemReq, ReqKind};
-use crate::monarch::MonarchFlat;
+use crate::device::{AssocDevice, CamLookup};
 use crate::util::murmur3::murmur3_u64;
 use crate::util::rng::{Rng, ScrambledZipf};
 use crate::util::stats::Counters;
@@ -129,69 +132,6 @@ pub enum InsertOutcome {
     NeedRehash,
 }
 
-/// Where the hash table lives.
-pub enum HashMemory {
-    /// HBM-C: table in DDR4, cached by an in-package DRAM L4.
-    HbmCache { l4: TechCache, main: MainMemory },
-    /// Scratchpad systems (HBM-SP / CMOS / RRAM-flat): table in the
-    /// scratchpad up to its capacity, the spill lives in DDR4.
-    Scratch { sp: Scratchpad, main: MainMemory },
-    /// Monarch: keys in flat-CAM (real XAM search), values in
-    /// flat-RAM; metadata lives in main memory and is not consulted.
-    Monarch { flat: MonarchFlat, main: MainMemory },
-}
-
-impl HashMemory {
-    pub fn label(&self) -> String {
-        match self {
-            HashMemory::HbmCache { .. } => "HBM-C".into(),
-            HashMemory::Scratch { sp, .. } => sp.label.to_string(),
-            HashMemory::Monarch { .. } => "Monarch".into(),
-        }
-    }
-
-    pub fn hbm_c(capacity: usize) -> Self {
-        HashMemory::HbmCache {
-            l4: TechCache::dram(capacity),
-            main: MainMemory::default(),
-        }
-    }
-
-    pub fn hbm_sp(capacity: usize) -> Self {
-        HashMemory::Scratch {
-            sp: Scratchpad::hbm_sp(capacity),
-            main: MainMemory::default(),
-        }
-    }
-
-    pub fn cmos(capacity: usize) -> Self {
-        HashMemory::Scratch {
-            sp: Scratchpad::cmos(capacity),
-            main: MainMemory::default(),
-        }
-    }
-
-    pub fn rram_flat(capacity: usize) -> Self {
-        HashMemory::Scratch {
-            sp: Scratchpad::rram_flat(capacity),
-            main: MainMemory::default(),
-        }
-    }
-
-    pub fn monarch(geom: MonarchGeom, cam_sets: usize) -> Self {
-        HashMemory::Monarch {
-            flat: MonarchFlat::new(
-                geom,
-                cam_sets,
-                WearConfig::default_m(3),
-                u64::MAX / 4,
-                true,
-            ),
-            main: MainMemory::default(),
-        }
-    }
-}
-
 /// YCSB-style driver configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct YcsbConfig {
@@ -243,109 +183,65 @@ struct Layout {
     val_base: u64,
     meta_base: u64,
     meta_stride: u64,
-    sp_capacity: u64,
 }
 
 impl Layout {
-    fn new(buckets: u64, window: u64, sp_capacity: u64) -> Self {
+    fn new(buckets: u64, window: u64) -> Self {
         let key_base = 0;
         let val_base = key_base + 8 * buckets;
         let meta_base = val_base + 8 * buckets;
-        Self {
-            key_base,
-            val_base,
-            meta_base,
-            meta_stride: (window / 8).max(1),
-            sp_capacity,
-        }
+        Self { key_base, val_base, meta_base, meta_stride: (window / 8).max(1) }
     }
 }
 
-fn sp_or_main(
-    sp: &mut Scratchpad,
-    main: &mut MainMemory,
-    addr: u64,
-    write: bool,
-    at: u64,
-    layout: &Layout,
-    nj: &mut f64,
-) -> u64 {
-    let kind = if write { ReqKind::Write } else { ReqKind::Read };
-    let req = MemReq { addr, kind, at, thread: 0 };
-    if addr < layout.sp_capacity {
-        let a = sp.access(&req);
-        *nj += a.energy_nj;
-        a.done_at
-    } else {
-        let a = main.access(&req);
-        *nj += a.energy_nj;
-        a.done_at
-    }
-}
-
-fn cached(
-    l4: &mut TechCache,
-    main: &mut MainMemory,
+/// One routed table access; accumulates its energy and returns the
+/// completion cycle.
+fn acc(
+    mem: &mut dyn AssocDevice,
     addr: u64,
     write: bool,
     at: u64,
     nj: &mut f64,
 ) -> u64 {
-    let kind = if write { ReqKind::Write } else { ReqKind::Read };
-    let req = MemReq { addr, kind, at, thread: 0 };
-    let r = l4.lookup(&req);
-    *nj += r.energy_nj;
-    if r.hit {
-        return r.done_at;
-    }
-    let a = main.access(&MemReq { at: r.done_at, ..req });
+    let a = mem.access(addr, write, at);
     *nj += a.energy_nj;
-    let (acc, victim) = l4.install(addr, write, a.done_at);
-    *nj += acc.energy_nj;
-    if let Some(v) = victim {
-        let wa = main.access(&MemReq {
-            addr: v.addr,
-            kind: ReqKind::Write,
-            at: acc.done_at,
-            thread: 0,
-        });
-        *nj += wa.energy_nj;
-    }
     a.done_at
 }
 
+/// Largest lookup batch handed to `lookup_many` in one flush (the
+/// widest compiled PJRT variant; larger batches are chunked by the
+/// engine anyway, this just bounds the deferral window).
+const MAX_LOOKUP_BATCH: usize = 64;
+
 /// Run the YCSB mix over one memory system. Returns the report; the
 /// caller compares against a baseline run with the same config/seed.
-pub fn run_ycsb(mem: &mut HashMemory, cfg: &YcsbConfig) -> HashReport {
+pub fn run_ycsb(mem: &mut dyn AssocDevice, cfg: &YcsbConfig) -> HashReport {
     let mut table = Hopscotch::new(cfg.table_pow2, cfg.window);
     let buckets = table.buckets.len() as u64;
-    let sp_capacity = match mem {
-        HashMemory::Scratch { sp, .. } => sp.capacity_bytes as u64,
-        _ => u64::MAX,
-    };
-    let layout = Layout::new(buckets, cfg.window as u64, sp_capacity);
+    let layout = Layout::new(buckets, cfg.window as u64);
     let mut rng = Rng::new(cfg.seed);
     // prefill functionally (the paper measures steady-state mixes)
     let keyspace = (buckets as f64 * cfg.prefill_density) as u64;
     for k in 0..keyspace {
         let _ = table.insert(k * 0x9E37_79B9 + 1);
     }
-    // Monarch: copy the keys into the CAM region. Baseline systems'
-    // initial table population is not charged either, so the copy is
-    // a measurement-epoch boundary: functional contents and wear
-    // persist, bank timing state resets to zero afterwards.
+    // CAM backends: copy the keys into the CAM region. Baseline
+    // systems' initial table population is not charged either, so the
+    // copy is a measurement-epoch boundary: functional contents and
+    // wear persist, bank timing state resets to zero afterwards.
     let mut nj = 0.0;
-    if let HashMemory::Monarch { flat, .. } = mem {
-        let cols = flat.cols_per_set() as u64;
-        for (i, b) in table.buckets.clone().iter().enumerate() {
+    let cam = mem.cam();
+    if let Some(g) = cam {
+        let cols = g.cols_per_set as u64;
+        for (i, b) in table.buckets.iter().enumerate() {
             if let Some(k) = b {
-                let set = (i as u64 / cols) as usize % flat.num_cam_sets();
+                let set = (i as u64 / cols) as usize % g.num_sets;
                 let col = (i as u64 % cols) as usize;
-                flat.cam_write(set, col, *k, 0);
+                let _ = mem.cam_write(set, col, *k, 0);
             }
         }
-        flat.energy_nj = 0.0; // population energy outside the epoch
-        flat.reset_timing();
+        let _ = mem.drain_energy_nj(); // population energy: outside epoch
+        mem.reset_timing();
     }
     let zipf = ScrambledZipf::new(keyspace.max(2), cfg.zipf_theta);
     let mut timelines: Vec<ThreadTimeline> =
@@ -354,9 +250,30 @@ pub fn run_ycsb(mem: &mut HashMemory, cfg: &YcsbConfig) -> HashReport {
     let mut counters = Counters::new();
     let mut next_insert_key = keyspace + 1;
 
+    // Cross-thread lookup aggregation: consecutive read ops defer into
+    // `pending` (at most one per thread — the thread's next issue slot
+    // depends on the previous completion) and flush in op order before
+    // any insert, thread reuse, or batch-size cap.
+    let mut pending: Vec<(usize, CamLookup)> = Vec::new();
+    fn flush(
+        mem: &mut dyn AssocDevice,
+        pending: &mut Vec<(usize, CamLookup)>,
+        timelines: &mut [ThreadTimeline],
+        nj: &mut f64,
+    ) {
+        if pending.is_empty() {
+            return;
+        }
+        let reqs: Vec<CamLookup> = pending.iter().map(|(_, l)| *l).collect();
+        let outs = mem.lookup_many(&reqs);
+        for ((t, _), out) in pending.drain(..).zip(outs) {
+            *nj += out.energy_nj;
+            timelines[t].record(out.done_at);
+        }
+    }
+
     for op in 0..cfg.ops {
         let t = op % cfg.threads;
-        let tl = &mut timelines[t];
         let is_read = rng.chance(cfg.read_pct);
         let key = if is_read {
             zipf.sample(&mut rng) * 0x9E37_79B9 + 1
@@ -364,35 +281,71 @@ pub fn run_ycsb(mem: &mut HashMemory, cfg: &YcsbConfig) -> HashReport {
             next_insert_key += 1;
             next_insert_key * 0x9E37_79B9 + 1
         };
-        let at = tl.issue_at();
-        let done = if is_read {
+        if is_read {
             counters.inc("lookups");
             let (found, probes) = table.lookup(key);
             if found.is_some() {
                 hits += 1;
             }
-            lookup_cost(mem, &layout, &table, key, probes, found, at, &mut nj)
+            if let Some(g) = cam {
+                if pending.len() >= MAX_LOOKUP_BATCH
+                    || pending.iter().any(|(pt, _)| *pt == t)
+                {
+                    flush(mem, &mut pending, &mut timelines, &mut nj);
+                }
+                let at = timelines[t].issue_at();
+                // key/mask registers + one search per set the window
+                // spans; value read from flat-RAM by the match pointer
+                let h = table.home(key) as u64;
+                let cols = g.cols_per_set as u64;
+                let nsets = g.num_sets as u64;
+                let set0 = ((h / cols) % nsets) as usize;
+                let set1 =
+                    (((h + table.window as u64 - 1) / cols) % nsets) as usize;
+                pending.push((
+                    t,
+                    CamLookup {
+                        key,
+                        mask: !0,
+                        set0,
+                        set1,
+                        value_block: h,
+                        fetch_value_on_miss: found.is_some(),
+                        at,
+                    },
+                ));
+            } else {
+                let at = timelines[t].issue_at();
+                let done = baseline_lookup(
+                    mem, &layout, &table, key, probes, found, at, &mut nj,
+                );
+                timelines[t].record(done);
+            }
         } else {
             counters.inc("inserts");
-            insert_cost(mem, &layout, &mut table, key, at, &mut nj, &mut counters)
-        };
-        timelines[t].record(done);
+            // inserts mutate the table and the CAM: preserve op order
+            flush(mem, &mut pending, &mut timelines, &mut nj);
+            let at = timelines[t].issue_at();
+            let done = insert_cost(
+                mem,
+                &layout,
+                &mut table,
+                key,
+                at,
+                &mut nj,
+                &mut counters,
+            );
+            timelines[t].record(done);
+        }
     }
+    flush(mem, &mut pending, &mut timelines, &mut nj);
     let cycles = timelines.iter_mut().map(|t| t.finish()).max().unwrap_or(0);
     // static energy over the run
     let seconds = cycles as f64 / 3.2e9;
-    let static_w = match mem {
-        HashMemory::HbmCache { l4, .. } => l4.static_watts(),
-        HashMemory::Scratch { sp, .. } => sp.static_watts(),
-        HashMemory::Monarch { .. } => 0.05,
-    };
-    let main_static = match mem {
-        HashMemory::HbmCache { main, .. }
-        | HashMemory::Scratch { main, .. }
-        | HashMemory::Monarch { main, .. } => main.static_energy_nj(cycles),
-    };
+    let static_w = mem.static_watts();
+    let main_static = mem.main_static_energy_nj(cycles);
     HashReport {
-        system: mem.label(),
+        system: mem.label().to_string(),
         cycles,
         ops: cfg.ops as u64,
         hits,
@@ -402,10 +355,12 @@ pub fn run_ycsb(mem: &mut HashMemory, cfg: &YcsbConfig) -> HashReport {
     }
 }
 
-/// The memory operations a lookup performs on each system.
+/// The memory operations a lookup performs on a conventional system:
+/// the metadata word, then the occupied candidates in sequence, then
+/// the value on a hit.
 #[allow(clippy::too_many_arguments)]
-fn lookup_cost(
-    mem: &mut HashMemory,
+fn baseline_lookup(
+    mem: &mut dyn AssocDevice,
     layout: &Layout,
     table: &Hopscotch,
     key: u64,
@@ -415,66 +370,21 @@ fn lookup_cost(
     nj: &mut f64,
 ) -> u64 {
     let h = table.home(key) as u64;
-    match mem {
-        HashMemory::Monarch { flat, .. } => {
-            // key/mask registers + one search per set the window spans
-            let cols = flat.cols_per_set() as u64;
-            let nsets = flat.num_cam_sets() as u64;
-            let set0 = (h / cols) % nsets;
-            let set1 = ((h + table.window as u64 - 1) / cols) % nsets;
-            let mut t = flat.write_key(key, at).done_at;
-            t = flat.write_mask(!0, t).done_at;
-            let (a, hit) = flat.search(set0 as usize, t);
-            t = a.done_at;
-            let mut hit = hit;
-            if hit.is_none() && set1 != set0 {
-                let (a2, h2) = flat.search(set1 as usize, t);
-                t = a2.done_at;
-                hit = h2;
-            }
-            *nj += flat.energy_nj;
-            flat.energy_nj = 0.0;
-            if hit.is_some() || found.is_some() {
-                // value read from flat-RAM by the match pointer
-                if let Some(a) = flat.ram_access(h, false, t) {
-                    *nj += a.energy_nj;
-                    return a.done_at;
-                }
-            }
-            t
-        }
-        HashMemory::HbmCache { l4, main } => {
-            // metadata word, then the occupied candidates in sequence
-            let mut t =
-                cached(l4, main, layout.meta_base + h * layout.meta_stride, false, at, nj);
-            for p in 0..probes.max(1) {
-                t = cached(l4, main, layout.key_base + 8 * (h + p as u64), false, t, nj);
-            }
-            if found.is_some() {
-                t = cached(l4, main, layout.val_base + 8 * h, false, t, nj);
-            }
-            t
-        }
-        HashMemory::Scratch { sp, main } => {
-            let mut t = sp_or_main(
-                sp, main, layout.meta_base + h * layout.meta_stride, false, at, layout, nj,
-            );
-            for p in 0..probes.max(1) {
-                t = sp_or_main(
-                    sp, main, layout.key_base + 8 * (h + p as u64), false, t, layout, nj,
-                );
-            }
-            if found.is_some() {
-                t = sp_or_main(sp, main, layout.val_base + 8 * h, false, t, layout, nj);
-            }
-            t
-        }
+    let mut t =
+        acc(mem, layout.meta_base + h * layout.meta_stride, false, at, nj);
+    for p in 0..probes.max(1) {
+        t = acc(mem, layout.key_base + 8 * (h + p as u64), false, t, nj);
     }
+    if found.is_some() {
+        t = acc(mem, layout.val_base + 8 * h, false, t, nj);
+    }
+    t
 }
 
-/// The memory operations an insert performs on each system.
+/// The memory operations an insert performs; the associative path is
+/// taken when the device exposes a CAM region.
 fn insert_cost(
-    mem: &mut HashMemory,
+    mem: &mut dyn AssocDevice,
     layout: &Layout,
     table: &mut Hopscotch,
     key: u64,
@@ -490,24 +400,13 @@ fn insert_cost(
             table.rehashes += 1;
             // rehash in main memory: read+write every bucket (§10.4.1:
             // "rehashing is naturally done within the scope of main
-            // memory"), then (Monarch) copy the new table into CAM
+            // memory"); sample the cost with bandwidth-bound batches of
+            // 64B blocks
             let n = table.buckets.len() as u64;
-            let main = match mem {
-                HashMemory::HbmCache { main, .. }
-                | HashMemory::Scratch { main, .. }
-                | HashMemory::Monarch { main, .. } => main,
-            };
             let mut t = at;
-            // sample the cost: rehash touches every bucket; model with
-            // bandwidth-bound batches of 64B blocks
             let blocks = (16 * n / 64).max(1);
             for b in 0..blocks.min(4096) {
-                let a = main.access(&MemReq {
-                    addr: b * 64,
-                    kind: if b % 2 == 0 { ReqKind::Read } else { ReqKind::Write },
-                    at: t,
-                    thread: 0,
-                });
+                let a = mem.main_access(b * 64, b % 2 != 0, t);
                 *nj += a.energy_nj;
                 t = a.done_at;
             }
@@ -515,85 +414,80 @@ fn insert_cost(
         }
         InsertOutcome::AlreadyPresent => at + 1,
         InsertOutcome::Inserted { bucket, scan, displacements } => {
-            match mem {
-                HashMemory::Monarch { flat, main } => {
-                    // the insert begins with a lookup (§9.2.2): one
-                    // search to confirm absence
-                    let cols = flat.cols_per_set() as u64;
-                    let nsets = flat.num_cam_sets();
-                    let set = ((bucket as u64 / cols) as usize) % nsets;
-                    let col = (bucket as u64 % cols) as usize;
-                    let mut t = flat.write_key(key, at).done_at;
-                    let (a, _) = flat.search(set, t);
-                    t = a.done_at;
-                    // displacements are CAM read-modify-write pairs;
-                    // the final slot takes one CAM write
-                    let writes = 2 * displacements + 1;
-                    for d in 0..writes {
-                        let c = (col + d) % cols as usize;
-                        if let Some(a) = flat.cam_write(set, c, key, t) {
+            if let Some(g) = mem.cam() {
+                // the insert begins with a lookup (§9.2.2): one search
+                // to confirm absence
+                let cols = g.cols_per_set as u64;
+                let set = ((bucket as u64 / cols) as usize) % g.num_sets;
+                let col = (bucket as u64 % cols) as usize;
+                let ka = mem.write_key(key, at);
+                *nj += ka.energy_nj;
+                let (a, _) = mem.search(set, ka.done_at);
+                *nj += a.energy_nj;
+                let mut t = a.done_at;
+                // displacements are CAM read-modify-write pairs; the
+                // final slot takes one CAM write
+                let writes = 2 * displacements + 1;
+                for d in 0..writes {
+                    let c = (col + d) % cols as usize;
+                    match mem.cam_write(set, c, key, t) {
+                        Some(a) => {
+                            *nj += a.energy_nj;
                             t = a.done_at;
-                        } else {
+                        }
+                        None => {
                             // t_MWW blocked: spill to main memory
                             counters.inc("cam_blocked_spill");
-                            let a = main.access(&MemReq {
-                                addr: layout.key_base + 8 * h,
-                                kind: ReqKind::Write,
-                                at: t,
-                                thread: 0,
-                            });
+                            let a = mem.main_access(
+                                layout.key_base + 8 * h,
+                                true,
+                                t,
+                            );
                             *nj += a.energy_nj;
                             return a.done_at;
                         }
                     }
-                    *nj += flat.energy_nj;
-                    flat.energy_nj = 0.0;
-                    // value in flat-RAM + the window metadata kept in
-                    // main memory for inserts (§10.4.2: metadata only
-                    // matters to baseline lookups, but inserts still
-                    // maintain it)
-                    if let Some(a) = flat.ram_access(h, true, t) {
-                        *nj += a.energy_nj;
-                        t = a.done_at;
-                    }
-                    let a = main.access(&MemReq {
-                        addr: layout.meta_base + h * layout.meta_stride,
-                        kind: ReqKind::Write,
-                        at: t,
-                        thread: 0,
-                    });
+                }
+                // value in flat-RAM + the window metadata kept in main
+                // memory for inserts (§10.4.2: metadata only matters to
+                // baseline lookups, but inserts still maintain it)
+                if let Some(a) = mem.ram_access(h, true, t) {
                     *nj += a.energy_nj;
-                    a.done_at
+                    t = a.done_at;
                 }
-                HashMemory::HbmCache { l4, main } => {
-                    let mut t = at;
-                    // scan reads for the free bucket + displacement RMWs
-                    for s in 0..scan.max(1) {
-                        t = cached(l4, main, layout.key_base + 8 * (h + s as u64), false, t, nj);
-                    }
-                    for _ in 0..displacements {
-                        t = cached(l4, main, layout.key_base + 8 * h, false, t, nj);
-                        t = cached(l4, main, layout.key_base + 8 * h, true, t, nj);
-                    }
-                    t = cached(l4, main, layout.key_base + 8 * bucket as u64, true, t, nj);
-                    t = cached(l4, main, layout.val_base + 8 * bucket as u64, true, t, nj);
-                    t = cached(l4, main, layout.meta_base + h * layout.meta_stride, true, t, nj);
-                    t
+                let a = mem.main_access(
+                    layout.meta_base + h * layout.meta_stride,
+                    true,
+                    t,
+                );
+                *nj += a.energy_nj;
+                a.done_at
+            } else {
+                // scan reads for the free bucket + displacement RMWs
+                let mut t = at;
+                for s in 0..scan.max(1) {
+                    t = acc(
+                        mem,
+                        layout.key_base + 8 * (h + s as u64),
+                        false,
+                        t,
+                        nj,
+                    );
                 }
-                HashMemory::Scratch { sp, main } => {
-                    let mut t = at;
-                    for s in 0..scan.max(1) {
-                        t = sp_or_main(sp, main, layout.key_base + 8 * (h + s as u64), false, t, layout, nj);
-                    }
-                    for _ in 0..displacements {
-                        t = sp_or_main(sp, main, layout.key_base + 8 * h, false, t, layout, nj);
-                        t = sp_or_main(sp, main, layout.key_base + 8 * h, true, t, layout, nj);
-                    }
-                    t = sp_or_main(sp, main, layout.key_base + 8 * bucket as u64, true, t, layout, nj);
-                    t = sp_or_main(sp, main, layout.val_base + 8 * bucket as u64, true, t, layout, nj);
-                    t = sp_or_main(sp, main, layout.meta_base + h * layout.meta_stride, true, t, layout, nj);
-                    t
+                for _ in 0..displacements {
+                    t = acc(mem, layout.key_base + 8 * h, false, t, nj);
+                    t = acc(mem, layout.key_base + 8 * h, true, t, nj);
                 }
+                t = acc(mem, layout.key_base + 8 * bucket as u64, true, t, nj);
+                t = acc(mem, layout.val_base + 8 * bucket as u64, true, t, nj);
+                t = acc(
+                    mem,
+                    layout.meta_base + h * layout.meta_stride,
+                    true,
+                    t,
+                    nj,
+                );
+                t
             }
         }
     }
@@ -602,6 +496,8 @@ fn insert_cost(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::MonarchGeom;
+    use crate::device::assoc;
 
     #[test]
     fn hopscotch_inserts_and_finds() {
@@ -654,12 +550,8 @@ mod tests {
         }
     }
 
-    #[test]
-    fn all_systems_run_and_monarch_wins_lookups() {
-        let cfg = YcsbConfig { read_pct: 1.0, ..small_cfg() };
-        let table_bytes = (1usize << cfg.table_pow2) * 24;
-        let mut reports = Vec::new();
-        let geom = MonarchGeom {
+    fn small_geom() -> MonarchGeom {
+        MonarchGeom {
             vaults: 4,
             banks_per_vault: 8,
             supersets_per_bank: 8,
@@ -667,16 +559,23 @@ mod tests {
             rows_per_set: 64,
             cols_per_set: 512,
             layers: 1,
-        };
+        }
+    }
+
+    #[test]
+    fn all_systems_run_and_monarch_wins_lookups() {
+        let cfg = YcsbConfig { read_pct: 1.0, ..small_cfg() };
+        let table_bytes = (1usize << cfg.table_pow2) * 24;
+        let mut reports = Vec::new();
         let cam_sets = (1usize << cfg.table_pow2) / 512 + 1;
         let mut systems = vec![
-            HashMemory::hbm_c(table_bytes * 2),
-            HashMemory::hbm_sp(table_bytes * 2),
-            HashMemory::cmos(table_bytes * 2),
-            HashMemory::monarch(geom, cam_sets),
+            assoc::hbm_c(table_bytes * 2),
+            assoc::hbm_sp(table_bytes * 2),
+            assoc::cmos(table_bytes * 2),
+            assoc::monarch(small_geom(), cam_sets),
         ];
         for s in systems.iter_mut() {
-            reports.push(run_ycsb(s, &cfg));
+            reports.push(run_ycsb(s.as_mut(), &cfg));
         }
         let hbm_c = &reports[0];
         let monarch = &reports[3];
@@ -695,28 +594,22 @@ mod tests {
 
     #[test]
     fn insert_heavy_narrows_monarch_advantage() {
-        let geom = MonarchGeom {
-            vaults: 4,
-            banks_per_vault: 8,
-            supersets_per_bank: 8,
-            sets_per_superset: 8,
-            rows_per_set: 64,
-            cols_per_set: 512,
-            layers: 1,
-        };
+        let geom = small_geom();
         let cfg_r = YcsbConfig { read_pct: 1.0, ..small_cfg() };
         let cfg_w = YcsbConfig { read_pct: 0.75, ..small_cfg() };
         let table_bytes = (1usize << cfg_r.table_pow2) * 24;
         let cam_sets = (1usize << cfg_r.table_pow2) / 512 + 1;
         let s100 = {
-            let mut m = HashMemory::monarch(geom, cam_sets);
-            let mut b = HashMemory::hbm_sp(table_bytes * 2);
-            run_ycsb(&mut m, &cfg_r).speedup_vs(&run_ycsb(&mut b, &cfg_r))
+            let mut m = assoc::monarch(geom, cam_sets);
+            let mut b = assoc::hbm_sp(table_bytes * 2);
+            run_ycsb(m.as_mut(), &cfg_r)
+                .speedup_vs(&run_ycsb(b.as_mut(), &cfg_r))
         };
         let s75 = {
-            let mut m = HashMemory::monarch(geom, cam_sets);
-            let mut b = HashMemory::hbm_sp(table_bytes * 2);
-            run_ycsb(&mut m, &cfg_w).speedup_vs(&run_ycsb(&mut b, &cfg_w))
+            let mut m = assoc::monarch(geom, cam_sets);
+            let mut b = assoc::hbm_sp(table_bytes * 2);
+            run_ycsb(m.as_mut(), &cfg_w)
+                .speedup_vs(&run_ycsb(b.as_mut(), &cfg_w))
         };
         assert!(
             s75 < s100,

@@ -14,7 +14,8 @@ use crate::util::rng::{Rng, ScrambledZipf};
 
 /// A multi-threaded memory-trace source for the cache-mode system.
 pub trait Workload {
-    fn name(&self) -> String;
+    /// Display name (no per-call allocation; callers own any copies).
+    fn name(&self) -> &str;
     fn threads(&self) -> usize;
     /// Next op of `thread`, or None when the thread is finished.
     fn next_op(&mut self, thread: usize) -> Option<TraceOp>;
@@ -50,8 +51,8 @@ impl TraceWorkload {
 }
 
 impl Workload for TraceWorkload {
-    fn name(&self) -> String {
-        self.name.clone()
+    fn name(&self) -> &str {
+        &self.name
     }
 
     fn threads(&self) -> usize {
@@ -110,11 +111,11 @@ impl SyntheticStream {
 }
 
 impl Workload for SyntheticStream {
-    fn name(&self) -> String {
+    fn name(&self) -> &str {
         if self.zipf.is_some() {
-            "synthetic-zipf".into()
+            "synthetic-zipf"
         } else {
-            "synthetic-uniform".into()
+            "synthetic-uniform"
         }
     }
 

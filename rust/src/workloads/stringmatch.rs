@@ -3,14 +3,15 @@
 //! the memory hierarchy comparing word by word; Monarch first copies
 //! the corpus into CAM arrays (the paper's two-fold storage overhead:
 //! block-aligned 64-bit words, an 8x data-size increase) and then
-//! *broadcasts* each target as one XAM search per set — up to 4KB of
-//! corpus compared per search.
+//! *broadcasts* each target as one wave of XAM searches — up to 4KB of
+//! corpus compared per search, and the whole wave evaluated in **one**
+//! batched [`AssocDevice::search_many`] call (one PJRT execution when
+//! a kernel is attached).
 
 use crate::cpu::ThreadTimeline;
-use crate::mem::{MemReq, ReqKind};
+use crate::device::{AssocDevice, SearchOp};
 use crate::util::rng::Rng;
 use crate::util::stats::Counters;
-use crate::workloads::hashing::HashMemory;
 
 #[derive(Clone, Copy, Debug)]
 pub struct StringMatchConfig {
@@ -54,7 +55,8 @@ pub fn build_corpus(cfg: &StringMatchConfig) -> (Vec<u64>, Vec<u64>) {
     for (i, t) in targets.iter().enumerate() {
         // plant each target at a handful of pseudo-random positions
         for r in 0..4 {
-            let pos = (rng.usize_below(cfg.corpus_words) + i + r) % cfg.corpus_words;
+            let pos =
+                (rng.usize_below(cfg.corpus_words) + i + r) % cfg.corpus_words;
             corpus[pos] = *t;
         }
     }
@@ -63,7 +65,7 @@ pub fn build_corpus(cfg: &StringMatchConfig) -> (Vec<u64>, Vec<u64>) {
 
 /// Run string match on one system.
 pub fn run_string_match(
-    mem: &mut HashMemory,
+    mem: &mut dyn AssocDevice,
     cfg: &StringMatchConfig,
 ) -> StringReport {
     let (corpus, targets) = build_corpus(cfg);
@@ -71,148 +73,95 @@ pub fn run_string_match(
     let mut nj = 0.0;
     let mut matches = 0u64;
 
-    match mem {
-        HashMemory::Monarch { flat, main } => {
-            // Phase 1 — copy: stream 64B blocks from DDR and write each
-            // word into a CAM column. Column writes to different banks
-            // pipeline; the bank engine serializes per-bank occupancy.
-            let cols = flat.cols_per_set();
-            let nsets = flat.num_cam_sets();
-            let mut stream = ThreadTimeline::new(8); // DDR read MLP
-            let mut copy_done = 0u64;
-            let mut block_ready = 0u64;
-            for (i, &w) in corpus.iter().enumerate() {
-                if i % 8 == 0 {
-                    let at = stream.issue_at();
-                    let a = main.access(&MemReq {
-                        addr: (i as u64 / 8) * 64,
-                        kind: ReqKind::Read,
-                        at,
-                        thread: 0,
-                    });
-                    nj += a.energy_nj;
-                    stream.record(a.done_at);
-                    block_ready = a.done_at;
-                }
-                let set = (i / cols) % nsets;
-                let col = i % cols;
-                if let Some(a) = flat.cam_write(set, col, w, block_ready) {
-                    copy_done = copy_done.max(a.done_at);
-                }
+    let cycles = if let Some(g) = mem.cam() {
+        // Phase 1 — copy: stream 64B blocks from DDR and write each
+        // word into a CAM column. Column writes to different banks
+        // pipeline; the bank engine serializes per-bank occupancy.
+        let cols = g.cols_per_set;
+        let nsets = g.num_sets;
+        let mut stream = ThreadTimeline::new(8); // DDR read MLP
+        let mut copy_done = 0u64;
+        let mut block_ready = 0u64;
+        for (i, &w) in corpus.iter().enumerate() {
+            if i % 8 == 0 {
+                let at = stream.issue_at();
+                let a = mem.main_access((i as u64 / 8) * 64, false, at);
+                nj += a.energy_nj;
+                stream.record(a.done_at);
+                block_ready = a.done_at;
             }
-            let t = copy_done.max(stream.finish());
-            counters.set("copy_done_cycle", t);
-            // Phase 2 — broadcast searches: targets go through the
-            // shared key register sequentially (§7: one register pair
-            // per controller), but each target's per-set searches fan
-            // out across the banks in parallel.
-            let sets_used = corpus.len().div_ceil(cols).min(nsets);
-            let mut tt = t;
-            for target in &targets {
-                tt = flat.write_key(*target, tt).done_at;
-                tt = flat.write_mask(!0, tt).done_at;
-                let mut wave_done = tt;
-                for s in 0..sets_used {
-                    let (a, hit) = flat.search(s, tt);
-                    wave_done = wave_done.max(a.done_at);
-                    if hit.is_some() {
+            let set = (i / cols) % nsets;
+            let col = i % cols;
+            if let Some(a) = mem.cam_write(set, col, w, block_ready) {
+                nj += a.energy_nj;
+                copy_done = copy_done.max(a.done_at);
+            }
+        }
+        let t = copy_done.max(stream.finish());
+        counters.set("copy_done_cycle", t);
+        // Phase 2 — broadcast searches: targets go through the shared
+        // key register sequentially (§7: one register pair per
+        // controller), but each target's per-set searches fan out
+        // across the banks in parallel — and the whole wave is one
+        // batched functional evaluation.
+        let sets_used = corpus.len().div_ceil(cols).min(nsets);
+        let mut tt = t;
+        for target in &targets {
+            // the shared registers are written once per target; the
+            // wave's searches issue only after they are in place
+            let ka = mem.write_key(*target, tt);
+            let ma = mem.write_mask(!0, ka.done_at);
+            nj += ka.energy_nj + ma.energy_nj;
+            let t0 = ma.done_at;
+            let wave: Vec<SearchOp> = (0..sets_used)
+                .map(|s| SearchOp::at(s, *target, !0, t0))
+                .collect();
+            let mut wave_done = t0;
+            for hit in mem.search_many(&wave) {
+                nj += hit.energy_nj;
+                wave_done = wave_done.max(hit.done_at);
+                if hit.col.is_some() {
+                    matches += 1;
+                }
+                counters.inc("searches");
+            }
+            tt = wave_done;
+        }
+        tt
+    } else {
+        // Baselines: stream the corpus once per target, comparing
+        // 8 words per 64B block. All accesses are reads and installs
+        // are clean, so the L4-cached backend never produces a dirty
+        // victim — `access` stays equivalent to a fill-only path.
+        let mut timelines: Vec<ThreadTimeline> =
+            (0..cfg.threads).map(|_| ThreadTimeline::new(8)).collect();
+        let blocks = corpus.len().div_ceil(8);
+        for (ti, target) in targets.iter().enumerate() {
+            let tl = &mut timelines[ti % cfg.threads];
+            for b in 0..blocks {
+                let at = tl.issue_at();
+                tl.compute(8); // 8 word compares
+                let addr = (b as u64) * 64;
+                let a = mem.access(addr, false, at);
+                nj += a.energy_nj;
+                tl.record(a.done_at);
+                counters.inc("block_reads");
+                for w in 0..8 {
+                    let i = b * 8 + w;
+                    if i < corpus.len() && corpus[i] == *target {
                         matches += 1;
                     }
-                    counters.inc("searches");
                 }
-                tt = wave_done;
-            }
-            nj += flat.energy_nj;
-            flat.energy_nj = 0.0;
-            let cycles = tt;
-            StringReport {
-                system: "Monarch".into(),
-                cycles,
-                matches,
-                energy_nj: nj + main.static_energy_nj(cycles),
-                counters,
             }
         }
-        _ => {
-            // Baselines: stream the corpus once per target, comparing
-            // 8 words per 64B block.
-            let mut timelines: Vec<ThreadTimeline> =
-                (0..cfg.threads).map(|_| ThreadTimeline::new(8)).collect();
-            let blocks = corpus.len().div_ceil(8);
-            for (ti, target) in targets.iter().enumerate() {
-                let tl = &mut timelines[ti % cfg.threads];
-                for b in 0..blocks {
-                    let at = tl.issue_at();
-                    tl.compute(8); // 8 word compares
-                    let addr = (b as u64) * 64;
-                    let done = match mem {
-                        HashMemory::HbmCache { l4, main } => {
-                            let req = MemReq {
-                                addr,
-                                kind: ReqKind::Read,
-                                at,
-                                thread: ti as u16,
-                            };
-                            let r = l4.lookup(&req);
-                            nj += r.energy_nj;
-                            if r.hit {
-                                r.done_at
-                            } else {
-                                let a = main
-                                    .access(&MemReq { at: r.done_at, ..req });
-                                nj += a.energy_nj;
-                                let (acc, _) =
-                                    l4.install(addr, false, a.done_at);
-                                nj += acc.energy_nj;
-                                a.done_at
-                            }
-                        }
-                        HashMemory::Scratch { sp, main } => {
-                            let req = MemReq {
-                                addr,
-                                kind: ReqKind::Read,
-                                at,
-                                thread: ti as u16,
-                            };
-                            if addr < sp.capacity_bytes as u64 {
-                                let a = sp.access(&req);
-                                nj += a.energy_nj;
-                                a.done_at
-                            } else {
-                                let a = main.access(&req);
-                                nj += a.energy_nj;
-                                a.done_at
-                            }
-                        }
-                        HashMemory::Monarch { .. } => unreachable!(),
-                    };
-                    tl.record(done);
-                    counters.inc("block_reads");
-                    for w in 0..8 {
-                        let i = b * 8 + w;
-                        if i < corpus.len() && corpus[i] == *target {
-                            matches += 1;
-                        }
-                    }
-                }
-            }
-            let cycles =
-                timelines.iter_mut().map(|tl| tl.finish()).max().unwrap_or(0);
-            let main_static = match mem {
-                HashMemory::HbmCache { main, .. }
-                | HashMemory::Scratch { main, .. }
-                | HashMemory::Monarch { main, .. } => {
-                    main.static_energy_nj(cycles)
-                }
-            };
-            StringReport {
-                system: mem.label(),
-                cycles,
-                matches,
-                energy_nj: nj + main_static,
-                counters,
-            }
-        }
+        timelines.iter_mut().map(|tl| tl.finish()).max().unwrap_or(0)
+    };
+    StringReport {
+        system: mem.label().to_string(),
+        cycles,
+        matches,
+        energy_nj: nj + mem.main_static_energy_nj(cycles),
+        counters,
     }
 }
 
@@ -220,6 +169,7 @@ pub fn run_string_match(
 mod tests {
     use super::*;
     use crate::config::MonarchGeom;
+    use crate::device::assoc;
 
     fn geom() -> MonarchGeom {
         MonarchGeom {
@@ -234,7 +184,12 @@ mod tests {
     }
 
     fn cfg() -> StringMatchConfig {
-        StringMatchConfig { corpus_words: 1 << 13, targets: 4, threads: 4, seed: 3 }
+        StringMatchConfig {
+            corpus_words: 1 << 13,
+            targets: 4,
+            threads: 4,
+            seed: 3,
+        }
     }
 
     #[test]
@@ -249,8 +204,8 @@ mod tests {
     fn monarch_finds_all_planted_targets() {
         let c = cfg();
         let cam_sets = c.corpus_words / 512 + 1;
-        let mut m = HashMemory::monarch(geom(), cam_sets);
-        let r = run_string_match(&mut m, &c);
+        let mut m = assoc::monarch(geom(), cam_sets);
+        let r = run_string_match(m.as_mut(), &c);
         assert!(r.matches >= c.targets as u64, "matches={}", r.matches);
         assert!(r.counters.get("searches") > 0);
     }
@@ -262,12 +217,12 @@ mod tests {
         let c = StringMatchConfig { targets: 16, ..cfg() };
         let corpus_bytes = c.corpus_words * 8;
         let cam_sets = c.corpus_words / 512 + 1;
-        let mut m = HashMemory::monarch(geom(), cam_sets);
-        let rm = run_string_match(&mut m, &c);
-        let mut h = HashMemory::hbm_sp(corpus_bytes * 2);
-        let rh = run_string_match(&mut h, &c);
-        let mut hc = HashMemory::hbm_c(corpus_bytes / 4);
-        let rhc = run_string_match(&mut hc, &c);
+        let mut m = assoc::monarch(geom(), cam_sets);
+        let rm = run_string_match(m.as_mut(), &c);
+        let mut h = assoc::hbm_sp(corpus_bytes * 2);
+        let rh = run_string_match(h.as_mut(), &c);
+        let mut hc = assoc::hbm_c(corpus_bytes / 4);
+        let rhc = run_string_match(hc.as_mut(), &c);
         assert!(
             rm.speedup_vs(&rh) > 1.0,
             "monarch {} vs hbm-sp {}",
@@ -287,16 +242,16 @@ mod tests {
         let corpus_bytes = c1.corpus_words * 8;
         let cam_sets = c1.corpus_words / 512 + 1;
         let s1 = {
-            let mut m = HashMemory::monarch(geom(), cam_sets);
-            let mut b = HashMemory::hbm_sp(corpus_bytes * 2);
-            run_string_match(&mut m, &c1)
-                .speedup_vs(&run_string_match(&mut b, &c1))
+            let mut m = assoc::monarch(geom(), cam_sets);
+            let mut b = assoc::hbm_sp(corpus_bytes * 2);
+            run_string_match(m.as_mut(), &c1)
+                .speedup_vs(&run_string_match(b.as_mut(), &c1))
         };
         let s8 = {
-            let mut m = HashMemory::monarch(geom(), cam_sets);
-            let mut b = HashMemory::hbm_sp(corpus_bytes * 2);
-            run_string_match(&mut m, &c8)
-                .speedup_vs(&run_string_match(&mut b, &c8))
+            let mut m = assoc::monarch(geom(), cam_sets);
+            let mut b = assoc::hbm_sp(corpus_bytes * 2);
+            run_string_match(m.as_mut(), &c8)
+                .speedup_vs(&run_string_match(b.as_mut(), &c8))
         };
         assert!(s8 > s1, "amortized copy: {s8} vs {s1}");
     }

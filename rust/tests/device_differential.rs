@@ -1,0 +1,384 @@
+//! Differential tests for the `device` trait redesign.
+//!
+//! The batched associative ops (`search_many`, `lookup_many`) promise
+//! to be *sequential-equivalent*: same completion cycles, same hits,
+//! same energy, same controller stats as issuing the scalar calls one
+//! by one — only the functional match evaluation is hoisted into one
+//! batch. These properties pin that promise on the pure-rust fallback
+//! path (no artifacts needed), and the report-level tests pin that
+//! trait-dispatch + batching leaves `SimReport`/`HashReport`
+//! bit-identical across construction paths and batching modes.
+
+use monarch::config::{InPackageKind, MonarchGeom, SystemConfig};
+use monarch::device::{
+    assoc, AssocDevice, AssocSpec, CamLookup, DeviceBuilder, MonarchAssoc,
+    SearchHit, SearchOp,
+};
+use monarch::mem::dram_cache::TechCache;
+use monarch::prop_assert;
+use monarch::sim::System;
+use monarch::util::prop::{check, Gen};
+use monarch::workloads::hashing::{run_ycsb, YcsbConfig};
+use monarch::workloads::SyntheticStream;
+
+fn small_geom() -> MonarchGeom {
+    MonarchGeom {
+        vaults: 4,
+        banks_per_vault: 8,
+        supersets_per_bank: 8,
+        sets_per_superset: 8,
+        rows_per_set: 64,
+        cols_per_set: 512,
+        layers: 1,
+    }
+}
+
+/// Two identically-populated Monarch assoc devices.
+fn twin_devices(g: &mut Gen, cam_sets: usize) -> (MonarchAssoc, MonarchAssoc) {
+    let mut a = MonarchAssoc::new(small_geom(), cam_sets);
+    let mut b = MonarchAssoc::new(small_geom(), cam_sets);
+    let writes = 8 + g.int(64);
+    for _ in 0..writes {
+        let set = g.int(cam_sets);
+        let col = g.int(512);
+        let word = g.u64() | 1;
+        let _ = a.cam_write(set, col, word, 0);
+        let _ = b.cam_write(set, col, word, 0);
+    }
+    (a, b)
+}
+
+/// The scalar reference: the documented semantics of `search_many`,
+/// spelled out with per-op `write_key`/`write_mask`/`search` calls
+/// (this is also what the trait's provided default does).
+fn sequential_search_many(
+    dev: &mut MonarchAssoc,
+    ops: &[SearchOp],
+) -> Vec<SearchHit> {
+    ops.iter()
+        .map(|op| {
+            let ka = dev.write_key(op.key, op.at);
+            let ma = dev.write_mask(op.mask, ka.done_at);
+            let (a, hit) = dev.search(op.set, ma.done_at);
+            SearchHit {
+                done_at: a.done_at,
+                col: hit,
+                energy_nj: ka.energy_nj + ma.energy_nj + a.energy_nj,
+            }
+        })
+        .collect()
+}
+
+fn same_state(a: &MonarchAssoc, b: &MonarchAssoc) -> Result<(), String> {
+    let (fa, fb) = (a.flat(), b.flat());
+    if fa.keymask() != fb.keymask() {
+        return Err(format!(
+            "registers diverged: {:?} vs {:?}",
+            fa.keymask(),
+            fb.keymask()
+        ));
+    }
+    let sa: Vec<_> = fa.stats.iter().collect();
+    let sb: Vec<_> = fb.stats.iter().collect();
+    if sa != sb {
+        return Err(format!("stats diverged: {sa:?} vs {sb:?}"));
+    }
+    if fa.energy_nj != fb.energy_nj {
+        return Err(format!(
+            "internal energy diverged: {} vs {}",
+            fa.energy_nj, fb.energy_nj
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_search_many_equals_sequential_searches() {
+    check("search_many_vs_sequential", 40, |g: &mut Gen| {
+        let cam_sets = 2 + g.int(14);
+        let (mut batched, mut scalar) = twin_devices(g, cam_sets);
+        // a small key pool so repeated keys exercise the register
+        // dedup and match-register latch paths
+        let pool = g.vec_u64(1 + g.int(4));
+        // plant one pool key so hits (and the match-register latch on
+        // repeated hits) occur
+        let (pset, pcol) = (g.int(cam_sets), g.int(512));
+        let _ = batched.cam_write(pset, pcol, pool[0], 0);
+        let _ = scalar.cam_write(pset, pcol, pool[0], 0);
+        let n_ops = 1 + g.int(24);
+        let mut ops = Vec::with_capacity(n_ops);
+        let mut at = 1000u64;
+        for _ in 0..n_ops {
+            at += g.u64() % 500;
+            ops.push(SearchOp {
+                set: g.int(cam_sets),
+                key: pool[g.int(pool.len()).min(pool.len() - 1)],
+                mask: if g.int(3) == 0 { 0xFFFF } else { !0 },
+                at,
+            });
+        }
+        let got = batched.search_many(&ops);
+        let want = sequential_search_many(&mut scalar, &ops);
+        prop_assert!(got == want, "results diverged: {got:?} vs {want:?}");
+        same_state(&batched, &scalar)
+    });
+}
+
+#[test]
+fn prop_lookup_many_equals_scalar_sequence() {
+    check("lookup_many_vs_scalar", 30, |g: &mut Gen| {
+        let cam_sets = 2 + g.int(14);
+        let (mut batched, mut scalar) = twin_devices(g, cam_sets);
+        let n = 1 + g.int(12);
+        let mut lookups = Vec::with_capacity(n);
+        let mut at = 500u64;
+        for _ in 0..n {
+            at += g.u64() % 300;
+            let set0 = g.int(cam_sets);
+            let set1 =
+                if g.int(2) == 0 { set0 } else { (set0 + 1) % cam_sets };
+            lookups.push(CamLookup {
+                key: g.u64() | 1,
+                mask: !0,
+                set0,
+                set1,
+                value_block: g.u64() % 4096,
+                fetch_value_on_miss: g.int(3) == 0,
+                at,
+            });
+        }
+        let got = batched.lookup_many(&lookups);
+        // scalar reference: the trait's provided default, spelled out
+        let want: Vec<_> = lookups
+            .iter()
+            .map(|l| {
+                let ka = scalar.write_key(l.key, l.at);
+                let ma = scalar.write_mask(l.mask, ka.done_at);
+                let (a, mut hit) = scalar.search(l.set0, ma.done_at);
+                let mut e = ka.energy_nj + ma.energy_nj + a.energy_nj;
+                let mut t = a.done_at;
+                if hit.is_none() && l.set1 != l.set0 {
+                    let (a2, h2) = scalar.search(l.set1, t);
+                    e += a2.energy_nj;
+                    t = a2.done_at;
+                    hit = h2;
+                }
+                if hit.is_some() || l.fetch_value_on_miss {
+                    if let Some(va) = scalar.ram_access(l.value_block, false, t)
+                    {
+                        e += va.energy_nj;
+                        t = va.done_at;
+                    }
+                }
+                (t, hit.is_some(), e)
+            })
+            .collect();
+        prop_assert!(got.len() == want.len(), "length mismatch");
+        for (o, w) in got.iter().zip(&want) {
+            prop_assert!(
+                o.done_at == w.0 && o.hit == w.1 && o.energy_nj == w.2,
+                "lookup diverged: {o:?} vs {w:?}"
+            );
+        }
+        same_state(&batched, &scalar)
+    });
+}
+
+/// Delegating wrapper that deliberately does NOT override the batched
+/// ops, so the trait's provided (scalar) defaults run — the unbatched
+/// reference for whole-driver differentials.
+struct SequentialOnly(MonarchAssoc);
+
+impl AssocDevice for SequentialOnly {
+    fn label(&self) -> &str {
+        self.0.label()
+    }
+    fn static_watts(&self) -> f64 {
+        self.0.static_watts()
+    }
+    fn access(&mut self, addr: u64, write: bool, at: u64)
+        -> monarch::mem::Access {
+        self.0.access(addr, write, at)
+    }
+    fn main_access(&mut self, addr: u64, write: bool, at: u64)
+        -> monarch::mem::Access {
+        self.0.main_access(addr, write, at)
+    }
+    fn main_static_energy_nj(&self, cycles: u64) -> f64 {
+        self.0.main_static_energy_nj(cycles)
+    }
+    fn cam(&self) -> Option<monarch::device::CamGeom> {
+        self.0.cam()
+    }
+    fn write_key(&mut self, key: u64, at: u64) -> monarch::mem::Access {
+        self.0.write_key(key, at)
+    }
+    fn write_mask(&mut self, mask: u64, at: u64) -> monarch::mem::Access {
+        self.0.write_mask(mask, at)
+    }
+    fn search(&mut self, set: usize, at: u64)
+        -> (monarch::mem::Access, Option<usize>) {
+        self.0.search(set, at)
+    }
+    fn cam_write(&mut self, set: usize, col: usize, word: u64, at: u64)
+        -> Option<monarch::mem::Access> {
+        self.0.cam_write(set, col, word, at)
+    }
+    fn ram_access(&mut self, block: u64, write: bool, at: u64)
+        -> Option<monarch::mem::Access> {
+        self.0.ram_access(block, write, at)
+    }
+    fn drain_energy_nj(&mut self) -> f64 {
+        self.0.drain_energy_nj()
+    }
+    fn reset_timing(&mut self) {
+        self.0.reset_timing();
+    }
+    fn monarch_flat(&self) -> Option<&monarch::monarch::MonarchFlat> {
+        self.0.monarch_flat()
+    }
+}
+
+#[test]
+fn ycsb_batched_run_bit_identical_to_unbatched() {
+    // The whole-driver differential: run_ycsb with the batched device
+    // (one functional evaluation per lookup batch) must produce a
+    // bit-identical HashReport to the same driver over a device that
+    // only offers the scalar ops.
+    for read_pct in [1.0, 0.95, 0.75] {
+        let cfg = YcsbConfig {
+            table_pow2: 12,
+            window: 64, // > 512-column alignment: windows cross sets
+            ops: 4000,
+            read_pct,
+            threads: 8,
+            ..Default::default()
+        };
+        let cam_sets = (1usize << cfg.table_pow2) / 512 + 1;
+        let mut batched = MonarchAssoc::new(small_geom(), cam_sets);
+        let mut scalar =
+            SequentialOnly(MonarchAssoc::new(small_geom(), cam_sets));
+        let rb = run_ycsb(&mut batched, &cfg);
+        let rs = run_ycsb(&mut scalar, &cfg);
+        assert_eq!(rb.cycles, rs.cycles, "cycles @ {read_pct}");
+        assert_eq!(rb.hits, rs.hits, "hits @ {read_pct}");
+        assert_eq!(rb.ops, rs.ops);
+        assert_eq!(rb.rehashes, rs.rehashes);
+        assert_eq!(
+            rb.energy_nj.to_bits(),
+            rs.energy_nj.to_bits(),
+            "energy must be bit-identical @ {read_pct}"
+        );
+        let cb: Vec<_> = rb.counters.iter().collect();
+        let cs: Vec<_> = rs.counters.iter().collect();
+        assert_eq!(cb, cs, "driver counters @ {read_pct}");
+        let fb: Vec<_> =
+            batched.flat().stats.iter().collect();
+        let fs: Vec<_> =
+            scalar.0.flat().stats.iter().collect();
+        assert_eq!(fb, fs, "controller stats @ {read_pct}");
+    }
+}
+
+#[test]
+fn hash_report_identical_across_builder_and_direct_construction() {
+    let cfg = YcsbConfig {
+        table_pow2: 12,
+        window: 32,
+        ops: 2500,
+        ..Default::default()
+    };
+    let geom = small_geom();
+    let cam_sets = (1usize << cfg.table_pow2) / 512 + 1;
+    let spec = AssocSpec {
+        kind: InPackageKind::Monarch { m: 3 },
+        capacity_bytes: 0,
+        geom,
+        cam_sets,
+    };
+    let mut via_registry = DeviceBuilder::new().build_assoc(&spec);
+    let mut direct = assoc::monarch(geom, cam_sets);
+    let rr = run_ycsb(via_registry.as_mut(), &cfg);
+    let rd = run_ycsb(direct.as_mut(), &cfg);
+    assert_eq!(rr.system, rd.system);
+    assert_eq!(rr.cycles, rd.cycles);
+    assert_eq!(rr.hits, rd.hits);
+    assert_eq!(rr.energy_nj.to_bits(), rd.energy_nj.to_bits());
+}
+
+#[test]
+fn sim_report_identical_across_builder_and_direct_construction() {
+    let mk_wl = || SyntheticStream::zipfian(4, 8000, 1 << 21, 0.9, 0.2, 42);
+    let cfg = SystemConfig::scaled(InPackageKind::DramCache, 1.0 / 4096.0);
+    let mut via_registry = System::build(cfg.clone());
+    let r1 = via_registry.run(&mut mk_wl(), u64::MAX);
+    let dev = Box::new(TechCache::dram(cfg.inpkg_dram_bytes));
+    let mut direct = System::with_device(cfg, dev);
+    let r2 = direct.run(&mut mk_wl(), u64::MAX);
+    assert_eq!(r1.system, r2.system);
+    assert_eq!(r1.cycles, r2.cycles);
+    assert_eq!(r1.mem_ops, r2.mem_ops);
+    assert_eq!(r1.energy_nj.to_bits(), r2.energy_nj.to_bits());
+    let c1: Vec<_> = r1.counters.iter().collect();
+    let c2: Vec<_> = r2.counters.iter().collect();
+    assert_eq!(c1, c2);
+}
+
+#[test]
+fn monarch_cache_mode_deterministic_under_trait_dispatch() {
+    let run = || {
+        let cfg =
+            SystemConfig::scaled(InPackageKind::Monarch { m: 3 }, 1.0 / 4096.0);
+        let mut sys = System::build(cfg);
+        let mut wl = SyntheticStream::zipfian(4, 8000, 1 << 21, 0.9, 0.2, 7);
+        let r = sys.run(&mut wl, u64::MAX);
+        (r.cycles, r.rotations, r.energy_nj.to_bits())
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn engine_attached_device_matches_fallback_device() {
+    // When compiled artifacts (and the `pjrt` feature) are available,
+    // a device with the kernel attached must produce bit-identical
+    // results to the pure-rust fallback device; otherwise this skips.
+    let Some(engine) = monarch::runtime::SearchEngine::load_or_none() else {
+        return;
+    };
+    let mut g = Gen::new(0xC0DE, 256);
+    let cam_sets = 8;
+    let (mut with_engine, mut fallback) = twin_devices(&mut g, cam_sets);
+    with_engine.attach_engine(std::rc::Rc::new(engine));
+    let key = with_engine.flat().set_array(3).read_col(17);
+    let wave: Vec<SearchOp> =
+        (0..cam_sets).map(|s| SearchOp::at(s, key, !0, 5_000)).collect();
+    let got = with_engine.search_many(&wave);
+    let want = fallback.search_many(&wave);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn search_many_wave_matches_individual_searches() {
+    // stringmatch-style wave: same key/mask across many sets, all
+    // issued at the same cycle
+    let cam_sets = 12;
+    let (mut batched, mut scalar) = {
+        let mut g = Gen::new(0xBEE5, 256);
+        twin_devices(&mut g, cam_sets)
+    };
+    let key = 0xFACE_B00C_0000_0001u64;
+    let _ = batched.cam_write(7, 321, key, 0);
+    let _ = scalar.cam_write(7, 321, key, 0);
+    let wave: Vec<SearchOp> =
+        (0..cam_sets).map(|s| SearchOp::at(s, key, !0, 10_000)).collect();
+    let got = batched.search_many(&wave);
+    let want = sequential_search_many(&mut scalar, &wave);
+    assert_eq!(got, want);
+    let hits: Vec<usize> = got
+        .iter()
+        .enumerate()
+        .filter(|(_, h)| h.col.is_some())
+        .map(|(i, _)| i)
+        .collect();
+    assert_eq!(hits, vec![7], "only the planted set matches");
+}
