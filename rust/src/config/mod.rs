@@ -102,6 +102,13 @@ pub enum InPackageKind {
     MonarchUnbound,
     /// Monarch with t_MWW enforced; `m` = writes allowed per window.
     Monarch { m: u32 },
+    /// Monarch partitioned across `shards` independent vault-group
+    /// controllers (own key/mask registers, wear leveler and bank
+    /// timing each); t_MWW enforced with `m` writes per window.
+    /// Software-managed (flat/assoc) path only: sharding is about the
+    /// flat-CAM register pairs, so no cache-mode backend registers for
+    /// this kind — `DeviceBuilder::build_cache` rejects it loudly.
+    MonarchSharded { shards: usize, m: u32 },
     /// Monarch in pure flat-RAM mode (paper's "RRAM" hashing baseline).
     MonarchFlatRam,
 }
@@ -116,6 +123,9 @@ impl InPackageKind {
             Self::RramUnbound => "RC-Unbound".into(),
             Self::MonarchUnbound => "M-Unbound".into(),
             Self::Monarch { m } => format!("Monarch(M={m})"),
+            Self::MonarchSharded { shards, m } => {
+                format!("Monarch(S={shards},M={m})")
+            }
             Self::MonarchFlatRam => "RRAM(flat)".into(),
         }
     }
@@ -123,7 +133,10 @@ impl InPackageKind {
     pub fn is_monarch(&self) -> bool {
         matches!(
             self,
-            Self::MonarchUnbound | Self::Monarch { .. } | Self::MonarchFlatRam
+            Self::MonarchUnbound
+                | Self::Monarch { .. }
+                | Self::MonarchSharded { .. }
+                | Self::MonarchFlatRam
         )
     }
 }

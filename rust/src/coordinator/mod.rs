@@ -4,12 +4,13 @@
 //! here, so every published artifact is regenerable from one place
 //! (DESIGN.md §4 experiment index).
 
-use std::sync::Mutex;
-
 use crate::config::{InPackageKind, MonarchGeom, SystemConfig};
-use crate::device::{assoc, AssocDevice, AssocSpec, DeviceBuilder};
+use crate::device::{
+    AssocDevice, AssocSpec, DeviceBuilder, SearchOp, ShardedAssoc,
+};
 use crate::monarch::{LifetimeEstimator, LifetimeReport};
 use crate::sim::{SimReport, System};
+use crate::util::pool::fan_out;
 use crate::util::stats::geomean;
 use crate::util::table::{x, Table};
 use crate::workloads::hashing::{run_ycsb, HashReport, YcsbConfig};
@@ -96,42 +97,25 @@ pub fn cache_workloads(budget: &Budget) -> Vec<TraceWorkload> {
 
 /// One full Fig 9/10 sweep: every workload on every system.
 /// Returns `results[workload][system]` in the orders of
-/// `cache_workloads` / `fig9_systems`. Runs fan out over OS threads.
+/// `cache_workloads` / `fig9_systems`. Runs fan out over OS threads
+/// via [`fan_out`].
 pub fn run_cache_mode(budget: &Budget) -> Vec<Vec<SimReport>> {
     let workloads = cache_workloads(budget);
     let systems = fig9_systems();
-    let n_wl = workloads.len();
     let n_sys = systems.len();
-    let results: Mutex<Vec<Vec<Option<SimReport>>>> =
-        Mutex::new(vec![vec![None; n_sys]; n_wl]);
-    let jobs: Vec<(usize, usize)> = (0..n_wl)
-        .flat_map(|w| (0..n_sys).map(move |s| (w, s)))
-        .collect();
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let workers = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4)
-        .min(jobs.len().max(1));
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i =
-                    next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                let Some(&(w, s)) = jobs.get(i) else { break };
-                let mut wl = workloads[w].replay();
-                let cfg = SystemConfig::scaled(systems[s], budget.scale);
-                let mut sys = System::build(cfg);
-                let report = sys.run(&mut wl, u64::MAX);
-                results.lock().unwrap()[w][s] = Some(report);
-            });
-        }
+    let flat = fan_out(workloads.len() * n_sys, |i| {
+        let (w, s) = (i / n_sys, i % n_sys);
+        let mut wl = workloads[w].replay();
+        let cfg = SystemConfig::scaled(systems[s], budget.scale);
+        let mut sys = System::build(cfg);
+        sys.run(&mut wl, u64::MAX)
     });
-    results
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|row| row.into_iter().map(|r| r.unwrap()).collect())
-        .collect()
+    let mut out: Vec<Vec<SimReport>> = Vec::with_capacity(workloads.len());
+    let mut it = flat.into_iter();
+    for _ in 0..workloads.len() {
+        out.push(it.by_ref().take(n_sys).collect());
+    }
+    out
 }
 
 /// Fig 9 table: speedup over D-Cache per workload, plus the geomean
@@ -194,9 +178,8 @@ pub fn fig10_table(results: &[Vec<SimReport>]) -> Table {
 /// leveling, from the recorded rotation snapshots (§10.3 methodology).
 pub fn fig11_lifetimes(budget: &Budget) -> Vec<(String, LifetimeReport)> {
     let workloads = cache_workloads(budget);
-    let mut out = Vec::new();
-    for wl in &workloads {
-        let mut replay = wl.replay();
+    fan_out(workloads.len(), |i| {
+        let mut replay = workloads[i].replay();
         let cfg =
             SystemConfig::scaled(InPackageKind::Monarch { m: 3 }, budget.scale);
         let mut sys = System::build(cfg);
@@ -220,16 +203,15 @@ pub fn fig11_lifetimes(budget: &Budget) -> Vec<(String, LifetimeReport)> {
                 Some(w) => w,
             });
         }
-        out.push((
+        (
             report.workload.clone(),
             worst.unwrap_or(LifetimeReport {
                 ideal_years: f64::INFINITY,
                 monarch_years: f64::INFINITY,
                 imbalance: 1.0,
             }),
-        ));
-    }
-    out
+        )
+    })
 }
 
 /// The hashing systems of Figs 12-14, paper order (relative to
@@ -251,6 +233,16 @@ pub fn hash_systems_with(
     table_pow2: usize,
     geom: MonarchGeom,
 ) -> Vec<Box<dyn AssocDevice>> {
+    hash_system_specs(table_pow2, geom)
+        .iter()
+        .map(|s| builder.build_assoc(s))
+        .collect()
+}
+
+/// The capacity policy of the five hashing systems (paper order);
+/// the single source of truth for both [`hash_systems_with`] and the
+/// per-cell jobs of [`hash_figure_with`].
+fn hash_system_specs(table_pow2: usize, geom: MonarchGeom) -> Vec<AssocSpec> {
     let table_bytes = (1usize << table_pow2) * 24;
     let cam_sets = ((1usize << table_pow2) / 512 + 1)
         .min(geom.vaults * geom.banks_per_vault * geom.supersets_per_bank * 8);
@@ -260,56 +252,80 @@ pub fn hash_systems_with(
         geom,
         cam_sets,
     };
-    vec![
-        builder.build_assoc(&spec(
-            InPackageKind::DramCache,
-            table_bytes.max(1 << 16),
-        )),
-        builder.build_assoc(&spec(
-            InPackageKind::DramScratchpad,
-            table_bytes.max(1 << 16),
-        )),
+    let specs = vec![
+        spec(InPackageKind::DramCache, table_bytes.max(1 << 16)),
+        spec(InPackageKind::DramScratchpad, table_bytes.max(1 << 16)),
         // iso-area CMOS is ~100x smaller: overflow spills to DDR
-        builder.build_assoc(&spec(
-            InPackageKind::Sram,
-            (table_bytes / 8).max(1 << 14),
-        )),
-        builder.build_assoc(&spec(
-            InPackageKind::MonarchFlatRam,
-            2 * table_bytes.max(1 << 16),
-        )),
-        builder.build_assoc(&spec(InPackageKind::Monarch { m: 3 }, 0)),
-    ]
+        spec(InPackageKind::Sram, (table_bytes / 8).max(1 << 14)),
+        spec(InPackageKind::MonarchFlatRam, 2 * table_bytes.max(1 << 16)),
+        spec(InPackageKind::Monarch { m: 3 }, 0),
+    ];
+    debug_assert_eq!(specs.len(), N_HASH_SYSTEMS);
+    specs
 }
 
+/// Number of systems `hash_system_specs` describes (paper order).
+const N_HASH_SYSTEMS: usize = 5;
+
 /// One hashing figure (12/13/14): sweep table sizes and window sizes
-/// at a fixed read percentage; report speedup over HBM-C.
+/// at a fixed read percentage; report speedup over HBM-C. Every
+/// (point, system) cell fans out as its own job.
 pub fn hash_figure(
     budget: &Budget,
     read_pct: f64,
     windows: &[usize],
     table_pow2s: &[usize],
 ) -> Vec<(usize, usize, Vec<HashReport>)> {
+    hash_figure_with(
+        &DeviceBuilder::new,
+        budget,
+        read_pct,
+        windows,
+        table_pow2s,
+    )
+}
+
+/// [`hash_figure`] with every device built through a caller-supplied
+/// builder factory — the registry path, so custom backends and an
+/// attached PJRT engine reach the sweep. A *factory* rather than a
+/// builder because jobs run on worker threads and a builder may hold
+/// thread-local state (an `Rc`'d engine): each job constructs its own.
+pub fn hash_figure_with<F>(
+    mk_builder: &F,
+    budget: &Budget,
+    read_pct: f64,
+    windows: &[usize],
+    table_pow2s: &[usize],
+) -> Vec<(usize, usize, Vec<HashReport>)>
+where
+    F: Fn() -> DeviceBuilder + Sync,
+{
     let geom = MonarchGeom::FULL.scaled(budget.scale * 4.0);
-    let mut out = Vec::new();
-    for &w in windows {
-        for &tp in table_pow2s {
-            let cfg = YcsbConfig {
-                table_pow2: tp,
-                window: w,
-                ops: budget.hash_ops,
-                read_pct,
-                prefill_density: 0.5,
-                threads: 8,
-                zipf_theta: 0.99,
-                seed: budget.seed,
-            };
-            let mut reports = Vec::new();
-            for mut sys in hash_systems(tp, geom) {
-                reports.push(run_ycsb(sys.as_mut(), &cfg));
-            }
-            out.push((w, tp, reports));
-        }
+    let points: Vec<(usize, usize)> = windows
+        .iter()
+        .flat_map(|&w| table_pow2s.iter().map(move |&tp| (w, tp)))
+        .collect();
+    let flat = fan_out(points.len() * N_HASH_SYSTEMS, |i| {
+        let (p, s) = (i / N_HASH_SYSTEMS, i % N_HASH_SYSTEMS);
+        let (w, tp) = points[p];
+        let cfg = YcsbConfig {
+            table_pow2: tp,
+            window: w,
+            ops: budget.hash_ops,
+            read_pct,
+            prefill_density: 0.5,
+            threads: 8,
+            zipf_theta: 0.99,
+            seed: budget.seed,
+        };
+        let spec = hash_system_specs(tp, geom).swap_remove(s);
+        let mut dev = mk_builder().build_assoc(&spec);
+        run_ycsb(dev.as_mut(), &cfg)
+    });
+    let mut out = Vec::with_capacity(points.len());
+    let mut it = flat.into_iter();
+    for &(w, tp) in &points {
+        out.push((w, tp, it.by_ref().take(N_HASH_SYSTEMS).collect()));
     }
     out
 }
@@ -339,6 +355,21 @@ pub fn hash_table(
 
 /// §10.5 string match across the five systems.
 pub fn stringmatch_reports(budget: &Budget) -> Vec<StringReport> {
+    stringmatch_reports_with(&DeviceBuilder::new, budget)
+}
+
+/// [`stringmatch_reports`] through the backend registry (one fanned-
+/// out job per system), so `--pjrt` engines and custom backends reach
+/// this sweep too. Capacity policy (iso-area CMOS ~8x smaller, the L4
+/// half-sized, scratchpads double-sized) is experiment policy and
+/// stays here.
+pub fn stringmatch_reports_with<F>(
+    mk_builder: &F,
+    budget: &Budget,
+) -> Vec<StringReport>
+where
+    F: Fn() -> DeviceBuilder + Sync,
+{
     let cfg = StringMatchConfig {
         corpus_words: (1usize << 16).max(budget.hash_ops),
         targets: 24,
@@ -348,14 +379,126 @@ pub fn stringmatch_reports(budget: &Budget) -> Vec<StringReport> {
     let corpus_bytes = cfg.corpus_words * 8;
     let geom = MonarchGeom::FULL.scaled(budget.scale * 8.0);
     let cam_sets = cfg.corpus_words / 512 + 1;
-    let mut systems = vec![
-        assoc::hbm_c(corpus_bytes / 2),
-        assoc::hbm_sp(corpus_bytes * 2),
-        assoc::cmos(corpus_bytes / 8),
-        assoc::rram_flat(corpus_bytes * 2),
-        assoc::monarch(geom, cam_sets),
+    let systems: Vec<(InPackageKind, usize)> = vec![
+        (InPackageKind::DramCache, corpus_bytes / 2),
+        (InPackageKind::DramScratchpad, corpus_bytes * 2),
+        (InPackageKind::Sram, corpus_bytes / 8),
+        (InPackageKind::MonarchFlatRam, corpus_bytes * 2),
+        (InPackageKind::Monarch { m: 3 }, 0),
     ];
-    systems.iter_mut().map(|s| run_string_match(s.as_mut(), &cfg)).collect()
+    fan_out(systems.len(), |i| {
+        let (kind, capacity_bytes) = systems[i];
+        let spec = AssocSpec { kind, capacity_bytes, geom, cam_sets };
+        let mut dev = mk_builder().build_assoc(&spec);
+        run_string_match(dev.as_mut(), &cfg)
+    })
+}
+
+/// One measured point of the shard-count sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardSweepPoint {
+    pub shards: usize,
+    pub ops: u64,
+    pub cycles: u64,
+    /// Batched searches retired per thousand cycles.
+    pub searches_per_kcycle: f64,
+}
+
+/// Drive one sharded device with `total_ops` distinct-key searches,
+/// software-pipelined one-deep per shard: a controller's key register
+/// cannot be overwritten while its in-flight search still needs it,
+/// so the driver keeps exactly one search outstanding per register
+/// pair — `shards` independent chains. Every round is one
+/// `search_many` batch (one functional evaluation per shard).
+/// Returns (ops retired, cycles to drain).
+fn drive_shard_chains(dev: &mut ShardedAssoc, total_ops: usize) -> (u64, u64) {
+    let nshards = dev.num_shards();
+    let nsets = dev.cam().expect("sharded device has a CAM").num_sets;
+    let mut sets_of: Vec<Vec<usize>> = vec![Vec::new(); nshards];
+    for g in 0..nsets {
+        sets_of[dev.shard_of_set(g)].push(g);
+    }
+    let mut remaining: Vec<usize> = (0..nshards)
+        .map(|s| total_ops / nshards + usize::from(s < total_ops % nshards))
+        .collect();
+    let mut ready = vec![0u64; nshards];
+    let mut rotate = vec![0usize; nshards];
+    let mut key = 0u64;
+    let mut done_ops = 0u64;
+    let mut last_done = 0u64;
+    loop {
+        let mut wave: Vec<SearchOp> = Vec::with_capacity(nshards);
+        let mut wave_shard: Vec<usize> = Vec::with_capacity(nshards);
+        for s in 0..nshards {
+            if remaining[s] == 0 || sets_of[s].is_empty() {
+                continue;
+            }
+            let set = sets_of[s][rotate[s] % sets_of[s].len()];
+            rotate[s] += 1;
+            remaining[s] -= 1;
+            key += 1;
+            // distinct keys: every op rewrites its shard's register
+            // pair — the traffic ONE shared pair would serialize
+            wave.push(SearchOp::at(set, (key << 1) | 1, !0, ready[s]));
+            wave_shard.push(s);
+        }
+        if wave.is_empty() {
+            break;
+        }
+        for (hit, &s) in dev.search_many(&wave).iter().zip(&wave_shard) {
+            ready[s] = hit.done_at;
+            last_done = last_done.max(hit.done_at);
+            done_ops += 1;
+        }
+    }
+    (done_ops, last_done)
+}
+
+/// The shard-count sweep (`monarch shards` / the `sharded_scaling`
+/// bench): batched `search_many` throughput of `ShardedAssoc` as the
+/// package's vaults are grouped into 1..=vaults controllers, at the
+/// budget's default geometry. Points fan out as independent jobs.
+pub fn sharded_sweep(
+    budget: &Budget,
+    shard_counts: &[usize],
+) -> Vec<ShardSweepPoint> {
+    let geom = MonarchGeom::FULL.scaled(budget.scale * 4.0);
+    let cam_sets = 64;
+    let ops = budget.hash_ops.max(64);
+    fan_out(shard_counts.len(), |i| {
+        let shards = shard_counts[i];
+        let mut dev = ShardedAssoc::bounded(geom, cam_sets, shards, 3);
+        // plant one word per set so some searches hit
+        for set in 0..cam_sets {
+            let word = 0x5EED_0000 + set as u64;
+            let _ = dev.cam_write(set, set % geom.cols_per_set, word, 0);
+        }
+        dev.reset_timing();
+        let (done_ops, cycles) = drive_shard_chains(&mut dev, ops);
+        ShardSweepPoint {
+            shards: dev.num_shards(),
+            ops: done_ops,
+            cycles,
+            searches_per_kcycle: 1000.0 * done_ops as f64
+                / cycles.max(1) as f64,
+        }
+    })
+}
+
+pub fn shard_table(points: &[ShardSweepPoint]) -> Table {
+    let mut t = Table::new(
+        "Shard sweep — batched search_many throughput vs controllers",
+    )
+    .header(vec!["shards", "ops", "cycles", "searches/kcycle"]);
+    for p in points {
+        t.row(vec![
+            p.shards.to_string(),
+            p.ops.to_string(),
+            p.cycles.to_string(),
+            format!("{:.2}", p.searches_per_kcycle),
+        ]);
+    }
+    t
 }
 
 #[cfg(test)]
@@ -399,5 +542,26 @@ mod tests {
         assert_eq!(rows[0].2.len(), 5);
         let t = hash_table("Fig 13", &rows);
         assert!(t.render().contains("Monarch"));
+    }
+
+    #[test]
+    fn shard_sweep_throughput_is_monotonic() {
+        // the acceptance gate: batched search_many throughput improves
+        // monotonically from one controller to >= 4
+        let budget = Budget { hash_ops: 512, ..Budget::quick() };
+        let pts = sharded_sweep(&budget, &[1, 2, 4]);
+        assert_eq!(pts.len(), 3);
+        for p in &pts {
+            assert_eq!(p.ops, 512);
+            assert!(p.cycles > 0);
+        }
+        for w in pts.windows(2) {
+            assert!(
+                w[1].searches_per_kcycle > w[0].searches_per_kcycle,
+                "sharding must scale throughput: {pts:?}"
+            );
+        }
+        let t = shard_table(&pts);
+        assert!(t.render().contains("searches/kcycle"));
     }
 }

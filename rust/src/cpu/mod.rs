@@ -66,16 +66,18 @@ impl ThreadTimeline {
         self.ops += cycles;
     }
 
-    /// Retire completed ops at the current time.
+    /// Retire completed ops at the current time. Completions are not
+    /// ordered by issue (banked memories finish out of order), and a
+    /// miss frees its window slot when it completes, not when the ops
+    /// ahead of it do — so every completed entry leaves, wherever it
+    /// sits in the queue. (The seed popped only from the front: after
+    /// a full-window stall advanced `now` to the *earliest* completion
+    /// a late front op kept the queue over-full, and the next `record`
+    /// pushed the window past `mlp`.)
     #[inline]
     fn retire(&mut self) {
-        while let Some(&front) = self.outstanding.front() {
-            if front <= self.now {
-                self.outstanding.pop_front();
-            } else {
-                break;
-            }
-        }
+        let now = self.now;
+        self.outstanding.retain(|&done| done > now);
     }
 
     /// Cycle at which the next memory op may issue (stalls when the
@@ -91,6 +93,12 @@ impl ThreadTimeline {
             self.retire();
         }
         self.now
+    }
+
+    /// Ops currently in flight (window occupancy; never exceeds `mlp`
+    /// after an `issue_at`).
+    pub fn in_flight(&self) -> usize {
+        self.outstanding.len()
     }
 
     /// Record an issued memory op completing at `done_at`.
@@ -147,6 +155,27 @@ mod tests {
         let at = t.issue_at(); // window full: wait for the 50
         assert_eq!(at, 50);
         assert_eq!(t.outstanding.len(), 1);
+    }
+
+    #[test]
+    fn out_of_order_completions_respect_mlp_bound() {
+        // Ops complete out of submission order: a late front op must
+        // not pin completed younger ops in the window. Regression: the
+        // seed's front-only retire let `record` push past `mlp` here.
+        let mut t = ThreadTimeline::new(2);
+        t.record(200); // front finishes LATE
+        t.record(50); // younger op finishes first
+        let at = t.issue_at(); // window full: stall to earliest = 50
+        assert_eq!(at, 50);
+        assert_eq!(t.in_flight(), 1, "the completed 50 must retire");
+        t.record(500);
+        assert!(t.in_flight() <= t.mlp, "window over-full: {}", t.in_flight());
+        // a third issue stalls on the 200, not on a phantom slot
+        let at = t.issue_at();
+        assert_eq!(at, 200);
+        t.record(600);
+        assert!(t.in_flight() <= t.mlp);
+        assert_eq!(t.finish(), 600);
     }
 
     #[test]

@@ -361,7 +361,7 @@ impl MonarchAssoc {
     }
 }
 
-fn eval_with_engine(
+pub(crate) fn eval_with_engine(
     engine: &SearchEngine,
     arrays: &[&XamArray],
     keys: &[u64],
@@ -640,4 +640,8 @@ pub(crate) const BUILTIN_ASSOC_BACKENDS: &[Entry] = &[
     (is_cmos, b_cmos),
     (is_rram_flat, b_rram_flat),
     (is_monarch, b_monarch),
+    (
+        crate::device::sharded::is_monarch_sharded,
+        crate::device::sharded::b_monarch_sharded,
+    ),
 ];

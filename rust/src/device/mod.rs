@@ -32,9 +32,11 @@
 
 pub mod assoc;
 pub mod cache;
+pub mod sharded;
 
 pub use assoc::{AssocDevice, CamGeom, CamLookup, CamLookupOut, MonarchAssoc};
 pub use cache::{CacheDevice, EvictOutcome, FillOutcome};
+pub use sharded::ShardedAssoc;
 
 use crate::config::{InPackageKind, MonarchGeom, SystemConfig};
 
@@ -205,6 +207,7 @@ mod tests {
             InPackageKind::MonarchFlatRam,
             InPackageKind::Monarch { m: 1 },
             InPackageKind::Monarch { m: 3 },
+            InPackageKind::MonarchSharded { shards: 4, m: 3 },
             InPackageKind::MonarchUnbound,
         ] {
             let spec = AssocSpec {

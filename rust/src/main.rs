@@ -6,15 +6,48 @@
 //! monarch fig11    lifetime (ideal WL vs Monarch M=3)
 //! monarch fig12|fig13|fig14   hashing at 100/95/75% lookups
 //! monarch stringmatch          §10.5
+//! monarch shards               shard-count throughput sweep
 //! monarch table1               technology comparison
 //! monarch selfcheck            load artifacts, kernel-vs-rust check
 //! ```
+//!
+//! `fig12`-`fig14` and `stringmatch` accept `--pjrt` to route every
+//! constructed backend through a `DeviceBuilder` with the compiled
+//! search kernel attached.
 
 use monarch::config::tech;
 use monarch::coordinator::{self, Budget};
+use monarch::device::DeviceBuilder;
 use monarch::prelude::*;
 use monarch::runtime::SearchEngine;
 use monarch::util::table::f;
+
+/// A builder factory for the fanned-out sweeps: each worker job
+/// constructs its own `DeviceBuilder`, attaching the PJRT engine when
+/// `--pjrt` is set (degrading silently to the pure-rust fallback when
+/// artifacts are absent). The engine is loaded once per worker thread
+/// — an `Rc` cannot cross threads, but jobs on the same worker share
+/// the cached load.
+fn builder_factory(pjrt: bool) -> impl Fn() -> DeviceBuilder + Sync {
+    use std::cell::OnceCell;
+    use std::rc::Rc;
+    thread_local! {
+        static ENGINE: OnceCell<Option<Rc<SearchEngine>>> = OnceCell::new();
+    }
+    move || {
+        let b = DeviceBuilder::new();
+        if pjrt {
+            let engine = ENGINE.with(|c| {
+                c.get_or_init(|| SearchEngine::load_or_none().map(Rc::new))
+                    .clone()
+            });
+            if let Some(e) = engine {
+                return b.with_search_engine(e);
+            }
+        }
+        b
+    }
+}
 
 fn budget_from(args: &Args) -> Result<Budget> {
     let mut b = Budget::default();
@@ -77,7 +110,8 @@ fn main() -> Result<()> {
                 "fig13" => 0.95,
                 _ => 0.75,
             };
-            let rows = coordinator::hash_figure(
+            let rows = coordinator::hash_figure_with(
+                &builder_factory(args.flag("pjrt")),
                 &budget,
                 read_pct,
                 &[32, 64, 128],
@@ -93,8 +127,26 @@ fn main() -> Result<()> {
             )
             .print();
         }
+        "shards" => {
+            // shard-count sweep: 1 controller up to one per vault
+            // (the geometry keeps 8 vaults at every scale)
+            let pts = coordinator::sharded_sweep(&budget, &[1, 2, 4, 8]);
+            coordinator::shard_table(&pts).print();
+            let base = pts.first().expect("at least one point");
+            for p in &pts {
+                println!(
+                    "  {} shard(s): {:.2} searches/kcycle ({:.2}x vs 1)",
+                    p.shards,
+                    p.searches_per_kcycle,
+                    p.searches_per_kcycle / base.searches_per_kcycle
+                );
+            }
+        }
         "stringmatch" => {
-            let reports = coordinator::stringmatch_reports(&budget);
+            let reports = coordinator::stringmatch_reports_with(
+                &builder_factory(args.flag("pjrt")),
+                &budget,
+            );
             let base = reports
                 .iter()
                 .find(|r| r.system == "HBM-C")
@@ -136,8 +188,9 @@ fn main() -> Result<()> {
             }
             println!(
                 "usage: monarch <table1|fig9|fig10|fig11|fig12|fig13|fig14|\
-                 stringmatch|selfcheck> [--quick] [--scale S] \
-                 [--trace-ops N] [--hash-ops N] [--threads N] [--seed N]"
+                 stringmatch|shards|selfcheck> [--quick] [--scale S] \
+                 [--trace-ops N] [--hash-ops N] [--threads N] [--seed N] \
+                 [--pjrt]"
             );
         }
     }

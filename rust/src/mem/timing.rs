@@ -15,14 +15,21 @@
 use crate::config::Timing;
 
 /// Per-bank reservation state.
+///
+/// Cold-start note: `last_act` is `None` until the first real activate.
+/// The seed encoded "never activated" as cycle 0, which made the first
+/// activate of every bank obey t_RC against a fabricated activate at
+/// cycle 0 — a phantom stall on every cold DRAM bank for accesses
+/// issued before ~t_RC cycles into the run.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BankState {
     /// Bank is busy (command/array occupancy) until this cycle.
     pub busy_until: u64,
     /// Open row (row-buffer technologies only).
     pub open_row: Option<u64>,
-    /// Cycle of the last activate (enforces t_RC / t_RAS).
-    pub last_act: u64,
+    /// Cycle of the last activate (enforces t_RC / t_RAS); `None`
+    /// before the first activate.
+    pub last_act: Option<u64>,
     /// Earliest cycle a read may follow the last write (t_WTR).
     pub wtr_ready: u64,
 }
@@ -32,8 +39,12 @@ pub struct BankState {
 pub struct ChannelState {
     /// Data bus busy until this cycle.
     pub bus_busy_until: u64,
-    /// Rolling window of the last four activates (t_FAW).
-    pub acts: [u64; 4],
+    /// Rolling window of the last four activates (t_FAW); `None`
+    /// slots have not seen an activate yet, so they impose no
+    /// four-activate-window constraint (the seed's `[0; 4]` made the
+    /// first four activates obey t_FAW against phantom activates at
+    /// cycle 0).
+    pub acts: [Option<u64>; 4],
     pub act_head: usize,
 }
 
@@ -41,12 +52,15 @@ impl ChannelState {
     /// Earliest cycle a new activate may issue under t_FAW.
     #[inline]
     pub fn faw_ready(&self, t_faw: u32) -> u64 {
-        self.acts[self.act_head] + t_faw as u64
+        match self.acts[self.act_head] {
+            Some(a) => a + t_faw as u64,
+            None => 0,
+        }
     }
 
     #[inline]
     pub fn record_act(&mut self, at: u64) {
-        self.acts[self.act_head] = at;
+        self.acts[self.act_head] = Some(at);
         self.act_head = (self.act_head + 1) % 4;
     }
 }
@@ -161,12 +175,12 @@ impl BankEngine {
                 other => {
                     // conflict: precharge if a row was open, then activate
                     let pre = if other.is_some() { t.t_rp as u64 } else { 0 };
-                    let act_ok = chan
-                        .faw_ready(t.t_faw)
-                        .max(bank.last_act + t.t_rc as u64);
+                    let act_ok = chan.faw_ready(t.t_faw).max(
+                        bank.last_act.map_or(0, |a| a + t.t_rc as u64),
+                    );
                     let act_at = (start + pre).max(act_ok);
                     chan.record_act(act_at);
-                    bank.last_act = act_at;
+                    bank.last_act = Some(act_at);
                     bank.open_row = Some(row);
                     array_ready = act_at + t.t_rcd as u64;
                 }
@@ -310,6 +324,48 @@ mod tests {
         }
         let t_faw = dram.timing.t_faw as u64;
         assert!(dones[4] >= dones[0] + t_faw - dram.timing.t_rcd as u64);
+    }
+
+    #[test]
+    fn cold_start_pays_no_phantom_trc() {
+        // A cold bank has never activated: the very first access at
+        // cycle 0 must pay activate + column + burst only, not wait
+        // out t_RC against a fabricated activate at cycle 0. (Refresh
+        // is disabled so the refresh window cannot mask the stall.)
+        let dram = BankEngine::new(
+            Timing::dram(4),
+            EngineOpts { refresh: false, ..EngineOpts::dram() },
+        );
+        let mut b = BankState::default();
+        let mut c = ChannelState::default();
+        let done = dram.schedule(&mut b, &mut c, Op::Read, 0, 0);
+        let t = dram.timing;
+        let expect = (t.t_rcd + t.t_cas + t.t_bl) as u64;
+        assert_eq!(done, expect, "cold first read inflated: {done}");
+        assert_eq!(b.last_act, Some(0), "first activate issues at 0");
+    }
+
+    #[test]
+    fn cold_start_pays_no_phantom_faw() {
+        // Four cold banks on one channel at cycle 0: none of the four
+        // first activates may wait on the four-activate window, since
+        // no activate has actually happened yet.
+        let dram = BankEngine::new(
+            Timing::dram(4),
+            EngineOpts { refresh: false, ..EngineOpts::dram() },
+        );
+        let mut c = ChannelState::default();
+        let mut acts = vec![];
+        for _ in 0..4 {
+            let mut b = BankState::default();
+            dram.schedule(&mut b, &mut c, Op::Read, 0, 0);
+            acts.push(b.last_act.unwrap());
+        }
+        assert_eq!(acts, vec![0, 0, 0, 0], "phantom t_FAW stall: {acts:?}");
+        // the FIFTH activate sees four real ones and must wait
+        let mut b = BankState::default();
+        dram.schedule(&mut b, &mut c, Op::Read, 0, 0);
+        assert_eq!(b.last_act, Some(dram.timing.t_faw as u64));
     }
 
     #[test]

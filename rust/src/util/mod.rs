@@ -6,6 +6,7 @@ pub mod bitvec;
 pub mod cli;
 pub mod error;
 pub mod murmur3;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,98 @@
+//! A tiny scoped worker pool: fan N index-addressed jobs out over OS
+//! threads and collect the results in job order.
+//!
+//! Extracted from the hand-rolled pool inside `coordinator::
+//! run_cache_mode` so every serial experiment family (`hash_figure`,
+//! `fig11_lifetimes`, `stringmatch_reports`, the shard sweep) can fan
+//! out the same way. Jobs are addressed by index so the closure can
+//! capture shared read-only state (workload sets, configs) without any
+//! `Send` bound on the *job descriptions* themselves — only the result
+//! type must be `Send`. Devices and simulators are constructed inside
+//! the worker, which keeps `Rc`-holding types usable per-job.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `jobs` invocations of `f` (one per index `0..jobs`) across up
+/// to `available_parallelism` OS threads; returns results in index
+/// order. `f` must be `Sync` (it is shared by the workers) and is
+/// invoked exactly once per index.
+pub fn fan_out<R, F>(jobs: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    if jobs == 0 {
+        return Vec::new();
+    }
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(jobs);
+    if workers <= 1 {
+        return (0..jobs).map(f).collect();
+    }
+    let results: Mutex<Vec<Option<R>>> =
+        Mutex::new((0..jobs).map(|_| None).collect());
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs {
+                    break;
+                }
+                let r = f(i);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("worker completed every claimed job"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_are_in_job_order() {
+        let out = fan_out(100, |i| i * i);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn every_job_runs_exactly_once() {
+        use std::sync::atomic::AtomicU64;
+        let runs = AtomicU64::new(0);
+        let out = fan_out(37, |i| {
+            runs.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(runs.load(Ordering::Relaxed), 37);
+        assert_eq!(out, (0..37).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_jobs_is_empty() {
+        let out: Vec<u32> = fan_out(0, |_| unreachable!());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn non_send_state_can_be_built_inside_jobs() {
+        // the closure is Sync; per-job Rc construction stays local
+        let out = fan_out(8, |i| {
+            let rc = std::rc::Rc::new(i);
+            *rc * 2
+        });
+        assert_eq!(out[7], 14);
+    }
+}

@@ -183,14 +183,35 @@ struct Layout {
     val_base: u64,
     meta_base: u64,
     meta_stride: u64,
+    /// `buckets - 1`: bucket indices wrap at the table boundary
+    /// (buckets is a power of two), exactly as the functional table's
+    /// `(h + d) & (n - 1)` does.
+    index_mask: u64,
 }
 
 impl Layout {
     fn new(buckets: u64, window: u64) -> Self {
+        debug_assert!(buckets.is_power_of_two());
         let key_base = 0;
         let val_base = key_base + 8 * buckets;
         let meta_base = val_base + 8 * buckets;
-        Self { key_base, val_base, meta_base, meta_stride: (window / 8).max(1) }
+        Self {
+            key_base,
+            val_base,
+            meta_base,
+            meta_stride: (window / 8).max(1),
+            index_mask: buckets - 1,
+        }
+    }
+
+    /// Key-slot address of the `p`-th probe from home slot `h`,
+    /// wrapped at the table boundary. The seed used the unwrapped
+    /// `h + p`, so probes from home slots near the end of the table
+    /// aliased into the value/metadata regions instead of wrapping to
+    /// the table head — distorting baseline row locality.
+    #[inline]
+    fn key_slot(&self, h: u64, p: u64) -> u64 {
+        self.key_base + 8 * ((h + p) & self.index_mask)
     }
 }
 
@@ -229,13 +250,26 @@ pub fn run_ycsb(mem: &mut dyn AssocDevice, cfg: &YcsbConfig) -> HashReport {
     // systems' initial table population is not charged either, so the
     // copy is a measurement-epoch boundary: functional contents and
     // wear persist, bank timing state resets to zero afterwards.
+    //
+    // Buckets past the CAM's word capacity do NOT wrap onto earlier
+    // columns (the seed's `% num_sets` silently overwrote planted
+    // keys); they stay in the table's main-memory image and are
+    // counted as explicit spill.
     let mut nj = 0.0;
+    let mut counters = Counters::new();
     let cam = mem.cam();
+    let cam_capacity = cam
+        .map(|g| (g.num_sets * g.cols_per_set) as u64)
+        .unwrap_or(0);
     if let Some(g) = cam {
         let cols = g.cols_per_set as u64;
         for (i, b) in table.buckets.iter().enumerate() {
             if let Some(k) = b {
-                let set = (i as u64 / cols) as usize % g.num_sets;
+                if (i as u64) >= cam_capacity {
+                    counters.inc("cam_spill_words");
+                    continue;
+                }
+                let set = (i as u64 / cols) as usize;
                 let col = (i as u64 % cols) as usize;
                 let _ = mem.cam_write(set, col, *k, 0);
             }
@@ -247,7 +281,6 @@ pub fn run_ycsb(mem: &mut dyn AssocDevice, cfg: &YcsbConfig) -> HashReport {
     let mut timelines: Vec<ThreadTimeline> =
         (0..cfg.threads).map(|_| ThreadTimeline::new(8)).collect();
     let mut hits = 0u64;
-    let mut counters = Counters::new();
     let mut next_insert_key = keyspace + 1;
 
     // Cross-thread lookup aggregation: consecutive read ops defer into
@@ -287,7 +320,17 @@ pub fn run_ycsb(mem: &mut dyn AssocDevice, cfg: &YcsbConfig) -> HashReport {
             if found.is_some() {
                 hits += 1;
             }
-            if let Some(g) = cam {
+            let h = table.home(key) as u64;
+            // The window tail wraps at the table boundary; a lookup
+            // is CAM-serviceable only when every bucket the window
+            // covers fits inside the CAM's word capacity.
+            let tail = (h + table.window as u64 - 1) & (buckets - 1);
+            let window_fits_cam = if tail < h {
+                buckets <= cam_capacity // wrapped: needs the whole table
+            } else {
+                tail < cam_capacity
+            };
+            if let (Some(g), true) = (cam, window_fits_cam) {
                 if pending.len() >= MAX_LOOKUP_BATCH
                     || pending.iter().any(|(pt, _)| *pt == t)
                 {
@@ -296,12 +339,9 @@ pub fn run_ycsb(mem: &mut dyn AssocDevice, cfg: &YcsbConfig) -> HashReport {
                 let at = timelines[t].issue_at();
                 // key/mask registers + one search per set the window
                 // spans; value read from flat-RAM by the match pointer
-                let h = table.home(key) as u64;
                 let cols = g.cols_per_set as u64;
-                let nsets = g.num_sets as u64;
-                let set0 = ((h / cols) % nsets) as usize;
-                let set1 =
-                    (((h + table.window as u64 - 1) / cols) % nsets) as usize;
+                let set0 = (h / cols) as usize;
+                let set1 = (tail / cols) as usize;
                 pending.push((
                     t,
                     CamLookup {
@@ -315,6 +355,14 @@ pub fn run_ycsb(mem: &mut dyn AssocDevice, cfg: &YcsbConfig) -> HashReport {
                     },
                 ));
             } else {
+                if cam.is_some() {
+                    // CAM device, but the window spills past capacity:
+                    // probe the main-memory image instead, explicitly.
+                    // This thread may have a lookup deferred in the
+                    // batch — flush to keep per-thread issue order.
+                    counters.inc("cam_spill_lookups");
+                    flush(mem, &mut pending, &mut timelines, &mut nj);
+                }
                 let at = timelines[t].issue_at();
                 let done = baseline_lookup(
                     mem, &layout, &table, key, probes, found, at, &mut nj,
@@ -373,7 +421,7 @@ fn baseline_lookup(
     let mut t =
         acc(mem, layout.meta_base + h * layout.meta_stride, false, at, nj);
     for p in 0..probes.max(1) {
-        t = acc(mem, layout.key_base + 8 * (h + p as u64), false, t, nj);
+        t = acc(mem, layout.key_slot(h, p as u64), false, t, nj);
     }
     if found.is_some() {
         t = acc(mem, layout.val_base + 8 * h, false, t, nj);
@@ -414,11 +462,23 @@ fn insert_cost(
         }
         InsertOutcome::AlreadyPresent => at + 1,
         InsertOutcome::Inserted { bucket, scan, displacements } => {
-            if let Some(g) = mem.cam() {
+            // A CAM device services the insert associatively only when
+            // the landing bucket is inside the CAM's word capacity; an
+            // overflowing insert stays in the table's main-memory
+            // image (no wrap onto earlier columns) and pays the full
+            // baseline cost below — on these devices `access` IS the
+            // off-chip image.
+            let cam_fit = mem.cam().filter(|g| {
+                (bucket as u64) < (g.num_sets * g.cols_per_set) as u64
+            });
+            if mem.cam().is_some() && cam_fit.is_none() {
+                counters.inc("cam_capacity_spill");
+            }
+            if let Some(g) = cam_fit {
+                let cols = g.cols_per_set as u64;
                 // the insert begins with a lookup (§9.2.2): one search
                 // to confirm absence
-                let cols = g.cols_per_set as u64;
-                let set = ((bucket as u64 / cols) as usize) % g.num_sets;
+                let set = (bucket as u64 / cols) as usize;
                 let col = (bucket as u64 % cols) as usize;
                 let ka = mem.write_key(key, at);
                 *nj += ka.energy_nj;
@@ -464,15 +524,11 @@ fn insert_cost(
                 a.done_at
             } else {
                 // scan reads for the free bucket + displacement RMWs
+                // (probe addresses wrap at the table boundary, like
+                // the functional scan they model)
                 let mut t = at;
                 for s in 0..scan.max(1) {
-                    t = acc(
-                        mem,
-                        layout.key_base + 8 * (h + s as u64),
-                        false,
-                        t,
-                        nj,
-                    );
+                    t = acc(mem, layout.key_slot(h, s as u64), false, t, nj);
                 }
                 for _ in 0..displacements {
                     t = acc(mem, layout.key_base + 8 * h, false, t, nj);
@@ -540,6 +596,95 @@ mod tests {
         assert_eq!(t.len, 1);
     }
 
+    /// Records every table-region access address (timing trivial).
+    struct Recorder {
+        addrs: Vec<(u64, bool)>,
+    }
+
+    impl crate::device::AssocDevice for Recorder {
+        fn label(&self) -> &str {
+            "recorder"
+        }
+        fn static_watts(&self) -> f64 {
+            0.0
+        }
+        fn access(
+            &mut self,
+            addr: u64,
+            write: bool,
+            at: u64,
+        ) -> crate::mem::Access {
+            self.addrs.push((addr, write));
+            crate::mem::Access { done_at: at + 1, energy_nj: 0.0 }
+        }
+        fn main_access(
+            &mut self,
+            _addr: u64,
+            _write: bool,
+            at: u64,
+        ) -> crate::mem::Access {
+            crate::mem::Access { done_at: at + 1, energy_nj: 0.0 }
+        }
+        fn main_static_energy_nj(&self, _cycles: u64) -> f64 {
+            0.0
+        }
+    }
+
+    #[test]
+    fn baseline_probes_wrap_at_table_boundary() {
+        // Home slot at the last bucket: the second probe must wrap to
+        // bucket 0, not alias into the value region at key_base + 8n.
+        let mut table = Hopscotch::new(4, 4); // n = 16
+        let n = table.buckets.len();
+        let mut tail_keys = Vec::new();
+        let mut k = 1u64;
+        while tail_keys.len() < 2 {
+            if table.home(k) == n - 1 {
+                tail_keys.push(k);
+            }
+            k += 1;
+        }
+        assert!(matches!(
+            table.insert(tail_keys[0]),
+            InsertOutcome::Inserted { bucket, .. } if bucket == n - 1
+        ));
+        // same home: the free-slot scan wraps, landing in bucket 0
+        assert!(matches!(
+            table.insert(tail_keys[1]),
+            InsertOutcome::Inserted { bucket: 0, .. }
+        ));
+        let (found, probes) = table.lookup(tail_keys[1]);
+        assert_eq!(found, Some(0));
+        assert_eq!(probes, 2);
+
+        let layout = Layout::new(n as u64, table.window as u64);
+        let mut rec = Recorder { addrs: Vec::new() };
+        let mut nj = 0.0;
+        baseline_lookup(
+            &mut rec, &layout, &table, tail_keys[1], probes, found, 0,
+            &mut nj,
+        );
+        let key_probes: Vec<u64> = rec
+            .addrs
+            .iter()
+            .map(|&(a, _)| a)
+            .filter(|&a| a < layout.val_base)
+            .collect();
+        assert_eq!(
+            key_probes,
+            vec![8 * (n as u64 - 1), 0],
+            "second probe must wrap to the table head"
+        );
+        for &(a, _) in &rec.addrs {
+            assert!(
+                a < layout.val_base
+                    || a == layout.val_base + 8 * (n as u64 - 1)
+                    || a >= layout.meta_base,
+                "probe aliased into a foreign region: {a}"
+            );
+        }
+    }
+
     fn small_cfg() -> YcsbConfig {
         YcsbConfig {
             table_pow2: 12,
@@ -590,6 +735,27 @@ mod tests {
         for r in &reports {
             assert_eq!(r.ops, cfg.ops as u64);
         }
+    }
+
+    #[test]
+    fn cam_overflow_spills_explicitly_instead_of_aliasing() {
+        // 4096 buckets but only 4 CAM sets = 2048 words: overflowing
+        // buckets must be counted as spill and their lookups routed to
+        // the main-memory image — never wrapped onto earlier columns.
+        let cfg = YcsbConfig { read_pct: 0.9, ..small_cfg() };
+        let mut m = assoc::monarch(small_geom(), 4);
+        let r = run_ycsb(m.as_mut(), &cfg);
+        assert!(
+            r.counters.get("cam_spill_words") > 0,
+            "prefill past capacity must spill"
+        );
+        assert!(r.counters.get("cam_spill_lookups") > 0);
+        // functional state is device-independent: a baseline run with
+        // the same mix sees the same hits
+        let mut b = assoc::hbm_sp(1 << 20);
+        let rb = run_ycsb(b.as_mut(), &cfg);
+        assert_eq!(r.hits, rb.hits);
+        assert_eq!(r.ops, rb.ops);
     }
 
     #[test]

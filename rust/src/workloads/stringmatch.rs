@@ -77,12 +77,21 @@ pub fn run_string_match(
         // Phase 1 — copy: stream 64B blocks from DDR and write each
         // word into a CAM column. Column writes to different banks
         // pipeline; the bank engine serializes per-bank occupancy.
+        // Words past the CAM's capacity do NOT wrap onto earlier
+        // columns (the seed's `% nsets` silently overwrote planted
+        // data); they stay in main memory as an explicit spill tail,
+        // scanned conventionally per target below.
         let cols = g.cols_per_set;
         let nsets = g.num_sets;
+        let capacity = cols * nsets;
         let mut stream = ThreadTimeline::new(8); // DDR read MLP
         let mut copy_done = 0u64;
         let mut block_ready = 0u64;
         for (i, &w) in corpus.iter().enumerate() {
+            if i >= capacity {
+                counters.inc("cam_spill_words");
+                continue;
+            }
             if i % 8 == 0 {
                 let at = stream.issue_at();
                 let a = mem.main_access((i as u64 / 8) * 64, false, at);
@@ -90,7 +99,7 @@ pub fn run_string_match(
                 stream.record(a.done_at);
                 block_ready = a.done_at;
             }
-            let set = (i / cols) % nsets;
+            let set = i / cols;
             let col = i % cols;
             if let Some(a) = mem.cam_write(set, col, w, block_ready) {
                 nj += a.energy_nj;
@@ -103,9 +112,14 @@ pub fn run_string_match(
         // key register sequentially (§7: one register pair per
         // controller), but each target's per-set searches fan out
         // across the banks in parallel — and the whole wave is one
-        // batched functional evaluation.
+        // batched functional evaluation. The spill tail (if any) is
+        // streamed from main memory and compared in the cores, like a
+        // baseline would — its cost and its matches are both real.
         let sets_used = corpus.len().div_ceil(cols).min(nsets);
+        let spill_blocks = capacity / 8..corpus.len().div_ceil(8);
+        let mut spill_tl = ThreadTimeline::new(8);
         let mut tt = t;
+        spill_tl.now = t;
         for target in &targets {
             // the shared registers are written once per target; the
             // wave's searches issue only after they are in place
@@ -126,8 +140,23 @@ pub fn run_string_match(
                 counters.inc("searches");
             }
             tt = wave_done;
+            for b in spill_blocks.clone() {
+                let at = spill_tl.issue_at();
+                spill_tl.compute(8); // 8 word compares
+                let a = mem.main_access((b as u64) * 64, false, at);
+                nj += a.energy_nj;
+                spill_tl.record(a.done_at);
+                counters.inc("spill_block_reads");
+                for w in 0..8 {
+                    let i = b * 8 + w;
+                    if i >= capacity && i < corpus.len() && corpus[i] == *target
+                    {
+                        matches += 1;
+                    }
+                }
+            }
         }
-        tt
+        tt.max(spill_tl.finish())
     } else {
         // Baselines: stream the corpus once per target, comparing
         // 8 words per 64B block. All accesses are reads and installs
@@ -208,6 +237,34 @@ mod tests {
         let r = run_string_match(m.as_mut(), &c);
         assert!(r.matches >= c.targets as u64, "matches={}", r.matches);
         assert!(r.counters.get("searches") > 0);
+    }
+
+    #[test]
+    fn corpus_overflowing_cam_spills_instead_of_aliasing() {
+        // 8192-word corpus against 8 CAM sets = 4096 words: the upper
+        // half must be an explicit spill tail, streamed per target —
+        // planted targets there are still found, and nothing planted
+        // in the CAM half is silently overwritten by wrapped columns.
+        let c = cfg();
+        let mut m = assoc::monarch(geom(), 8);
+        let r = run_string_match(m.as_mut(), &c);
+        let spilled = r.counters.get("cam_spill_words");
+        assert_eq!(spilled, (c.corpus_words - 8 * 512) as u64);
+        assert!(r.counters.get("spill_block_reads") > 0);
+        // every planted target is found (4 plants each, wherever they
+        // landed); the old wrapping overwrote CAM-half plants
+        assert!(
+            r.matches >= c.targets as u64,
+            "matches={} targets={}",
+            r.matches,
+            c.targets
+        );
+        // a streaming baseline finds every occurrence; Monarch's CAM
+        // half reports one match per set (match-pointer semantics), so
+        // the baseline bounds it from above
+        let mut h = assoc::hbm_sp(c.corpus_words * 16);
+        let rh = run_string_match(h.as_mut(), &c);
+        assert!(rh.matches >= r.matches);
     }
 
     #[test]

@@ -12,13 +12,14 @@
 use monarch::config::{InPackageKind, MonarchGeom, SystemConfig};
 use monarch::device::{
     assoc, AssocDevice, AssocSpec, CamLookup, DeviceBuilder, MonarchAssoc,
-    SearchHit, SearchOp,
+    SearchHit, SearchOp, ShardedAssoc,
 };
 use monarch::mem::dram_cache::TechCache;
 use monarch::prop_assert;
 use monarch::sim::System;
 use monarch::util::prop::{check, Gen};
 use monarch::workloads::hashing::{run_ycsb, YcsbConfig};
+use monarch::workloads::stringmatch::{run_string_match, StringMatchConfig};
 use monarch::workloads::SyntheticStream;
 
 fn small_geom() -> MonarchGeom {
@@ -355,6 +356,149 @@ fn engine_attached_device_matches_fallback_device() {
     let got = with_engine.search_many(&wave);
     let want = fallback.search_many(&wave);
     assert_eq!(got, want);
+}
+
+#[test]
+fn sharded_one_shard_reproduces_monarch_reports_bit_identically() {
+    // `ShardedAssoc { shards: 1 }` must BE the unsharded backend:
+    // whole-driver reports bit-identical across both hashing mixes and
+    // string match.
+    for read_pct in [1.0, 0.75] {
+        let cfg = YcsbConfig {
+            table_pow2: 12,
+            window: 64,
+            ops: 3000,
+            read_pct,
+            threads: 8,
+            ..Default::default()
+        };
+        let cam_sets = (1usize << cfg.table_pow2) / 512 + 1;
+        let mut mono = MonarchAssoc::new(small_geom(), cam_sets);
+        let mut one = ShardedAssoc::new(small_geom(), cam_sets, 1);
+        let rm = run_ycsb(&mut mono, &cfg);
+        let rs = run_ycsb(&mut one, &cfg);
+        assert_eq!(rm.system, rs.system, "label @ {read_pct}");
+        assert_eq!(rm.cycles, rs.cycles, "cycles @ {read_pct}");
+        assert_eq!(rm.hits, rs.hits);
+        assert_eq!(rm.rehashes, rs.rehashes);
+        assert_eq!(
+            rm.energy_nj.to_bits(),
+            rs.energy_nj.to_bits(),
+            "energy must be bit-identical @ {read_pct}"
+        );
+        let cm: Vec<_> = rm.counters.iter().collect();
+        let cs: Vec<_> = rs.counters.iter().collect();
+        assert_eq!(cm, cs, "driver counters @ {read_pct}");
+        let fm: Vec<_> = mono.flat().stats.iter().collect();
+        let fs: Vec<_> = one.shard_flat(0).stats.iter().collect();
+        assert_eq!(fm, fs, "controller stats @ {read_pct}");
+        assert!(one.monarch_flat().is_some(), "single shard is THE flat");
+    }
+    let smc = StringMatchConfig {
+        corpus_words: 1 << 13,
+        targets: 8,
+        threads: 4,
+        seed: 11,
+    };
+    let cam_sets = smc.corpus_words / 512 + 1;
+    let mut mono = MonarchAssoc::new(small_geom(), cam_sets);
+    let mut one = ShardedAssoc::new(small_geom(), cam_sets, 1);
+    let rm = run_string_match(&mut mono, &smc);
+    let rs = run_string_match(&mut one, &smc);
+    assert_eq!(rm.cycles, rs.cycles);
+    assert_eq!(rm.matches, rs.matches);
+    assert_eq!(rm.energy_nj.to_bits(), rs.energy_nj.to_bits());
+    let cm: Vec<_> = rm.counters.iter().collect();
+    let cs: Vec<_> = rs.counters.iter().collect();
+    assert_eq!(cm, cs);
+}
+
+#[test]
+fn sharded_search_many_is_permutation_of_per_shard_scalar_order() {
+    // A sharded batch is, per shard, the scalar triple sequence in
+    // submission order on that shard's controller — the whole batch is
+    // a permutation of those chains, scattered back to submission
+    // positions.
+    let cam_sets = 16;
+    let mk = || ShardedAssoc::bounded(small_geom(), cam_sets, 4, 3);
+    let (mut batched, mut scalar) = (mk(), mk());
+    assert_eq!(batched.num_shards(), 4);
+    let mut g = Gen::new(0xD1CE, 256);
+    for _ in 0..64 {
+        let (set, col, w) = (g.int(cam_sets), g.int(512), g.u64() | 1);
+        let _ = batched.cam_write(set, col, w, 0);
+        let _ = scalar.cam_write(set, col, w, 0);
+    }
+    // plant one repeat key for hit + match-register coverage
+    let planted = 0x0DD_B17 | 1;
+    let _ = batched.cam_write(9, 100, planted, 0);
+    let _ = scalar.cam_write(9, 100, planted, 0);
+    let mut ops = Vec::new();
+    let mut at = 1_000u64;
+    for i in 0..40 {
+        at += g.u64() % 200;
+        let key = if i % 5 == 0 { planted } else { g.u64() | 1 };
+        ops.push(SearchOp { set: g.int(cam_sets), key, mask: !0, at });
+    }
+    let got = batched.search_many(&ops);
+    let mut want: Vec<Option<SearchHit>> = vec![None; ops.len()];
+    for s in 0..scalar.num_shards() {
+        let idxs: Vec<usize> = (0..ops.len())
+            .filter(|&i| scalar.shard_of_set(ops[i].set) == s)
+            .collect();
+        for &i in &idxs {
+            let local = scalar.local_set(ops[i].set);
+            let flat = scalar.shard_flat_mut(s);
+            let ka = flat.write_key(ops[i].key, ops[i].at);
+            let ma = flat.write_mask(ops[i].mask, ka.done_at);
+            let (a, hit) = flat.search(local, ma.done_at);
+            want[i] = Some(SearchHit {
+                done_at: a.done_at,
+                col: hit,
+                energy_nj: ka.energy_nj + ma.energy_nj + a.energy_nj,
+            });
+        }
+    }
+    let want: Vec<SearchHit> =
+        want.into_iter().map(|w| w.expect("covered")).collect();
+    assert_eq!(got, want, "batched != per-shard scalar chains");
+    for s in 0..4 {
+        assert_eq!(
+            batched.shard_flat(s).keymask(),
+            scalar.shard_flat(s).keymask(),
+            "shard {s} registers"
+        );
+        let sb: Vec<_> = batched.shard_flat(s).stats.iter().collect();
+        let ss: Vec<_> = scalar.shard_flat(s).stats.iter().collect();
+        assert_eq!(sb, ss, "shard {s} stats");
+        assert_eq!(
+            batched.shard_flat(s).energy_nj,
+            scalar.shard_flat(s).energy_nj,
+            "shard {s} energy"
+        );
+    }
+}
+
+#[test]
+fn sharded_registry_preset_builds_and_runs() {
+    let cfg = YcsbConfig {
+        table_pow2: 12,
+        window: 32,
+        ops: 1500,
+        ..Default::default()
+    };
+    let cam_sets = (1usize << cfg.table_pow2) / 512 + 1;
+    let spec = AssocSpec {
+        kind: InPackageKind::MonarchSharded { shards: 4, m: 3 },
+        capacity_bytes: 0,
+        geom: small_geom(),
+        cam_sets,
+    };
+    let mut dev = DeviceBuilder::new().build_assoc(&spec);
+    assert_eq!(dev.label(), "Monarch(S=4)");
+    let r = run_ycsb(dev.as_mut(), &cfg);
+    assert_eq!(r.ops, cfg.ops as u64);
+    assert!(r.cycles > 0);
 }
 
 #[test]
