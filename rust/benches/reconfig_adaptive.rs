@@ -1,0 +1,48 @@
+//! Runtime RAM/CAM repartitioning: the `monarch reconfig` sweep as a
+//! bench. Overflow-heavy YCSB configs run on a statically covered
+//! device (best case), a spill-only device (PR-2 behavior: the
+//! overflow is scanned in main memory forever), and adaptive devices
+//! (unsharded and S=4) that watch the spill counters and grow the CAM
+//! partition at runtime, paying the modeled migration cost once.
+//!
+//! Acceptance gate: on at least one overflow-heavy config the adaptive
+//! device beats the spill-only device on total cycles.
+
+use monarch::coordinator::{self, Budget};
+
+fn main() {
+    let budget = Budget::default();
+    let t0 = std::time::Instant::now();
+    let pts = coordinator::reconfig_sweep(&budget);
+    coordinator::reconfig_table(&pts).print();
+    let mut any_win = false;
+    for tp in [12usize, 13] {
+        let get = |sys: &str| {
+            pts.iter()
+                .find(|p| p.table_pow2 == tp && p.system == sys)
+                .expect("sweep covers every cell")
+        };
+        let (stat, spill, adapt) =
+            (get("static"), get("spill"), get("adaptive"));
+        println!(
+            "  2^{tp}: adaptive {:.2}x vs spill-only, static {:.2}x \
+             (adaptive paid {} reconfig(s), {} -> {} sets)",
+            spill.cycles as f64 / adapt.cycles.max(1) as f64,
+            spill.cycles as f64 / stat.cycles.max(1) as f64,
+            adapt.reconfigs,
+            adapt.start_sets,
+            adapt.final_sets,
+        );
+        any_win |= adapt.cycles < spill.cycles;
+        assert!(
+            adapt.reconfigs >= 1,
+            "adaptive cell must actually reconfigure"
+        );
+    }
+    assert!(
+        any_win,
+        "adaptive must beat spill-only on >= 1 overflow-heavy config: \
+         {pts:?}"
+    );
+    println!("wall time: {:?}", t0.elapsed());
+}

@@ -109,6 +109,14 @@ pub enum InPackageKind {
     /// flat-CAM register pairs, so no cache-mode backend registers for
     /// this kind — `DeviceBuilder::build_cache` rejects it loudly.
     MonarchSharded { shards: usize, m: u32 },
+    /// Monarch with t_MWW enforced and **runtime RAM/CAM
+    /// repartitioning engaged**: the device is identical to
+    /// `Monarch { m }` (the spec's `cam_sets` is the *starting*
+    /// partition), and drivers that see this kind run their adaptive
+    /// reconfiguration policy against the spill counters instead of
+    /// spill-scanning forever. Software-managed (flat/assoc) path
+    /// only, like `MonarchSharded`.
+    MonarchAdaptive { m: u32 },
     /// Monarch in pure flat-RAM mode (paper's "RRAM" hashing baseline).
     MonarchFlatRam,
 }
@@ -126,6 +134,7 @@ impl InPackageKind {
             Self::MonarchSharded { shards, m } => {
                 format!("Monarch(S={shards},M={m})")
             }
+            Self::MonarchAdaptive { m } => format!("Monarch(adaptive,M={m})"),
             Self::MonarchFlatRam => "RRAM(flat)".into(),
         }
     }
@@ -136,6 +145,7 @@ impl InPackageKind {
             Self::MonarchUnbound
                 | Self::Monarch { .. }
                 | Self::MonarchSharded { .. }
+                | Self::MonarchAdaptive { .. }
                 | Self::MonarchFlatRam
         )
     }

@@ -6,14 +6,16 @@
 
 use crate::config::{InPackageKind, MonarchGeom, SystemConfig};
 use crate::device::{
-    AssocDevice, AssocSpec, DeviceBuilder, SearchOp, ShardedAssoc,
+    AssocDevice, AssocSpec, DeviceBuilder, SearchOp,
 };
 use crate::monarch::{LifetimeEstimator, LifetimeReport};
 use crate::sim::{SimReport, System};
 use crate::util::pool::fan_out;
 use crate::util::stats::geomean;
 use crate::util::table::{x, Table};
-use crate::workloads::hashing::{run_ycsb, HashReport, YcsbConfig};
+use crate::workloads::hashing::{
+    run_ycsb, run_ycsb_adaptive, HashReport, ReconfigPolicy, YcsbConfig,
+};
 use crate::workloads::stringmatch::{
     run_string_match, StringMatchConfig, StringReport,
 };
@@ -394,6 +396,142 @@ where
     })
 }
 
+/// One measured cell of the `monarch reconfig` sweep.
+#[derive(Clone, Debug)]
+pub struct ReconfigPoint {
+    pub table_pow2: usize,
+    /// CAM sets the device starts with.
+    pub start_sets: usize,
+    pub system: String,
+    pub cycles: u64,
+    pub energy_nj: f64,
+    pub reconfigs: u64,
+    pub final_sets: u64,
+    pub spill_lookups: u64,
+}
+
+/// The `monarch reconfig` sweep: overflow-heavy YCSB configs (the CAM
+/// partition starts at a quarter of the table) across four devices —
+/// `static` (full coverage from construction, the best case),
+/// `spill` (undersized, PR-2 behavior: perpetual spill-scans),
+/// `adaptive` (undersized, grows at runtime via `reconfigure`), and
+/// `adaptive(S=4)` (the sharded adaptive device). The acceptance gate:
+/// adaptive beats spill on total cycles once the migration is paid.
+pub fn reconfig_sweep(budget: &Budget) -> Vec<ReconfigPoint> {
+    reconfig_sweep_with(&DeviceBuilder::new, budget)
+}
+
+/// [`reconfig_sweep`] through the backend registry (one fanned-out
+/// job per cell), so `--pjrt` engines reach it too.
+pub fn reconfig_sweep_with<F>(
+    mk_builder: &F,
+    budget: &Budget,
+) -> Vec<ReconfigPoint>
+where
+    F: Fn() -> DeviceBuilder + Sync,
+{
+    let geom = MonarchGeom::FULL.scaled(budget.scale * 4.0);
+    let table_pow2s = [12usize, 13];
+    // (label, kind for a start of `s` sets, adaptive?)
+    type Cell = (&'static str, fn(usize) -> (InPackageKind, usize), bool);
+    fn k_static(need: usize) -> (InPackageKind, usize) {
+        (InPackageKind::Monarch { m: 3 }, need)
+    }
+    fn k_spill(_need: usize) -> (InPackageKind, usize) {
+        (InPackageKind::Monarch { m: 3 }, 0)
+    }
+    fn k_adaptive(_need: usize) -> (InPackageKind, usize) {
+        (InPackageKind::MonarchAdaptive { m: 3 }, 0)
+    }
+    fn k_adaptive_sharded(_need: usize) -> (InPackageKind, usize) {
+        (InPackageKind::MonarchSharded { shards: 4, m: 3 }, 0)
+    }
+    const CELLS: &[Cell] = &[
+        ("static", k_static, false),
+        ("spill", k_spill, false),
+        ("adaptive", k_adaptive, true),
+        ("adaptive(S=4)", k_adaptive_sharded, true),
+    ];
+    let points: Vec<(usize, usize)> = table_pow2s
+        .iter()
+        .flat_map(|&tp| (0..CELLS.len()).map(move |c| (tp, c)))
+        .collect();
+    fan_out(points.len(), |i| {
+        let (tp, c) = points[i];
+        let (label, kind_of, adaptive) = CELLS[c];
+        // full coverage in the geometry's own column width (what the
+        // drivers read back via `cam()`), not a hard-coded 512
+        let need = (1usize << tp).div_ceil(geom.cols_per_set);
+        let start = (need / 4).max(1);
+        let (kind, sets) = kind_of(need);
+        let cam_sets = if sets == 0 { start } else { sets };
+        let spec = AssocSpec { kind, capacity_bytes: 0, geom, cam_sets };
+        let cfg = YcsbConfig {
+            table_pow2: tp,
+            window: 32,
+            ops: budget.hash_ops.max(8_000),
+            read_pct: 0.95,
+            prefill_density: 0.5,
+            threads: 8,
+            zipf_theta: 0.99,
+            seed: budget.seed,
+        };
+        let mut dev = mk_builder().build_assoc(&spec);
+        let r = if adaptive {
+            run_ycsb_adaptive(
+                dev.as_mut(),
+                &cfg,
+                &ReconfigPolicy::default(),
+            )
+        } else {
+            run_ycsb(dev.as_mut(), &cfg)
+        };
+        ReconfigPoint {
+            table_pow2: tp,
+            start_sets: cam_sets,
+            system: label.to_string(),
+            cycles: r.cycles,
+            energy_nj: r.energy_nj,
+            reconfigs: r.counters.get("reconfigs"),
+            final_sets: if adaptive {
+                r.counters.get("cam_sets_final")
+            } else {
+                cam_sets as u64
+            },
+            spill_lookups: r.counters.get("cam_spill_lookups"),
+        }
+    })
+}
+
+pub fn reconfig_table(points: &[ReconfigPoint]) -> Table {
+    let mut t = Table::new(
+        "Reconfig sweep — static vs spill-only vs adaptive repartitioning",
+    )
+    .header(vec![
+        "table(2^k)",
+        "system",
+        "start sets",
+        "final sets",
+        "reconfigs",
+        "spill lookups",
+        "cycles",
+        "energy(uJ)",
+    ]);
+    for p in points {
+        t.row(vec![
+            p.table_pow2.to_string(),
+            p.system.clone(),
+            p.start_sets.to_string(),
+            p.final_sets.to_string(),
+            p.reconfigs.to_string(),
+            p.spill_lookups.to_string(),
+            p.cycles.to_string(),
+            format!("{:.1}", p.energy_nj / 1000.0),
+        ]);
+    }
+    t
+}
+
 /// One measured point of the shard-count sweep.
 #[derive(Clone, Copy, Debug)]
 pub struct ShardSweepPoint {
@@ -411,13 +549,22 @@ pub struct ShardSweepPoint {
 /// pair — `shards` independent chains. Every round is one
 /// `search_many` batch (one functional evaluation per shard).
 /// Returns (ops retired, cycles to drain).
-fn drive_shard_chains(dev: &mut ShardedAssoc, total_ops: usize) -> (u64, u64) {
-    let nshards = dev.num_shards();
+fn drive_shard_chains(
+    dev: &mut dyn AssocDevice,
+    total_ops: usize,
+) -> (u64, u64) {
     let nsets = dev.cam().expect("sharded device has a CAM").num_sets;
-    let mut sets_of: Vec<Vec<usize>> = vec![Vec::new(); nshards];
-    for g in 0..nsets {
-        sets_of[dev.shard_of_set(g)].push(g);
-    }
+    let (nshards, sets_of) = {
+        let sharded = dev
+            .sharded()
+            .expect("the shard sweep drives ShardedAssoc devices");
+        let n = sharded.num_shards();
+        let mut sets_of: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for g in 0..nsets {
+            sets_of[sharded.shard_of_set(g)].push(g);
+        }
+        (n, sets_of)
+    };
     let mut remaining: Vec<usize> = (0..nshards)
         .map(|s| total_ops / nshards + usize::from(s < total_ops % nshards))
         .collect();
@@ -462,21 +609,43 @@ pub fn sharded_sweep(
     budget: &Budget,
     shard_counts: &[usize],
 ) -> Vec<ShardSweepPoint> {
+    sharded_sweep_with(&DeviceBuilder::new, budget, shard_counts)
+}
+
+/// [`sharded_sweep`] through the backend registry (the same builder
+/// factory as the hashing/stringmatch sweeps), so `--pjrt` engines
+/// and custom sharded backends reach it too.
+pub fn sharded_sweep_with<F>(
+    mk_builder: &F,
+    budget: &Budget,
+    shard_counts: &[usize],
+) -> Vec<ShardSweepPoint>
+where
+    F: Fn() -> DeviceBuilder + Sync,
+{
     let geom = MonarchGeom::FULL.scaled(budget.scale * 4.0);
     let cam_sets = 64;
     let ops = budget.hash_ops.max(64);
     fan_out(shard_counts.len(), |i| {
         let shards = shard_counts[i];
-        let mut dev = ShardedAssoc::bounded(geom, cam_sets, shards, 3);
+        let spec = AssocSpec {
+            kind: InPackageKind::MonarchSharded { shards, m: 3 },
+            capacity_bytes: 0,
+            geom,
+            cam_sets,
+        };
+        let mut dev = mk_builder().build_assoc(&spec);
         // plant one word per set so some searches hit
         for set in 0..cam_sets {
             let word = 0x5EED_0000 + set as u64;
             let _ = dev.cam_write(set, set % geom.cols_per_set, word, 0);
         }
         dev.reset_timing();
-        let (done_ops, cycles) = drive_shard_chains(&mut dev, ops);
+        let built_shards =
+            dev.sharded().map(|s| s.num_shards()).unwrap_or(shards);
+        let (done_ops, cycles) = drive_shard_chains(dev.as_mut(), ops);
         ShardSweepPoint {
-            shards: dev.num_shards(),
+            shards: built_shards,
             ops: done_ops,
             cycles,
             searches_per_kcycle: 1000.0 * done_ops as f64

@@ -181,6 +181,24 @@ pub trait AssocDevice {
             .collect()
     }
 
+    /// Runtime RAM/CAM repartition (the paper's polymorphism): resize
+    /// the associative region to `target_cam_sets`, migrating resident
+    /// data through the device's real timing paths. Requires a
+    /// quiesced device (no batched ops deferred by the caller). The
+    /// default is **unsupported** (`None`) — conventional backends
+    /// have no mode to switch. Reconfigurable backends return the
+    /// migration cost and leave the device bit-identical, for all
+    /// subsequent operations, to one constructed at `target_cam_sets`
+    /// with the same resident data (wear history carried over; pinned
+    /// in `tests/device_differential.rs`).
+    fn reconfigure(
+        &mut self,
+        _target_cam_sets: usize,
+        _now: u64,
+    ) -> Option<crate::device::ReconfigOutcome> {
+        None
+    }
+
     /// Drain the device's internally accumulated dynamic energy (nJ).
     /// Used at measurement-epoch boundaries (e.g. after an uncharged
     /// population phase).
@@ -198,6 +216,12 @@ pub trait AssocDevice {
 
     /// Downcast to the flat-mode controller (tests / diagnostics).
     fn monarch_flat(&self) -> Option<&MonarchFlat> {
+        None
+    }
+
+    /// Downcast to the sharded backend (shard-aware drivers like the
+    /// `monarch shards` sweep need the set→shard routing).
+    fn sharded(&self) -> Option<&crate::device::ShardedAssoc> {
         None
     }
 }
@@ -359,6 +383,34 @@ impl MonarchAssoc {
         }
         SearchEngine::search_sets_fallback(&arrays, keys, masks)
     }
+}
+
+/// Stream evicted CAM words back to the table's main-memory image:
+/// one off-chip 64B block write per 8 words (they pack back into the
+/// blocks they came from), chained from `start`. Shared by the
+/// unsharded and sharded `reconfigure` impls so the write-back cost
+/// model cannot diverge. Returns `(completion cycle, energy nJ)`.
+pub(crate) fn write_back_evicted(
+    main: &mut MainMemory,
+    evicted: &[(usize, usize, u64)],
+    cols_per_set: usize,
+    start: u64,
+) -> (u64, f64) {
+    let mut t = start;
+    let mut nj = 0.0;
+    for chunk in evicted.chunks(8) {
+        let (set, col, _) = chunk[0];
+        let addr = (set * cols_per_set + col) as u64 * 8;
+        let a = main.access(&MemReq {
+            addr,
+            kind: ReqKind::Write,
+            at: t,
+            thread: 0,
+        });
+        nj += a.energy_nj;
+        t = a.done_at;
+    }
+    (t, nj)
 }
 
 pub(crate) fn eval_with_engine(
@@ -528,6 +580,30 @@ impl AssocDevice for MonarchAssoc {
             .collect()
     }
 
+    fn reconfigure(
+        &mut self,
+        target_cam_sets: usize,
+        now: u64,
+    ) -> Option<crate::device::ReconfigOutcome> {
+        let r = self.flat.repartition(target_cam_sets, now);
+        // evicted words return to the table's main-memory image,
+        // streamed behind the drain
+        let (done, wnj) = write_back_evicted(
+            &mut self.main,
+            &r.evicted,
+            self.flat.cols_per_set(),
+            r.done_at,
+        );
+        Some(crate::device::ReconfigOutcome {
+            done_at: done,
+            energy_nj: r.energy_nj + wnj,
+            cam_sets_before: r.from_sets,
+            cam_sets_after: r.to_sets,
+            migrated_words: r.evicted.len() as u64,
+            migrated_blocks: r.migrated_blocks,
+        })
+    }
+
     fn drain_energy_nj(&mut self) -> f64 {
         let e = self.flat.energy_nj;
         self.flat.energy_nj = 0.0;
@@ -604,9 +680,13 @@ fn b_rram_flat(spec: &AssocSpec) -> Box<dyn AssocDevice> {
 }
 fn b_monarch(spec: &AssocSpec) -> Box<dyn AssocDevice> {
     // honor the kind's parameters: a wear sweep through the registry
-    // must build distinct devices, and M-Unbound must not be bounded
+    // must build distinct devices, and M-Unbound must not be bounded.
+    // The adaptive preset builds the same reconfigurable device as
+    // `Monarch { m }` — `spec.cam_sets` is its *starting* partition;
+    // the adaptive drivers resize it at runtime via `reconfigure`.
     match spec.kind {
-        InPackageKind::Monarch { m } => {
+        InPackageKind::Monarch { m }
+        | InPackageKind::MonarchAdaptive { m } => {
             Box::new(MonarchAssoc::bounded(spec.geom, spec.cam_sets, m))
         }
         _ => Box::new(MonarchAssoc::unbounded(spec.geom, spec.cam_sets)),
@@ -626,7 +706,12 @@ fn is_rram_flat(k: InPackageKind) -> bool {
     matches!(k, InPackageKind::MonarchFlatRam)
 }
 fn is_monarch(k: InPackageKind) -> bool {
-    matches!(k, InPackageKind::Monarch { .. } | InPackageKind::MonarchUnbound)
+    matches!(
+        k,
+        InPackageKind::Monarch { .. }
+            | InPackageKind::MonarchAdaptive { .. }
+            | InPackageKind::MonarchUnbound
+    )
 }
 
 type Entry = (

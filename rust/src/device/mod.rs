@@ -72,6 +72,26 @@ pub struct SearchHit {
     pub energy_nj: f64,
 }
 
+/// Outcome of a runtime RAM/CAM repartition at the device surface
+/// ([`AssocDevice::reconfigure`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReconfigOutcome {
+    /// Cycle the repartition (migration + quiesce barrier, plus any
+    /// main-memory write-back of evicted words) completes.
+    pub done_at: u64,
+    /// Dynamic energy of the migration traffic (nJ), including the
+    /// off-chip write-back of evicted words.
+    pub energy_nj: f64,
+    pub cam_sets_before: usize,
+    pub cam_sets_after: usize,
+    /// Resident CAM words whose set was converted away (shrink) or
+    /// moved between controllers (sharded resize); their relocation
+    /// cost is included in `done_at`/`energy_nj`.
+    pub migrated_words: u64,
+    /// 64B flat-RAM blocks relocated out of spans converted to CAM.
+    pub migrated_blocks: u64,
+}
+
 /// Everything an assoc-backend constructor may need; per-backend
 /// capacity policy (e.g. iso-area CMOS being 8x smaller) stays with
 /// the experiment that decides it.
@@ -208,6 +228,7 @@ mod tests {
             InPackageKind::Monarch { m: 1 },
             InPackageKind::Monarch { m: 3 },
             InPackageKind::MonarchSharded { shards: 4, m: 3 },
+            InPackageKind::MonarchAdaptive { m: 3 },
             InPackageKind::MonarchUnbound,
         ] {
             let spec = AssocSpec {

@@ -17,9 +17,13 @@
 //! - **Flat-RAM blocks** interleave (`block % shards`), spreading
 //!   value traffic across every vault group.
 //! - The package's vaults are divided among the shards
-//!   (`vaults / shards` each), so the modeled hardware — banks,
-//!   channels, TSV stripes — is exactly the unsharded package,
-//!   re-grouped. `shards` is clamped to the vault count.
+//!   (`vaults / shards` each), so when `shards` divides the vault
+//!   count the modeled hardware — banks, channels, TSV stripes — is
+//!   exactly the unsharded package, re-grouped. A non-divisor shard
+//!   count drops the remainder vaults (each shard gets
+//!   `floor(vaults / shards)`), modeling strictly less hardware; the
+//!   built-in sweeps use power-of-two counts. `shards` is clamped to
+//!   the vault count.
 //!
 //! **Scalar register semantics**: the trait's `write_key`/`write_mask`
 //! have no shard operand, so scalar writes broadcast to every shard's
@@ -394,6 +398,149 @@ impl AssocDevice for ShardedAssoc {
             .collect()
     }
 
+    /// Sharded runtime repartition. Shards repartition independently:
+    /// each touched shard's drain/relocation is scheduled on its own
+    /// private bank/channel state, and a shard whose local set count
+    /// and resident mapping are both unchanged is not touched at all —
+    /// its in-flight register/timing state survives bit-for-bit. The
+    /// contiguous partition stride becomes `div_ceil(target, shards)`
+    /// (exactly what construction at `target` would use), so surviving
+    /// global sets whose (shard, local) home changes migrate: drained
+    /// through the source shard's RAM-mode read path, re-installed
+    /// through the destination shard's migration write path (both
+    /// charged), then every touched shard quiesces to its construction
+    /// state. Dropped sets' words stream back to the main-memory
+    /// image.
+    fn reconfigure(
+        &mut self,
+        target_cam_sets: usize,
+        now: u64,
+    ) -> Option<crate::device::ReconfigOutcome> {
+        let old_total = self.total_sets;
+        let n = self.shards.len();
+        if target_cam_sets == old_total {
+            return Some(crate::device::ReconfigOutcome {
+                done_at: now,
+                energy_nj: 0.0,
+                cam_sets_before: old_total,
+                cam_sets_after: old_total,
+                migrated_words: 0,
+                migrated_blocks: 0,
+            });
+        }
+        let old_stride = self.sets_per_shard;
+        let new_stride = target_cam_sets.div_ceil(n).max(1);
+        let count = |stride: usize, total: usize, s: usize| {
+            ((s + 1) * stride).min(total).saturating_sub((s * stride).min(total))
+        };
+        let loc = |stride: usize, g: usize| {
+            let s = (g / stride).min(n - 1);
+            (s, g - s * stride)
+        };
+        // 1. Drain every global set whose data cannot stay put — a
+        //    survivor whose (shard, local) home changes, or a dropped
+        //    set — through its source shard's RAM-mode read path,
+        //    clearing the source slots so the positional reuse of the
+        //    local arrays under the new stride cannot alias stale
+        //    words. (A dropped set is NOT necessarily a top local slot
+        //    when the stride changes, so the per-shard structural
+        //    resize below cannot be trusted to find them.)
+        // (dst shard, dst local, src drain completion, words)
+        let mut moves: Vec<(usize, usize, u64, Vec<(usize, u64)>)> =
+            Vec::new();
+        let mut evicted: Vec<(usize, usize, u64)> = Vec::new();
+        let mut touched = vec![false; n];
+        let mut ready = vec![now; n];
+        let mut nj = 0.0;
+        for g in 0..old_total {
+            let (s0, l0) = loc(old_stride, g);
+            let dest = (g < target_cam_sets).then(|| loc(new_stride, g));
+            if dest == Some((s0, l0)) {
+                continue; // home unchanged: data stays put
+            }
+            // every drain issues from the quiesce point (`now`); the
+            // per-bank reservation engine serializes same-bank sets,
+            // exactly as the unsharded repartition engine schedules —
+            // with one shard this path is bit-identical to it
+            let (d, e, words) = self.shards[s0].drain_set(l0, now);
+            if words.is_empty() {
+                continue; // nothing resident: no physical work
+            }
+            ready[s0] = ready[s0].max(d);
+            nj += e;
+            touched[s0] = true;
+            for &(col, _) in &words {
+                self.shards[s0].install_resident(l0, col, 0);
+            }
+            match dest {
+                Some((s1, l1)) => {
+                    touched[s1] = true;
+                    moves.push((s1, l1, d, words));
+                }
+                None => evicted
+                    .extend(words.into_iter().map(|(c, w)| (g, c, w))),
+            }
+        }
+        // 2. Per-shard structural resize (RAM relocation on grow); the
+        //    resize's own shrink drain finds only cleared slots.
+        let mut migrated_blocks = 0u64;
+        for s in 0..n {
+            let new_count = count(new_stride, target_cam_sets, s);
+            if self.shards[s].num_cam_sets() == new_count {
+                continue; // possibly untouched: state preserved
+            }
+            let r = self.shards[s].repartition(new_count, ready[s]);
+            debug_assert!(
+                r.evicted.is_empty(),
+                "dropped sets must have been pre-drained"
+            );
+            ready[s] = r.done_at;
+            nj += r.energy_nj;
+            migrated_blocks += r.migrated_blocks;
+            touched[s] = true;
+        }
+        // 3. Re-install migrated survivors at their new homes through
+        //    the destination shards' migration write path.
+        let moved_words: u64 =
+            moves.iter().map(|(_, _, _, w)| w.len() as u64).sum();
+        let install_start = ready.clone();
+        for (s1, l1, src_done, words) in moves {
+            let mut t = install_start[s1].max(src_done);
+            for (col, w) in words {
+                let (d, e) = self.shards[s1].migrate_write(l1, col, w, t);
+                t = t.max(d);
+                nj += e;
+            }
+            ready[s1] = ready[s1].max(t);
+        }
+        // 4. Touched shards quiesce back to construction state.
+        for (s, flat) in self.shards.iter_mut().enumerate() {
+            if touched[s] {
+                flat.quiesce();
+            }
+        }
+        self.sets_per_shard = new_stride;
+        self.total_sets = target_cam_sets;
+        // 5. Dropped words return to the table's main-memory image
+        //    (shared write-back cost model with MonarchAssoc).
+        let start = ready.into_iter().max().unwrap_or(now);
+        let (done, wnj) = crate::device::assoc::write_back_evicted(
+            &mut self.main,
+            &evicted,
+            self.cols_per_set,
+            start,
+        );
+        nj += wnj;
+        Some(crate::device::ReconfigOutcome {
+            done_at: done,
+            energy_nj: nj,
+            cam_sets_before: old_total,
+            cam_sets_after: target_cam_sets,
+            migrated_words: moved_words + evicted.len() as u64,
+            migrated_blocks,
+        })
+    }
+
     fn drain_energy_nj(&mut self) -> f64 {
         let mut e = 0.0;
         for flat in self.shards.iter_mut() {
@@ -421,6 +568,10 @@ impl AssocDevice for ShardedAssoc {
         } else {
             None
         }
+    }
+
+    fn sharded(&self) -> Option<&ShardedAssoc> {
+        Some(self)
     }
 }
 
@@ -546,6 +697,83 @@ mod tests {
         let spread =
             done4.iter().max().unwrap() - done4.iter().min().unwrap();
         assert_eq!(spread, 0, "per-shard bursts must overlap: {done4:?}");
+    }
+
+    #[test]
+    fn reconfigure_redistributes_sets_across_shards() {
+        // 16 sets / 4 shards (stride 4) -> 24 sets (stride 6): every
+        // planted word must land at its new home and stay findable.
+        let mut d = ShardedAssoc::new(geom(), 16, 4);
+        for set in 0..16usize {
+            let _ = d.cam_write(set, 7, 0x1000 + set as u64, 0);
+        }
+        let out = d.reconfigure(24, 10_000).expect("sharded reconfigures");
+        assert_eq!(out.cam_sets_before, 16);
+        assert_eq!(out.cam_sets_after, 24);
+        assert!(out.done_at > 10_000);
+        assert_eq!(d.cam().unwrap().num_sets, 24);
+        // stride is what construction at 24 would use
+        for g in 0..24usize {
+            assert_eq!(d.shard_of_set(g), (g / 6).min(3));
+        }
+        let ops: Vec<SearchOp> = (0..16)
+            .map(|s| SearchOp::at(s, 0x1000 + s as u64, !0, out.done_at))
+            .collect();
+        for (s, hit) in d.search_many(&ops).iter().enumerate() {
+            assert_eq!(hit.col, Some(7), "set {s} lost its word");
+        }
+    }
+
+    #[test]
+    fn reconfigure_shrink_evicts_dropped_sets_only() {
+        let mut d = ShardedAssoc::new(geom(), 16, 4);
+        for set in 0..16usize {
+            let _ = d.cam_write(set, 3, 0x2000 + set as u64, 0);
+        }
+        let out = d.reconfigure(8, 50_000).unwrap();
+        assert_eq!(out.cam_sets_after, 8);
+        // 8 dropped sets' words streamed off-chip; 8 survivors moved
+        // or stayed, all still findable
+        assert!(out.migrated_words >= 8);
+        let ops: Vec<SearchOp> = (0..8)
+            .map(|s| SearchOp::at(s, 0x2000 + s as u64, !0, out.done_at))
+            .collect();
+        for (s, hit) in d.search_many(&ops).iter().enumerate() {
+            assert_eq!(hit.col, Some(3), "survivor {s} lost its word");
+        }
+        // dropped keys are gone from every shard
+        let gone: Vec<SearchOp> = (8..16)
+            .map(|s| {
+                SearchOp::at(s % 8, 0x2000 + s as u64, !0, out.done_at + 9999)
+            })
+            .collect();
+        for hit in d.search_many(&gone) {
+            assert_eq!(hit.col, None, "dropped word still resident");
+        }
+    }
+
+    #[test]
+    fn tail_only_reconfigure_leaves_other_shards_untouched() {
+        // 10 sets / 4 shards (stride 3: 3+3+3+1) -> 12 sets keeps the
+        // stride; only the tail shard grows. A batch left shard 0's
+        // registers and stats dirty: they must survive bit-for-bit.
+        let mut d = ShardedAssoc::new(geom(), 10, 4);
+        let _ = d.cam_write(0, 5, 0xAB, 0);
+        let _ = d.search_many(&[SearchOp::at(0, 0xAB, !0, 1_000)]);
+        let keymask = d.shard_flat(0).keymask();
+        let stats: Vec<_> = d.shard_flat(0).stats.iter().collect();
+        let out = d.reconfigure(12, 5_000).unwrap();
+        assert_eq!(out.cam_sets_after, 12);
+        assert_eq!(
+            d.shard_flat(0).keymask(),
+            keymask,
+            "reconfigure of the tail shard must not drain shard 0"
+        );
+        let after: Vec<_> = d.shard_flat(0).stats.iter().collect();
+        assert_eq!(stats, after, "shard 0 stats perturbed");
+        // shard 3 really grew
+        assert_eq!(d.shard_flat(3).num_cam_sets(), 3);
+        assert_eq!(d.shard_flat(0).num_cam_sets(), 3);
     }
 
     #[test]

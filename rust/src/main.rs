@@ -7,27 +7,34 @@
 //! monarch fig12|fig13|fig14   hashing at 100/95/75% lookups
 //! monarch stringmatch          §10.5
 //! monarch shards               shard-count throughput sweep
+//! monarch reconfig             static vs spill-only vs adaptive
 //! monarch table1               technology comparison
 //! monarch selfcheck            load artifacts, kernel-vs-rust check
 //! ```
 //!
-//! `fig12`-`fig14` and `stringmatch` accept `--pjrt` to route every
-//! constructed backend through a `DeviceBuilder` with the compiled
-//! search kernel attached.
+//! `fig12`-`fig14`, `stringmatch`, `shards` and `reconfig` accept
+//! `--pjrt` to route every constructed backend through a
+//! `DeviceBuilder` with the compiled search kernel attached (a one-time
+//! warning goes to stderr when artifacts are absent and the run falls
+//! back to pure rust). Every sweep accepts `--json <path>` to emit its
+//! rows as machine-readable JSON alongside the printed table.
 
 use monarch::config::tech;
 use monarch::coordinator::{self, Budget};
 use monarch::device::DeviceBuilder;
 use monarch::prelude::*;
 use monarch::runtime::SearchEngine;
+use monarch::util::json::{self, Json};
 use monarch::util::table::f;
 
 /// A builder factory for the fanned-out sweeps: each worker job
 /// constructs its own `DeviceBuilder`, attaching the PJRT engine when
-/// `--pjrt` is set (degrading silently to the pure-rust fallback when
-/// artifacts are absent). The engine is loaded once per worker thread
-/// — an `Rc` cannot cross threads, but jobs on the same worker share
-/// the cached load.
+/// `--pjrt` is set. The engine is loaded once per worker thread — an
+/// `Rc` cannot cross threads, but jobs on the same worker share the
+/// cached load. When `--pjrt` is requested but no compiled artifacts
+/// are present, a one-time warning goes to stderr and the run uses the
+/// pure-rust fallback — the results are NOT kernel-backed, and used to
+/// be silently mislabeled as such.
 fn builder_factory(pjrt: bool) -> impl Fn() -> DeviceBuilder + Sync {
     use std::cell::OnceCell;
     use std::rc::Rc;
@@ -41,8 +48,19 @@ fn builder_factory(pjrt: bool) -> impl Fn() -> DeviceBuilder + Sync {
                 c.get_or_init(|| SearchEngine::load_or_none().map(Rc::new))
                     .clone()
             });
-            if let Some(e) = engine {
-                return b.with_search_engine(e);
+            match engine {
+                Some(e) => return b.with_search_engine(e),
+                None => {
+                    static WARNED: std::sync::Once = std::sync::Once::new();
+                    WARNED.call_once(|| {
+                        eprintln!(
+                            "warning: --pjrt requested but no compiled \
+                             artifacts were found; falling back to the \
+                             pure-rust search path (results are NOT \
+                             kernel-backed)"
+                        );
+                    });
+                }
             }
         }
         b
@@ -62,7 +80,7 @@ fn budget_from(args: &Args) -> Result<Budget> {
     Ok(b)
 }
 
-fn table1() {
+fn table1() -> Json {
     let mut t = Table::new(
         "Table 1 — 32KB building block (latency ns / energy nJ / area mm2)",
     )
@@ -70,6 +88,7 @@ fn table1() {
         "tech", "read", "write", "search", "readE", "writeE", "searchE",
         "area",
     ]);
+    let mut rows = Vec::new();
     for p in tech::ALL {
         t.row(vec![
             p.name.to_string(),
@@ -81,31 +100,74 @@ fn table1() {
             f(p.search_nj),
             f(p.area_mm2),
         ]);
+        rows.push(
+            Json::obj()
+                .set("tech", p.name)
+                .set("read_ns", p.read_ns)
+                .set("write_ns", p.write_ns)
+                .set("search_ns", p.search_ns)
+                .set("read_nj", p.read_nj)
+                .set("write_nj", p.write_nj)
+                .set("search_nj", p.search_nj)
+                .set("area_mm2", p.area_mm2),
+        );
     }
     t.print();
+    json::experiment("table1", rows)
 }
 
 fn main() -> Result<()> {
     let args = Args::parse_env();
     let budget = budget_from(&args)?;
-    match args.subcommand().unwrap_or("help") {
-        "table1" => table1(),
+    let sub = args.subcommand().unwrap_or("help").to_string();
+    let mut payload: Option<Json> = None;
+    match sub.as_str() {
+        "table1" => payload = Some(table1()),
         "fig9" | "fig10" => {
             let results = coordinator::run_cache_mode(&budget);
             coordinator::fig9_table(&results).print();
             coordinator::fig10_table(&results).print();
+            let mut rows = Vec::new();
+            for row in &results {
+                let base = &row[0];
+                for r in row {
+                    rows.push(
+                        Json::obj()
+                            .set("workload", r.workload.clone())
+                            .set("system", r.system.clone())
+                            .set("cycles", r.cycles)
+                            .set("energy_nj", r.energy_nj)
+                            .set("inpkg_hit_rate", r.inpkg_hit_rate)
+                            .set("speedup_vs_dcache", r.speedup_vs(base)),
+                    );
+                }
+            }
+            payload = Some(json::experiment(&sub, rows));
         }
         "fig11" => {
-            let rows = coordinator::fig11_lifetimes(&budget);
+            let lifetimes = coordinator::fig11_lifetimes(&budget);
             let mut t = Table::new("Fig 11 — Lifetime (years)")
                 .header(vec!["workload", "ideal", "Monarch(M=3)"]);
-            for (wl, r) in rows {
-                t.row(vec![wl, f(r.ideal_years), f(r.monarch_years)]);
+            let mut rows = Vec::new();
+            for (wl, r) in lifetimes {
+                t.row(vec![
+                    wl.clone(),
+                    f(r.ideal_years),
+                    f(r.monarch_years),
+                ]);
+                rows.push(
+                    Json::obj()
+                        .set("workload", wl)
+                        .set("ideal_years", r.ideal_years)
+                        .set("monarch_years", r.monarch_years)
+                        .set("imbalance", r.imbalance),
+                );
             }
             t.print();
+            payload = Some(json::experiment("fig11", rows));
         }
-        sub @ ("fig12" | "fig13" | "fig14") => {
-            let read_pct = match sub {
+        "fig12" | "fig13" | "fig14" => {
+            let read_pct = match sub.as_str() {
                 "fig12" => 1.0,
                 "fig13" => 0.95,
                 _ => 0.75,
@@ -126,11 +188,33 @@ fn main() -> Result<()> {
                 &rows,
             )
             .print();
+            let mut jrows = Vec::new();
+            for (w, tp, reports) in &rows {
+                let base = &reports[0];
+                for r in reports {
+                    jrows.push(
+                        Json::obj()
+                            .set("window", *w)
+                            .set("table_pow2", *tp)
+                            .set("system", r.system.clone())
+                            .set("cycles", r.cycles)
+                            .set("energy_nj", r.energy_nj)
+                            .set("speedup_vs_hbm_c", r.speedup_vs(base)),
+                    );
+                }
+            }
+            payload = Some(json::experiment(&sub, jrows));
         }
         "shards" => {
             // shard-count sweep: 1 controller up to one per vault
-            // (the geometry keeps 8 vaults at every scale)
-            let pts = coordinator::sharded_sweep(&budget, &[1, 2, 4, 8]);
+            // (the geometry keeps 8 vaults at every scale); devices
+            // build through the same registry factory as the other
+            // sweeps, so --pjrt reaches them.
+            let pts = coordinator::sharded_sweep_with(
+                &builder_factory(args.flag("pjrt")),
+                &budget,
+                &[1, 2, 4, 8],
+            );
             coordinator::shard_table(&pts).print();
             let base = pts.first().expect("at least one point");
             for p in &pts {
@@ -141,6 +225,54 @@ fn main() -> Result<()> {
                     p.searches_per_kcycle / base.searches_per_kcycle
                 );
             }
+            let jrows = pts
+                .iter()
+                .map(|p| {
+                    Json::obj()
+                        .set("shards", p.shards)
+                        .set("ops", p.ops)
+                        .set("cycles", p.cycles)
+                        .set("searches_per_kcycle", p.searches_per_kcycle)
+                })
+                .collect();
+            payload = Some(json::experiment("shards", jrows));
+        }
+        "reconfig" => {
+            let pts = coordinator::reconfig_sweep_with(
+                &builder_factory(args.flag("pjrt")),
+                &budget,
+            );
+            coordinator::reconfig_table(&pts).print();
+            for tp in [12usize, 13] {
+                let get = |sys: &str| {
+                    pts.iter()
+                        .find(|p| p.table_pow2 == tp && p.system == sys)
+                        .map(|p| p.cycles)
+                };
+                if let (Some(s), Some(a)) = (get("spill"), get("adaptive"))
+                {
+                    println!(
+                        "  2^{tp}: adaptive {:.2}x vs spill-only \
+                         ({a} vs {s} cycles)",
+                        s as f64 / a.max(1) as f64
+                    );
+                }
+            }
+            let jrows = pts
+                .iter()
+                .map(|p| {
+                    Json::obj()
+                        .set("table_pow2", p.table_pow2)
+                        .set("system", p.system.clone())
+                        .set("start_sets", p.start_sets)
+                        .set("final_sets", p.final_sets)
+                        .set("reconfigs", p.reconfigs)
+                        .set("spill_lookups", p.spill_lookups)
+                        .set("cycles", p.cycles)
+                        .set("energy_nj", p.energy_nj)
+                })
+                .collect();
+            payload = Some(json::experiment("reconfig", jrows));
         }
         "stringmatch" => {
             let reports = coordinator::stringmatch_reports_with(
@@ -163,6 +295,21 @@ fn main() -> Result<()> {
                 ]);
             }
             t.print();
+            let jrows = reports
+                .iter()
+                .map(|r| {
+                    Json::obj()
+                        .set("system", r.system.clone())
+                        .set("cycles", r.cycles)
+                        .set("matches", r.matches)
+                        .set("energy_nj", r.energy_nj)
+                        .set(
+                            "speedup_vs_hbm_c",
+                            base.cycles as f64 / r.cycles.max(1) as f64,
+                        )
+                })
+                .collect();
+            payload = Some(json::experiment("stringmatch", jrows));
         }
         "selfcheck" => {
             let engine = SearchEngine::load(&SearchEngine::default_dir())?;
@@ -188,10 +335,19 @@ fn main() -> Result<()> {
             }
             println!(
                 "usage: monarch <table1|fig9|fig10|fig11|fig12|fig13|fig14|\
-                 stringmatch|shards|selfcheck> [--quick] [--scale S] \
-                 [--trace-ops N] [--hash-ops N] [--threads N] [--seed N] \
-                 [--pjrt]"
+                 stringmatch|shards|reconfig|selfcheck> [--quick] \
+                 [--scale S] [--trace-ops N] [--hash-ops N] [--threads N] \
+                 [--seed N] [--pjrt] [--json PATH]"
             );
+        }
+    }
+    if let Some(path) = args.get("json") {
+        match &payload {
+            Some(p) => {
+                json::write_json(path, p)?;
+                eprintln!("wrote {path}");
+            }
+            None => eprintln!("--json: nothing to write for {sub:?}"),
         }
     }
     Ok(())

@@ -5,6 +5,19 @@
 //! library exposes "pointers" to the match and key/mask registers of
 //! each vault controller (modeled as reserved addresses at the top of
 //! the CAM window).
+//!
+//! Since the runtime-reconfiguration PR this is a real **region
+//! manager**, not a bump allocator: regions can be freed and their
+//! holes reused (first-fit), and the CAM window distinguishes its
+//! *capacity* (how much of the window the device's current CAM
+//! partition backs) from its *limit* (the architectural window size).
+//! A [`Allocator::reconfigurable`] CAM window **grows on demand**
+//! instead of bailing: when `flat_cam_malloc` cannot place a region in
+//! the current capacity but the limit allows, the capacity extends and
+//! the growth is left pending in [`Allocator::cam_grew`] for the
+//! driver to translate into a device
+//! [`reconfigure`](crate::device::assoc::AssocDevice::reconfigure)
+//! call (paying the modeled migration cost).
 
 use crate::bail;
 use crate::util::error::Result;
@@ -59,62 +72,207 @@ impl Region {
         debug_assert!(self.contains(addr));
         addr - self.base
     }
+
+    /// Do two regions share any address?
+    pub fn overlaps(&self, other: &Region) -> bool {
+        self.base < other.base + other.size
+            && other.base < self.base + self.size
+    }
 }
 
-/// Bump allocator over the three windows.
+/// One window's live-region bookkeeping: a sorted, non-overlapping
+/// list of `(base, size)` pairs plus the capacity/limit split.
 #[derive(Clone, Debug)]
-pub struct Allocator {
-    ddr_next: u64,
-    ddr_cap: u64,
-    ram_next: u64,
-    ram_cap: u64,
-    cam_next: u64,
-    cam_cap: u64,
+struct RegionPool {
+    base: u64,
+    /// Bytes of the window currently backed (allocatable).
+    cap: u64,
+    /// Architectural window size; `cap` can never exceed it.
+    limit: u64,
+    /// Live regions, sorted by base.
+    live: Vec<(u64, u64)>,
 }
 
-impl Allocator {
-    pub fn new(ddr_bytes: u64, flat_ram_bytes: u64, flat_cam_bytes: u64) -> Self {
-        Self {
-            ddr_next: DDR_BASE,
-            ddr_cap: ddr_bytes,
-            ram_next: FLAT_RAM_BASE,
-            ram_cap: flat_ram_bytes,
-            cam_next: FLAT_CAM_BASE,
-            cam_cap: flat_cam_bytes,
+impl RegionPool {
+    fn new(base: u64, cap: u64, limit: u64) -> Self {
+        Self { base, cap: cap.min(limit), limit, live: Vec::new() }
+    }
+
+    /// First-fit placement of `size` bytes at 64B alignment, walking
+    /// the holes between live regions; `None` when nothing fits in the
+    /// current capacity.
+    fn first_fit(&self, size: u64) -> Option<u64> {
+        let mut cursor = self.base;
+        for &(b, s) in &self.live {
+            let aligned = (cursor + 63) & !63;
+            if aligned + size <= b {
+                return Some(aligned);
+            }
+            cursor = b + s;
+        }
+        let aligned = (cursor + 63) & !63;
+        (aligned + size <= self.base + self.cap).then_some(aligned)
+    }
+
+    /// Capacity (bytes from `base`) an append-placement of `size`
+    /// would need — what a growth must extend to.
+    fn needed_for(&self, size: u64) -> u64 {
+        let end = self.live.last().map_or(self.base, |&(b, s)| b + s);
+        let aligned = (end + 63) & !63;
+        aligned + size - self.base
+    }
+
+    fn insert(&mut self, base: u64, size: u64) {
+        let at = self.live.partition_point(|&(b, _)| b < base);
+        self.live.insert(at, (base, size));
+    }
+
+    fn remove(&mut self, base: u64, size: u64) -> bool {
+        match self.live.iter().position(|&r| r == (base, size)) {
+            Some(i) => {
+                self.live.remove(i);
+                true
+            }
+            None => false,
         }
     }
 
-    fn bump(next: &mut u64, base: u64, cap: u64, size: u64) -> Result<u64> {
-        let aligned = (*next + 63) & !63; // 64B block alignment
-        if aligned + size > base + cap {
-            bail!(
-                "allocation of {size} bytes exceeds window \
-                 (used {} of {cap})",
-                aligned - base
-            );
+    fn live_bytes(&self) -> u64 {
+        self.live.iter().map(|&(_, s)| s).sum()
+    }
+}
+
+/// Region manager over the three windows.
+#[derive(Clone, Debug)]
+pub struct Allocator {
+    ddr: RegionPool,
+    ram: RegionPool,
+    cam: RegionPool,
+    /// Pending CAM-capacity growth (new capacity in bytes) not yet
+    /// collected by the driver.
+    cam_growth: Option<u64>,
+}
+
+impl Allocator {
+    /// Fixed windows: every window's capacity IS its limit, so an
+    /// overfull `flat_cam_malloc` bails (the pre-reconfiguration
+    /// behavior).
+    pub fn new(
+        ddr_bytes: u64,
+        flat_ram_bytes: u64,
+        flat_cam_bytes: u64,
+    ) -> Self {
+        Self {
+            ddr: RegionPool::new(DDR_BASE, ddr_bytes, ddr_bytes),
+            ram: RegionPool::new(FLAT_RAM_BASE, flat_ram_bytes, flat_ram_bytes),
+            cam: RegionPool::new(FLAT_CAM_BASE, flat_cam_bytes, flat_cam_bytes),
+            cam_growth: None,
         }
-        *next = aligned + size;
-        Ok(aligned)
+    }
+
+    /// Growable CAM window: allocation starts against `cam_start`
+    /// bytes of backed capacity and extends on demand up to
+    /// `cam_limit`, leaving the growth pending in
+    /// [`Allocator::cam_grew`].
+    pub fn reconfigurable(
+        ddr_bytes: u64,
+        flat_ram_bytes: u64,
+        cam_start: u64,
+        cam_limit: u64,
+    ) -> Self {
+        let mut a = Self::new(ddr_bytes, flat_ram_bytes, cam_limit);
+        a.cam.cap = cam_start.min(cam_limit);
+        a
+    }
+
+    fn pool(&mut self, space: Space) -> Option<&mut RegionPool> {
+        match space {
+            Space::Ddr => Some(&mut self.ddr),
+            Space::FlatRam => Some(&mut self.ram),
+            Space::FlatCam => Some(&mut self.cam),
+            Space::Register => None,
+        }
+    }
+
+    fn place(pool: &mut RegionPool, size: u64, space: Space) -> Result<Region> {
+        match pool.first_fit(size) {
+            Some(base) => {
+                pool.insert(base, size);
+                Ok(Region { base, size, space })
+            }
+            None => bail!(
+                "allocation of {size} bytes exceeds window \
+                 (live {} of {})",
+                pool.live_bytes(),
+                pool.cap
+            ),
+        }
     }
 
     /// Conventional main-memory allocation.
     pub fn malloc(&mut self, size: u64) -> Result<Region> {
-        let base = Self::bump(&mut self.ddr_next, DDR_BASE, self.ddr_cap, size)?;
-        Ok(Region { base, size, space: Space::Ddr })
+        Self::place(&mut self.ddr, size, Space::Ddr)
     }
 
     /// `flat_RAM_malloc` (§7): allocate in the Monarch RAM scratchpad.
     pub fn flat_ram_malloc(&mut self, size: u64) -> Result<Region> {
-        let base =
-            Self::bump(&mut self.ram_next, FLAT_RAM_BASE, self.ram_cap, size)?;
-        Ok(Region { base, size, space: Space::FlatRam })
+        Self::place(&mut self.ram, size, Space::FlatRam)
     }
 
-    /// `flat_CAM_malloc` (§7): allocate in the Monarch CAM scratchpad.
+    /// `flat_CAM_malloc` (§7): allocate in the Monarch CAM window.
+    /// When the current capacity cannot place the region but the
+    /// window limit allows, the capacity **grows** (at least doubling,
+    /// at most to the limit) instead of bailing, and the new capacity
+    /// is left pending for [`Allocator::cam_grew`].
     pub fn flat_cam_malloc(&mut self, size: u64) -> Result<Region> {
-        let base =
-            Self::bump(&mut self.cam_next, FLAT_CAM_BASE, self.cam_cap, size)?;
-        Ok(Region { base, size, space: Space::FlatCam })
+        if self.cam.first_fit(size).is_none() && self.cam.cap < self.cam.limit
+        {
+            let needed = self.cam.needed_for(size);
+            if needed <= self.cam.limit {
+                let grown = needed.max(self.cam.cap.saturating_mul(2));
+                self.cam.cap = grown.min(self.cam.limit);
+                self.cam_growth = Some(self.cam.cap);
+            }
+        }
+        Self::place(&mut self.cam, size, Space::FlatCam)
+    }
+
+    /// Release a region back to its window. Errors if the region was
+    /// not live (double free / never allocated).
+    pub fn free(&mut self, region: &Region) -> Result<()> {
+        let Some(pool) = self.pool(region.space) else {
+            bail!("cannot free the register window");
+        };
+        if !pool.remove(region.base, region.size) {
+            bail!(
+                "free of a region that is not live: base={:#x} size={}",
+                region.base,
+                region.size
+            );
+        }
+        Ok(())
+    }
+
+    /// Current CAM-window capacity in bytes.
+    pub fn cam_capacity(&self) -> u64 {
+        self.cam.cap
+    }
+
+    /// Take the pending CAM growth notification, if any: the new
+    /// capacity in bytes the device partition must be reconfigured to
+    /// back.
+    pub fn cam_grew(&mut self) -> Option<u64> {
+        self.cam_growth.take()
+    }
+
+    /// Live (allocated) bytes in a window.
+    pub fn live_bytes(&self, space: Space) -> u64 {
+        match space {
+            Space::Ddr => self.ddr.live_bytes(),
+            Space::FlatRam => self.ram.live_bytes(),
+            Space::FlatCam => self.cam.live_bytes(),
+            Space::Register => 0,
+        }
     }
 }
 
@@ -153,5 +311,38 @@ mod tests {
         assert!(r.contains(r.base) && r.contains(r.base + 255));
         assert!(!r.contains(r.base + 256));
         assert_eq!(r.offset(r.base + 17), 17);
+    }
+
+    #[test]
+    fn free_reopens_the_hole_first_fit() {
+        let mut a = Allocator::new(1 << 20, 1 << 20, 4096);
+        let r1 = a.flat_cam_malloc(1024).unwrap();
+        let r2 = a.flat_cam_malloc(1024).unwrap();
+        let r3 = a.flat_cam_malloc(1024).unwrap();
+        assert!(!r1.overlaps(&r2) && !r2.overlaps(&r3));
+        a.free(&r2).unwrap();
+        assert!(a.free(&r2).is_err(), "double free must error");
+        let r4 = a.flat_cam_malloc(512).unwrap();
+        assert_eq!(r4.base, r2.base, "first fit reuses the hole");
+        assert!(!r4.overlaps(&r1) && !r4.overlaps(&r3));
+        assert_eq!(a.live_bytes(Space::FlatCam), 1024 + 1024 + 512);
+    }
+
+    #[test]
+    fn cam_window_grows_instead_of_bailing() {
+        let mut a =
+            Allocator::reconfigurable(1 << 20, 1 << 20, 4096, 1 << 16);
+        assert_eq!(a.cam_capacity(), 4096);
+        let _ = a.flat_cam_malloc(4096).unwrap();
+        assert!(a.cam_grew().is_none(), "fits: no growth");
+        // overflow: capacity must grow (at least double) and succeed
+        let r = a.flat_cam_malloc(2048).unwrap();
+        assert_eq!(r.size, 2048);
+        let grown = a.cam_grew().expect("growth pending");
+        assert!(grown >= 8192, "at least doubled: {grown}");
+        assert_eq!(a.cam_capacity(), grown);
+        assert!(a.cam_grew().is_none(), "notification is taken once");
+        // the hard limit still bounds growth
+        assert!(a.flat_cam_malloc(1 << 20).is_err());
     }
 }

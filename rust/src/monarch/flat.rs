@@ -14,6 +14,21 @@
 //!   ColumnIn CAM; searches need the bank's `Ref_S` — prepare/activate
 //!   toggles are issued (and costed) on demand;
 //! - t_MWW follows the strict blocking policy for flat-mode writes.
+//!
+//! **Runtime repartitioning** (the paper's polymorphism headline): the
+//! RAM/CAM split is no longer frozen at construction. The
+//! [`MonarchFlat::repartition`] engine converts flat-RAM blocks to CAM
+//! sets (and back) at runtime: it drains resident data through the
+//! real [`BankEngine`] timing path (RAM-mode column reads on a shrink,
+//! block read+rewrite relocation on a grow), charges energy and the
+//! wear leveler, invalidates the stale superset key/mask latches, and
+//! ends in a quiesce barrier that returns every bank latch and both
+//! global registers to their construction defaults. The pinned
+//! contract (see `tests/device_differential.rs`): after
+//! `repartition(m')` the controller is bit-identical, for all
+//! subsequent operations, to a controller *constructed* with `m'` CAM
+//! sets holding the same resident data — with the wear history carried
+//! over, not reset.
 
 use crate::config::{MonarchGeom, Timing, WearConfig};
 use crate::mem::timing::{BankEngine, BankState, ChannelState, EngineOpts, Op};
@@ -42,6 +57,24 @@ impl Default for BankMode {
             state: BankState::default(),
         }
     }
+}
+
+/// Outcome of one [`MonarchFlat::repartition`] call.
+#[derive(Clone, Debug)]
+pub struct RepartitionReport {
+    /// Cycle the repartition (migration + quiesce barrier) completes.
+    pub done_at: u64,
+    /// Dynamic energy of the migration traffic (nJ).
+    pub energy_nj: f64,
+    pub from_sets: usize,
+    pub to_sets: usize,
+    /// Resident words drained out of converted CAM sets on a shrink,
+    /// as `(old set, column, word)`. The device layer decides where
+    /// they land (main-memory image, another controller, ...).
+    pub evicted: Vec<(usize, usize, u64)>,
+    /// 64B flat-RAM blocks relocated out of the converted span on a
+    /// grow.
+    pub migrated_blocks: u64,
 }
 
 /// The flat-mode Monarch controller: a CAM region of real XAM sets
@@ -359,6 +392,246 @@ impl MonarchFlat {
     pub fn keymask(&self) -> (u64, u64) {
         (self.key_reg, self.mask_reg)
     }
+
+    /// The wear leveler (diagnostics / carry-over tests).
+    pub fn wear(&self) -> &WearLeveler {
+        &self.wear
+    }
+
+    /// 64B flat-RAM blocks displaced by converting one set to CAM.
+    pub fn blocks_per_set(&self) -> u64 {
+        (self.geom.set_bytes() / 64).max(1) as u64
+    }
+
+    /// Functional-only install of a resident word: no timing, energy
+    /// or wear. This is the "constructed with this resident data"
+    /// idealization the repartition contract is pinned against, and
+    /// the re-install half of a cross-controller set migration (whose
+    /// cost the migrating device charges via [`Self::migrate_write`]).
+    pub fn install_resident(&mut self, set: usize, col: usize, word: u64) {
+        self.sets[set].write_col(col, word);
+    }
+
+    /// Drain a set's resident (nonzero) words through the RAM-mode
+    /// read path — one column read per word, serialized on the set's
+    /// bank. Returns `(done_at, energy_nj, words)` with `words` as
+    /// `(column, word)` pairs. A zero column is empty by the model's
+    /// occupancy convention (arrays construct zeroed; stored keys are
+    /// tagged nonzero by the drivers).
+    pub fn drain_set(
+        &mut self,
+        set: usize,
+        now: u64,
+    ) -> (u64, f64, Vec<(usize, u64)>) {
+        let mut t = now;
+        let mut nj = 0.0;
+        let mut words = Vec::new();
+        for col in 0..self.geom.cols_per_set {
+            if self.sets[set].read_col(col) == 0 {
+                continue;
+            }
+            let (a, w) = self.cam_read(set, col, t);
+            t = a.done_at;
+            nj += a.energy_nj;
+            words.push((col, w));
+        }
+        (t, nj, words)
+    }
+
+    /// Migration column write: real bank timing, energy and wear
+    /// accounting, but no latch reprogramming — the repartition engine
+    /// batches latch state, and the final quiesce restores the
+    /// construction defaults regardless. A t_MWW-exhausted window does
+    /// not block migration (the controller defers it to the window
+    /// boundary in real hardware); the deferral is counted instead.
+    pub fn migrate_write(
+        &mut self,
+        set: usize,
+        col: usize,
+        word: u64,
+        now: u64,
+    ) -> (u64, f64) {
+        let ss = self.superset_of(set);
+        if self.bounded {
+            self.subwrites[ss] += 1;
+            if self.subwrites[ss] >= 8 {
+                self.subwrites[ss] = 0;
+                let (ok, _) = self.wear.on_write(ss, false, now);
+                if !ok {
+                    self.stats.inc("reconfig_wear_deferred");
+                }
+            }
+        }
+        let (vault, bank) = self.route_set(set);
+        let done_at = {
+            let b = &mut self.banks[bank];
+            self.engine.schedule(
+                &mut b.state,
+                &mut self.chans[vault],
+                Op::Write,
+                0,
+                now,
+            )
+        };
+        self.sets[set].write_col(col, word);
+        self.energy_nj += XAM_WRITE_NJ;
+        self.stats.inc("reconfig_cam_writes");
+        (done_at, XAM_WRITE_NJ)
+    }
+
+    /// Flat-RAM block relocation for a grow: every 64B block of the
+    /// span being converted to CAM is read and rewritten into the
+    /// surviving RAM region, through the real bank engine (blocks on
+    /// different banks pipeline; wear is charged on the writes).
+    fn relocate_ram(
+        &mut self,
+        first_set: usize,
+        nsets: usize,
+        now: u64,
+    ) -> (u64, f64, u64) {
+        let bps = self.blocks_per_set();
+        let nss = self.ss_version.len() as u64;
+        let mut done = now;
+        let mut nj = 0.0;
+        let mut blocks = 0u64;
+        for s in 0..nsets as u64 {
+            for j in 0..bps {
+                let src = (first_set as u64 + s) * bps + j;
+                let dst = src + nsets as u64 * bps;
+                let rd = self.ram_sched(src, false, now);
+                if self.bounded {
+                    let ss = (dst / self.geom.sets_per_superset as u64
+                        % nss) as usize;
+                    let (ok, _) = self.wear.on_write(ss, false, rd);
+                    if !ok {
+                        self.stats.inc("reconfig_wear_deferred");
+                    }
+                }
+                let wr = self.ram_sched(dst, true, rd);
+                done = done.max(wr);
+                nj += XAM_READ_NJ + XAM_WRITE_NJ;
+                blocks += 1;
+            }
+        }
+        self.energy_nj += nj;
+        (done, nj, blocks)
+    }
+
+    /// Schedule one flat-RAM block op without the t_MWW gate (the
+    /// migration path charges wear itself and never blocks).
+    fn ram_sched(&mut self, block: u64, write: bool, now: u64) -> u64 {
+        let vault = (block % self.geom.vaults as u64) as usize;
+        let bank_in_vault = ((block / self.geom.vaults as u64)
+            % self.geom.banks_per_vault as u64)
+            as usize;
+        let bank = vault * self.geom.banks_per_vault + bank_in_vault;
+        let op = if write { Op::Write } else { Op::Read };
+        self.engine.schedule(
+            &mut self.ram_banks[bank],
+            &mut self.chans[vault],
+            op,
+            0,
+            now,
+        )
+    }
+
+    /// Quiesce to construction state: global key/mask registers, the
+    /// match latch, per-superset key/mask versions, sub-block write
+    /// accumulators, every bank's sense/port latches and all
+    /// bank/channel reservation state return to their constructed
+    /// defaults. Functional CAM contents, wear history, stats and the
+    /// energy accumulator are untouched.
+    pub fn quiesce(&mut self) {
+        self.key_reg = 0;
+        self.mask_reg = 0;
+        self.version = 0;
+        self.match_reg = None;
+        for v in self.ss_version.iter_mut() {
+            *v = u64::MAX;
+        }
+        for s in self.subwrites.iter_mut() {
+            *s = 0;
+        }
+        for b in self.banks.iter_mut() {
+            *b = BankMode::default();
+        }
+        self.reset_timing();
+    }
+
+    /// The repartition engine: convert flat-RAM blocks to CAM sets
+    /// (grow) or CAM sets back to flat-RAM (shrink) at runtime.
+    ///
+    /// Shrink: the converted sets' resident words are drained through
+    /// the RAM-mode read path and returned in the report for the
+    /// device layer to relocate; the freed span reverts to flat-RAM.
+    /// Grow: the new span's flat-RAM blocks are relocated into the
+    /// surviving RAM region (read + rewrite per block), then the span
+    /// comes up as empty CAM sets. Both directions end with the
+    /// per-superset wear state resized **with history carried over**
+    /// ([`WearLeveler::resize`]), stale superset latches invalidated,
+    /// and a final prepare barrier (one t_RP) after which the
+    /// controller sits in its construction-default state
+    /// ([`Self::quiesce`]).
+    pub fn repartition(
+        &mut self,
+        target_sets: usize,
+        now: u64,
+    ) -> RepartitionReport {
+        let from = self.sets.len();
+        if target_sets == from {
+            return RepartitionReport {
+                done_at: now,
+                energy_nj: 0.0,
+                from_sets: from,
+                to_sets: from,
+                evicted: Vec::new(),
+                migrated_blocks: 0,
+            };
+        }
+        self.stats.inc("repartitions");
+        let mut done = now;
+        let mut nj = 0.0;
+        let mut evicted = Vec::new();
+        let mut migrated_blocks = 0;
+        if target_sets < from {
+            for set in target_sets..from {
+                let (d, e, words) = self.drain_set(set, now);
+                done = done.max(d);
+                nj += e;
+                evicted
+                    .extend(words.into_iter().map(|(c, w)| (set, c, w)));
+            }
+            self.sets.truncate(target_sets);
+        } else {
+            let (d, e, blocks) =
+                self.relocate_ram(from, target_sets - from, now);
+            done = done.max(d);
+            nj += e;
+            migrated_blocks = blocks;
+            let (rows, cols) =
+                (self.geom.rows_per_set, self.geom.cols_per_set);
+            self.sets
+                .resize_with(target_sets, || XamArray::new(rows, cols));
+        }
+        let supersets = target_sets
+            .div_ceil(self.geom.sets_per_superset)
+            .max(1);
+        self.ss_version = vec![u64::MAX; supersets];
+        self.subwrites = vec![0; supersets];
+        self.wear.resize(supersets);
+        done += self.engine.timing.t_rp as u64;
+        self.quiesce();
+        self.stats.add("reconfig_evicted_words", evicted.len() as u64);
+        self.stats.add("reconfig_migrated_blocks", migrated_blocks);
+        RepartitionReport {
+            done_at: done,
+            energy_nj: nj,
+            from_sets: from,
+            to_sets: target_sets,
+            evicted,
+            migrated_blocks,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -478,6 +751,126 @@ mod tests {
         }
         assert!(blocked, "t_MWW must strictly block flat-mode writes");
         assert!(m.stats.get("cam_write_blocked") > 0);
+    }
+
+    #[test]
+    fn repartition_grow_adds_empty_sets_and_pays_relocation() {
+        let mut m = flat(4);
+        let mut t = 0;
+        for (i, key) in [11u64, 22, 33].iter().enumerate() {
+            t = m.cam_write(1, i, *key, t).unwrap().done_at;
+        }
+        let r = m.repartition(8, t);
+        assert_eq!((r.from_sets, r.to_sets), (4, 8));
+        assert_eq!(m.num_cam_sets(), 8);
+        assert!(r.evicted.is_empty());
+        assert_eq!(r.migrated_blocks, 4 * m.blocks_per_set());
+        assert!(r.done_at > t, "relocation takes real cycles");
+        assert!(r.energy_nj > 0.0);
+        // surviving data intact, new sets empty and searchable
+        assert_eq!(m.set_array(1).read_col(1), 22);
+        let mut tt = m.write_key(22, r.done_at).done_at;
+        tt = m.write_mask(!0, tt).done_at;
+        let (_, hit) = m.search(1, tt);
+        assert_eq!(hit, Some(1));
+        let (_, miss) = m.search(7, tt + 1000);
+        assert_eq!(miss, None);
+    }
+
+    #[test]
+    fn repartition_shrink_drains_resident_words() {
+        let mut m = flat(8);
+        let mut t = 0;
+        t = m.cam_write(1, 3, 0xAA, t).unwrap().done_at;
+        t = m.cam_write(6, 9, 0xBB, t).unwrap().done_at;
+        t = m.cam_write(7, 0, 0xCC, t).unwrap().done_at;
+        let r = m.repartition(4, t);
+        assert_eq!((r.from_sets, r.to_sets), (8, 4));
+        assert_eq!(m.num_cam_sets(), 4);
+        assert_eq!(r.evicted, vec![(6, 9, 0xBB), (7, 0, 0xCC)]);
+        assert_eq!(m.stats.get("reconfig_evicted_words"), 2);
+        assert!(r.done_at > t, "drain reads take real cycles");
+        // the kept set still holds its word
+        assert_eq!(m.set_array(1).read_col(3), 0xAA);
+    }
+
+    #[test]
+    fn repartition_quiesces_to_construction_state() {
+        let mut m = flat(4);
+        m.cam_write(0, 0, 7, 0);
+        m.write_key(7, 100);
+        m.write_mask(!0, 110);
+        m.search(0, 200); // dirty registers, latches, match latch
+        let r = m.repartition(6, 5_000);
+        assert_eq!(m.keymask(), (0, 0), "registers drained");
+        // the next search must push key/mask afresh (stale supersets
+        // invalidated) and re-prepare the bank
+        let pushes = m.stats.get("keymask_pushes");
+        let preps = m.stats.get("prepares");
+        let mut t = m.write_key(7, r.done_at).done_at;
+        t = m.write_mask(!0, t).done_at;
+        let (_, hit) = m.search(0, t);
+        assert_eq!(hit, Some(0), "resident data survived");
+        assert_eq!(m.stats.get("keymask_pushes"), pushes + 1);
+        assert_eq!(m.stats.get("prepares"), preps + 1);
+    }
+
+    #[test]
+    fn repartition_carries_wear_over() {
+        let mut m = flat(8);
+        for i in 0..64u64 {
+            m.cam_write(0, (i % 512) as usize, i + 1, i * 300);
+        }
+        let before = m.wear().write_count();
+        assert!(before > 0, "column writes charge block wear");
+        let r = m.repartition(16, 100_000);
+        assert!(
+            m.wear().write_count() >= before,
+            "repartition must not reset wear ({} < {before})",
+            m.wear().write_count()
+        );
+        assert!(r.migrated_blocks > 0);
+    }
+
+    #[test]
+    fn repartition_preserves_t_mww_locks() {
+        // Exhaust superset 0's block budget (M=1: 512 block writes =
+        // 4096 column writes), repartition, and verify the lock is
+        // still held — the wear leveler carries over, it is not reset
+        // the way a fresh construction would be.
+        let geom = flat(1).geom;
+        let mut m =
+            MonarchFlat::new(geom, 8, WearConfig::default_m(1), 10_000, true);
+        for i in 0..4096u64 {
+            assert!(
+                m.cam_write(0, (i % 512) as usize, i | 1, 10).is_some(),
+                "write {i} inside budget"
+            );
+        }
+        assert!(m.cam_write(0, 0, 1, 20).is_none(), "budget exhausted");
+        let r = m.repartition(16, 30);
+        assert!(r.done_at < 10_000, "migration fits inside the window");
+        assert!(
+            m.cam_write(0, 0, 1, 5_000).is_none(),
+            "t_MWW lock must survive the repartition"
+        );
+        // a fresh device at the same partition accepts the write
+        let mut fresh =
+            MonarchFlat::new(geom, 16, WearConfig::default_m(1), 10_000, true);
+        assert!(fresh.cam_write(0, 0, 1, 5_000).is_some());
+        // the window still expires on schedule
+        assert!(m.cam_write(0, 0, 1, 10_001).is_some());
+    }
+
+    #[test]
+    fn repartition_noop_is_free() {
+        let mut m = flat(4);
+        m.write_key(5, 10);
+        let r = m.repartition(4, 500);
+        assert_eq!(r.done_at, 500);
+        assert_eq!(r.energy_nj, 0.0);
+        assert_eq!(m.keymask().0, 5, "no-op must not quiesce");
+        assert_eq!(m.stats.get("repartitions"), 0);
     }
 
     #[test]

@@ -11,6 +11,6 @@ pub mod wear;
 
 pub use alloc::{Allocator, Region, Space};
 pub use cache::MonarchCache;
-pub use flat::MonarchFlat;
+pub use flat::{MonarchFlat, RepartitionReport};
 pub use lifetime::{LifetimeEstimator, LifetimeReport};
 pub use wear::{WearEvent, WearLeveler};

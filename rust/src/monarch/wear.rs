@@ -131,6 +131,31 @@ impl WearLeveler {
         self.swt.len()
     }
 
+    /// Global block-write counter accumulated since the last rotation
+    /// (diagnostics / the reconfigure carry-over tests).
+    pub fn write_count(&self) -> u64 {
+        self.write_counter
+    }
+
+    /// Resize the per-superset state for a runtime RAM/CAM
+    /// repartition, **carrying the wear history over**: surviving
+    /// supersets keep their t_MWW window state (budget spent, lock
+    /// expiry), SWT flags and current-interval write counts; new
+    /// supersets start fresh; the global write counter, rotation
+    /// offsets, rotate log and historical snapshots are untouched.
+    /// The superset/dirty counters are recomputed from the surviving
+    /// SWT entries so a truncation cannot leave them overcounting.
+    pub fn resize(&mut self, supersets: usize) {
+        let supersets = supersets.max(1);
+        self.swt.resize(supersets, SwtEntry::default());
+        self.mww.resize(supersets, MwwWindow::default());
+        self.interval_writes.resize(supersets, 0);
+        self.superset_counter =
+            self.swt.iter().filter(|e| e.written).count() as u64;
+        self.dirty_counter =
+            self.swt.iter().filter(|e| e.dirty).count() as u64;
+    }
+
     /// WR approximation (§8): WR trips when the most significant
     /// non-zero bit of the write counter is `wr_shift` binary orders
     /// (512x by default) above the superset counter's.
@@ -348,6 +373,29 @@ mod tests {
         assert!(!wl.locked(1, 600), "other supersets unaffected");
         assert!(wl.on_write(0, false, 10_001).0);
         assert_eq!(wl.stats.get("mww_blocked"), 1);
+    }
+
+    #[test]
+    fn resize_carries_window_state_and_recounts() {
+        let mut wl = WearLeveler::new(cfg(1), 4, 10_000);
+        // exhaust superset 0's budget, mark superset 3 written+dirty
+        for i in 0..512u64 {
+            assert!(wl.on_write(0, false, i).0);
+        }
+        wl.on_write(3, true, 600);
+        let writes = wl.write_count();
+        // grow: superset 0 stays locked, new supersets start fresh
+        wl.resize(8);
+        assert_eq!(wl.num_supersets(), 8);
+        assert!(wl.locked(0, 700), "lock must survive the resize");
+        assert!(!wl.locked(5, 700));
+        assert!(wl.on_write(5, false, 700).0);
+        assert_eq!(wl.write_count(), writes + 1, "counter carried over");
+        // shrink below the dirty superset: counters recomputed
+        wl.resize(2);
+        assert_eq!(wl.num_supersets(), 2);
+        assert!(wl.locked(0, 800), "surviving lock still held");
+        assert_eq!(wl.write_count(), writes + 1);
     }
 
     #[test]

@@ -1,0 +1,184 @@
+//! Minimal JSON emission (the vendor set has no `serde`): a small
+//! value tree with correct string escaping, rendered compactly. Every
+//! sweep's `--json <path>` flag goes through here so the bench
+//! trajectory (`BENCH_*.json`) accumulates machine-readable results.
+
+use std::fmt::Write as _;
+
+use crate::util::error::{Context, Result};
+
+/// A JSON value.
+#[derive(Clone, Debug)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    /// Integers render exactly (no f64 round-trip).
+    Int(u64),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Empty object, for builder-style construction.
+    pub fn obj() -> Self {
+        Json::Obj(Vec::new())
+    }
+
+    /// Builder-style field append (objects only).
+    pub fn set(mut self, key: &str, value: impl Into<Json>) -> Self {
+        match &mut self {
+            Json::Obj(fields) => fields.push((key.to_string(), value.into())),
+            _ => panic!("Json::set on a non-object"),
+        }
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(v) => {
+                let _ = write!(out, "{v}");
+            }
+            Json::Num(v) => {
+                if v.is_finite() {
+                    let _ = write!(out, "{v}");
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl From<bool> for Json {
+    fn from(v: bool) -> Self {
+        Json::Bool(v)
+    }
+}
+impl From<u64> for Json {
+    fn from(v: u64) -> Self {
+        Json::Int(v)
+    }
+}
+impl From<usize> for Json {
+    fn from(v: usize) -> Self {
+        Json::Int(v as u64)
+    }
+}
+impl From<f64> for Json {
+    fn from(v: f64) -> Self {
+        Json::Num(v)
+    }
+}
+impl From<&str> for Json {
+    fn from(v: &str) -> Self {
+        Json::Str(v.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(v: String) -> Self {
+        Json::Str(v)
+    }
+}
+impl From<Vec<Json>> for Json {
+    fn from(v: Vec<Json>) -> Self {
+        Json::Arr(v)
+    }
+}
+
+/// Wrap sweep rows in the standard envelope:
+/// `{"experiment": <name>, "rows": [...]}`.
+pub fn experiment(name: &str, rows: Vec<Json>) -> Json {
+    Json::obj().set("experiment", name).set("rows", rows)
+}
+
+/// Render `value` to `path` (plus a trailing newline).
+pub fn write_json(path: &str, value: &Json) -> Result<()> {
+    let mut text = value.render();
+    text.push('\n');
+    std::fs::write(path, text)
+        .with_context(|| format!("writing JSON to {path:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_escaped_compact_json() {
+        let j = Json::obj()
+            .set("name", "a\"b\\c\nd")
+            .set("n", 42u64)
+            .set("x", 1.5)
+            .set("ok", true)
+            .set("rows", vec![Json::Int(1), Json::Null]);
+        assert_eq!(
+            j.render(),
+            r#"{"name":"a\"b\\c\nd","n":42,"x":1.5,"ok":true,"rows":[1,null]}"#
+        );
+    }
+
+    #[test]
+    fn big_integers_render_exactly() {
+        let v = (1u64 << 60) + 1;
+        assert_eq!(Json::Int(v).render(), v.to_string());
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+    }
+
+    #[test]
+    fn experiment_envelope() {
+        let j = experiment("fig12", vec![Json::obj().set("cycles", 7u64)]);
+        assert_eq!(
+            j.render(),
+            r#"{"experiment":"fig12","rows":[{"cycles":7}]}"#
+        );
+    }
+}

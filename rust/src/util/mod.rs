@@ -1,10 +1,12 @@
 //! Foundation utilities built from scratch for the offline environment:
 //! RNG/zipfian sampling, metrics, packed bit storage, Murmur3, a mini
-//! CLI parser, a table renderer, and a property-testing driver.
+//! CLI parser, a table renderer, JSON emission, and a property-testing
+//! driver.
 
 pub mod bitvec;
 pub mod cli;
 pub mod error;
+pub mod json;
 pub mod murmur3;
 pub mod pool;
 pub mod prop;

@@ -234,9 +234,75 @@ fn acc(
 /// engine anyway, this just bounds the deferral window).
 const MAX_LOOKUP_BATCH: usize = 64;
 
+/// Hysteresis policy for runtime CAM repartitioning: the adaptive
+/// drivers watch the spill counters
+/// (`cam_spill_lookups`/`cam_capacity_spill`) and resize the device's
+/// CAM partition through [`AssocDevice::reconfigure`] instead of
+/// spill-scanning the main-memory image forever. Growth triggers when
+/// the spill rate of the last epoch crosses `grow_spill_rate`; a
+/// shrink triggers when the partition over-covers the table by
+/// `shrink_over_cover`; after any reconfigure the policy sleeps for
+/// `cooldown_epochs` (the hysteresis band that prevents thrash).
+#[derive(Clone, Copy, Debug)]
+pub struct ReconfigPolicy {
+    /// Spilled ops / epoch ops above which the partition grows.
+    pub grow_spill_rate: f64,
+    /// Shrink when current sets > needed sets * this factor.
+    pub shrink_over_cover: f64,
+    /// Ops between policy evaluations.
+    pub epoch_ops: usize,
+    /// Epochs to sleep after a reconfigure.
+    pub cooldown_epochs: usize,
+    /// Hard ceiling on CAM sets.
+    pub max_cam_sets: usize,
+}
+
+impl Default for ReconfigPolicy {
+    fn default() -> Self {
+        Self {
+            grow_spill_rate: 0.05,
+            shrink_over_cover: 2.0,
+            epoch_ops: 1000,
+            cooldown_epochs: 2,
+            max_cam_sets: 1 << 16,
+        }
+    }
+}
+
+/// Mutable policy-evaluation state across epochs.
+struct AdaptState {
+    last_spills: u64,
+    cooldown: usize,
+    /// Cleared when the device reports reconfiguration unsupported.
+    enabled: bool,
+}
+
 /// Run the YCSB mix over one memory system. Returns the report; the
 /// caller compares against a baseline run with the same config/seed.
 pub fn run_ycsb(mem: &mut dyn AssocDevice, cfg: &YcsbConfig) -> HashReport {
+    run_ycsb_with(mem, cfg, None)
+}
+
+/// [`run_ycsb`] with the adaptive repartitioning policy engaged: every
+/// `epoch_ops` ops the driver inspects the spill counters and may
+/// quiesce the device, pay the modeled migration cost of a
+/// [`AssocDevice::reconfigure`] (plus the copy-in of the newly covered
+/// buckets from the main-memory image), and continue with the resized
+/// partition. On a device without reconfiguration support the run
+/// degrades to exactly [`run_ycsb`].
+pub fn run_ycsb_adaptive(
+    mem: &mut dyn AssocDevice,
+    cfg: &YcsbConfig,
+    policy: &ReconfigPolicy,
+) -> HashReport {
+    run_ycsb_with(mem, cfg, Some(policy))
+}
+
+fn run_ycsb_with(
+    mem: &mut dyn AssocDevice,
+    cfg: &YcsbConfig,
+    policy: Option<&ReconfigPolicy>,
+) -> HashReport {
     let mut table = Hopscotch::new(cfg.table_pow2, cfg.window);
     let buckets = table.buckets.len() as u64;
     let layout = Layout::new(buckets, cfg.window as u64);
@@ -257,8 +323,8 @@ pub fn run_ycsb(mem: &mut dyn AssocDevice, cfg: &YcsbConfig) -> HashReport {
     // counted as explicit spill.
     let mut nj = 0.0;
     let mut counters = Counters::new();
-    let cam = mem.cam();
-    let cam_capacity = cam
+    let mut cam = mem.cam();
+    let mut cam_capacity = cam
         .map(|g| (g.num_sets * g.cols_per_set) as u64)
         .unwrap_or(0);
     if let Some(g) = cam {
@@ -288,24 +354,32 @@ pub fn run_ycsb(mem: &mut dyn AssocDevice, cfg: &YcsbConfig) -> HashReport {
     // depends on the previous completion) and flush in op order before
     // any insert, thread reuse, or batch-size cap.
     let mut pending: Vec<(usize, CamLookup)> = Vec::new();
-    fn flush(
-        mem: &mut dyn AssocDevice,
-        pending: &mut Vec<(usize, CamLookup)>,
-        timelines: &mut [ThreadTimeline],
-        nj: &mut f64,
-    ) {
-        if pending.is_empty() {
-            return;
-        }
-        let reqs: Vec<CamLookup> = pending.iter().map(|(_, l)| *l).collect();
-        let outs = mem.lookup_many(&reqs);
-        for ((t, _), out) in pending.drain(..).zip(outs) {
-            *nj += out.energy_nj;
-            timelines[t].record(out.done_at);
-        }
-    }
 
+    let mut adapt =
+        AdaptState { last_spills: 0, cooldown: 0, enabled: true };
     for op in 0..cfg.ops {
+        // Adaptive repartitioning: at each epoch boundary compare the
+        // epoch's spill rate against the hysteresis policy and, when
+        // it trips, quiesce the threads, reconfigure the device's
+        // RAM/CAM split, and copy the newly covered buckets in from
+        // the main-memory image — all charged to the run.
+        if let Some(p) = policy {
+            if adapt.enabled && op > 0 && op % p.epoch_ops.max(1) == 0 {
+                adaptive_epoch(
+                    mem,
+                    p,
+                    &mut adapt,
+                    &table,
+                    &layout,
+                    &mut cam,
+                    &mut cam_capacity,
+                    &mut pending,
+                    &mut timelines,
+                    &mut counters,
+                    &mut nj,
+                );
+            }
+        }
         let t = op % cfg.threads;
         let is_read = rng.chance(cfg.read_pct);
         let key = if is_read {
@@ -387,6 +461,12 @@ pub fn run_ycsb(mem: &mut dyn AssocDevice, cfg: &YcsbConfig) -> HashReport {
         }
     }
     flush(mem, &mut pending, &mut timelines, &mut nj);
+    if policy.is_some() {
+        counters.set(
+            "cam_sets_final",
+            cam.map(|g| g.num_sets as u64).unwrap_or(0),
+        );
+    }
     let cycles = timelines.iter_mut().map(|t| t.finish()).max().unwrap_or(0);
     // static energy over the run
     let seconds = cycles as f64 / 3.2e9;
@@ -401,6 +481,111 @@ pub fn run_ycsb(mem: &mut dyn AssocDevice, cfg: &YcsbConfig) -> HashReport {
         energy_nj: nj + static_w * seconds * 1e9 + main_static,
         counters,
     }
+}
+
+/// Flush the deferred cross-thread lookup batch in op order.
+fn flush(
+    mem: &mut dyn AssocDevice,
+    pending: &mut Vec<(usize, CamLookup)>,
+    timelines: &mut [ThreadTimeline],
+    nj: &mut f64,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    let reqs: Vec<CamLookup> = pending.iter().map(|(_, l)| *l).collect();
+    let outs = mem.lookup_many(&reqs);
+    for ((t, _), out) in pending.drain(..).zip(outs) {
+        *nj += out.energy_nj;
+        timelines[t].record(out.done_at);
+    }
+}
+
+/// One epoch-boundary evaluation of the adaptive repartitioning
+/// policy. When the hysteresis trips, the threads quiesce, the device
+/// reconfigures its RAM/CAM split (migration cost charged), the newly
+/// covered buckets stream in from the main-memory image, and every
+/// thread resumes at the barrier.
+#[allow(clippy::too_many_arguments)]
+fn adaptive_epoch(
+    mem: &mut dyn AssocDevice,
+    p: &ReconfigPolicy,
+    st: &mut AdaptState,
+    table: &Hopscotch,
+    layout: &Layout,
+    cam: &mut Option<crate::device::CamGeom>,
+    cam_capacity: &mut u64,
+    pending: &mut Vec<(usize, CamLookup)>,
+    timelines: &mut [ThreadTimeline],
+    counters: &mut Counters,
+    nj: &mut f64,
+) {
+    let spills = counters.get("cam_spill_lookups")
+        + counters.get("cam_capacity_spill");
+    let epoch_spills = spills - st.last_spills;
+    st.last_spills = spills;
+    if st.cooldown > 0 {
+        st.cooldown -= 1;
+        return;
+    }
+    let Some(g) = *cam else { return };
+    let cols = g.cols_per_set as u64;
+    let buckets = table.buckets.len() as u64;
+    let need = buckets.div_ceil(cols) as usize;
+    let cur = g.num_sets;
+    let rate = epoch_spills as f64 / p.epoch_ops.max(1) as f64;
+    let target = if rate > p.grow_spill_rate && cur < need {
+        Some(need.min(p.max_cam_sets.max(1)))
+    } else if cur as f64 > need as f64 * p.shrink_over_cover {
+        Some(need)
+    } else {
+        None
+    };
+    let Some(tgt) = target.filter(|&tgt| tgt != cur) else { return };
+    // quiesce: flush the deferred batch, drain every thread
+    flush(mem, pending, timelines, nj);
+    let at = timelines
+        .iter_mut()
+        .map(|tl| tl.finish())
+        .max()
+        .unwrap_or(0);
+    let Some(out) = mem.reconfigure(tgt, at) else {
+        st.enabled = false; // not a reconfigurable device
+        return;
+    };
+    counters.inc("reconfigs");
+    counters.inc(if tgt > cur { "reconfig_grows" } else { "reconfig_shrinks" });
+    *nj += out.energy_nj;
+    let mut t = out.done_at;
+    *cam = mem.cam();
+    *cam_capacity = cam
+        .map(|g| (g.num_sets * g.cols_per_set) as u64)
+        .unwrap_or(0);
+    if tgt > cur {
+        // copy the newly covered buckets in from the main-memory
+        // image: stream each 64B key block once (MLP-8), one CAM
+        // column write per occupied bucket. A t_MWW-blocked bucket
+        // stays in the main image; its lookups keep working via
+        // fetch_value_on_miss, so the blocked set needs no replay.
+        let old_words = cur as u64 * cols;
+        let hi = (*cam_capacity).min(buckets);
+        let mut blocked = std::collections::HashSet::new();
+        t = crate::workloads::stream_into_cam(
+            mem,
+            old_words as usize..hi as usize,
+            cols as usize,
+            &|i| layout.key_slot(i as u64, 0),
+            &|i| table.buckets[i],
+            t,
+            counters,
+            nj,
+            &mut blocked,
+        );
+    }
+    for tl in timelines.iter_mut() {
+        tl.now = t;
+    }
+    st.cooldown = p.cooldown_epochs;
 }
 
 /// The memory operations a lookup performs on a conventional system:
@@ -756,6 +941,70 @@ mod tests {
         let rb = run_ycsb(b.as_mut(), &cfg);
         assert_eq!(r.hits, rb.hits);
         assert_eq!(r.ops, rb.ops);
+    }
+
+    #[test]
+    fn adaptive_grows_cam_and_beats_spill_only() {
+        // 4096 buckets over 2 starting CAM sets (1024 words): ~3/4 of
+        // the lookups spill-scan the main-memory image. The adaptive
+        // run must trip the policy, pay the migration, and come out
+        // ahead of the spill-only device on total cycles.
+        let cfg = YcsbConfig { read_pct: 0.95, ops: 12_000, ..small_cfg() };
+        let mut spill = assoc::monarch(small_geom(), 2);
+        let r_spill = run_ycsb(spill.as_mut(), &cfg);
+        assert!(r_spill.counters.get("cam_spill_lookups") > 0);
+        let mut adapt = assoc::monarch(small_geom(), 2);
+        let r_adapt = run_ycsb_adaptive(
+            adapt.as_mut(),
+            &cfg,
+            &ReconfigPolicy::default(),
+        );
+        assert!(r_adapt.counters.get("reconfigs") >= 1);
+        assert!(r_adapt.counters.get("reconfig_grows") >= 1);
+        assert_eq!(r_adapt.counters.get("cam_sets_final"), 8);
+        assert!(r_adapt.counters.get("reconfig_copied_words") > 0);
+        assert_eq!(r_adapt.hits, r_spill.hits, "same functional mix");
+        assert_eq!(r_adapt.ops, r_spill.ops);
+        assert!(
+            r_adapt.cycles < r_spill.cycles,
+            "adaptive {} must beat spill-only {}",
+            r_adapt.cycles,
+            r_spill.cycles
+        );
+    }
+
+    #[test]
+    fn adaptive_shrinks_oversized_cam() {
+        // 32 sets cover a 4096-bucket table 4x over: the policy must
+        // shrink the partition back to the 8 sets the table needs.
+        let cfg = YcsbConfig { read_pct: 1.0, ops: 4000, ..small_cfg() };
+        let mut m = assoc::monarch(small_geom(), 32);
+        let r = run_ycsb_adaptive(
+            m.as_mut(),
+            &cfg,
+            &ReconfigPolicy::default(),
+        );
+        assert!(r.counters.get("reconfig_shrinks") >= 1);
+        assert_eq!(r.counters.get("cam_sets_final"), 8);
+        assert_eq!(r.ops, cfg.ops as u64);
+        // functional results unaffected by the shrink
+        let mut b = assoc::hbm_sp(1 << 20);
+        let rb = run_ycsb(b.as_mut(), &cfg);
+        assert_eq!(r.hits, rb.hits);
+    }
+
+    #[test]
+    fn adaptive_on_conventional_device_degrades_to_plain_run() {
+        let cfg = small_cfg();
+        let mut a = assoc::hbm_sp(1 << 20);
+        let ra =
+            run_ycsb_adaptive(a.as_mut(), &cfg, &ReconfigPolicy::default());
+        let mut b = assoc::hbm_sp(1 << 20);
+        let rb = run_ycsb(b.as_mut(), &cfg);
+        assert_eq!(ra.cycles, rb.cycles);
+        assert_eq!(ra.hits, rb.hits);
+        assert_eq!(ra.energy_nj.to_bits(), rb.energy_nj.to_bits());
+        assert_eq!(ra.counters.get("reconfigs"), 0);
     }
 
     #[test]

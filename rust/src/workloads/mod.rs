@@ -12,6 +12,59 @@ pub mod stringmatch;
 use crate::cpu::TraceOp;
 use crate::util::rng::{Rng, ScrambledZipf};
 
+/// Stream a half-open range of word slots into the CAM after a
+/// repartition grow: MLP-8 64B block reads from the main-memory image
+/// (one per 8 slots) feeding one CAM column write per resident word,
+/// all issued from `start`. Shared by the adaptive hashing and
+/// string-match drivers so the migration streaming cost model cannot
+/// diverge between them. `block_addr(i)` is the main-memory address
+/// of slot i's block; `word_at(i)` yields the word to install
+/// (`None` = empty slot, skipped). A t_MWW-blocked write leaves the
+/// word only in the main-memory image: the slot index is recorded in
+/// `blocked` (the caller must keep it reachable there) and counted as
+/// `reconfig_copy_blocked`. Returns the copy's completion cycle.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn stream_into_cam(
+    mem: &mut dyn crate::device::AssocDevice,
+    words: std::ops::Range<usize>,
+    cols: usize,
+    block_addr: &dyn Fn(usize) -> u64,
+    word_at: &dyn Fn(usize) -> Option<u64>,
+    start: u64,
+    counters: &mut crate::util::stats::Counters,
+    nj: &mut f64,
+    blocked: &mut std::collections::HashSet<usize>,
+) -> u64 {
+    let mut stream = crate::cpu::ThreadTimeline::new(8);
+    stream.now = start;
+    let mut block_ready = start;
+    let mut copy_done = start;
+    let first = words.start;
+    for i in words {
+        if i % 8 == 0 || i == first {
+            let at = stream.issue_at();
+            let a = mem.main_access(block_addr(i), false, at);
+            *nj += a.energy_nj;
+            stream.record(a.done_at);
+            block_ready = a.done_at;
+        }
+        let Some(w) = word_at(i) else { continue };
+        let (set, col) = (i / cols, i % cols);
+        match mem.cam_write(set, col, w, block_ready) {
+            Some(a) => {
+                *nj += a.energy_nj;
+                copy_done = copy_done.max(a.done_at);
+                counters.inc("reconfig_copied_words");
+            }
+            None => {
+                blocked.insert(i);
+                counters.inc("reconfig_copy_blocked");
+            }
+        }
+    }
+    copy_done.max(stream.finish())
+}
+
 /// A multi-threaded memory-trace source for the cache-mode system.
 pub trait Workload {
     /// Display name (no per-call allocation; callers own any copies).

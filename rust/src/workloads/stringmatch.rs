@@ -12,6 +12,7 @@ use crate::cpu::ThreadTimeline;
 use crate::device::{AssocDevice, SearchOp};
 use crate::util::rng::Rng;
 use crate::util::stats::Counters;
+use crate::workloads::hashing::ReconfigPolicy;
 
 #[derive(Clone, Copy, Debug)]
 pub struct StringMatchConfig {
@@ -68,6 +69,29 @@ pub fn run_string_match(
     mem: &mut dyn AssocDevice,
     cfg: &StringMatchConfig,
 ) -> StringReport {
+    run_string_match_with(mem, cfg, None)
+}
+
+/// [`run_string_match`] with the adaptive repartitioning policy: when
+/// the copy phase spills more than `grow_spill_rate` of the corpus
+/// past the CAM partition, the driver reconfigures the device to
+/// cover the corpus (paying the modeled migration cost plus the copy
+/// of the tail) instead of spill-scanning the tail once per target.
+/// On a device without reconfiguration support the run degrades to
+/// exactly [`run_string_match`].
+pub fn run_string_match_adaptive(
+    mem: &mut dyn AssocDevice,
+    cfg: &StringMatchConfig,
+    policy: &ReconfigPolicy,
+) -> StringReport {
+    run_string_match_with(mem, cfg, Some(policy))
+}
+
+fn run_string_match_with(
+    mem: &mut dyn AssocDevice,
+    cfg: &StringMatchConfig,
+    policy: Option<&ReconfigPolicy>,
+) -> StringReport {
     let (corpus, targets) = build_corpus(cfg);
     let mut counters = Counters::new();
     let mut nj = 0.0;
@@ -80,10 +104,13 @@ pub fn run_string_match(
         // Words past the CAM's capacity do NOT wrap onto earlier
         // columns (the seed's `% nsets` silently overwrote planted
         // data); they stay in main memory as an explicit spill tail,
-        // scanned conventionally per target below.
+        // scanned conventionally per target below — as does any word
+        // whose copy was t_MWW-blocked (it never reached the CAM, so
+        // dropping it from the scan would lose planted targets).
         let cols = g.cols_per_set;
-        let nsets = g.num_sets;
-        let capacity = cols * nsets;
+        let mut nsets = g.num_sets;
+        let mut capacity = cols * nsets;
+        let mut blocked = std::collections::HashSet::new();
         let mut stream = ThreadTimeline::new(8); // DDR read MLP
         let mut copy_done = 0u64;
         let mut block_ready = 0u64;
@@ -101,22 +128,69 @@ pub fn run_string_match(
             }
             let set = i / cols;
             let col = i % cols;
-            if let Some(a) = mem.cam_write(set, col, w, block_ready) {
-                nj += a.energy_nj;
-                copy_done = copy_done.max(a.done_at);
+            match mem.cam_write(set, col, w, block_ready) {
+                Some(a) => {
+                    nj += a.energy_nj;
+                    copy_done = copy_done.max(a.done_at);
+                }
+                None => {
+                    blocked.insert(i);
+                    counters.inc("cam_copy_blocked");
+                }
             }
         }
-        let t = copy_done.max(stream.finish());
+        let mut t = copy_done.max(stream.finish());
         counters.set("copy_done_cycle", t);
+        // Adaptive repartition: a spill tail above the policy's rate
+        // means every target pays a conventional scan of it — grow the
+        // CAM partition to cover the corpus once instead, then copy
+        // the tail in (both charged), and search everything as CAM.
+        if let Some(p) = policy {
+            let spilled = counters.get("cam_spill_words");
+            let need = corpus.len().div_ceil(cols).min(p.max_cam_sets.max(1));
+            if spilled as f64 > p.grow_spill_rate * corpus.len() as f64
+                && need > nsets
+            {
+                if let Some(out) = mem.reconfigure(need, t) {
+                    counters.inc("reconfigs");
+                    nj += out.energy_nj;
+                    let g2 = mem.cam().expect("reconfigure keeps the CAM");
+                    let old_capacity = capacity;
+                    nsets = g2.num_sets;
+                    capacity = cols * nsets;
+                    t = crate::workloads::stream_into_cam(
+                        mem,
+                        old_capacity..capacity.min(corpus.len()),
+                        cols,
+                        &|i| (i as u64 / 8) * 64,
+                        &|i| Some(corpus[i]),
+                        out.done_at,
+                        &mut counters,
+                        &mut nj,
+                        &mut blocked,
+                    );
+                    counters.set("cam_sets_final", nsets as u64);
+                }
+            }
+        }
         // Phase 2 — broadcast searches: targets go through the shared
         // key register sequentially (§7: one register pair per
         // controller), but each target's per-set searches fan out
         // across the banks in parallel — and the whole wave is one
-        // batched functional evaluation. The spill tail (if any) is
-        // streamed from main memory and compared in the cores, like a
-        // baseline would — its cost and its matches are both real.
+        // batched functional evaluation. The spill tail (if any) plus
+        // any copy-blocked blocks are streamed from main memory and
+        // compared in the cores, like a baseline would — their cost
+        // and their matches are both real.
         let sets_used = corpus.len().div_ceil(cols).min(nsets);
-        let spill_blocks = capacity / 8..corpus.len().div_ceil(8);
+        let mut spill_block_ids: Vec<usize> =
+            (capacity / 8..corpus.len().div_ceil(8)).collect();
+        for &w in &blocked {
+            if w / 8 < capacity / 8 {
+                spill_block_ids.push(w / 8);
+            }
+        }
+        spill_block_ids.sort_unstable();
+        spill_block_ids.dedup();
         let mut spill_tl = ThreadTimeline::new(8);
         let mut tt = t;
         spill_tl.now = t;
@@ -140,7 +214,7 @@ pub fn run_string_match(
                 counters.inc("searches");
             }
             tt = wave_done;
-            for b in spill_blocks.clone() {
+            for &b in &spill_block_ids {
                 let at = spill_tl.issue_at();
                 spill_tl.compute(8); // 8 word compares
                 let a = mem.main_access((b as u64) * 64, false, at);
@@ -149,7 +223,9 @@ pub fn run_string_match(
                 counters.inc("spill_block_reads");
                 for w in 0..8 {
                     let i = b * 8 + w;
-                    if i >= capacity && i < corpus.len() && corpus[i] == *target
+                    if i < corpus.len()
+                        && corpus[i] == *target
+                        && (i >= capacity || blocked.contains(&i))
                     {
                         matches += 1;
                     }
@@ -265,6 +341,41 @@ mod tests {
         let mut h = assoc::hbm_sp(c.corpus_words * 16);
         let rh = run_string_match(h.as_mut(), &c);
         assert!(rh.matches >= r.matches);
+    }
+
+    #[test]
+    fn adaptive_stringmatch_grows_to_cover_the_corpus() {
+        use crate::workloads::hashing::ReconfigPolicy;
+        // 8192-word corpus over 8 CAM sets: half the corpus is a spill
+        // tail re-scanned once per target (sequential DDR streaming,
+        // ~8 cycles/block). The one-time grow-and-copy costs ~170
+        // cycles per tail word on the CAM write path, so it amortizes
+        // across many targets — 32 puts the spill cost well past it.
+        let c = StringMatchConfig { targets: 32, ..cfg() };
+        let mut spill = assoc::monarch(geom(), 8);
+        let r_spill = run_string_match(spill.as_mut(), &c);
+        assert!(r_spill.counters.get("spill_block_reads") > 0);
+        let mut adapt = assoc::monarch(geom(), 8);
+        let r_adapt = run_string_match_adaptive(
+            adapt.as_mut(),
+            &c,
+            &ReconfigPolicy::default(),
+        );
+        assert_eq!(r_adapt.counters.get("reconfigs"), 1);
+        assert_eq!(r_adapt.counters.get("cam_sets_final"), 16);
+        assert_eq!(r_adapt.counters.get("spill_block_reads"), 0);
+        assert!(r_adapt.counters.get("reconfig_copied_words") > 0);
+        assert!(
+            r_adapt.matches >= c.targets as u64,
+            "every planted target found: {}",
+            r_adapt.matches
+        );
+        assert!(
+            r_adapt.cycles < r_spill.cycles,
+            "adaptive {} must beat spill-only {}",
+            r_adapt.cycles,
+            r_spill.cycles
+        );
     }
 
     #[test]

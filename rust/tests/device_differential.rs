@@ -18,7 +18,10 @@ use monarch::mem::dram_cache::TechCache;
 use monarch::prop_assert;
 use monarch::sim::System;
 use monarch::util::prop::{check, Gen};
-use monarch::workloads::hashing::{run_ycsb, YcsbConfig};
+use monarch::coordinator::{self, Budget};
+use monarch::workloads::hashing::{
+    run_ycsb, run_ycsb_adaptive, ReconfigPolicy, YcsbConfig,
+};
 use monarch::workloads::stringmatch::{run_string_match, StringMatchConfig};
 use monarch::workloads::SyntheticStream;
 
@@ -499,6 +502,239 @@ fn sharded_registry_preset_builds_and_runs() {
     let r = run_ycsb(dev.as_mut(), &cfg);
     assert_eq!(r.ops, cfg.ops as u64);
     assert!(r.cycles > 0);
+}
+
+// ---- runtime reconfiguration (PR 3) --------------------------------
+
+/// Issue an identical mixed op sequence (batched waves, window
+/// lookups, CAM writes, flat-RAM accesses) and record every
+/// observable: completion cycle, energy bits, and outcome.
+fn drive_sequence(
+    dev: &mut dyn AssocDevice,
+    cam_sets: usize,
+    seed: u64,
+) -> Vec<(u64, u64, i64)> {
+    let mut g = Gen::new(seed, 256);
+    let mut out = Vec::new();
+    let mut at = 1_000_000u64;
+    for _ in 0..60 {
+        at += 100 + g.u64() % 400;
+        match g.int(4) {
+            0 => {
+                let key = g.u64() | 1;
+                let wave: Vec<SearchOp> = (0..cam_sets.min(6))
+                    .map(|s| SearchOp::at(s, key, !0, at))
+                    .collect();
+                for h in dev.search_many(&wave) {
+                    out.push((
+                        h.done_at,
+                        h.energy_nj.to_bits(),
+                        h.col.map_or(-1, |c| c as i64),
+                    ));
+                }
+            }
+            1 => {
+                let l = CamLookup {
+                    key: g.u64() | 1,
+                    mask: !0,
+                    set0: g.int(cam_sets),
+                    set1: g.int(cam_sets),
+                    value_block: g.u64() % 512,
+                    fetch_value_on_miss: g.int(2) == 0,
+                    at,
+                };
+                for o in dev.lookup_many(&[l]) {
+                    out.push((
+                        o.done_at,
+                        o.energy_nj.to_bits(),
+                        o.hit as i64,
+                    ));
+                }
+            }
+            2 => match dev.cam_write(
+                g.int(cam_sets),
+                g.int(512),
+                g.u64() | 1,
+                at,
+            ) {
+                Some(a) => out.push((a.done_at, a.energy_nj.to_bits(), -2)),
+                None => out.push((0, 0, -3)),
+            },
+            _ => match dev.ram_access(g.u64() % 2048, g.int(2) == 0, at) {
+                Some(a) => out.push((a.done_at, a.energy_nj.to_bits(), -4)),
+                None => out.push((0, 0, -5)),
+            },
+        }
+    }
+    out
+}
+
+#[test]
+fn reconfigure_pins_constructed_device_unsharded() {
+    // The PR-3 correctness anchor: after `reconfigure(m')` on a
+    // quiesced device, every subsequent operation is bit-identical to
+    // a device CONSTRUCTED at m' holding the same resident data — and
+    // the wear counters carry over instead of resetting.
+    for (from, to) in [(8usize, 12usize), (12, 5)] {
+        let mut g = Gen::new(0xF00D ^ ((from * 100 + to) as u64), 256);
+        let mut a = MonarchAssoc::new(small_geom(), from);
+        for _ in 0..120 {
+            let _ = a.cam_write(g.int(from), g.int(512), g.u64() | 1, 0);
+        }
+        // dirty the controller: registers, match latch, sense modes
+        let _ = a.write_key(0xAB, 500);
+        let _ = a.write_mask(!0, 510);
+        let _ = a.search(g.int(from), 600);
+        let wear_pre = a.flat().wear().write_count();
+        assert!(wear_pre > 0, "population must charge wear");
+        let out = a.reconfigure(to, 10_000).expect("monarch reconfigures");
+        assert_eq!((out.cam_sets_before, out.cam_sets_after), (from, to));
+        let wear_post = a.flat().wear().write_count();
+        assert!(
+            wear_post >= wear_pre,
+            "wear must carry over ({wear_post} < {wear_pre})"
+        );
+        if to > from {
+            assert!(
+                wear_post > wear_pre,
+                "grow relocation must charge the wear leveler"
+            );
+        }
+        // the reference: constructed at `to` with the same residents
+        let mut b = MonarchAssoc::new(small_geom(), to);
+        for set in 0..to {
+            let arr = a.flat().set_array(set);
+            for col in 0..arr.cols() {
+                let w = arr.read_col(col);
+                if w != 0 {
+                    b.flat_mut().install_resident(set, col, w);
+                }
+            }
+        }
+        let got = drive_sequence(&mut a, to, 0x5EED ^ to as u64);
+        let want = drive_sequence(&mut b, to, 0x5EED ^ to as u64);
+        assert_eq!(
+            got, want,
+            "post-reconfigure ops diverged ({from}->{to})"
+        );
+        assert_eq!(a.flat().keymask(), b.flat().keymask());
+    }
+}
+
+#[test]
+fn reconfigure_pins_constructed_device_sharded() {
+    // The sharded half of the anchor: a stride-changing reconfigure
+    // (every shard touched, cross-shard set migration) must leave the
+    // device bit-identical, for all subsequent ops, to a ShardedAssoc
+    // constructed at the target with the same resident data.
+    for (from, to) in [(16usize, 24usize), (16, 8)] {
+        let mut g = Gen::new(0xCAFE ^ ((from * 100 + to) as u64), 256);
+        let mut a = ShardedAssoc::new(small_geom(), from, 4);
+        for _ in 0..150 {
+            let _ = a.cam_write(g.int(from), g.int(512), g.u64() | 1, 0);
+        }
+        let _ = a.write_key(0xCD, 500);
+        let _ = a.write_mask(!0, 510);
+        let _ = a.search(g.int(from), 600);
+        let out = a.reconfigure(to, 20_000).expect("sharded reconfigures");
+        assert_eq!((out.cam_sets_before, out.cam_sets_after), (from, to));
+        let mut b = ShardedAssoc::new(small_geom(), to, 4);
+        for gset in 0..to {
+            let (s, l) = (a.shard_of_set(gset), a.local_set(gset));
+            let arr = a.shard_flat(s).set_array(l);
+            for col in 0..arr.cols() {
+                let w = arr.read_col(col);
+                if w != 0 {
+                    let (ds, dl) =
+                        (b.shard_of_set(gset), b.local_set(gset));
+                    b.shard_flat_mut(ds).install_resident(dl, col, w);
+                }
+            }
+        }
+        let got = drive_sequence(&mut a, to, 0xD1D ^ to as u64);
+        let want = drive_sequence(&mut b, to, 0xD1D ^ to as u64);
+        assert_eq!(
+            got, want,
+            "sharded post-reconfigure ops diverged ({from}->{to})"
+        );
+        for s in 0..4 {
+            assert_eq!(
+                a.shard_flat(s).keymask(),
+                b.shard_flat(s).keymask(),
+                "shard {s} registers"
+            );
+            assert!(
+                a.shard_flat(s).wear().write_count()
+                    >= b.shard_flat(s).wear().write_count(),
+                "shard {s} wear must not reset"
+            );
+        }
+    }
+}
+
+#[test]
+fn one_shard_adaptive_pinned_to_unsharded_adaptive() {
+    // `shards: 1` adaptive must BE the unsharded adaptive device:
+    // same reconfigure timing, migration cost and whole-driver report,
+    // bit for bit.
+    let cfg = YcsbConfig {
+        table_pow2: 12,
+        window: 32,
+        ops: 6000,
+        read_pct: 0.95,
+        threads: 8,
+        ..Default::default()
+    };
+    let policy = ReconfigPolicy::default();
+    let mut mono = MonarchAssoc::new(small_geom(), 2);
+    let mut one = ShardedAssoc::new(small_geom(), 2, 1);
+    let rm = run_ycsb_adaptive(&mut mono, &cfg, &policy);
+    let rs = run_ycsb_adaptive(&mut one, &cfg, &policy);
+    assert!(
+        rm.counters.get("reconfigs") >= 1,
+        "the overflow config must trip the policy"
+    );
+    assert_eq!(rm.system, rs.system);
+    assert_eq!(rm.cycles, rs.cycles, "adaptive cycles diverged");
+    assert_eq!(rm.hits, rs.hits);
+    assert_eq!(rm.energy_nj.to_bits(), rs.energy_nj.to_bits());
+    let cm: Vec<_> = rm.counters.iter().collect();
+    let cs: Vec<_> = rs.counters.iter().collect();
+    assert_eq!(cm, cs, "driver counters diverged");
+}
+
+#[test]
+fn reconfig_sweep_adaptive_beats_spill_only() {
+    // The `monarch reconfig` acceptance gate: on the overflow-heavy
+    // configs the adaptive device must beat the spill-only device on
+    // total cycles (migration cost included) on >= 1 config, and every
+    // adaptive cell must actually reconfigure.
+    let budget = Budget { hash_ops: 8_000, ..Budget::quick() };
+    let pts = coordinator::reconfig_sweep(&budget);
+    assert_eq!(pts.len(), 8, "2 configs x 4 systems");
+    let mut any_win = false;
+    for tp in [12usize, 13] {
+        let get = |sys: &str| {
+            pts.iter()
+                .find(|p| p.table_pow2 == tp && p.system == sys)
+                .unwrap_or_else(|| panic!("missing {sys} @ 2^{tp}"))
+        };
+        let (spill, adapt) = (get("spill"), get("adaptive"));
+        assert!(adapt.reconfigs >= 1, "adaptive @ 2^{tp} never grew");
+        assert!(
+            adapt.final_sets > adapt.start_sets as u64,
+            "adaptive @ 2^{tp} must end larger than it started"
+        );
+        assert!(
+            get("adaptive(S=4)").reconfigs >= 1,
+            "sharded adaptive @ 2^{tp} never grew"
+        );
+        any_win |= adapt.cycles < spill.cycles;
+    }
+    assert!(
+        any_win,
+        "adaptive must beat spill-only on >= 1 config: {pts:?}"
+    );
 }
 
 #[test]

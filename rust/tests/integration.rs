@@ -37,6 +37,63 @@ fn full_system_graph_run_all_inpkg_kinds() {
 }
 
 #[test]
+fn allocator_growth_drives_device_reconfigure() {
+    // The OS-level handoff: a `flat_cam_malloc` past the backed CAM
+    // capacity grows the window, and the pending `cam_grew()`
+    // notification translates into a device `reconfigure` that backs
+    // the new capacity — after which the region is really searchable.
+    use monarch::device::AssocDevice;
+    use monarch::monarch::alloc::Allocator;
+
+    let geom = MonarchGeom {
+        vaults: 4,
+        banks_per_vault: 8,
+        supersets_per_bank: 8,
+        sets_per_superset: 8,
+        rows_per_set: 64,
+        cols_per_set: 512,
+        layers: 1,
+    };
+    let set_bytes = geom.set_bytes() as u64; // 4096B per set
+    let start_sets = 2usize;
+    let mut dev = assoc::MonarchAssoc::new(geom, start_sets);
+    let mut alloc = Allocator::reconfigurable(
+        1 << 20,
+        1 << 20,
+        start_sets as u64 * set_bytes,
+        16 * set_bytes,
+    );
+    // fill the backed window, then allocate past it
+    let _ = alloc.flat_cam_malloc(start_sets as u64 * set_bytes).unwrap();
+    assert!(alloc.cam_grew().is_none());
+    let r2 = alloc.flat_cam_malloc(2 * set_bytes).unwrap();
+    let new_cap = alloc.cam_grew().expect("growth pending");
+    assert!(new_cap >= 4 * set_bytes);
+    // translate bytes -> sets and back the capacity on the device
+    let target_sets = new_cap.div_ceil(set_bytes) as usize;
+    let out = dev
+        .reconfigure(target_sets, 1_000)
+        .expect("monarch devices reconfigure");
+    assert_eq!(out.cam_sets_after, target_sets);
+    assert_eq!(
+        dev.cam().unwrap().num_sets as u64 * set_bytes,
+        alloc.cam_capacity().div_ceil(set_bytes) * set_bytes,
+        "device partition backs the allocator capacity"
+    );
+    // the grown region is really searchable: plant a word in the set
+    // holding r2 and find it
+    let word_index =
+        ((r2.base - monarch::monarch::alloc::FLAT_CAM_BASE) / 8) as usize;
+    let (set, col) = (word_index / 512, word_index % 512);
+    assert!(set >= start_sets, "the new region lives in grown sets");
+    let _ = dev.cam_write(set, col, 0xFACE, out.done_at);
+    let ka = dev.write_key(0xFACE, out.done_at + 1_000);
+    let ma = dev.write_mask(!0, ka.done_at);
+    let (_, hit) = dev.search(set, ma.done_at);
+    assert_eq!(hit, Some(col), "grown partition must be searchable");
+}
+
+#[test]
 fn simulation_is_deterministic() {
     let run = || {
         let mut sys = System::build(scaled(InPackageKind::Monarch { m: 3 }));

@@ -6,6 +6,9 @@
 //! write/search sequences.
 
 use monarch::config::WearConfig;
+use monarch::monarch::alloc::{
+    self, space_of, Allocator, Region, Space,
+};
 use monarch::monarch::wear::{MwwWindow, Offsets, WearLeveler};
 use monarch::prop_assert;
 use monarch::util::prop::{check, Gen};
@@ -197,6 +200,91 @@ fn prop_xam_search_matches_naive_model() {
             prop_assert!(
                 a.read_col(c) == m,
                 "state diverged at column {c}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_region_alloc_free_no_overlap() {
+    // The region manager under arbitrary alloc/free interleavings:
+    // every live region is 64B-aligned, stays inside its own window,
+    // never overlaps another live region; frees of live regions
+    // succeed exactly once; CAM capacity never exceeds the limit.
+    check("alloc_free_overlap", 40, |g| {
+        let cam_limit = 1u64 << (12 + g.int(6));
+        let mut a = Allocator::reconfigurable(
+            1 << 20,
+            1 << 20,
+            cam_limit / 4,
+            cam_limit,
+        );
+        let mut live: Vec<Region> = Vec::new();
+        for _ in 0..g.int(120) {
+            if g.int(3) == 0 && !live.is_empty() {
+                let i = g.int(live.len()).min(live.len() - 1);
+                let r = live.swap_remove(i);
+                prop_assert!(a.free(&r).is_ok(), "free of live {r:?}");
+                prop_assert!(a.free(&r).is_err(), "double free of {r:?}");
+            } else {
+                let size = 1 + g.u64() % 4096;
+                let got = match g.int(3) {
+                    0 => a.malloc(size),
+                    1 => a.flat_ram_malloc(size),
+                    _ => a.flat_cam_malloc(size),
+                };
+                if let Ok(r) = got {
+                    prop_assert!(r.size == size, "size mangled");
+                    live.push(r);
+                }
+            }
+        }
+        for r in &live {
+            prop_assert!(r.base % 64 == 0, "unaligned: {r:?}");
+            prop_assert!(
+                space_of(r.base) == r.space
+                    && space_of(r.base + r.size - 1) == r.space,
+                "region leaks out of its window: {r:?}"
+            );
+        }
+        for (i, r) in live.iter().enumerate() {
+            for r2 in &live[i + 1..] {
+                prop_assert!(!r.overlaps(r2), "overlap: {r:?} vs {r2:?}");
+            }
+        }
+        prop_assert!(
+            a.cam_capacity() <= cam_limit,
+            "cam capacity {} exceeded limit {cam_limit}",
+            a.cam_capacity()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_space_of_window_boundaries() {
+    // Exact boundary addresses classify into the right window: the
+    // last byte below each base, the base itself, the REG_BASE edge
+    // and the CAM window top.
+    check("space_of_boundaries", 1, |_| {
+        let cases = [
+            (alloc::DDR_BASE, Space::Ddr),
+            (alloc::FLAT_RAM_BASE - 1, Space::Ddr),
+            (alloc::FLAT_RAM_BASE, Space::FlatRam),
+            (alloc::FLAT_CAM_BASE - 1, Space::FlatRam),
+            (alloc::FLAT_CAM_BASE, Space::FlatCam),
+            (alloc::REG_BASE - 1, Space::FlatCam),
+            (alloc::REG_BASE, Space::Register),
+            (alloc::KEY_REG_ADDR, Space::Register),
+            (alloc::MASK_REG_ADDR, Space::Register),
+            (alloc::MATCH_REG_ADDR, Space::Register),
+            (alloc::FLAT_CAM_BASE + (1 << 40) - 1, Space::Register),
+        ];
+        for (addr, want) in cases {
+            prop_assert!(
+                space_of(addr) == want,
+                "space_of({addr:#x}) != {want:?}"
             );
         }
         Ok(())
