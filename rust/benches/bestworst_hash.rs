@@ -7,7 +7,7 @@
 //! (c) the paper's reference mixes: Wordcount 94:6 and Memcached 30:1.
 
 use monarch::config::MonarchGeom;
-use monarch::coordinator::hash_systems;
+use monarch::coordinator::{hash_systems, Budget};
 use monarch::util::table::Table;
 use monarch::workloads::hashing::{run_ycsb, YcsbConfig};
 
@@ -16,7 +16,7 @@ fn speedup_at(read_pct: f64, density: f64, window: usize) -> (f64, f64) {
     let cfg = YcsbConfig {
         table_pow2: 14,
         window,
-        ops: 12_000,
+        ops: Budget::smoke_ops(12_000),
         read_pct,
         prefill_density: density,
         threads: 8,

@@ -3,7 +3,7 @@
 //! with consumption rising with density (more writes).
 
 use monarch::config::MonarchGeom;
-use monarch::coordinator::hash_systems;
+use monarch::coordinator::{hash_systems, Budget};
 use monarch::util::table::Table;
 use monarch::workloads::hashing::{run_ycsb, YcsbConfig};
 
@@ -20,7 +20,7 @@ fn main() {
             let cfg = YcsbConfig {
                 table_pow2: 14,
                 window,
-                ops: 10_000,
+                ops: Budget::smoke_ops(10_000),
                 read_pct: 0.75,
                 prefill_density: density,
                 threads: 8,

@@ -5,7 +5,7 @@
 use monarch::coordinator::{self, Budget};
 
 fn main() {
-    let budget = Budget { trace_ops: 8_000, ..Budget::default() };
+    let budget = Budget { trace_ops: 8_000, ..Budget::default() }.from_env();
     let results = coordinator::run_cache_mode(&budget);
     coordinator::fig10_table(&results).print();
     // RC-Unbound and D-Cache implement the same cache architecture in

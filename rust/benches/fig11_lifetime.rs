@@ -8,7 +8,7 @@ use monarch::coordinator::{self, Budget};
 use monarch::util::table::{f, Table};
 
 fn main() {
-    let budget = Budget { trace_ops: 10_000, ..Budget::default() };
+    let budget = Budget { trace_ops: 10_000, ..Budget::default() }.from_env();
     let rows = coordinator::fig11_lifetimes(&budget);
     let mut t = Table::new("Fig 11 — Lifetime (years), M=3").header(vec![
         "workload",

@@ -4,7 +4,7 @@
 use monarch::coordinator::{self, Budget};
 
 fn main() {
-    let budget = Budget::default();
+    let budget = Budget::default().from_env();
     let rows =
         coordinator::hash_figure(&budget, 0.95, &[32, 64, 128], &[12, 14, 16]);
     coordinator::hash_table(

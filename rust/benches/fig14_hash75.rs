@@ -6,7 +6,7 @@
 use monarch::coordinator::{self, Budget};
 
 fn main() {
-    let budget = Budget::default();
+    let budget = Budget::default().from_env();
     let rows75 =
         coordinator::hash_figure(&budget, 0.75, &[32, 64, 128], &[12, 14, 16]);
     coordinator::hash_table(

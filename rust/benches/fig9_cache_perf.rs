@@ -10,13 +10,8 @@ use monarch::util::stats::geomean;
 use monarch::util::table::Table;
 
 fn main() {
-    let budget = Budget {
-        trace_ops: std::env::var("MONARCH_TRACE_OPS")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(15_000),
-        ..Budget::default()
-    };
+    let budget =
+        Budget { trace_ops: 15_000, ..Budget::default() }.from_env();
     let start = std::time::Instant::now();
     let results = coordinator::run_cache_mode(&budget);
     coordinator::fig9_table(&results).print();

@@ -11,7 +11,7 @@
 use monarch::coordinator::{self, Budget};
 
 fn main() {
-    let budget = Budget::default();
+    let budget = Budget::default().from_env();
     let t0 = std::time::Instant::now();
     let pts = coordinator::reconfig_sweep(&budget);
     coordinator::reconfig_table(&pts).print();

@@ -8,7 +8,7 @@
 use monarch::coordinator::{self, Budget};
 
 fn main() {
-    let budget = Budget::default();
+    let budget = Budget::default().from_env();
     let t0 = std::time::Instant::now();
     let pts = coordinator::sharded_sweep(&budget, &[1, 2, 4, 8]);
     coordinator::shard_table(&pts).print();

@@ -6,7 +6,7 @@ use monarch::coordinator::{self, Budget};
 use monarch::util::table::Table;
 
 fn main() {
-    let budget = Budget::default();
+    let budget = Budget::default().from_env();
     let reports = coordinator::stringmatch_reports(&budget);
     let base =
         reports.iter().find(|r| r.system == "HBM-C").unwrap().clone();

@@ -306,6 +306,14 @@ pub struct SystemConfig {
     /// Off-chip capacity (32GB full scale).
     pub offchip_bytes: usize,
     pub offchip_channels: usize,
+    /// On-die hierarchy dynamic access energies (nJ per probe,
+    /// CACTI-ballpark for the Table 3 geometries). Charged per level a
+    /// probe chain reaches; kept constant under `scaled` (per-access
+    /// energy is a property of the array, not of the simulated
+    /// capacity scale).
+    pub l1_access_nj: f64,
+    pub l2_access_nj: f64,
+    pub l3_access_nj: f64,
     pub wear: WearConfig,
     /// Capacity scale factor applied to every memory (simulation size).
     pub scale: f64,
@@ -339,6 +347,9 @@ impl SystemConfig {
             inpkg_cmos_bytes: (73.28 * 1024.0 * 1024.0) as usize,
             offchip_bytes: 32usize << 30,
             offchip_channels: 2,
+            l1_access_nj: 0.012,
+            l2_access_nj: 0.03,
+            l3_access_nj: 0.18,
             wear: WearConfig::default_m(3),
             scale: 1.0,
             seed: 0xA0A0,
@@ -397,6 +408,9 @@ impl SystemConfig {
             "wear.dc_limit" => self.wear.dc_limit = vu()?,
             "l3.size_bytes" => self.l3.size_bytes = vu()? as usize,
             "l3.ways" => self.l3.ways = vu()? as usize,
+            "l1.access_nj" => self.l1_access_nj = vf()?,
+            "l2.access_nj" => self.l2_access_nj = vf()?,
+            "l3.access_nj" => self.l3_access_nj = vf()?,
             "monarch.vaults" => self.monarch.vaults = vu()? as usize,
             "monarch.banks_per_vault" => {
                 self.monarch.banks_per_vault = vu()? as usize
@@ -491,6 +505,9 @@ mod tests {
         assert_eq!(c.cores, 4);
         assert_eq!(c.wear.m, 2);
         assert_eq!(c.seed, 99);
+        c.parse_overrides("l1.access_nj=0.02, l3.access_nj=0.5").unwrap();
+        assert_eq!(c.l1_access_nj, 0.02);
+        assert_eq!(c.l3_access_nj, 0.5);
         assert!(c.parse_overrides("nope=1").is_err());
         assert!(c.parse_overrides("cores=abc").is_err());
     }

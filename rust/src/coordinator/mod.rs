@@ -19,7 +19,7 @@ use crate::workloads::hashing::{
 use crate::workloads::stringmatch::{
     run_string_match, StringMatchConfig, StringReport,
 };
-use crate::workloads::{graph, nas, TraceWorkload};
+use crate::workloads::{graph, nas, SyntheticStream, TraceWorkload};
 
 /// Experiment scale/budget knobs shared by the CLI and benches.
 #[derive(Clone, Copy, Debug)]
@@ -50,6 +50,52 @@ impl Default for Budget {
 impl Budget {
     pub fn quick() -> Self {
         Self { trace_ops: 6_000, hash_ops: 4_000, ..Self::default() }
+    }
+
+    /// Apply `MONARCH_*` environment overrides. The benches route
+    /// their budgets through this so the CI `bench-smoke` job can run
+    /// every bench binary in one quick iteration:
+    /// `MONARCH_BENCH_SMOKE=1` first clamps the op budgets down to
+    /// [`Budget::quick`] levels, then `MONARCH_TRACE_OPS`,
+    /// `MONARCH_HASH_OPS`, `MONARCH_THREADS` and `MONARCH_SEED`
+    /// override individual knobs.
+    pub fn from_env(self) -> Self {
+        let mut b = self;
+        if std::env::var("MONARCH_BENCH_SMOKE").is_ok_and(|v| v != "0") {
+            let quick = Self::quick();
+            b.trace_ops = b.trace_ops.min(quick.trace_ops);
+            b.hash_ops = b.hash_ops.min(quick.hash_ops);
+        }
+        let get = |key: &str| -> Option<usize> {
+            std::env::var(key).ok().and_then(|v| v.parse().ok())
+        };
+        if let Some(v) = get("MONARCH_TRACE_OPS") {
+            b.trace_ops = v;
+        }
+        if let Some(v) = get("MONARCH_HASH_OPS") {
+            b.hash_ops = v;
+        }
+        if let Some(v) = get("MONARCH_THREADS") {
+            b.threads = v.max(1);
+        }
+        if let Some(v) =
+            std::env::var("MONARCH_SEED").ok().and_then(|v| v.parse().ok())
+        {
+            b.seed = v;
+        }
+        b
+    }
+
+    /// Clamp a hand-rolled op budget for the CI smoke run. Benches
+    /// that drive `YcsbConfig` directly (no `Budget`) route their op
+    /// counts through this so `MONARCH_BENCH_SMOKE=1` reaches every
+    /// bench binary.
+    pub fn smoke_ops(ops: usize) -> usize {
+        if std::env::var("MONARCH_BENCH_SMOKE").is_ok_and(|v| v != "0") {
+            ops.min(Self::quick().hash_ops)
+        } else {
+            ops
+        }
     }
 }
 
@@ -532,6 +578,138 @@ pub fn reconfig_table(points: &[ReconfigPoint]) -> Table {
     t
 }
 
+/// One measured cell of the `monarch cachewave` sweep.
+#[derive(Clone, Debug)]
+pub struct CacheWavePoint {
+    pub system: String,
+    /// Wave cap driven through `System::wave_cap` (`0` = unbounded:
+    /// waves grow until every runnable thread blocks).
+    pub wave_cap: usize,
+    pub cycles: u64,
+    pub mem_ops: u64,
+    /// Modeled throughput: memory ops retired per kilocycle.
+    pub ops_per_kcycle: f64,
+    /// L3 misses that went through the wave pipeline.
+    pub wave_lookups: u64,
+    /// `lookup_many` flushes the run performed.
+    pub wave_flushes: u64,
+    /// Widest wave the run collected.
+    pub max_wave: u64,
+    /// Batched lookups per functional tag evaluation, from the
+    /// device's own counters (`wave_ops` over `wave_evals` +
+    /// `wave_reevals` — mid-wave rotation re-evaluations are real
+    /// evaluations). Backends without a batched path (the scalar
+    /// `lookup_many` fallback: `TechCache`, `Scratchpad`) have no
+    /// evaluations to aggregate — reported flat as 1.0.
+    pub lookups_per_eval: f64,
+}
+
+/// The systems the cachewave sweep compares: the batched-wave Monarch
+/// backends against the D-Cache scalar fallback.
+fn cachewave_systems() -> Vec<InPackageKind> {
+    vec![
+        InPackageKind::DramCache,
+        InPackageKind::MonarchUnbound,
+        InPackageKind::Monarch { m: 3 },
+    ]
+}
+
+/// The `monarch cachewave` sweep: the wave-based cache-mode pipeline
+/// driven at increasing wave caps (`0` = unbounded) over a
+/// reuse-heavy zipfian stream whose footprint exceeds the in-package
+/// DRAM. Monarch's batched `lookup_many` aggregates each wave into
+/// one functional XAM evaluation per bank group — its
+/// `lookups_per_eval` grows with the cap — while `TechCache` rides
+/// the scalar fallback and stays flat at one lookup per tag probe.
+/// Wider waves also defer miss fills behind the wave's demand
+/// lookups, so modeled throughput rises with the cap.
+pub fn cachewave_sweep(
+    budget: &Budget,
+    wave_caps: &[usize],
+) -> Vec<CacheWavePoint> {
+    let systems = cachewave_systems();
+    let n_sys = systems.len();
+    let points: Vec<(usize, usize)> = wave_caps
+        .iter()
+        .enumerate()
+        .flat_map(|(w, _)| (0..n_sys).map(move |s| (w, s)))
+        .collect();
+    fan_out(points.len(), |i| {
+        let (w, s) = points[i];
+        let cfg = SystemConfig::scaled(systems[s], budget.scale);
+        let fp = (cfg.inpkg_dram_bytes * 4) as u64;
+        let mut sys = System::build(cfg);
+        sys.wave_cap = match wave_caps[w] {
+            0 => usize::MAX,
+            cap => cap,
+        };
+        let mut wl = SyntheticStream::zipfian(
+            budget.threads.clamp(2, 8),
+            budget.trace_ops,
+            fp,
+            0.9,
+            0.2,
+            budget.seed,
+        );
+        let r = sys.run(&mut wl, u64::MAX);
+        // occupancy denominator: the per-bank-group evaluations PLUS
+        // the on-the-spot re-evaluations of wave members whose vault
+        // rotated mid-wave — both are real functional evaluations
+        let (wave_ops, wave_evals) = sys
+            .inpkg
+            .counters()
+            .map(|c| {
+                (c.get("wave_ops"), c.get("wave_evals") + c.get("wave_reevals"))
+            })
+            .unwrap_or((0, 0));
+        CacheWavePoint {
+            system: r.system.clone(),
+            wave_cap: wave_caps[w],
+            cycles: r.cycles,
+            mem_ops: r.mem_ops,
+            ops_per_kcycle: 1000.0 * r.mem_ops as f64
+                / r.cycles.max(1) as f64,
+            wave_lookups: r.counters.get("wave.lookups"),
+            wave_flushes: r.counters.get("wave.flushes"),
+            max_wave: r.counters.get("wave.max_width"),
+            lookups_per_eval: if wave_evals == 0 {
+                1.0
+            } else {
+                wave_ops as f64 / wave_evals as f64
+            },
+        }
+    })
+}
+
+pub fn cachewave_table(points: &[CacheWavePoint]) -> Table {
+    let mut t = Table::new(
+        "Cachewave sweep — wave width vs throughput and batch occupancy",
+    )
+    .header(vec![
+        "system",
+        "wave cap",
+        "cycles",
+        "ops/kcycle",
+        "max wave",
+        "lookups/eval",
+    ]);
+    for p in points {
+        t.row(vec![
+            p.system.clone(),
+            if p.wave_cap == 0 {
+                "unbounded".to_string()
+            } else {
+                p.wave_cap.to_string()
+            },
+            p.cycles.to_string(),
+            format!("{:.2}", p.ops_per_kcycle),
+            p.max_wave.to_string(),
+            format!("{:.2}", p.lookups_per_eval),
+        ]);
+    }
+    t
+}
+
 /// One measured point of the shard-count sweep.
 #[derive(Clone, Copy, Debug)]
 pub struct ShardSweepPoint {
@@ -711,6 +889,30 @@ mod tests {
         assert_eq!(rows[0].2.len(), 5);
         let t = hash_table("Fig 13", &rows);
         assert!(t.render().contains("Monarch"));
+    }
+
+    #[test]
+    fn cachewave_sweep_shapes() {
+        let budget =
+            Budget { trace_ops: 1500, threads: 4, ..Budget::quick() };
+        let pts = cachewave_sweep(&budget, &[1, 0]);
+        assert_eq!(pts.len(), 6, "2 caps x 3 systems");
+        for p in &pts {
+            assert!(p.cycles > 0, "{}: no cycles", p.system);
+            assert!(p.mem_ops > 0);
+            assert!(p.wave_lookups > 0, "{}: no misses waved", p.system);
+            if p.system == "D-Cache" {
+                assert_eq!(
+                    p.lookups_per_eval, 1.0,
+                    "scalar fallback cannot aggregate"
+                );
+            }
+            if p.wave_cap == 1 {
+                assert_eq!(p.max_wave, 1, "cap 1 is the scalar order");
+            }
+        }
+        let t = cachewave_table(&pts);
+        assert!(t.render().contains("lookups/eval"));
     }
 
     #[test]

@@ -42,6 +42,12 @@ pub struct ThreadTimeline {
     pub now: u64,
     /// Completion cycles of in-flight memory ops (ascending-ish).
     outstanding: VecDeque<u64>,
+    /// In-flight memory ops whose completion cycle is not known yet:
+    /// misses parked in MSHRs awaiting wave resolution (`sim::System`).
+    /// They occupy window slots like `outstanding` entries, but the
+    /// thread cannot stall on them — a full window with pending ops
+    /// blocks the thread until the wave resolves.
+    pending: usize,
     /// Maximum in-flight memory ops (ROB-share / MSHR bound).
     pub mlp: usize,
     pub ops: u64,
@@ -53,6 +59,7 @@ impl ThreadTimeline {
         Self {
             now: 0,
             outstanding: VecDeque::with_capacity(mlp),
+            pending: 0,
             mlp: mlp.max(1),
             ops: 0,
             mem_ops: 0,
@@ -81,11 +88,17 @@ impl ThreadTimeline {
     }
 
     /// Cycle at which the next memory op may issue (stalls when the
-    /// window is full).
+    /// window is full). Must not be called on a blocked window (full
+    /// with pending misses) — the stall target is unknowable until
+    /// the wave resolves.
     #[inline]
     pub fn issue_at(&mut self) -> u64 {
         self.retire();
-        if self.outstanding.len() >= self.mlp {
+        if self.outstanding.len() + self.pending >= self.mlp {
+            debug_assert_eq!(
+                self.pending, 0,
+                "issue_at on a blocked window (pending misses)"
+            );
             // stall until the oldest in-flight op completes
             let earliest =
                 self.outstanding.iter().copied().min().unwrap_or(self.now);
@@ -95,10 +108,25 @@ impl ThreadTimeline {
         self.now
     }
 
-    /// Ops currently in flight (window occupancy; never exceeds `mlp`
-    /// after an `issue_at`).
+    /// Ops currently in flight, both with known completion cycles and
+    /// pending in MSHRs (window occupancy; never exceeds `mlp` after
+    /// an `issue_at`).
     pub fn in_flight(&self) -> usize {
-        self.outstanding.len()
+        self.outstanding.len() + self.pending
+    }
+
+    /// Window occupancy after retiring everything already complete at
+    /// the thread's current clock. The wave scheduler's block check
+    /// uses this — an op whose window is full only of *completed* hits
+    /// must not block on the wave (the completions already happened).
+    pub fn retired_in_flight(&mut self) -> usize {
+        self.retire();
+        self.in_flight()
+    }
+
+    /// Pending in-flight ops with unknown completion (parked MSHRs).
+    pub fn pending(&self) -> usize {
+        self.pending
     }
 
     /// Record an issued memory op completing at `done_at`.
@@ -108,9 +136,29 @@ impl ThreadTimeline {
         self.mem_ops += 1;
     }
 
-    /// Dependency barrier: wait for all outstanding ops.
+    /// Register an issued memory op whose completion cycle is not yet
+    /// known (an L3 miss entering a wave MSHR). The slot converts to a
+    /// normal outstanding entry at [`ThreadTimeline::complete_pending`].
+    #[inline]
+    pub fn begin_pending(&mut self) {
+        debug_assert!(self.in_flight() < self.mlp, "MSHR over-subscribed");
+        self.pending += 1;
+        self.mem_ops += 1;
+    }
+
+    /// Resolve one pending miss with its now-known completion cycle.
+    #[inline]
+    pub fn complete_pending(&mut self, done_at: u64) {
+        debug_assert!(self.pending > 0, "complete_pending without pending");
+        self.pending -= 1;
+        self.outstanding.push_back(done_at);
+    }
+
+    /// Dependency barrier: wait for all outstanding ops. Requires
+    /// every pending miss to have been resolved first.
     #[inline]
     pub fn drain(&mut self) {
+        debug_assert_eq!(self.pending, 0, "drain with pending misses");
         if let Some(latest) = self.outstanding.iter().copied().max() {
             self.now = self.now.max(latest);
         }
@@ -195,5 +243,44 @@ mod tests {
         t.compute(42);
         assert_eq!(t.now, 42);
         assert_eq!(t.issue_at(), 42);
+    }
+
+    #[test]
+    fn pending_misses_occupy_window_slots() {
+        let mut t = ThreadTimeline::new(3);
+        t.record(100);
+        t.begin_pending();
+        t.begin_pending();
+        assert_eq!(t.in_flight(), 3);
+        assert_eq!(t.pending(), 2);
+        assert_eq!(t.mem_ops, 3);
+        // resolution converts the slots without recounting the ops
+        t.complete_pending(70);
+        t.complete_pending(250);
+        assert_eq!(t.pending(), 0);
+        assert_eq!(t.in_flight(), 3);
+        assert_eq!(t.mem_ops, 3);
+        // issue_at now stalls on the earliest known completion
+        assert_eq!(t.issue_at(), 70);
+        assert_eq!(t.in_flight(), 2);
+        assert_eq!(t.finish(), 250);
+    }
+
+    #[test]
+    fn resolved_pending_behaves_like_recorded() {
+        // a pending slot resolved at `d` must be indistinguishable from
+        // `record(d)` for every later query
+        let mk = |via_pending: bool| {
+            let mut t = ThreadTimeline::new(2);
+            t.record(90);
+            if via_pending {
+                t.begin_pending();
+                t.complete_pending(40);
+            } else {
+                t.record(40);
+            }
+            (t.issue_at(), t.in_flight(), t.finish())
+        };
+        assert_eq!(mk(true), mk(false));
     }
 }

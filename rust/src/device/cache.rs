@@ -63,6 +63,20 @@ pub trait CacheDevice: Send {
     /// to main memory at `done_at`.
     fn lookup(&mut self, req: &MemReq) -> LookupResult;
 
+    /// Service one wave of L3 misses. **Controller-equivalent to
+    /// calling [`CacheDevice::lookup`] per request in submission
+    /// order** — which is exactly what this default does, so
+    /// conventional backends (`TechCache`, `Scratchpad`) keep working
+    /// unchanged as scalar fallbacks. Backends with a batched
+    /// functional path override it ([`MonarchCache`]: one functional
+    /// XAM tag evaluation per bank group); results must stay
+    /// bit-identical to the scalar sequence
+    /// (`tests/device_differential.rs` pins this at whole-`SimReport`
+    /// level).
+    fn lookup_many(&mut self, reqs: &[MemReq]) -> Vec<LookupResult> {
+        reqs.iter().map(|r| self.lookup(r)).collect()
+    }
+
     /// Install after the main-memory fetch of a missed block.
     /// No-allocate devices (Monarch, scratchpads) return `None`.
     fn fill(&mut self, _addr: u64, _write: bool, _now: u64)
@@ -151,6 +165,12 @@ impl CacheDevice for MonarchCache {
         MonarchCache::lookup(self, req)
     }
 
+    fn lookup_many(&mut self, reqs: &[MemReq]) -> Vec<LookupResult> {
+        // one functional XAM tag evaluation per bank group; the per-op
+        // controller pass stays in submission order (bit-identical)
+        MonarchCache::lookup_many(self, reqs)
+    }
+
     // no `fill`: Monarch is no-allocate on fetch (§8); installs happen
     // on L3 evictions only.
 
@@ -185,7 +205,9 @@ impl CacheDevice for Scratchpad {
 
     fn lookup(&mut self, req: &MemReq) -> LookupResult {
         // scratchpads do not participate in the hardware cache path:
-        // the request continues to main memory immediately
+        // the request continues to main memory immediately (waves ride
+        // the default scalar `lookup_many` — stateless miss-through
+        // has nothing to batch)
         LookupResult { hit: false, done_at: req.at, energy_nj: 0.0 }
     }
 

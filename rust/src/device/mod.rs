@@ -10,7 +10,11 @@
 //! - [`CacheDevice`] — the in-package memory below the L3 in the
 //!   hardware-managed cache experiments (Fig 9/10/11). Implemented by
 //!   `TechCache` (D-Cache / D-Cache(Ideal) / S-Cache / RC-Unbound),
-//!   `MonarchCache`, and `Scratchpad` (miss-through).
+//!   `MonarchCache`, and `Scratchpad` (miss-through). The wave
+//!   pipeline in `sim::System` drives it through the batched
+//!   [`CacheDevice::lookup_many`] (default: the scalar loop;
+//!   `MonarchCache`: one functional XAM tag evaluation per bank
+//!   group).
 //! - [`AssocDevice`] — the software-managed backend of the hashing and
 //!   string-match experiments (Fig 12-14, §10.5): flat RAM read/write,
 //!   key/mask registers, single [`AssocDevice::search`], and the

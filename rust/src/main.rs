@@ -8,6 +8,7 @@
 //! monarch stringmatch          §10.5
 //! monarch shards               shard-count throughput sweep
 //! monarch reconfig             static vs spill-only vs adaptive
+//! monarch cachewave            wave-width sweep of the cache-mode pipeline
 //! monarch table1               technology comparison
 //! monarch selfcheck            load artifacts, kernel-vs-rust check
 //! ```
@@ -237,6 +238,46 @@ fn main() -> Result<()> {
                 .collect();
             payload = Some(json::experiment("shards", jrows));
         }
+        "cachewave" => {
+            // wave-width sweep of the wave-based cache-mode pipeline:
+            // 1 = the seed's request-at-a-time order, 0 = unbounded
+            // (waves grow until every runnable thread blocks)
+            let pts =
+                coordinator::cachewave_sweep(&budget, &[1, 2, 4, 8, 16, 0]);
+            coordinator::cachewave_table(&pts).print();
+            for sys in ["Monarch(M=3)", "D-Cache"] {
+                let of = |cap: usize| {
+                    pts.iter()
+                        .find(|p| p.system == sys && p.wave_cap == cap)
+                        .map(|p| p.ops_per_kcycle)
+                };
+                if let (Some(w1), Some(wmax)) = (of(1), of(0)) {
+                    println!(
+                        "  {sys}: {:.2} -> {:.2} ops/kcycle \
+                         (scalar-order -> unbounded waves, {:.2}x)",
+                        w1,
+                        wmax,
+                        wmax / w1.max(1e-12)
+                    );
+                }
+            }
+            let jrows = pts
+                .iter()
+                .map(|p| {
+                    Json::obj()
+                        .set("system", p.system.clone())
+                        .set("wave_cap", p.wave_cap)
+                        .set("cycles", p.cycles)
+                        .set("mem_ops", p.mem_ops)
+                        .set("ops_per_kcycle", p.ops_per_kcycle)
+                        .set("wave_lookups", p.wave_lookups)
+                        .set("wave_flushes", p.wave_flushes)
+                        .set("max_wave", p.max_wave)
+                        .set("lookups_per_eval", p.lookups_per_eval)
+                })
+                .collect();
+            payload = Some(json::experiment("cachewave", jrows));
+        }
         "reconfig" => {
             let pts = coordinator::reconfig_sweep_with(
                 &builder_factory(args.flag("pjrt")),
@@ -335,7 +376,7 @@ fn main() -> Result<()> {
             }
             println!(
                 "usage: monarch <table1|fig9|fig10|fig11|fig12|fig13|fig14|\
-                 stringmatch|shards|reconfig|selfcheck> [--quick] \
+                 stringmatch|shards|reconfig|cachewave|selfcheck> [--quick] \
                  [--scale S] [--trace-ops N] [--hash-ops N] [--threads N] \
                  [--seed N] [--pjrt] [--json PATH]"
             );

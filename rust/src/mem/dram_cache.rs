@@ -292,6 +292,39 @@ mod tests {
     }
 
     #[test]
+    fn trait_lookup_many_default_is_the_scalar_loop() {
+        // TechCache rides the `CacheDevice::lookup_many` scalar
+        // fallback: a wave through the trait must be bit-identical to
+        // scalar lookups on a twin device
+        use crate::device::CacheDevice;
+        let mk = || {
+            let mut c = TechCache::dram(1 << 20);
+            for b in 0..16u64 {
+                c.install(b * 64, b % 3 == 0, 0);
+            }
+            c
+        };
+        let wave: Vec<MemReq> = (0..24u64)
+            .map(|i| {
+                let kind =
+                    if i % 5 == 0 { ReqKind::Write } else { ReqKind::Read };
+                req(i * 64 % (20 * 64), kind, 10_000 + i * 7)
+            })
+            .collect();
+        let mut batched = mk();
+        let got = CacheDevice::lookup_many(&mut batched, &wave);
+        let mut scalar = mk();
+        let want: Vec<LookupResult> =
+            wave.iter().map(|r| scalar.lookup(r)).collect();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.hit, w.hit);
+            assert_eq!(g.done_at, w.done_at);
+            assert_eq!(g.energy_nj.to_bits(), w.energy_nj.to_bits());
+        }
+        assert_eq!(batched.tags.hits, scalar.tags.hits);
+    }
+
+    #[test]
     fn cam_tagpath_is_constant_cost() {
         let mut c = TechCache::new(
             "cam",

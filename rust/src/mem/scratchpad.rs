@@ -161,6 +161,25 @@ mod tests {
     }
 
     #[test]
+    fn cache_wave_misses_straight_through_at_zero_cost() {
+        // scratchpads sit outside the hardware cache path: a wave of
+        // L3 misses passes through untouched — every result is a miss
+        // at its own issue cycle with zero energy, and the device
+        // state (bank reservations, stats) stays untouched
+        use crate::device::CacheDevice;
+        let mut sp = Scratchpad::hbm_sp(1 << 20);
+        let wave: Vec<MemReq> =
+            (0..8u64).map(|i| r(i * 64, 1000 + 13 * i)).collect();
+        let got = CacheDevice::lookup_many(&mut sp, &wave);
+        for (g, q) in got.iter().zip(&wave) {
+            assert!(!g.hit);
+            assert_eq!(g.done_at, q.at);
+            assert_eq!(g.energy_nj, 0.0);
+        }
+        assert_eq!(sp.stats.get("reads"), 0, "no scratchpad traffic");
+    }
+
+    #[test]
     fn write_energy_exceeds_read_energy_on_rram() {
         let mut sp = Scratchpad::rram_flat(1 << 20);
         let re = sp.access(&r(0, 0)).energy_nj;

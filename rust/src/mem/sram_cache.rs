@@ -48,6 +48,32 @@ mod tests {
     }
 
     #[test]
+    fn s_cache_rides_the_scalar_wave_fallback() {
+        // the SCAM tag path keeps working unchanged under the batched
+        // trait surface: a wave == the scalar sequence, tag search
+        // still constant-cost per op
+        use crate::device::CacheDevice;
+        let mut c = s_cache(1 << 20);
+        c.install(0x40, false, 0);
+        let wave: Vec<MemReq> = (0..4u64)
+            .map(|i| MemReq {
+                addr: 0x40 * (i + 1),
+                kind: ReqKind::Read,
+                at: 50_000 + i,
+                thread: 0,
+            })
+            .collect();
+        let got = CacheDevice::lookup_many(&mut c, &wave);
+        assert!(got[0].hit);
+        let mut twin = s_cache(1 << 20);
+        twin.install(0x40, false, 0);
+        for (g, r) in got.iter().zip(&wave) {
+            let w = twin.lookup(r);
+            assert_eq!((g.hit, g.done_at), (w.hit, w.done_at));
+        }
+    }
+
+    #[test]
     fn capacity_is_the_weakness() {
         // at iso-area the CMOS stack is ~100x smaller than Monarch
         let full_monarch = 8usize << 30;

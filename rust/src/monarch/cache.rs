@@ -186,12 +186,17 @@ impl MonarchCache {
     }
 
     /// Tag search for `set`/`tag` at `now`; returns (way, done_cycle).
-    fn tag_search(
+    /// `pre` carries the way a wave's functional pre-pass already
+    /// resolved ([`MonarchCache::lookup_many`]); `None` evaluates on
+    /// the spot. Either source yields the same way (debug-asserted),
+    /// so batched and scalar paths stay bit-identical.
+    fn tag_search_with(
         &mut self,
         vault: usize,
         set: usize,
         tag: u64,
         now: u64,
+        pre: Option<Option<usize>>,
     ) -> (Option<usize>, u64) {
         let (key, mask) = Self::search_key_mask(set, tag);
         let v = &mut self.vaults[vault];
@@ -218,9 +223,16 @@ impl MonarchCache {
         );
         self.energy_nj += XAM_SEARCH_NJ;
         self.stats.inc("searches");
-        let way = v.tag_maps[array][set % 2]
-            .get(&(tag as u32))
-            .map(|&c| c as usize);
+        let way = match pre {
+            Some(w) => w,
+            None => v.tag_maps[array][set % 2]
+                .get(&(tag as u32))
+                .map(|&c| c as usize),
+        };
+        debug_assert_eq!(
+            way,
+            v.tag_maps[array][set % 2].get(&(tag as u32)).map(|&c| c as usize)
+        );
         debug_assert_eq!(way, v.tags[array].search_first(key, mask));
         (way, done)
     }
@@ -228,6 +240,16 @@ impl MonarchCache {
     /// Cache lookup for an L3-missed request. Misses do NOT allocate
     /// (§8 no-allocate); installs happen on L3 evictions only.
     pub fn lookup(&mut self, req: &MemReq) -> LookupResult {
+        self.lookup_with(req, None)
+    }
+
+    /// [`MonarchCache::lookup`] with an optionally precomputed way
+    /// from a wave's functional pre-pass.
+    fn lookup_with(
+        &mut self,
+        req: &MemReq,
+        pre: Option<Option<usize>>,
+    ) -> LookupResult {
         let (vault, set, tag) = self.map(req.addr);
         let ss = self.data_superset(vault, set);
         // t_MWW-locked supersets are bypassed entirely (§8: all
@@ -236,7 +258,7 @@ impl MonarchCache {
             self.stats.inc("locked_bypass");
             return LookupResult { hit: false, done_at: req.at, energy_nj: 0.0 };
         }
-        let (way, tag_done) = self.tag_search(vault, set, tag, req.at);
+        let (way, tag_done) = self.tag_search_with(vault, set, tag, req.at, pre);
         match way {
             Some(col) => {
                 let write = req.kind.is_write();
@@ -281,6 +303,94 @@ impl MonarchCache {
                 LookupResult { hit: false, done_at: tag_done, energy_nj: 0.0 }
             }
         }
+    }
+
+    /// One wave of L3-miss lookups. The functional tag matching for
+    /// the whole wave is hoisted into **one evaluation per bank
+    /// group** — a (vault, tag-array) pair, the XAM array whose
+    /// columns hold a wave member's candidate tags — reusing the
+    /// batched-evaluation pattern of `device/sharded.rs`. The per-op
+    /// controller pass (sense-mode prepares, key/mask transfers,
+    /// CAM-bank/channel reservations, dirty-bit updates, wear, stats)
+    /// then runs in submission order exactly as the scalar calls
+    /// would, so results are bit-identical to
+    /// `for r in reqs { lookup(r) }` (pinned at whole-`SimReport`
+    /// level by `tests/device_differential.rs`).
+    pub fn lookup_many(&mut self, reqs: &[MemReq]) -> Vec<LookupResult> {
+        if reqs.len() <= 1 {
+            // a singleton wave is one op resolved by one functional
+            // evaluation — it must count toward the occupancy metric
+            // (lookups/eval) or the average would cover only multi-op
+            // waves and overstate batching
+            if reqs.len() == 1 {
+                self.stats.add("wave_ops", 1);
+                self.stats.add("wave_evals", 1);
+            }
+            return reqs.iter().map(|r| self.lookup(r)).collect();
+        }
+        // functional pre-pass: group the wave by bank group and
+        // resolve every member's way in one pass over that group
+        let mapped: Vec<(usize, usize, u64)> =
+            reqs.iter().map(|r| self.map(r.addr)).collect();
+        let mut groups: std::collections::HashMap<(usize, usize), Vec<usize>> =
+            std::collections::HashMap::new();
+        for (i, &(vault, set, _)) in mapped.iter().enumerate() {
+            groups.entry((vault, set / 2)).or_default().push(i);
+        }
+        let mut pre_ways: Vec<Option<usize>> = vec![None; reqs.len()];
+        for (&(vault, array), members) in &groups {
+            let v = &self.vaults[vault];
+            for &i in members {
+                let (_, set, tag) = mapped[i];
+                pre_ways[i] = v.tag_maps[array][set % 2]
+                    .get(&(tag as u32))
+                    .map(|&c| c as usize);
+            }
+            // ground truth in debug builds: the same group resolved by
+            // one batched pass over the group's XAM array
+            #[cfg(debug_assertions)]
+            {
+                let keys_masks: Vec<(u64, u64)> = members
+                    .iter()
+                    .map(|&i| {
+                        let (_, set, tag) = mapped[i];
+                        Self::search_key_mask(set, tag)
+                    })
+                    .collect();
+                let arrays: Vec<&XamArray> =
+                    members.iter().map(|_| &v.tags[array]).collect();
+                let keys: Vec<u64> =
+                    keys_masks.iter().map(|p| p.0).collect();
+                let masks: Vec<u64> =
+                    keys_masks.iter().map(|p| p.1).collect();
+                let got = crate::runtime::SearchEngine::search_sets_fallback(
+                    &arrays, &keys, &masks,
+                );
+                for (j, &i) in members.iter().enumerate() {
+                    debug_assert_eq!(pre_ways[i], got[j]);
+                }
+            }
+        }
+        self.stats.add("wave_ops", reqs.len() as u64);
+        self.stats.add("wave_evals", groups.len() as u64);
+        // controller pass, per op in submission order; a wear rotation
+        // mid-wave flushes its vault's tags, so later wave members of
+        // that vault re-evaluate on the spot instead of using a stale
+        // pre-pass way
+        let rot: Vec<u64> =
+            self.vaults.iter().map(|v| v.wear.rotations()).collect();
+        reqs.iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let vault = mapped[i].0;
+                let fresh = self.vaults[vault].wear.rotations() == rot[vault];
+                let pre = fresh.then_some(pre_ways[i]);
+                if pre.is_none() {
+                    self.stats.inc("wave_reevals");
+                }
+                self.lookup_with(r, pre)
+            })
+            .collect()
     }
 
     /// Handle an L3 eviction per the D/R rules. Returns the cycle the

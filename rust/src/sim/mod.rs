@@ -6,12 +6,33 @@
 //! [`DeviceBuilder`] registry, so new backends plug in without
 //! touching this run loop (the seed's `InPackage` enum dispatch is
 //! gone).
+//!
+//! **Wave pipeline** (DESIGN.md §Cache-mode pipeline): the run loop is
+//! no longer scalar request-at-a-time. L3 misses park in per-thread
+//! MSHRs (a thread keeps issuing past a miss until its `mlp` window
+//! fills or a dependency barrier needs a pending completion) and are
+//! collected into a *wave*. When every runnable thread is blocked —
+//! or the wave reaches [`System::wave_cap`] — the wave resolves as
+//! one unit: one [`CacheDevice::lookup_many`] call (Monarch: one
+//! functional XAM tag evaluation per bank group), then the misses'
+//! DDR4 fetches issued in lookup-completion order (overlapping
+//! through the bank engine's reservations), then fills/write-backs
+//! applied in fetch-completion order. Scheduling picks the laggard
+//! thread through a min-heap of thread clocks instead of the seed's
+//! O(threads) scan. With `wave_cap == 1` every miss resolves
+//! immediately — the seed's request-at-a-time order. Batched and
+//! scalar device dispatch are pinned bit-identical at whole-report
+//! level by `tests/device_differential.rs`.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 use crate::cachehier::{Eviction, Hierarchy, HierOutcome};
 use crate::config::SystemConfig;
-use crate::cpu::ThreadTimeline;
+use crate::cpu::{ThreadTimeline, TraceOp};
 use crate::device::{CacheDevice, DeviceBuilder};
 use crate::mem::ddr4::MainMemory;
+use crate::mem::dram_cache::LookupResult;
 use crate::mem::{MemReq, ReqKind};
 use crate::util::stats::Counters;
 use crate::workloads::Workload;
@@ -42,12 +63,29 @@ impl SimReport {
 /// Active-core power (W) — McPAT-ballpark for an 8-core 3.2GHz OoO die.
 const CORE_WATTS: f64 = 2.0;
 
+/// One miss parked in the wave: the request plus its issuing thread.
+#[derive(Clone, Copy, Debug)]
+struct Mshr {
+    thread: usize,
+    req: MemReq,
+}
+
 pub struct System {
     pub cfg: SystemConfig,
     pub hier: Hierarchy,
     pub inpkg: Box<dyn CacheDevice>,
     pub main: MainMemory,
     pub stats: Counters,
+    /// Max misses collected into one wave before it resolves; the
+    /// per-thread bound is the MLP/MSHR window. `1` reproduces the
+    /// seed's request-at-a-time order; the default (`usize::MAX`)
+    /// lets waves grow until every runnable thread is blocked.
+    pub wave_cap: usize,
+    /// Diagnostic: resolve waves through per-request scalar
+    /// [`CacheDevice::lookup`] calls instead of
+    /// [`CacheDevice::lookup_many`]. The differential suite pins both
+    /// dispatches bit-identical at whole-report level.
+    pub scalar_lookups: bool,
     dynamic_nj: f64,
 }
 
@@ -68,7 +106,23 @@ impl System {
             inpkg,
             cfg,
             stats: Counters::new(),
+            wave_cap: usize::MAX,
+            scalar_lookups: false,
             dynamic_nj: 0.0,
+        }
+    }
+
+    /// Dynamic energy of one on-die probe chain that reached
+    /// `level` (1/2/3; misses probe all three levels). The hierarchy
+    /// used to contribute zero dynamic nJ on hits, undercounting
+    /// cache-mode energy for L1/L2/L3-resident working sets.
+    #[inline]
+    fn hier_probe_nj(&self, level: u8) -> f64 {
+        let c = &self.cfg;
+        match level {
+            1 => c.l1_access_nj,
+            2 => c.l1_access_nj + c.l2_access_nj,
+            _ => c.l1_access_nj + c.l2_access_nj + c.l3_access_nj,
         }
     }
 
@@ -89,98 +143,204 @@ impl System {
         }
     }
 
-    /// One CPU memory access; returns the completion cycle.
-    pub fn mem_access(
-        &mut self,
-        core: usize,
-        thread: u16,
-        addr: u64,
-        write: bool,
-        at: u64,
-    ) -> u64 {
-        match self.hier.access(core, addr, write) {
-            HierOutcome::Hit { latency, .. } => at + latency,
-            HierOutcome::Miss { l3_victim } => {
-                let t0 = at + self.hier.l3_lat;
-                if let Some(v) = l3_victim {
-                    self.handle_l3_victim(&v, t0);
-                }
-                let kind = if write { ReqKind::Write } else { ReqKind::Read };
-                let req = MemReq { addr, kind, at: t0, thread };
-                let r = self.inpkg.lookup(&req);
-                self.dynamic_nj += r.energy_nj;
-                if r.hit {
-                    return r.done_at;
-                }
-                // in-package miss: fetch from main memory, then let
-                // the device apply its fill policy (no-allocate
-                // devices skip it)
-                let a = self.main.access(&MemReq { at: r.done_at, ..req });
-                self.dynamic_nj += a.energy_nj;
-                if let Some(fill) = self.inpkg.fill(addr, write, a.done_at) {
-                    self.dynamic_nj += fill.energy_nj;
-                    if let Some((wb_addr, wb_at)) = fill.writeback {
-                        let wa = self.main.access(&MemReq {
-                            addr: wb_addr,
-                            kind: ReqKind::Write,
-                            at: wb_at,
-                            thread,
-                        });
-                        self.dynamic_nj += wa.energy_nj;
-                    }
-                }
-                a.done_at
+    /// Let the device apply its miss-fill policy after the main-memory
+    /// fetch completed at `fetched_at`; any dirty victim it surfaces
+    /// is written back to main memory.
+    fn apply_fill(&mut self, addr: u64, write: bool, thread: u16, fetched_at: u64) {
+        if let Some(fill) = self.inpkg.fill(addr, write, fetched_at) {
+            self.dynamic_nj += fill.energy_nj;
+            if let Some((wb_addr, wb_at)) = fill.writeback {
+                let wa = self.main.access(&MemReq {
+                    addr: wb_addr,
+                    kind: ReqKind::Write,
+                    at: wb_at,
+                    thread,
+                });
+                self.dynamic_nj += wa.energy_nj;
             }
         }
     }
 
-    /// Run a workload to completion (or `max_ops` per thread).
+    /// Resolve one collected wave: one batched device lookup (or the
+    /// scalar dispatch when [`System::scalar_lookups`] is set), the
+    /// misses' DDR4 fetches in lookup-completion order — overlapping
+    /// through the bank engine's reservations — and fills/write-backs
+    /// in fetch-completion order. Completions are handed back to the
+    /// issuing threads' windows in submission order.
+    fn resolve_wave(
+        &mut self,
+        wave: &mut Vec<Mshr>,
+        timelines: &mut [ThreadTimeline],
+    ) {
+        if wave.is_empty() {
+            return;
+        }
+        self.stats.inc("wave.flushes");
+        self.stats.add("wave.lookups", wave.len() as u64);
+        let reqs: Vec<MemReq> = wave.iter().map(|m| m.req).collect();
+        let results: Vec<LookupResult> = if self.scalar_lookups {
+            reqs.iter().map(|r| self.inpkg.lookup(r)).collect()
+        } else {
+            self.inpkg.lookup_many(&reqs)
+        };
+        let mut completions: Vec<u64> = vec![0; wave.len()];
+        let mut misses: Vec<usize> = Vec::new();
+        for (i, r) in results.iter().enumerate() {
+            self.dynamic_nj += r.energy_nj;
+            if r.hit {
+                completions[i] = r.done_at;
+            } else {
+                misses.push(i);
+            }
+        }
+        // DDR4 fetches issue in lookup-completion order
+        misses.sort_by_key(|&i| (results[i].done_at, i));
+        let mut fetched: Vec<(u64, usize)> = Vec::with_capacity(misses.len());
+        for &i in &misses {
+            let a = self.main.access(&MemReq {
+                at: results[i].done_at,
+                ..reqs[i]
+            });
+            self.dynamic_nj += a.energy_nj;
+            completions[i] = a.done_at;
+            fetched.push((a.done_at, i));
+        }
+        // fills and their write-backs apply in fetch-completion order
+        fetched.sort_unstable();
+        for &(done_at, i) in &fetched {
+            self.apply_fill(
+                reqs[i].addr,
+                reqs[i].kind.is_write(),
+                reqs[i].thread,
+                done_at,
+            );
+        }
+        for (m, &done_at) in wave.iter().zip(&completions) {
+            timelines[m.thread].complete_pending(done_at);
+        }
+        wave.clear();
+    }
+
+    /// Run a workload to completion (or `max_ops` per thread) through
+    /// the wave pipeline.
     pub fn run(&mut self, wl: &mut dyn Workload, max_ops: u64) -> SimReport {
         let nthreads = wl.threads();
         let mlp = (self.cfg.rob_entries / 8).max(4);
         let mut timelines: Vec<ThreadTimeline> =
             (0..nthreads).map(|_| ThreadTimeline::new(mlp)).collect();
         let mut issued = vec![0u64; nthreads];
-        let mut done = vec![false; nthreads];
+        // an op fetched from the workload but not yet issued because
+        // its thread blocked on pending wave completions
+        let mut staged: Vec<Option<TraceOp>> = vec![None; nthreads];
         let threads_per_core = self.cfg.threads_per_core.max(1);
+        // laggard scheduling: a min-heap of (thread clock, thread id)
+        // replaces the seed's O(threads) scan per op. Each running
+        // thread has exactly one entry — blocked threads wait in
+        // `blocked` until the wave resolves.
+        let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+            (0..nthreads).map(|t| Reverse((0, t))).collect();
+        let mut blocked: Vec<usize> = Vec::new();
+        let mut wave: Vec<Mshr> = Vec::new();
+        let mut max_wave = 0u64;
         loop {
-            // pick the laggard thread still running (keeps global time
-            // roughly coherent for bank contention)
-            let mut pick: Option<usize> = None;
-            for t in 0..nthreads {
-                if !done[t]
-                    && pick.is_none_or(|p| timelines[t].now < timelines[p].now)
-                {
-                    pick = Some(t);
+            let Some(Reverse((_, t))) = heap.pop() else {
+                // every runnable thread is blocked or finished
+                if wave.is_empty() {
+                    break;
                 }
+                max_wave = max_wave.max(wave.len() as u64);
+                self.resolve_wave(&mut wave, &mut timelines);
+                for b in blocked.drain(..) {
+                    heap.push(Reverse((timelines[b].now, b)));
+                }
+                continue;
+            };
+            let op = match staged[t].take() {
+                Some(op) => op,
+                None => match wl.next_op(t) {
+                    Some(op) if issued[t] < max_ops => op,
+                    // finished: the thread simply leaves the heap
+                    _ => continue,
+                },
+            };
+            // an op blocks when it needs a completion the wave has not
+            // produced yet: an MSHR window still full after retiring
+            // everything already complete, or a dependency barrier
+            // over pending misses
+            let tl = &mut timelines[t];
+            let window_full = tl.retired_in_flight() >= tl.mlp;
+            if tl.pending() > 0 && (window_full || op.barrier) {
+                staged[t] = Some(op);
+                blocked.push(t);
+                continue;
             }
-            let Some(t) = pick else { break };
-            match wl.next_op(t) {
-                Some(op) if issued[t] < max_ops => {
-                    issued[t] += 1;
-                    let tl = &mut timelines[t];
-                    if op.barrier {
-                        tl.drain();
+            issued[t] += 1;
+            let tl = &mut timelines[t];
+            if op.barrier {
+                tl.drain();
+            }
+            tl.compute(op.compute as u64);
+            let at = tl.issue_at();
+            let core = t / threads_per_core;
+            match self.hier.access(core, op.addr, op.write) {
+                HierOutcome::Hit { level, latency } => {
+                    self.dynamic_nj += self.hier_probe_nj(level);
+                    timelines[t].record(at + latency);
+                }
+                HierOutcome::Miss { l3_victim } => {
+                    self.dynamic_nj += self.hier_probe_nj(3);
+                    let t0 = at + self.hier.l3_lat;
+                    if let Some(v) = l3_victim {
+                        self.handle_l3_victim(&v, t0);
                     }
-                    tl.compute(op.compute as u64);
-                    let at = tl.issue_at();
-                    let core = t / threads_per_core;
-                    let done_at =
-                        self.mem_access(core, t as u16, op.addr, op.write, at);
-                    timelines[t].record(done_at);
+                    let kind = if op.write {
+                        ReqKind::Write
+                    } else {
+                        ReqKind::Read
+                    };
+                    timelines[t].begin_pending();
+                    wave.push(Mshr {
+                        thread: t,
+                        req: MemReq {
+                            addr: op.addr,
+                            kind,
+                            at: t0,
+                            thread: t as u16,
+                        },
+                    });
+                    if wave.len() >= self.wave_cap {
+                        max_wave = max_wave.max(wave.len() as u64);
+                        self.resolve_wave(&mut wave, &mut timelines);
+                        for b in blocked.drain(..) {
+                            heap.push(Reverse((timelines[b].now, b)));
+                        }
+                    }
                 }
-                _ => done[t] = true,
             }
+            heap.push(Reverse((timelines[t].now, t)));
         }
-        let cycles =
-            timelines.iter_mut().map(|t| t.finish()).max().unwrap_or(0);
+        self.stats.set("wave.max_width", max_wave);
+        let finishes: Vec<u64> =
+            timelines.iter_mut().map(|t| t.finish()).collect();
+        let cycles = finishes.iter().copied().max().unwrap_or(0);
         let mem_ops: u64 = timelines.iter().map(|t| t.mem_ops).sum();
-        // energy: dynamic + static over the run
+        // energy: dynamic + static over the run. Core static power is
+        // integrated per core over that core's own active interval
+        // (its last thread completion) — the seed charged every core
+        // until the globally slowest thread finished, overcounting
+        // finished cores.
         let seconds = cycles as f64 / (self.cfg.freq_ghz * 1e9);
-        let static_nj = (self.inpkg.static_watts()
-            + CORE_WATTS * self.cfg.cores as f64)
-            * seconds
-            * 1e9
+        let ncores = self.cfg.cores.max(1);
+        let mut core_active = vec![0u64; ncores];
+        for (t, &f) in finishes.iter().enumerate() {
+            let c = (t / threads_per_core) % ncores;
+            core_active[c] = core_active[c].max(f);
+        }
+        let core_cycles: u64 = core_active.iter().sum();
+        let core_static_nj =
+            CORE_WATTS * core_cycles as f64 / self.cfg.freq_ghz;
+        let static_nj = self.inpkg.static_watts() * seconds * 1e9
+            + core_static_nj
             + self.main.static_energy_nj(cycles);
         let mut counters = Counters::new();
         counters.merge(&self.stats);

@@ -26,10 +26,19 @@ use crate::util::murmur3::murmur3_u64;
 use crate::util::rng::{Rng, ScrambledZipf};
 use crate::util::stats::Counters;
 
-/// Functional hopscotch hash table (open addressing, windowed).
+/// Functional hopscotch hash table (open addressing, windowed), with
+/// per-home **hop-info neighborhood-membership bitmaps** (the
+/// hop-hash / SwissTable-style trick): bit `d` of `hop[i]` is set iff
+/// slot `(i + d) mod n` holds a key whose home bucket is `i`. A
+/// lookup probes ONLY the members of its home's neighborhood instead
+/// of every occupied slot the window covers — unrelated occupants
+/// parked in the window by other homes cost nothing (DESIGN.md
+/// §Hashing notes the probe-count delta).
 #[derive(Clone, Debug)]
 pub struct Hopscotch {
     pub buckets: Vec<Option<u64>>,
+    /// Hop-info bitmap per home bucket (window <= 128 slots).
+    hop: Vec<u128>,
     pub window: usize,
     pub len: usize,
     seed: u32,
@@ -38,8 +47,16 @@ pub struct Hopscotch {
 
 impl Hopscotch {
     pub fn new(capacity_pow2: usize, window: usize) -> Self {
+        assert!(window <= 128, "hop-info bitmap covers at most 128 slots");
+        // the seed clamped probe distances with `window.min(n)`; the
+        // bitmap walk has no clamp, so distances must not wrap
+        assert!(
+            window <= 1 << capacity_pow2,
+            "window must not exceed the table (hop distances would alias)"
+        );
         Self {
             buckets: vec![None; 1 << capacity_pow2],
+            hop: vec![0; 1 << capacity_pow2],
             window,
             len: 0,
             seed: 0x9747b28c,
@@ -52,20 +69,30 @@ impl Hopscotch {
         (murmur3_u64(key, self.seed) as usize) & (self.buckets.len() - 1)
     }
 
+    /// Neighborhood-membership bitmap of home bucket `home`.
+    #[inline]
+    pub fn hop_info(&self, home: usize) -> u128 {
+        self.hop[home]
+    }
+
     /// Functional lookup; returns (bucket, probes) — `probes` is the
-    /// number of occupied candidate buckets inspected (what a baseline
-    /// system must read).
+    /// number of neighborhood members inspected (what a baseline
+    /// system must read after consulting the hop-info bitmap in the
+    /// bucket's metadata word). The seed scanned every *occupied*
+    /// window slot instead, paying failed probes for slots that
+    /// belong to other home buckets.
     pub fn lookup(&self, key: u64) -> (Option<usize>, usize) {
         let h = self.home(key);
         let n = self.buckets.len();
         let mut probes = 0;
-        for d in 0..self.window.min(n) {
+        let mut bits = self.hop[h];
+        while bits != 0 {
+            let d = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
             let i = (h + d) & (n - 1);
-            if let Some(k) = self.buckets[i] {
-                probes += 1;
-                if k == key {
-                    return (Some(i), probes);
-                }
+            probes += 1;
+            if self.buckets[i] == Some(key) {
+                return (Some(i), probes);
             }
         }
         (None, probes)
@@ -103,6 +130,13 @@ impl Hopscotch {
                     if dist < self.window {
                         self.buckets[fi] = Some(kj);
                         self.buckets[j] = None;
+                        // the displaced key moves within its home's
+                        // neighborhood: update that home's hop bits
+                        let old_d = (j + n - hj) & (n - 1);
+                        let new_d = (fi + n - hj) & (n - 1);
+                        self.hop[hj] =
+                            (self.hop[hj] & !(1u128 << old_d))
+                                | (1u128 << new_d);
                         displacements += 1;
                         fi = j;
                         fd = (fi + n - h) & (n - 1);
@@ -116,6 +150,7 @@ impl Hopscotch {
             }
         }
         self.buckets[fi] = Some(key);
+        self.hop[h] |= 1u128 << fd;
         self.len += 1;
         InsertOutcome::Inserted { bucket: fi, scan: fd, displacements }
     }
@@ -390,7 +425,7 @@ fn run_ycsb_with(
         };
         if is_read {
             counters.inc("lookups");
-            let (found, probes) = table.lookup(key);
+            let (found, _probes) = table.lookup(key);
             if found.is_some() {
                 hits += 1;
             }
@@ -439,7 +474,7 @@ fn run_ycsb_with(
                 }
                 let at = timelines[t].issue_at();
                 let done = baseline_lookup(
-                    mem, &layout, &table, key, probes, found, at, &mut nj,
+                    mem, &layout, &table, key, found, at, &mut nj,
                 );
                 timelines[t].record(done);
             }
@@ -589,27 +624,40 @@ fn adaptive_epoch(
 }
 
 /// The memory operations a lookup performs on a conventional system:
-/// the metadata word, then the occupied candidates in sequence, then
-/// the value on a hit.
-#[allow(clippy::too_many_arguments)]
+/// the metadata word — which carries the home's hop-info
+/// neighborhood-membership bitmap — then the home's *members* in
+/// sequence, then the value on a hit. The hop-info check before each
+/// probe (the hop-hash trick) means an occupied slot parked in the
+/// window by another home bucket is never read; the seed probed every
+/// occupied candidate. An empty neighborhood costs the metadata read
+/// only.
 fn baseline_lookup(
     mem: &mut dyn AssocDevice,
     layout: &Layout,
     table: &Hopscotch,
     key: u64,
-    probes: usize,
     found: Option<usize>,
     at: u64,
     nj: &mut f64,
 ) -> u64 {
-    let h = table.home(key) as u64;
+    let home = table.home(key);
+    let h = home as u64;
     let mut t =
         acc(mem, layout.meta_base + h * layout.meta_stride, false, at, nj);
-    for p in 0..probes.max(1) {
-        t = acc(mem, layout.key_slot(h, p as u64), false, t, nj);
+    let mut bits = table.hop_info(home);
+    while bits != 0 {
+        let d = bits.trailing_zeros() as u64;
+        bits &= bits - 1;
+        t = acc(mem, layout.key_slot(h, d), false, t, nj);
+        if found == Some(((h + d) & layout.index_mask) as usize) {
+            break;
+        }
     }
-    if found.is_some() {
-        t = acc(mem, layout.val_base + 8 * h, false, t, nj);
+    if let Some(slot) = found {
+        // the value lives at the key's landing bucket — where the
+        // insert path wrote it — not at the home bucket (displaced
+        // keys' value traffic used to be charged to the wrong block)
+        t = acc(mem, layout.val_base + 8 * slot as u64, false, t, nj);
     }
     t
 }
@@ -781,6 +829,84 @@ mod tests {
         assert_eq!(t.len, 1);
     }
 
+    #[test]
+    fn hop_info_skips_unrelated_occupied_probes() {
+        // Two homes interleaved in one window: a lookup from home A
+        // must not pay a probe for home B's occupant parked between
+        // A's members (the hop-hash membership trick).
+        let mut t = Hopscotch::new(4, 8);
+        let n = t.buckets.len();
+        let find_home = |t: &Hopscotch, want: usize, skip: u64| -> u64 {
+            let mut k = skip + 1;
+            while t.home(k) != want {
+                k += 1;
+            }
+            k
+        };
+        let a = 3usize; // arbitrary home away from the wrap
+        let ka0 = find_home(&t, a, 0);
+        let kb = find_home(&t, (a + 1) & (n - 1), 0);
+        let ka1 = find_home(&t, a, ka0);
+        assert!(matches!(
+            t.insert(ka0),
+            InsertOutcome::Inserted { bucket, .. } if bucket == a
+        ));
+        assert!(matches!(
+            t.insert(kb),
+            InsertOutcome::Inserted { bucket, .. } if bucket == (a + 1) & (n - 1)
+        ));
+        // ka1's free-slot scan passes the occupied a+1 and lands at a+2
+        assert!(matches!(
+            t.insert(ka1),
+            InsertOutcome::Inserted { bucket, .. } if bucket == (a + 2) & (n - 1)
+        ));
+        let (found, probes) = t.lookup(ka1);
+        assert_eq!(found, Some((a + 2) & (n - 1)));
+        assert_eq!(
+            probes, 2,
+            "members a and a+2 only — the seed would also probe b's \
+             occupant at a+1"
+        );
+        // a missing key of home a probes exactly the two members
+        let ka_miss = find_home(&t, a, ka1);
+        let (none, miss_probes) = t.lookup(ka_miss);
+        assert_eq!(none, None);
+        assert_eq!(miss_probes, 2);
+    }
+
+    #[test]
+    fn hop_info_tracks_membership_through_displacements() {
+        let mut t = Hopscotch::new(8, 16);
+        for k in 1..=200u64 {
+            if t.insert(k * 31337) == InsertOutcome::NeedRehash {
+                break;
+            }
+        }
+        let n = t.buckets.len();
+        // every set bit points at an occupant of that home...
+        for i in 0..n {
+            let mut bits = t.hop_info(i);
+            while bits != 0 {
+                let d = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let slot = (i + d) & (n - 1);
+                let k = t.buckets[slot].expect("hop bit points at occupant");
+                assert_eq!(t.home(k), i, "slot {slot} bit of home {i}");
+            }
+        }
+        // ...and every occupant is covered by its home's bitmap
+        for (slot, b) in t.buckets.iter().enumerate() {
+            if let Some(k) = b {
+                let h = t.home(*k);
+                let d = (slot + n - h) & (n - 1);
+                assert!(
+                    t.hop_info(h) & (1u128 << d) != 0,
+                    "occupant of slot {slot} missing from home {h}"
+                );
+            }
+        }
+    }
+
     /// Records every table-region access address (timing trivial).
     struct Recorder {
         addrs: Vec<(u64, bool)>,
@@ -846,8 +972,7 @@ mod tests {
         let mut rec = Recorder { addrs: Vec::new() };
         let mut nj = 0.0;
         baseline_lookup(
-            &mut rec, &layout, &table, tail_keys[1], probes, found, 0,
-            &mut nj,
+            &mut rec, &layout, &table, tail_keys[1], found, 0, &mut nj,
         );
         let key_probes: Vec<u64> = rec
             .addrs
@@ -863,7 +988,7 @@ mod tests {
         for &(a, _) in &rec.addrs {
             assert!(
                 a < layout.val_base
-                    || a == layout.val_base + 8 * (n as u64 - 1)
+                    || a == layout.val_base // value at the landing bucket 0
                     || a >= layout.meta_base,
                 "probe aliased into a foreign region: {a}"
             );

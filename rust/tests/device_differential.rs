@@ -762,3 +762,164 @@ fn search_many_wave_matches_individual_searches() {
         .collect();
     assert_eq!(hits, vec![7], "only the planted set matches");
 }
+
+// ---- cache-mode wave pipeline ---------------------------------------
+
+/// Every registered cache-mode backend kind (the Fig 9 legend plus the
+/// scratchpad/flat-RAM miss-through devices).
+fn all_cache_kinds() -> Vec<InPackageKind> {
+    vec![
+        InPackageKind::DramCache,
+        InPackageKind::DramCacheIdeal,
+        InPackageKind::Sram,
+        InPackageKind::RramUnbound,
+        InPackageKind::MonarchUnbound,
+        InPackageKind::Monarch { m: 1 },
+        InPackageKind::Monarch { m: 3 },
+        InPackageKind::DramScratchpad,
+        InPackageKind::MonarchFlatRam,
+    ]
+}
+
+fn assert_sim_reports_identical(
+    a: &monarch::sim::SimReport,
+    b: &monarch::sim::SimReport,
+    what: &str,
+) {
+    assert_eq!(a.system, b.system, "{what}");
+    assert_eq!(a.cycles, b.cycles, "{what}: cycles");
+    assert_eq!(a.mem_ops, b.mem_ops, "{what}: mem_ops");
+    assert_eq!(
+        a.l3_hit_rate.to_bits(),
+        b.l3_hit_rate.to_bits(),
+        "{what}: l3 hit rate"
+    );
+    assert_eq!(
+        a.inpkg_hit_rate.to_bits(),
+        b.inpkg_hit_rate.to_bits(),
+        "{what}: in-package hit rate"
+    );
+    assert_eq!(a.rotations, b.rotations, "{what}: rotations");
+    assert_eq!(
+        a.energy_nj.to_bits(),
+        b.energy_nj.to_bits(),
+        "{what}: energy"
+    );
+    let ca: Vec<_> = a.counters.iter().collect();
+    let cb: Vec<_> = b.counters.iter().collect();
+    assert_eq!(ca, cb, "{what}: counters");
+}
+
+#[test]
+fn wave_pipeline_bit_identical_to_scalar_for_every_cache_kind() {
+    // The end-to-end batching contract of the cache-mode wave
+    // pipeline: resolving each wave through one `lookup_many` call
+    // must be bit-identical — at whole-`SimReport` level — to
+    // resolving the same waves through per-request scalar `lookup`
+    // calls, for every registered backend and at every wave cap
+    // (1 = the seed's request-at-a-time order).
+    for kind in all_cache_kinds() {
+        // odd intermediate caps exercise mid-collection resolution;
+        // covered on the two backends with real batched/stateful
+        // paths to keep the debug-mode suite tractable
+        let caps: &[usize] = if matches!(
+            kind,
+            InPackageKind::Monarch { m: 3 } | InPackageKind::DramCache
+        ) {
+            &[1, 3, usize::MAX]
+        } else {
+            &[1, usize::MAX]
+        };
+        for &cap in caps {
+            let run = |scalar: bool| {
+                let cfg = SystemConfig::scaled(kind, 1.0 / 4096.0);
+                let mut sys = System::build(cfg);
+                sys.wave_cap = cap;
+                sys.scalar_lookups = scalar;
+                let mut wl =
+                    SyntheticStream::zipfian(4, 4000, 1 << 21, 0.9, 0.2, 77);
+                sys.run(&mut wl, u64::MAX)
+            };
+            let batched = run(false);
+            let scalar = run(true);
+            assert_sim_reports_identical(
+                &batched,
+                &scalar,
+                &format!("{kind:?} cap={cap}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn wave_pipeline_bit_identical_under_graph_workload_with_barriers() {
+    // pointer-chase barriers interleave wave resolution with drains;
+    // the batched/scalar equivalence must survive that too
+    let g = monarch::workloads::graph::Graph::random(2000, 6, 13);
+    let wl = monarch::workloads::graph::bfs(&g, 4, 4000);
+    for kind in [InPackageKind::Monarch { m: 3 }, InPackageKind::DramCache] {
+        let run = |scalar: bool| {
+            let cfg = SystemConfig::scaled(kind, 1.0 / 4096.0);
+            let mut sys = System::build(cfg);
+            sys.scalar_lookups = scalar;
+            let mut replay = wl.replay();
+            sys.run(&mut replay, u64::MAX)
+        };
+        let batched = run(false);
+        let scalar = run(true);
+        assert_sim_reports_identical(&batched, &scalar, &format!("{kind:?}"));
+    }
+}
+
+#[test]
+fn cachewave_monarch_scales_while_scalar_fallback_stays_flat() {
+    // The `monarch cachewave` acceptance gate: Monarch's batched
+    // `lookup_many` aggregates wider waves into fewer functional
+    // evaluations (lookups/eval grows with the cap) and its modeled
+    // throughput rises as fills defer behind the wave's demand
+    // lookups; `TechCache` rides the scalar `lookup_many` fallback —
+    // no batched evaluations, occupancy pinned flat at 1.
+    let budget = Budget {
+        trace_ops: 4000,
+        threads: 4,
+        ..Budget::quick()
+    };
+    let pts = coordinator::cachewave_sweep(&budget, &[1, 4, 0]);
+    let of = |sys: &str, cap: usize| {
+        pts.iter()
+            .find(|p| p.system == sys && p.wave_cap == cap)
+            .unwrap_or_else(|| panic!("missing cell {sys} cap={cap}"))
+            .clone()
+    };
+    for sys in ["Monarch(M=3)", "M-Unbound"] {
+        let (w1, w4, wmax) = (of(sys, 1), of(sys, 4), of(sys, 0));
+        assert!(
+            wmax.lookups_per_eval > w4.lookups_per_eval
+                && w4.lookups_per_eval >= w1.lookups_per_eval,
+            "{sys}: occupancy must scale with the cap: \
+             {} / {} / {}",
+            w1.lookups_per_eval,
+            w4.lookups_per_eval,
+            wmax.lookups_per_eval
+        );
+        assert!(
+            wmax.lookups_per_eval > 1.5,
+            "{sys}: unbounded waves must batch ({})",
+            wmax.lookups_per_eval
+        );
+        assert!(
+            wmax.ops_per_kcycle > w1.ops_per_kcycle,
+            "{sys}: wave throughput must beat scalar-order resolve \
+             ({} vs {})",
+            wmax.ops_per_kcycle,
+            w1.ops_per_kcycle
+        );
+    }
+    for p in pts.iter().filter(|p| p.system == "D-Cache") {
+        assert_eq!(
+            p.lookups_per_eval, 1.0,
+            "scalar fallback cannot aggregate (cap={})",
+            p.wave_cap
+        );
+    }
+}
