@@ -1,0 +1,57 @@
+//! Host wall-clock throughput of the XAM functional search engines
+//! (`monarch xamsearch`): the forced-scalar per-column loop vs the
+//! bit-sliced plane engine, single-search and 64-key waves, on the
+//! paper's 64x512 set geometry. This is the repo's first HOST-perf
+//! trajectory point (`BENCH_xamsearch.json`): wall-clock, not modeled
+//! device cycles — modeled observables are engine-independent
+//! (pinned by `tests/device_differential.rs`).
+//!
+//! Acceptance gate: the bit-sliced engine must retire miss-heavy
+//! 512-column masked searches at >= 4x the scalar engine's host
+//! throughput (the common miss collapses to a handful of word-wide
+//! plane ops instead of 512 per-column popcount steps), and the
+//! batched wave entry point must hold that margin too.
+
+use monarch::coordinator::{self, Budget};
+
+fn main() {
+    let budget = Budget::default().from_env();
+    let t0 = std::time::Instant::now();
+    let pts = coordinator::xamsearch_sweep(&budget);
+    coordinator::xamsearch_table(&pts).print();
+
+    let of = |engine: &str, wl: &str| {
+        pts.iter()
+            .find(|p| p.engine == engine && p.workload == wl)
+            .unwrap_or_else(|| panic!("missing cell {engine}/{wl}"))
+    };
+    for wl in ["miss", "masked-miss", "hit"] {
+        let s = of("scalar", wl);
+        let b = of("bitsliced", wl);
+        let w = of("bitsliced-wave", wl);
+        println!(
+            "  {wl}: scalar {:.2} -> bitsliced {:.2} ({:.1}x), \
+             wave {:.2} Msearch/s ({:.1}x)",
+            s.ops_per_sec / 1e6,
+            b.ops_per_sec / 1e6,
+            b.ops_per_sec / s.ops_per_sec,
+            w.ops_per_sec / 1e6,
+            w.ops_per_sec / s.ops_per_sec,
+        );
+    }
+
+    // the acceptance gate: >= 4x on the miss-heavy workloads, single
+    // and batched
+    for wl in ["miss", "masked-miss"] {
+        let s = of("scalar", wl).ops_per_sec;
+        for engine in ["bitsliced", "bitsliced-wave"] {
+            let e = of(engine, wl).ops_per_sec;
+            assert!(
+                e >= 4.0 * s,
+                "{engine} must beat scalar >= 4x on {wl}: \
+                 {e:.0} vs {s:.0} searches/s"
+            );
+        }
+    }
+    println!("wall time: {:?}", t0.elapsed());
+}

@@ -848,6 +848,162 @@ pub fn shard_table(points: &[ShardSweepPoint]) -> Table {
     t
 }
 
+/// One measured cell of the `monarch xamsearch` sweep — the repo's
+/// first HOST-perf trajectory point: wall-clock throughput of the
+/// functional XAM search engines, not modeled device cycles.
+#[derive(Clone, Debug)]
+pub struct XamSearchPoint {
+    /// `"scalar"` (forced per-column), `"bitsliced"` (plane engine),
+    /// or `"bitsliced-wave"` (batched 64-key plane sweeps).
+    pub engine: String,
+    /// `"miss"` (random keys, full mask), `"masked-miss"` (random
+    /// keys, 32-bit mask) or `"hit"` (stored keys, full mask).
+    pub workload: String,
+    /// Searches retired in this cell.
+    pub searches: u64,
+    /// Host wall-clock the cell ran for (ms).
+    pub host_wall_ms: f64,
+    pub ops_per_sec: f64,
+}
+
+/// Run one timed cell: repeat `body` (one chunk of `chunk` searches,
+/// returning a fold of its results so the optimizer cannot delete the
+/// work) until `min_wall_ms` elapses.
+fn xamsearch_cell(
+    min_wall_ms: f64,
+    chunk: u64,
+    mut body: impl FnMut() -> u64,
+) -> (u64, f64) {
+    let start = std::time::Instant::now();
+    let mut searches = 0u64;
+    let mut sink = 0u64;
+    loop {
+        sink = sink.wrapping_add(body());
+        searches += chunk;
+        let ms = start.elapsed().as_secs_f64() * 1e3;
+        if ms >= min_wall_ms {
+            std::hint::black_box(sink);
+            return (searches, ms);
+        }
+    }
+}
+
+/// Host wall-clock throughput of the XAM functional search engines on
+/// the paper's 64x512 set geometry: forced-scalar per-column vs the
+/// bit-sliced plane engine, single-search and batched (64-key waves
+/// through `search_many_bitsliced` against one array). Each cell runs
+/// for a fixed minimum wall time, so ops/sec stays stable at smoke
+/// budgets too. Feeds the `xam_search` bench, the `monarch xamsearch`
+/// CLI row set and the `BENCH_xamsearch.json` trajectory.
+pub fn xamsearch_sweep(budget: &Budget) -> Vec<XamSearchPoint> {
+    use crate::util::rng::Rng;
+    use crate::xam::{SearchScratch, XamArray};
+
+    let mut rng = Rng::new(budget.seed);
+    let mut bits = XamArray::new(64, 512);
+    for c in 0..512 {
+        bits.write_col(c, rng.next_u64() | 1);
+    }
+    let mut scalar = bits.clone();
+    scalar.force_scalar(true);
+    const N_KEYS: usize = 512;
+    let miss: Vec<u64> = (0..N_KEYS).map(|_| rng.next_u64()).collect();
+    let hit: Vec<u64> = (0..N_KEYS)
+        .map(|_| bits.read_col(rng.usize_below(512)))
+        .collect();
+    // smoke budgets keep cells short; full runs long enough to be
+    // timer-noise free
+    let min_wall_ms = if budget.hash_ops <= Budget::quick().hash_ops {
+        4.0
+    } else {
+        40.0
+    };
+    let point = |engine: &str, wl: &str, searches: u64, ms: f64| {
+        XamSearchPoint {
+            engine: engine.to_string(),
+            workload: wl.to_string(),
+            searches,
+            host_wall_ms: ms,
+            ops_per_sec: searches as f64 / (ms / 1e3).max(1e-9),
+        }
+    };
+    let fold = |o: Option<usize>| o.map_or(0u64, |c| c as u64 + 1);
+    let mut points = Vec::new();
+    let mut scratch = SearchScratch::new();
+    let mut wave_out: Vec<Option<usize>> = Vec::new();
+    for (wl, keys, mask) in [
+        ("miss", &miss, !0u64),
+        ("masked-miss", &miss, 0xFFFF_FFFFu64),
+        ("hit", &hit, !0u64),
+    ] {
+        let masks = vec![mask; keys.len()];
+        let (n, ms) = xamsearch_cell(min_wall_ms, keys.len() as u64, || {
+            let mut s = 0u64;
+            for &k in keys {
+                s = s.wrapping_add(fold(scalar.search_first(k, mask)));
+            }
+            s
+        });
+        points.push(point("scalar", wl, n, ms));
+        let (n, ms) = xamsearch_cell(min_wall_ms, keys.len() as u64, || {
+            let mut s = 0u64;
+            for &k in keys {
+                s = s.wrapping_add(fold(bits.search_first(k, mask)));
+            }
+            s
+        });
+        points.push(point("bitsliced", wl, n, ms));
+        let (n, ms) = xamsearch_cell(min_wall_ms, keys.len() as u64, || {
+            let mut s = 0u64;
+            for (kc, mc) in keys.chunks(64).zip(masks.chunks(64)) {
+                wave_out.clear();
+                bits.search_many_bitsliced(
+                    kc,
+                    mc,
+                    &mut scratch,
+                    &mut wave_out,
+                );
+                for &o in &wave_out {
+                    s = s.wrapping_add(fold(o));
+                }
+            }
+            s
+        });
+        points.push(point("bitsliced-wave", wl, n, ms));
+    }
+    points
+}
+
+pub fn xamsearch_table(points: &[XamSearchPoint]) -> Table {
+    let mut t = Table::new(
+        "XAM search engines — host wall-clock throughput (64x512 sets)",
+    )
+    .header(vec![
+        "engine",
+        "workload",
+        "searches",
+        "wall ms",
+        "Msearch/s",
+        "vs scalar",
+    ]);
+    for p in points {
+        let base = points
+            .iter()
+            .find(|q| q.engine == "scalar" && q.workload == p.workload);
+        let vs =
+            base.map_or(1.0, |b| p.ops_per_sec / b.ops_per_sec.max(1e-9));
+        t.row(vec![
+            p.engine.clone(),
+            p.workload.clone(),
+            p.searches.to_string(),
+            format!("{:.1}", p.host_wall_ms),
+            format!("{:.2}", p.ops_per_sec / 1e6),
+            format!("{vs:.2}x"),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

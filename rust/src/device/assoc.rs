@@ -214,6 +214,13 @@ pub trait AssocDevice {
     /// batched functional path ignore it.
     fn attach_engine(&mut self, _engine: Rc<SearchEngine>) {}
 
+    /// Force the scalar per-column functional search engine (`false`
+    /// restores the default bit-sliced engine). A pure host-speed
+    /// toggle — every modeled observable is bit-identical either way
+    /// (pinned by `tests/device_differential.rs`). Backends without
+    /// XAM arrays ignore it.
+    fn force_scalar_eval(&mut self, _on: bool) {}
+
     /// Downcast to the flat-mode controller (tests / diagnostics).
     fn monarch_flat(&self) -> Option<&MonarchFlat> {
         None
@@ -616,6 +623,10 @@ impl AssocDevice for MonarchAssoc {
 
     fn attach_engine(&mut self, engine: Rc<SearchEngine>) {
         self.engine = Some(engine);
+    }
+
+    fn force_scalar_eval(&mut self, on: bool) {
+        self.flat.force_scalar_eval(on);
     }
 
     fn monarch_flat(&self) -> Option<&MonarchFlat> {

@@ -97,6 +97,12 @@ pub trait CacheDevice: Send {
         None
     }
 
+    /// Force the scalar per-column functional search engine (`false`
+    /// restores the default bit-sliced engine). Host-speed toggle
+    /// only: modeled results are bit-identical either way (pinned by
+    /// `tests/device_differential.rs`). Non-XAM devices ignore it.
+    fn force_scalar_eval(&mut self, _on: bool) {}
+
     /// Downcast to the Monarch cache controller (lifetime estimation
     /// and wear diagnostics need its snapshot APIs).
     fn monarch(&self) -> Option<&MonarchCache> {
@@ -183,6 +189,10 @@ impl CacheDevice for MonarchCache {
 
     fn rotations(&self) -> u64 {
         MonarchCache::rotations(self)
+    }
+
+    fn force_scalar_eval(&mut self, on: bool) {
+        MonarchCache::force_scalar_eval(self, on);
     }
 
     fn counters(&self) -> Option<&Counters> {

@@ -560,6 +560,12 @@ impl AssocDevice for ShardedAssoc {
         self.engine = Some(engine);
     }
 
+    fn force_scalar_eval(&mut self, on: bool) {
+        for flat in self.shards.iter_mut() {
+            flat.force_scalar_eval(on);
+        }
+    }
+
     fn monarch_flat(&self) -> Option<&MonarchFlat> {
         // only meaningful when the device is a single controller;
         // per-shard state is exposed via `shard_flat`

@@ -9,6 +9,7 @@
 //! monarch shards               shard-count throughput sweep
 //! monarch reconfig             static vs spill-only vs adaptive
 //! monarch cachewave            wave-width sweep of the cache-mode pipeline
+//! monarch xamsearch            host throughput of the XAM search engines
 //! monarch table1               technology comparison
 //! monarch selfcheck            load artifacts, kernel-vs-rust check
 //! ```
@@ -278,6 +279,43 @@ fn main() -> Result<()> {
                 .collect();
             payload = Some(json::experiment("cachewave", jrows));
         }
+        "xamsearch" => {
+            // host wall-clock of the functional search engines: the
+            // forced-scalar per-column loop vs the bit-sliced plane
+            // engine, single-search and 64-key waves
+            let pts = coordinator::xamsearch_sweep(&budget);
+            coordinator::xamsearch_table(&pts).print();
+            let of = |engine: &str, wl: &str| {
+                pts.iter()
+                    .find(|p| p.engine == engine && p.workload == wl)
+                    .map(|p| p.ops_per_sec)
+            };
+            for wl in ["miss", "masked-miss", "hit"] {
+                if let (Some(s), Some(b), Some(w)) = (
+                    of("scalar", wl),
+                    of("bitsliced", wl),
+                    of("bitsliced-wave", wl),
+                ) {
+                    println!(
+                        "  {wl}: bitsliced {:.2}x, wave {:.2}x vs scalar",
+                        b / s.max(1e-9),
+                        w / s.max(1e-9)
+                    );
+                }
+            }
+            let jrows = pts
+                .iter()
+                .map(|p| {
+                    Json::obj()
+                        .set("engine", p.engine.clone())
+                        .set("workload", p.workload.clone())
+                        .set("searches", p.searches)
+                        .set("host_wall_ms", p.host_wall_ms)
+                        .set("ops_per_sec", p.ops_per_sec)
+                })
+                .collect();
+            payload = Some(json::experiment("xamsearch", jrows));
+        }
         "reconfig" => {
             let pts = coordinator::reconfig_sweep_with(
                 &builder_factory(args.flag("pjrt")),
@@ -376,9 +414,9 @@ fn main() -> Result<()> {
             }
             println!(
                 "usage: monarch <table1|fig9|fig10|fig11|fig12|fig13|fig14|\
-                 stringmatch|shards|reconfig|cachewave|selfcheck> [--quick] \
-                 [--scale S] [--trace-ops N] [--hash-ops N] [--threads N] \
-                 [--seed N] [--pjrt] [--json PATH]"
+                 stringmatch|shards|reconfig|cachewave|xamsearch|selfcheck> \
+                 [--quick] [--scale S] [--trace-ops N] [--hash-ops N] \
+                 [--threads N] [--seed N] [--pjrt] [--json PATH]"
             );
         }
     }

@@ -72,6 +72,16 @@ struct CacheVault {
     last_keymask: Option<(usize, u64)>,
 }
 
+/// Reused wave buffers for [`MonarchCache::lookup_many`]: the mapped
+/// addresses, bank-group index and pre-resolved ways of a wave live
+/// here across waves instead of being reallocated per call.
+#[derive(Clone, Debug, Default)]
+struct WaveScratch {
+    mapped: Vec<(usize, usize, u64)>,
+    pre_ways: Vec<Option<usize>>,
+    groups: std::collections::HashMap<(usize, usize), Vec<usize>>,
+}
+
 /// The Monarch in-package cache controller.
 #[derive(Clone, Debug)]
 pub struct MonarchCache {
@@ -82,6 +92,7 @@ pub struct MonarchCache {
     ways: usize,
     /// `None` disables t_MWW and wear leveling (M-Unbound).
     bounded: bool,
+    wave_scratch: WaveScratch,
     pub stats: Counters,
     pub hit_lat: Log2Hist,
     pub energy_nj: f64,
@@ -148,10 +159,23 @@ impl MonarchCache {
             sets_per_vault,
             ways,
             bounded,
+            wave_scratch: WaveScratch::default(),
             stats: Counters::new(),
             hit_lat: Log2Hist::new(),
             energy_nj: 0.0,
             label,
+        }
+    }
+
+    /// Force the scalar per-column engine on every tag array (`false`
+    /// restores the default bit-sliced engine). The tag-map
+    /// accelerator stays authoritative either way; the XAM ground
+    /// truth it is debug-asserted against switches engine.
+    pub fn force_scalar_eval(&mut self, on: bool) {
+        for v in self.vaults.iter_mut() {
+            for a in v.tags.iter_mut() {
+                a.force_scalar(on);
+            }
         }
     }
 
@@ -233,7 +257,9 @@ impl MonarchCache {
             way,
             v.tag_maps[array][set % 2].get(&(tag as u32)).map(|&c| c as usize)
         );
+        // ground truth both ways: bit-sliced planes and scalar columns
         debug_assert_eq!(way, v.tags[array].search_first(key, mask));
+        debug_assert_eq!(way, v.tags[array].search_first_scalar(key, mask));
         (way, done)
     }
 
@@ -329,31 +355,35 @@ impl MonarchCache {
             return reqs.iter().map(|r| self.lookup(r)).collect();
         }
         // functional pre-pass: group the wave by bank group and
-        // resolve every member's way in one pass over that group
-        let mapped: Vec<(usize, usize, u64)> =
-            reqs.iter().map(|r| self.map(r.addr)).collect();
-        let mut groups: std::collections::HashMap<(usize, usize), Vec<usize>> =
-            std::collections::HashMap::new();
-        for (i, &(vault, set, _)) in mapped.iter().enumerate() {
-            groups.entry((vault, set / 2)).or_default().push(i);
+        // resolve every member's way in one pass over that group.
+        // The scratch buffers persist across waves (no per-wave
+        // allocation on the steady-state path).
+        let mut ws = std::mem::take(&mut self.wave_scratch);
+        ws.mapped.clear();
+        ws.mapped.extend(reqs.iter().map(|r| self.map(r.addr)));
+        ws.groups.clear();
+        for (i, &(vault, set, _)) in ws.mapped.iter().enumerate() {
+            ws.groups.entry((vault, set / 2)).or_default().push(i);
         }
-        let mut pre_ways: Vec<Option<usize>> = vec![None; reqs.len()];
-        for (&(vault, array), members) in &groups {
+        ws.pre_ways.clear();
+        ws.pre_ways.resize(reqs.len(), None);
+        for (&(vault, array), members) in &ws.groups {
             let v = &self.vaults[vault];
             for &i in members {
-                let (_, set, tag) = mapped[i];
-                pre_ways[i] = v.tag_maps[array][set % 2]
+                let (_, set, tag) = ws.mapped[i];
+                ws.pre_ways[i] = v.tag_maps[array][set % 2]
                     .get(&(tag as u32))
                     .map(|&c| c as usize);
             }
             // ground truth in debug builds: the same group resolved by
-            // one batched pass over the group's XAM array
+            // one batched bit-sliced pass over the group's XAM array,
+            // AND by the forced-scalar per-column engine
             #[cfg(debug_assertions)]
             {
                 let keys_masks: Vec<(u64, u64)> = members
                     .iter()
                     .map(|&i| {
-                        let (_, set, tag) = mapped[i];
+                        let (_, set, tag) = ws.mapped[i];
                         Self::search_key_mask(set, tag)
                     })
                     .collect();
@@ -367,30 +397,37 @@ impl MonarchCache {
                     &arrays, &keys, &masks,
                 );
                 for (j, &i) in members.iter().enumerate() {
-                    debug_assert_eq!(pre_ways[i], got[j]);
+                    debug_assert_eq!(ws.pre_ways[i], got[j]);
+                    debug_assert_eq!(
+                        ws.pre_ways[i],
+                        v.tags[array].search_first_scalar(keys[j], masks[j])
+                    );
                 }
             }
         }
         self.stats.add("wave_ops", reqs.len() as u64);
-        self.stats.add("wave_evals", groups.len() as u64);
+        self.stats.add("wave_evals", ws.groups.len() as u64);
         // controller pass, per op in submission order; a wear rotation
         // mid-wave flushes its vault's tags, so later wave members of
         // that vault re-evaluate on the spot instead of using a stale
         // pre-pass way
         let rot: Vec<u64> =
             self.vaults.iter().map(|v| v.wear.rotations()).collect();
-        reqs.iter()
+        let out = reqs
+            .iter()
             .enumerate()
             .map(|(i, r)| {
-                let vault = mapped[i].0;
+                let vault = ws.mapped[i].0;
                 let fresh = self.vaults[vault].wear.rotations() == rot[vault];
-                let pre = fresh.then_some(pre_ways[i]);
+                let pre = fresh.then_some(ws.pre_ways[i]);
                 if pre.is_none() {
                     self.stats.inc("wave_reevals");
                 }
                 self.lookup_with(r, pre)
             })
-            .collect()
+            .collect();
+        self.wave_scratch = ws;
+        out
     }
 
     /// Handle an L3 eviction per the D/R rules. Returns the cycle the
@@ -451,6 +488,10 @@ impl MonarchCache {
             existing,
             self.vaults[vault].tags[array].search_first(key, mask)
         );
+        debug_assert_eq!(
+            existing,
+            self.vaults[vault].tags[array].search_first_scalar(key, mask)
+        );
         if let Some(col) = existing {
             if !dirty {
                 self.stats.inc("install_dedup");
@@ -492,6 +533,10 @@ impl MonarchCache {
         let valid_mask = VALID_BIT << (32 * half);
         let col = v.valid_bits[array][set % 2].first_zero(); // first invalid
         debug_assert_eq!(col, v.tags[array].search_first(0, valid_mask));
+        debug_assert_eq!(
+            col,
+            v.tags[array].search_first_scalar(0, valid_mask)
+        );
         let (col, victim) = match col {
             Some(c) => (c, None),
             None => {

@@ -103,6 +103,10 @@ pub struct MonarchFlat {
     match_reg: Option<(u64, usize, Option<usize>)>,
     wear: WearLeveler,
     bounded: bool,
+    /// Functional-evaluation engine selector: `true` forces the scalar
+    /// per-column search on every set (differential pinning); sets
+    /// created later (repartition grows) inherit it.
+    scalar_engine: bool,
     pub stats: Counters,
     pub energy_nj: f64,
 }
@@ -137,8 +141,20 @@ impl MonarchFlat {
             match_reg: None,
             wear: WearLeveler::new(wear_cfg, supersets, window_cycles),
             bounded,
+            scalar_engine: false,
             stats: Counters::new(),
             energy_nj: 0.0,
+        }
+    }
+
+    /// Force the scalar per-column functional search engine on every
+    /// CAM set (`false` restores the default bit-sliced engine). Pure
+    /// evaluation-speed toggle: results, timing, energy and stats are
+    /// bit-identical either way (pinned by the differential suite).
+    pub fn force_scalar_eval(&mut self, on: bool) {
+        self.scalar_engine = on;
+        for s in self.sets.iter_mut() {
+            s.force_scalar(on);
         }
     }
 
@@ -610,8 +626,12 @@ impl MonarchFlat {
             migrated_blocks = blocks;
             let (rows, cols) =
                 (self.geom.rows_per_set, self.geom.cols_per_set);
-            self.sets
-                .resize_with(target_sets, || XamArray::new(rows, cols));
+            let scalar = self.scalar_engine;
+            self.sets.resize_with(target_sets, || {
+                let mut a = XamArray::new(rows, cols);
+                a.force_scalar(scalar);
+                a
+            });
         }
         let supersets = target_sets
             .div_ceil(self.geom.sets_per_superset)

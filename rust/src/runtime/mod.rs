@@ -19,7 +19,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::util::error::Result;
-use crate::xam::XamArray;
+use crate::xam::{SearchScratch, XamArray};
 
 /// Result of one batched search.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -62,10 +62,41 @@ fn fallback_impl(
     keys: &[u64],
     masks: &[u64],
 ) -> Vec<Option<usize>> {
-    sets.iter()
-        .zip(keys.iter().zip(masks))
-        .map(|(s, (&k, &m))| s.search_first(k, m))
-        .collect()
+    // Runs of the SAME array (cache-mode bank groups evaluate a whole
+    // wave against one tag array; stringmatch waves revisit sets) go
+    // through the batched bit-sliced sweep — one plane load serves the
+    // whole run. Distinct arrays fall through to the single-key
+    // engine inside the same call. The per-thread scratch keeps the
+    // whole fallback allocation-free beyond the returned Vec.
+    thread_local! {
+        static SCRATCH: std::cell::RefCell<SearchScratch> =
+            std::cell::RefCell::new(SearchScratch::new());
+    }
+    SCRATCH.with(|cell| {
+        let mut scratch = cell.borrow_mut();
+        let mut out = Vec::with_capacity(sets.len());
+        let mut i = 0;
+        while i < sets.len() {
+            let mut j = i + 1;
+            while j < sets.len() && std::ptr::eq(sets[j], sets[i]) {
+                j += 1;
+            }
+            if j - i == 1 {
+                // lone key: the single-search engine keeps its
+                // rarest-plane-first ordering
+                out.push(sets[i].search_first(keys[i], masks[i]));
+            } else {
+                sets[i].search_many_bitsliced(
+                    &keys[i..j],
+                    &masks[i..j],
+                    &mut scratch,
+                    &mut out,
+                );
+            }
+            i = j;
+        }
+        out
+    })
 }
 
 // ---- feature-independent surface -----------------------------------

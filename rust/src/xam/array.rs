@@ -3,9 +3,19 @@
 //!
 //! Functional model: cell states are stored bit-packed, one `u64` word
 //! per column (a set is 64 rows x 512 columns: 8 diagonal 64x64
-//! subarrays, Table 3). The rust fast-path search is the same masked
-//! XNOR the Pallas kernel performs; both are differential-tested
-//! against each other through the AOT artifacts.
+//! subarrays, Table 3), **plus** a bit-sliced mirror: one bit-plane
+//! per row, `cols` bits wide, kept coherent incrementally by the write
+//! paths. A masked search is then evaluated the way the paper's CAM
+//! senses it — all columns in parallel (§4.2.2): an all-ones
+//! accumulator is AND-ed with `plane XNOR key-bit` for each unmasked
+//! row, word-parallel across 64 columns at a time, with early exit
+//! the moment the accumulator goes all-zero (the common miss case
+//! collapses to a handful of plane ops) and rarest-plane-first
+//! ordering as a cheap selectivity heuristic. The scalar per-column
+//! engine survives as [`XamArray::search_first_scalar`] and behind
+//! [`XamArray::force_scalar`]; differential tests pin the two engines
+//! bit-identical, and the Pallas kernel is differential-tested against
+//! both through the AOT artifacts.
 //!
 //! Wear model: the lifetime machinery (§8, §10.3) consumes *snapshots
 //! of per-row and per-column write counts* — exactly what the paper
@@ -14,8 +24,14 @@
 use crate::config::tech::{DeviceParams, RRAM_DEVICE};
 use crate::util::bitvec::BitVec;
 
-/// Outcome of a search: per-column match plus the mismatching-bit
-/// count (the analog pull-down strength) for sense-margin accounting.
+/// Column-chunk width of the stack-allocated search accumulator
+/// (8 words = the 512-column paper geometry in one chunk).
+const ACC_WORDS: usize = 8;
+
+/// Outcome of a search: per-column match flags plus the match pointer.
+/// The per-column mismatch popcounts (sense-margin input) moved to
+/// [`XamArray::search_with_margin`] so the default search stays
+/// popcount-free.
 #[derive(Clone, Debug)]
 pub struct SearchOutcome {
     pub match_vec: BitVec,
@@ -23,9 +39,33 @@ pub struct SearchOutcome {
     pub first_match: Option<usize>,
     /// Number of matching columns.
     pub matches: usize,
-    /// Worst-case (smallest nonzero) mismatch bit count over columns —
-    /// determines the minimum sense margin of this search.
-    pub min_nonzero_mismatch: Option<u32>,
+}
+
+/// Reusable buffers for allocation-free searches: batched callers hold
+/// one scratch across a whole wave of [`XamArray::search_into`] /
+/// [`XamArray::search_many_bitsliced`] calls instead of allocating a
+/// fresh `BitVec` per search.
+#[derive(Clone, Debug, Default)]
+pub struct SearchScratch {
+    /// Per-column match flags of the last `search_into`, packed 64
+    /// columns per word (`cols.div_ceil(64)` valid words).
+    match_words: Vec<u64>,
+    /// Per-key accumulators of `search_many_bitsliced`.
+    accs: Vec<u64>,
+    /// Per-key liveness of `search_many_bitsliced` (early exit).
+    alive: Vec<bool>,
+}
+
+impl SearchScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Match flags of the last [`XamArray::search_into`], packed 64
+    /// columns per word.
+    pub fn match_words(&self) -> &[u64] {
+        &self.match_words
+    }
 }
 
 /// A single XAM set: `rows` x `cols` differential 2R cells.
@@ -35,11 +75,21 @@ pub struct XamArray {
     cols: usize,
     /// Column-major packed bits: word `j` holds column j, bit i = row i.
     data: Vec<u64>,
+    /// Row bit-planes (the bit-sliced mirror): bit `64*w + b` of plane
+    /// `r` — stored at `planes[r * plane_words + w]` — is cell
+    /// (r, 64*w + b). Bits at or above `cols` are always zero.
+    planes: Vec<u64>,
+    /// Per-plane population count (rarest-plane-first ordering input).
+    plane_ones: Vec<u32>,
     /// Write events per row (row-wise writes touch one row).
     row_writes: Vec<u64>,
     /// Write events per column (column-wise writes touch one column).
     col_writes: Vec<u64>,
     device: DeviceParams,
+    /// Evaluate searches with the scalar per-column engine instead of
+    /// the bit-sliced planes (differential tests and benches pin the
+    /// two engines identical through this).
+    scalar_engine: bool,
 }
 
 impl XamArray {
@@ -52,9 +102,12 @@ impl XamArray {
             rows,
             cols,
             data: vec![0; cols],
+            planes: vec![0; rows * cols.div_ceil(64)],
+            plane_ones: vec![0; rows],
             row_writes: vec![0; rows],
             col_writes: vec![0; cols],
             device: RRAM_DEVICE,
+            scalar_engine: false,
         }
     }
 
@@ -77,13 +130,52 @@ impl XamArray {
         }
     }
 
+    #[inline]
+    fn plane_words(&self) -> usize {
+        self.cols.div_ceil(64)
+    }
+
+    /// All-ones mask of the valid columns in the last plane word.
+    #[inline]
+    fn tail_mask(&self) -> u64 {
+        match self.cols % 64 {
+            0 => !0u64,
+            t => (1u64 << t) - 1,
+        }
+    }
+
+    /// Select the evaluation engine: `true` forces the scalar
+    /// per-column path, `false` (the default) the bit-sliced planes.
+    /// Both engines are bit-identical in every observable — pinned by
+    /// the property and device-differential suites.
+    pub fn force_scalar(&mut self, on: bool) {
+        self.scalar_engine = on;
+    }
+
     /// Column-wise write (§4.1.2, ColumnIn mode): store a full word
     /// into one column. The two-step 0s-then-1s programming is one
     /// write event for wear purposes (both steps address the same
-    /// cells once).
+    /// cells once). The bit-planes absorb only the bits that actually
+    /// flipped.
     pub fn write_col(&mut self, col: usize, word: u64) {
         debug_assert!(col < self.cols);
-        self.data[col] = word & self.row_mask();
+        let word = word & self.row_mask();
+        let old = self.data[col];
+        self.data[col] = word;
+        let pwords = self.plane_words();
+        let (pw, pb) = (col / 64, col % 64);
+        let mut diff = old ^ word;
+        while diff != 0 {
+            let r = diff.trailing_zeros() as usize;
+            diff &= diff - 1;
+            if (word >> r) & 1 == 1 {
+                self.planes[r * pwords + pw] |= 1u64 << pb;
+                self.plane_ones[r] += 1;
+            } else {
+                self.planes[r * pwords + pw] &= !(1u64 << pb);
+                self.plane_ones[r] -= 1;
+            }
+        }
         self.col_writes[col] += 1;
     }
 
@@ -100,18 +192,31 @@ impl XamArray {
                 *d &= !m;
             }
         }
+        // the touched columns all live in the plane's first word
+        if width > 0 {
+            let wmask =
+                if width == 64 { !0u64 } else { (1u64 << width) - 1 };
+            let pw = &mut self.planes[row * self.cols.div_ceil(64)];
+            let old = *pw;
+            *pw = (old & !wmask) | (bits & wmask);
+            self.plane_ones[row] = self.plane_ones[row]
+                - (old & wmask).count_ones()
+                + (bits & wmask).count_ones();
+        }
         self.row_writes[row] += 1;
     }
 
     /// Row read (§4.2.1): bit `j` of the result is row `row` of column
-    /// `j` (first 64 columns, or fewer).
+    /// `j` (first 64 columns, or fewer) — exactly the plane's first
+    /// word.
     pub fn read_row(&self, row: usize) -> u64 {
         debug_assert!(row < self.rows);
-        let mut out = 0u64;
-        for (j, &d) in self.data.iter().take(64).enumerate() {
-            out |= ((d >> row) & 1) << j;
+        if self.cols == 0 {
+            return 0;
         }
-        out
+        let take = self.cols.min(64);
+        let m = if take == 64 { !0u64 } else { (1u64 << take) - 1 };
+        self.planes[row * self.plane_words()] & m
     }
 
     /// Column read: the stored word of column `col`.
@@ -121,36 +226,172 @@ impl XamArray {
         self.data[col]
     }
 
+    /// Rarest-plane-first ordering of the unmasked rows: rows are
+    /// bucketed by how many columns their comparison would leave alive
+    /// (the selected polarity's population count), most selective
+    /// bucket first — one O(rows) pass, no sort. `None` means some row
+    /// eliminates every column outright: an instant miss, no plane
+    /// touched.
+    fn plane_order(&self, key: u64, mask: u64) -> Option<([u8; 64], usize)> {
+        let cols = self.cols as u32;
+        let mut buckets = [[0u8; 64]; 3];
+        let mut lens = [0usize; 3];
+        let mut m = mask;
+        while m != 0 {
+            let r = m.trailing_zeros() as usize;
+            m &= m - 1;
+            let est = if (key >> r) & 1 == 1 {
+                self.plane_ones[r]
+            } else {
+                cols - self.plane_ones[r]
+            };
+            if est == 0 {
+                return None;
+            }
+            let b =
+                usize::from(est > cols / 8) + usize::from(est > cols / 2);
+            buckets[b][lens[b]] = r as u8;
+            lens[b] += 1;
+        }
+        let mut order = [0u8; 64];
+        let mut n = 0usize;
+        for (bucket, &len) in buckets.iter().zip(&lens) {
+            order[n..n + len].copy_from_slice(&bucket[..len]);
+            n += len;
+        }
+        Some((order, n))
+    }
+
+    /// Bit-sliced first match: word-parallel plane reduction over
+    /// 512-column chunks with early exit.
+    fn bitsliced_first(&self, key: u64, mask: u64) -> Option<usize> {
+        if mask == 0 {
+            // nothing compared: every column matches
+            return (self.cols > 0).then_some(0);
+        }
+        let (order, n) = self.plane_order(key, mask)?;
+        let pwords = self.plane_words();
+        let tail = self.tail_mask();
+        let mut start = 0usize;
+        while start < pwords {
+            let cw = (pwords - start).min(ACC_WORDS);
+            let mut acc = [!0u64; ACC_WORDS];
+            if start + cw == pwords {
+                acc[cw - 1] &= tail;
+            }
+            let mut live = true;
+            for &r in &order[..n] {
+                let r = r as usize;
+                let keep = (key >> r) & 1 == 1;
+                let base = r * pwords + start;
+                let mut any = 0u64;
+                for (a, &p) in
+                    acc[..cw].iter_mut().zip(&self.planes[base..base + cw])
+                {
+                    let v = if keep { *a & p } else { *a & !p };
+                    *a = v;
+                    any |= v;
+                }
+                if any == 0 {
+                    live = false;
+                    break;
+                }
+            }
+            if live {
+                for (w, &v) in acc[..cw].iter().enumerate() {
+                    if v != 0 {
+                        return Some(
+                            (start + w) * 64 + v.trailing_zeros() as usize,
+                        );
+                    }
+                }
+            }
+            start += cw;
+        }
+        None
+    }
+
     /// Parallel masked search (§4.2.2): column j matches iff all
     /// unmasked key bits equal the stored bits. Reads do not wear.
     pub fn search(&self, key: u64, mask: u64) -> SearchOutcome {
+        let mut scratch = SearchScratch::new();
+        let (first_match, matches) = self.search_into(key, mask, &mut scratch);
+        let mut match_vec = BitVec::zeros(self.cols);
+        match_vec.words_mut().copy_from_slice(&scratch.match_words);
+        SearchOutcome { match_vec, first_match, matches }
+    }
+
+    /// Allocation-free full search: the per-column match flags land in
+    /// `scratch` (reusable across ops); returns (first match, match
+    /// count).
+    pub fn search_into(
+        &self,
+        key: u64,
+        mask: u64,
+        scratch: &mut SearchScratch,
+    ) -> (Option<usize>, usize) {
         let mask = mask & self.row_mask();
         let key = key & self.row_mask();
-        let mut match_vec = BitVec::zeros(self.cols);
-        let mut matches = 0usize;
-        let mut first = None;
-        let mut min_mism: Option<u32> = None;
-        for (j, &d) in self.data.iter().enumerate() {
-            let mism = ((d ^ key) & mask).count_ones();
-            if mism == 0 {
-                match_vec.set(j, true);
-                matches += 1;
-                if first.is_none() {
-                    first = Some(j);
+        let pwords = self.plane_words();
+        scratch.match_words.clear();
+        scratch.match_words.resize(pwords, 0);
+        if self.scalar_engine {
+            let mut first = None;
+            let mut matches = 0usize;
+            for (j, &d) in self.data.iter().enumerate() {
+                if (d ^ key) & mask == 0 {
+                    scratch.match_words[j / 64] |= 1u64 << (j % 64);
+                    matches += 1;
+                    if first.is_none() {
+                        first = Some(j);
+                    }
                 }
-            } else {
-                min_mism = Some(match min_mism {
-                    Some(m) => m.min(mism),
-                    None => mism,
-                });
+            }
+            return (first, matches);
+        }
+        if pwords == 0 {
+            return (None, 0);
+        }
+        // bit-sliced: reduce directly in the scratch words
+        for w in scratch.match_words.iter_mut() {
+            *w = !0u64;
+        }
+        scratch.match_words[pwords - 1] &= self.tail_mask();
+        if mask != 0 {
+            let Some((order, n)) = self.plane_order(key, mask) else {
+                scratch.match_words.iter_mut().for_each(|w| *w = 0);
+                return (None, 0);
+            };
+            for &r in &order[..n] {
+                let r = r as usize;
+                let keep = (key >> r) & 1 == 1;
+                let base = r * pwords;
+                let mut any = 0u64;
+                for (a, &p) in scratch
+                    .match_words
+                    .iter_mut()
+                    .zip(&self.planes[base..base + pwords])
+                {
+                    let v = if keep { *a & p } else { *a & !p };
+                    *a = v;
+                    any |= v;
+                }
+                if any == 0 {
+                    return (None, 0);
+                }
             }
         }
-        SearchOutcome {
-            match_vec,
-            first_match: first,
-            matches,
-            min_nonzero_mismatch: min_mism,
+        let mut first = None;
+        let mut matches = 0usize;
+        for (w, &v) in scratch.match_words.iter().enumerate() {
+            if v != 0 {
+                if first.is_none() {
+                    first = Some(w * 64 + v.trailing_zeros() as usize);
+                }
+                matches += v.count_ones() as usize;
+            }
         }
+        (first, matches)
     }
 
     /// Fast-path search returning only the first match (hot loop of
@@ -159,14 +400,132 @@ impl XamArray {
     pub fn search_first(&self, key: u64, mask: u64) -> Option<usize> {
         let mask = mask & self.row_mask();
         let key = key & self.row_mask();
+        if self.scalar_engine {
+            return self.data.iter().position(|&d| (d ^ key) & mask == 0);
+        }
+        self.bitsliced_first(key, mask)
+    }
+
+    /// The scalar per-column reference engine, unconditionally: the
+    /// debug cross-checks and the `xam_search` bench compare the
+    /// bit-sliced engine against this.
+    pub fn search_first_scalar(&self, key: u64, mask: u64) -> Option<usize> {
+        let mask = mask & self.row_mask();
+        let key = key & self.row_mask();
         self.data.iter().position(|&d| (d ^ key) & mask == 0)
+    }
+
+    /// Batched bit-sliced evaluation: ONE plane sweep over this array
+    /// resolves a whole wave of (key, mask) pairs, loading each plane
+    /// once for the entire wave instead of once per key. Appends one
+    /// first-match per key to `out`; `scratch` is reused across calls.
+    /// Per-key early exit still applies (dead keys drop out of the
+    /// sweep); the rarest-first ordering does not — the sweep visits
+    /// planes in row order so all keys can share each load.
+    /// Forced-scalar arrays run the per-key scalar loop instead.
+    pub fn search_many_bitsliced(
+        &self,
+        keys: &[u64],
+        masks: &[u64],
+        scratch: &mut SearchScratch,
+        out: &mut Vec<Option<usize>>,
+    ) {
+        debug_assert_eq!(keys.len(), masks.len());
+        if self.scalar_engine {
+            for (&k, &m) in keys.iter().zip(masks) {
+                out.push(self.search_first_scalar(k, m));
+            }
+            return;
+        }
+        let pwords = self.plane_words();
+        if pwords == 0 {
+            out.extend(keys.iter().map(|_| None));
+            return;
+        }
+        let k = keys.len();
+        let row_mask = self.row_mask();
+        scratch.accs.clear();
+        scratch.accs.resize(k * pwords, !0u64);
+        scratch.alive.clear();
+        scratch.alive.resize(k, true);
+        let tail = self.tail_mask();
+        for i in 0..k {
+            scratch.accs[(i + 1) * pwords - 1] &= tail;
+            if masks[i] & row_mask == 0 {
+                // nothing compared: the all-ones accumulator stands
+                scratch.alive[i] = false;
+            }
+        }
+        let mut remaining =
+            scratch.alive.iter().filter(|&&a| a).count();
+        for r in 0..self.rows {
+            if remaining == 0 {
+                break;
+            }
+            let plane = &self.planes[r * pwords..(r + 1) * pwords];
+            for i in 0..k {
+                if !scratch.alive[i] || (masks[i] & row_mask) >> r & 1 == 0
+                {
+                    continue;
+                }
+                let keep = (keys[i] >> r) & 1 == 1;
+                let mut any = 0u64;
+                for (a, &p) in scratch.accs
+                    [i * pwords..(i + 1) * pwords]
+                    .iter_mut()
+                    .zip(plane)
+                {
+                    let v = if keep { *a & p } else { *a & !p };
+                    *a = v;
+                    any |= v;
+                }
+                if any == 0 {
+                    scratch.alive[i] = false;
+                    remaining -= 1;
+                }
+            }
+        }
+        for accs in scratch.accs.chunks(pwords) {
+            let mut first = None;
+            for (w, &v) in accs.iter().enumerate() {
+                if v != 0 {
+                    first = Some(w * 64 + v.trailing_zeros() as usize);
+                    break;
+                }
+            }
+            out.push(first);
+        }
+    }
+
+    /// Full search plus the smallest nonzero per-column mismatch count
+    /// — the analog pull-down strength that the sense-margin
+    /// validation consumes (§4.2.2). This popcounts every column, so
+    /// it lives off the hot path; the default [`XamArray::search`] is
+    /// popcount-free.
+    pub fn search_with_margin(
+        &self,
+        key: u64,
+        mask: u64,
+    ) -> (SearchOutcome, Option<u32>) {
+        let outcome = self.search(key, mask);
+        let mask = mask & self.row_mask();
+        let key = key & self.row_mask();
+        let mut min_mism: Option<u32> = None;
+        for &d in &self.data {
+            let mism = ((d ^ key) & mask).count_ones();
+            if mism != 0 {
+                min_mism = Some(min_mism.map_or(mism, |m| m.min(mism)));
+            }
+        }
+        (outcome, min_mism)
     }
 
     /// Analog sense margin (volts) of the worst column in a search —
     /// validates that even one mismatching bit separates from Ref_S.
-    pub fn sense_margin(&self, outcome: &SearchOutcome) -> f64 {
-        let worst_mism =
-            outcome.min_nonzero_mismatch.unwrap_or(self.rows as u32);
+    /// `min_nonzero_mismatch` comes from
+    /// [`XamArray::search_with_margin`].
+    pub fn sense_margin(&self, min_nonzero_mismatch: Option<u32>) -> f64 {
+        let worst_mism = min_nonzero_mismatch.unwrap_or(self.rows as u32);
         let m_match = self.device.search_margin(self.rows, 0);
         let m_miss =
             self.device.search_margin(self.rows, worst_mism as usize);
@@ -261,16 +620,136 @@ mod tests {
     }
 
     #[test]
-    fn search_miss_reports_min_mismatch() {
+    fn search_with_margin_reports_min_mismatch() {
         let mut a = XamArray::new(64, 4);
         a.write_col(0, 0b0001);
         a.write_col(1, 0b0011);
         a.write_col(2, 0b0111);
         a.write_col(3, 0b1111);
-        let o = a.search(0, !0u64);
+        let (o, min_mism) = a.search_with_margin(0, !0u64);
         assert_eq!(o.matches, 0);
-        assert_eq!(o.min_nonzero_mismatch, Some(1));
-        assert!(a.sense_margin(&o) > 0.0);
+        assert_eq!(min_mism, Some(1));
+        assert!(a.sense_margin(min_mism) > 0.0);
+        // with a hit present, only the missing columns contribute:
+        // key 0b0001 matches column 0; columns 1..3 mismatch in 1..3
+        // bits respectively
+        let (o2, m2) = a.search_with_margin(0b0001, !0u64);
+        assert_eq!(o2.first_match, Some(0));
+        assert_eq!(o2.matches, 1);
+        assert_eq!(m2, Some(1));
+        // an all-matching search has no nonzero mismatch: the margin
+        // defaults to the all-rows worst case
+        let (_, m3) = a.search_with_margin(0b0001, 0b0001);
+        assert_eq!(m3, None);
+        assert!(a.sense_margin(m3) > 0.0);
+    }
+
+    #[test]
+    fn bitsliced_engine_matches_forced_scalar() {
+        let mut a = XamArray::new(64, 512);
+        let mut rng = Rng::new(0xB17);
+        for j in 0..512 {
+            a.write_col(j, rng.next_u64());
+        }
+        let mut scalar = a.clone();
+        scalar.force_scalar(true);
+        for trial in 0..200 {
+            let key = if trial % 3 == 0 {
+                a.read_col(rng.usize_below(512))
+            } else {
+                rng.next_u64()
+            };
+            for mask in [!0u64, 0, 0xFF00, 0xFFFF_FFFF, rng.next_u64()] {
+                assert_eq!(
+                    a.search_first(key, mask),
+                    scalar.search_first(key, mask),
+                    "trial {trial} mask {mask:#x}"
+                );
+                let ob = a.search(key, mask);
+                let os = scalar.search(key, mask);
+                assert_eq!(ob.first_match, os.first_match);
+                assert_eq!(ob.matches, os.matches);
+                assert_eq!(ob.match_vec, os.match_vec);
+            }
+        }
+    }
+
+    #[test]
+    fn search_many_bitsliced_matches_per_key_scalar() {
+        let mut a = XamArray::new(64, 512);
+        let mut rng = Rng::new(0x3AFE);
+        for j in 0..512 {
+            a.write_col(j, rng.next_u64());
+        }
+        let keys: Vec<u64> = (0..48)
+            .map(|i| {
+                if i % 2 == 0 {
+                    a.read_col(rng.usize_below(512))
+                } else {
+                    rng.next_u64()
+                }
+            })
+            .collect();
+        let masks: Vec<u64> = (0..48)
+            .map(|i| match i % 4 {
+                0 => !0u64,
+                1 => 0xFFFFu64,
+                2 => 0,
+                _ => rng.next_u64(),
+            })
+            .collect();
+        let mut scratch = SearchScratch::new();
+        let mut out = Vec::new();
+        a.search_many_bitsliced(&keys, &masks, &mut scratch, &mut out);
+        assert_eq!(out.len(), keys.len());
+        for (i, got) in out.iter().enumerate() {
+            assert_eq!(
+                *got,
+                a.search_first_scalar(keys[i], masks[i]),
+                "wave member {i}"
+            );
+        }
+        // scratch reuse across a second, differently sized wave
+        let mut out2 = Vec::new();
+        a.search_many_bitsliced(
+            &keys[..7],
+            &masks[..7],
+            &mut scratch,
+            &mut out2,
+        );
+        assert_eq!(out2, out[..7].to_vec());
+    }
+
+    #[test]
+    fn planes_stay_coherent_under_mixed_writes() {
+        let mut a = XamArray::new(48, 130);
+        let mut rng = Rng::new(0xC0);
+        for _ in 0..500 {
+            if rng.usize_below(3) == 0 {
+                a.write_row(
+                    rng.usize_below(48),
+                    rng.next_u64(),
+                    1 + rng.usize_below(64),
+                );
+            } else {
+                a.write_col(rng.usize_below(130), rng.next_u64());
+            }
+        }
+        // read_row is plane-backed; cross-check against the columns
+        for r in 0..48 {
+            let mut want = 0u64;
+            for j in 0..64 {
+                want |= ((a.read_col(j) >> r) & 1) << j;
+            }
+            assert_eq!(a.read_row(r), want, "row {r}");
+        }
+        // and the engines agree after the churn
+        let mut scalar = a.clone();
+        scalar.force_scalar(true);
+        for _ in 0..64 {
+            let (k, m) = (rng.next_u64(), rng.next_u64());
+            assert_eq!(a.search_first(k, m), scalar.search_first(k, m));
+        }
     }
 
     #[test]

@@ -6,6 +6,6 @@ pub mod array;
 pub mod bank;
 pub mod superset;
 
-pub use array::{SearchOutcome, XamArray};
+pub use array::{SearchOutcome, SearchScratch, XamArray};
 pub use bank::{Bank, SenseMode};
 pub use superset::{PortMode, Superset};

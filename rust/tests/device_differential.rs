@@ -871,6 +871,138 @@ fn wave_pipeline_bit_identical_under_graph_workload_with_barriers() {
     }
 }
 
+// ---- bit-sliced XAM search engine -----------------------------------
+
+/// Every registered software-managed (flat-path) backend kind.
+fn all_assoc_kinds() -> Vec<InPackageKind> {
+    vec![
+        InPackageKind::DramCache,
+        InPackageKind::DramScratchpad,
+        InPackageKind::Sram,
+        InPackageKind::MonarchFlatRam,
+        InPackageKind::Monarch { m: 1 },
+        InPackageKind::Monarch { m: 3 },
+        InPackageKind::MonarchSharded { shards: 4, m: 3 },
+        InPackageKind::MonarchAdaptive { m: 3 },
+        InPackageKind::MonarchUnbound,
+    ]
+}
+
+#[test]
+fn bitsliced_engine_bit_identical_to_scalar_cache_mode() {
+    // The evaluation engine is a host-speed choice only: forcing the
+    // scalar per-column engine must leave every whole-run observable
+    // bit-identical to the default bit-sliced engine, for every
+    // registered cache-mode backend.
+    for kind in all_cache_kinds() {
+        let run = |scalar: bool| {
+            let cfg = SystemConfig::scaled(kind, 1.0 / 4096.0);
+            let mut sys = System::build(cfg);
+            sys.inpkg.force_scalar_eval(scalar);
+            let mut wl =
+                SyntheticStream::zipfian(4, 4000, 1 << 21, 0.9, 0.2, 55);
+            sys.run(&mut wl, u64::MAX)
+        };
+        let bitsliced = run(false);
+        let scalar = run(true);
+        assert_sim_reports_identical(
+            &bitsliced,
+            &scalar,
+            &format!("{kind:?} engine"),
+        );
+    }
+}
+
+#[test]
+fn bitsliced_engine_bit_identical_to_scalar_flat_path() {
+    let cfg = YcsbConfig {
+        table_pow2: 12,
+        window: 64, // windows cross set boundaries: spill searches too
+        ops: 3000,
+        read_pct: 0.9,
+        threads: 8,
+        ..Default::default()
+    };
+    let cam_sets = (1usize << cfg.table_pow2) / 512 + 1;
+    for kind in all_assoc_kinds() {
+        let run = |scalar: bool| {
+            let spec = AssocSpec {
+                kind,
+                capacity_bytes: 1 << 18,
+                geom: small_geom(),
+                cam_sets,
+            };
+            let mut dev = DeviceBuilder::new().build_assoc(&spec);
+            dev.force_scalar_eval(scalar);
+            run_ycsb(dev.as_mut(), &cfg)
+        };
+        let b = run(false);
+        let s = run(true);
+        assert_eq!(b.system, s.system, "{kind:?}");
+        assert_eq!(b.cycles, s.cycles, "{kind:?}: cycles");
+        assert_eq!(b.hits, s.hits, "{kind:?}: hits");
+        assert_eq!(b.ops, s.ops, "{kind:?}: ops");
+        assert_eq!(b.rehashes, s.rehashes, "{kind:?}: rehashes");
+        assert_eq!(
+            b.energy_nj.to_bits(),
+            s.energy_nj.to_bits(),
+            "{kind:?}: energy"
+        );
+        let cb: Vec<_> = b.counters.iter().collect();
+        let cs: Vec<_> = s.counters.iter().collect();
+        assert_eq!(cb, cs, "{kind:?}: counters");
+    }
+}
+
+#[test]
+fn bitsliced_engine_survives_adaptive_reconfigure_and_stringmatch() {
+    // reconfigure grows create new CAM sets mid-run: they must inherit
+    // the forced engine — pinned by running the adaptive driver with
+    // both engines and comparing whole reports
+    let cfg = YcsbConfig {
+        table_pow2: 12,
+        window: 32,
+        ops: 6000,
+        read_pct: 0.95,
+        threads: 8,
+        ..Default::default()
+    };
+    let policy = ReconfigPolicy::default();
+    let run = |scalar: bool| {
+        let mut dev = MonarchAssoc::new(small_geom(), 2);
+        dev.force_scalar_eval(scalar);
+        run_ycsb_adaptive(&mut dev, &cfg, &policy)
+    };
+    let b = run(false);
+    let s = run(true);
+    assert!(b.counters.get("reconfigs") >= 1, "policy must trip");
+    assert_eq!(b.cycles, s.cycles, "adaptive cycles");
+    assert_eq!(b.hits, s.hits, "adaptive hits");
+    assert_eq!(b.energy_nj.to_bits(), s.energy_nj.to_bits());
+    let cb: Vec<_> = b.counters.iter().collect();
+    let cs: Vec<_> = s.counters.iter().collect();
+    assert_eq!(cb, cs, "adaptive counters");
+    // the stringmatch wave driver over the sharded backend: same-key
+    // waves across many sets ride the batched bit-sliced sweep
+    let smc = StringMatchConfig {
+        corpus_words: 1 << 13,
+        targets: 8,
+        threads: 4,
+        seed: 21,
+    };
+    let sm_sets = smc.corpus_words / 512 + 1;
+    let run_sm = |scalar: bool| {
+        let mut dev = ShardedAssoc::new(small_geom(), sm_sets, 4);
+        dev.force_scalar_eval(scalar);
+        run_string_match(&mut dev, &smc)
+    };
+    let b = run_sm(false);
+    let s = run_sm(true);
+    assert_eq!(b.cycles, s.cycles, "stringmatch cycles");
+    assert_eq!(b.matches, s.matches, "stringmatch matches");
+    assert_eq!(b.energy_nj.to_bits(), s.energy_nj.to_bits());
+}
+
 #[test]
 fn cachewave_monarch_scales_while_scalar_fallback_stays_flat() {
     // The `monarch cachewave` acceptance gate: Monarch's batched
