@@ -9,6 +9,9 @@ use crate::device::{
     AssocDevice, AssocSpec, DeviceBuilder, SearchOp,
 };
 use crate::monarch::{LifetimeEstimator, LifetimeReport};
+use crate::service::gen::{generate, Request, TrafficConfig};
+use crate::service::trace::TraceMeta;
+use crate::service::{run_service, ServiceConfig, ServiceReport};
 use crate::sim::{SimReport, System};
 use crate::util::pool::fan_out;
 use crate::util::stats::geomean;
@@ -1004,6 +1007,155 @@ pub fn xamsearch_table(points: &[XamSearchPoint]) -> Table {
     t
 }
 
+/// Offered loads of the `monarch serve` sweep, relative to the base
+/// rate (1.0 = one request per [`SERVICE_BASE_GAP`] cycles on
+/// average); the top loads push both systems past saturation.
+pub const SERVICE_LOADS: &[f64] = &[0.5, 1.0, 2.0, 4.0, 8.0];
+/// Mean inter-arrival gap at load 1.0, in device cycles.
+const SERVICE_BASE_GAP: f64 = 64.0;
+const SERVICE_SETS: u32 = 128;
+const SERVICE_POPULATION: u64 = 256;
+const N_SERVICE_SYSTEMS: usize = 2;
+
+/// One measured cell of the `monarch serve` sweep.
+#[derive(Clone, Debug)]
+pub struct ServicePoint {
+    pub system: String,
+    pub load: f64,
+    pub report: ServiceReport,
+}
+
+/// The canonical service stream at one offered load. Deterministic
+/// from the budget's seed, so every system in the sweep — and every
+/// replay of a captured trace — serves the SAME request sequence.
+pub fn service_traffic(
+    budget: &Budget,
+    load: f64,
+) -> (TraceMeta, Vec<Request>) {
+    let cfg = TrafficConfig {
+        ops: budget.hash_ops.max(600),
+        population: SERVICE_POPULATION,
+        num_sets: SERVICE_SETS,
+        mean_gap: SERVICE_BASE_GAP / load,
+        seed: budget.seed,
+        ..TrafficConfig::default()
+    };
+    let meta = TraceMeta {
+        population: cfg.population,
+        num_sets: cfg.num_sets,
+        seed: cfg.seed,
+    };
+    (meta, generate(&cfg))
+}
+
+/// The two service backends: Monarch sharded (one queue lane per
+/// vault-group controller) vs the D-Cache table walk.
+fn service_system_specs(geom: MonarchGeom) -> Vec<AssocSpec> {
+    let spec = |kind, capacity_bytes| AssocSpec {
+        kind,
+        capacity_bytes,
+        geom,
+        cam_sets: SERVICE_SETS as usize,
+    };
+    vec![
+        spec(InPackageKind::MonarchSharded { shards: 8, m: 3 }, 0),
+        spec(InPackageKind::DramCache, 1 << 16),
+    ]
+}
+
+/// The `monarch serve` sweep: both backends under increasing offered
+/// load until saturation. Every (load, system) cell fans out as its
+/// own job; each job regenerates the deterministic stream for its
+/// load, so the two systems at one load serve identical requests.
+pub fn service_sweep(budget: &Budget, loads: &[f64]) -> Vec<ServicePoint> {
+    service_sweep_with(&DeviceBuilder::new, budget, loads)
+}
+
+/// [`service_sweep`] through the backend registry (the same builder
+/// factory as the other sweeps), so `--pjrt` engines reach it too.
+pub fn service_sweep_with<F>(
+    mk_builder: &F,
+    budget: &Budget,
+    loads: &[f64],
+) -> Vec<ServicePoint>
+where
+    F: Fn() -> DeviceBuilder + Sync,
+{
+    let geom = MonarchGeom::FULL.scaled(budget.scale * 4.0);
+    fan_out(loads.len() * N_SERVICE_SYSTEMS, |i| {
+        let (l, s) = (i / N_SERVICE_SYSTEMS, i % N_SERVICE_SYSTEMS);
+        let (meta, reqs) = service_traffic(budget, loads[l]);
+        let spec = service_system_specs(geom).swap_remove(s);
+        let mut dev = mk_builder().build_assoc(&spec);
+        let report = run_service(
+            dev.as_mut(),
+            &ServiceConfig::default(),
+            &meta,
+            &reqs,
+        );
+        ServicePoint { system: report.system.clone(), load: loads[l], report }
+    })
+}
+
+/// Serve an explicit (captured or decoded) stream on a fresh sharded
+/// backend at the sweep's geometry — the replay path of
+/// `monarch serve --replay` and the differential tests.
+pub fn service_replay(
+    budget: &Budget,
+    shards: usize,
+    meta: &TraceMeta,
+    reqs: &[Request],
+) -> ServiceReport {
+    let geom = MonarchGeom::FULL.scaled(budget.scale * 4.0);
+    let spec = AssocSpec {
+        kind: InPackageKind::MonarchSharded { shards, m: 3 },
+        capacity_bytes: 0,
+        geom,
+        cam_sets: meta.num_sets as usize,
+    };
+    let mut dev = DeviceBuilder::new().build_assoc(&spec);
+    run_service(dev.as_mut(), &ServiceConfig::default(), meta, reqs)
+}
+
+pub fn service_table(points: &[ServicePoint]) -> Table {
+    let mut t = Table::new(
+        "Serve sweep — tail latency under offered load (all phases)",
+    )
+    .header(vec![
+        "system",
+        "load",
+        "offered",
+        "completed",
+        "ops/kcycle",
+        "p50",
+        "p99",
+        "p999",
+        "shed",
+        "deferred",
+    ]);
+    for p in points {
+        let all = p.report.cell("all", None);
+        let (p50, p99, p999) = all
+            .map(|c| (c.p50_cycles, c.p99_cycles, c.p999_cycles))
+            .unwrap_or((0, 0, 0));
+        let shed = p.report.counters.get("shed_interactive")
+            + p.report.counters.get("shed_bulk");
+        t.row(vec![
+            p.system.clone(),
+            format!("{:.1}", p.load),
+            p.report.offered_ops.to_string(),
+            p.report.completed_ops.to_string(),
+            format!("{:.2}", p.report.ops_per_kcycle()),
+            p50.to_string(),
+            p99.to_string(),
+            p999.to_string(),
+            shed.to_string(),
+            p.report.counters.get("deferred_bulk").to_string(),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1090,5 +1242,34 @@ mod tests {
         }
         let t = shard_table(&pts);
         assert!(t.render().contains("searches/kcycle"));
+    }
+
+    #[test]
+    fn service_sweep_shapes() {
+        let budget = Budget { hash_ops: 600, ..Budget::quick() };
+        let pts = service_sweep(&budget, &[1.0, 8.0]);
+        assert_eq!(pts.len(), 4, "2 loads x 2 systems");
+        assert_eq!(pts[0].system, "Monarch(S=8)");
+        assert_eq!(pts[1].system, "HBM-C");
+        for p in &pts {
+            assert!(p.report.completed_ops > 0, "{}: nothing served", p.system);
+            assert!(p.report.cycles > 0);
+            let all = p.report.cell("all", None).expect("grand total");
+            assert!(all.p50_cycles <= all.p99_cycles);
+            assert!(all.p99_cycles <= all.p999_cycles);
+        }
+        // both systems at one load served the SAME offered stream
+        assert_eq!(pts[0].report.offered_ops, pts[1].report.offered_ops);
+        let t = service_table(&pts);
+        assert!(t.render().contains("ops/kcycle"));
+    }
+
+    #[test]
+    fn service_replay_is_bit_identical() {
+        let budget = Budget { hash_ops: 600, ..Budget::quick() };
+        let (meta, reqs) = service_traffic(&budget, 2.0);
+        let a = service_replay(&budget, 4, &meta, &reqs);
+        let b = service_replay(&budget, 4, &meta, &reqs);
+        assert_eq!(a.modeled_fingerprint(), b.modeled_fingerprint());
     }
 }

@@ -136,6 +136,13 @@ impl ShardedAssoc {
         self.shards.len()
     }
 
+    /// Width of each shard's contiguous CAM-set slice (the partition
+    /// stride). The service driver uses this to map request home sets
+    /// onto per-shard queues without re-deriving the partition rule.
+    pub fn sets_per_shard(&self) -> usize {
+        self.sets_per_shard
+    }
+
     /// Owning shard of a global CAM set.
     #[inline]
     pub fn shard_of_set(&self, set: usize) -> usize {

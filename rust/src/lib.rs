@@ -27,6 +27,7 @@ pub mod device;
 pub mod mem;
 pub mod monarch;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod util;
 pub mod workloads;

@@ -10,6 +10,9 @@
 //! monarch reconfig             static vs spill-only vs adaptive
 //! monarch cachewave            wave-width sweep of the cache-mode pipeline
 //! monarch xamsearch            host throughput of the XAM search engines
+//! monarch serve                KV service tail-latency sweep
+//! monarch serve --trace PATH   capture the service stream, then serve it
+//! monarch serve --replay PATH  re-serve a captured trace bit-identically
 //! monarch table1               technology comparison
 //! monarch selfcheck            load artifacts, kernel-vs-rust check
 //! ```
@@ -26,6 +29,7 @@ use monarch::coordinator::{self, Budget};
 use monarch::device::DeviceBuilder;
 use monarch::prelude::*;
 use monarch::runtime::SearchEngine;
+use monarch::service::{trace, ServiceReport};
 use monarch::util::json::{self, Json};
 use monarch::util::table::f;
 
@@ -116,6 +120,49 @@ fn table1() -> Json {
     }
     t.print();
     json::experiment("table1", rows)
+}
+
+/// JSON rows for one service report: one `summary` row (the
+/// fingerprintable whole-run facts) plus one `cell` row per latency
+/// cell (per shard, per phase, aggregates, grand total). The schema is
+/// documented in DESIGN.md §JSON envelope.
+fn service_json_rows(load: f64, r: &ServiceReport) -> Vec<Json> {
+    let mut rows = vec![Json::obj()
+        .set("row", "summary")
+        .set("system", r.system.clone())
+        .set("load", load)
+        .set("lanes", r.lanes)
+        .set("offered_ops", r.offered_ops)
+        .set("completed_ops", r.completed_ops)
+        .set("planted", r.planted)
+        .set("plant_blocked", r.plant_blocked)
+        .set("cycles", r.cycles)
+        .set("ops_per_kcycle", r.ops_per_kcycle())
+        .set("energy_nj", r.energy_nj)
+        .set("shed_interactive", r.counters.get("shed_interactive"))
+        .set("shed_bulk", r.counters.get("shed_bulk"))
+        .set("deferred_bulk", r.counters.get("deferred_bulk"))
+        .set("queue_high_water", r.counters.get("queue_high_water"))
+        .set("modeled_fingerprint", r.modeled_fingerprint())];
+    for c in &r.cells {
+        rows.push(
+            Json::obj()
+                .set("row", "cell")
+                .set("system", r.system.clone())
+                .set("load", load)
+                .set("phase", c.phase)
+                .set("shard", c.shard.map_or(Json::from("all"), Json::from))
+                .set("count", c.count)
+                .set("mean_cycles", c.mean_cycles)
+                .set("p50_cycles", c.p50_cycles)
+                .set("p99_cycles", c.p99_cycles)
+                .set("p999_cycles", c.p999_cycles)
+                .set("p50_host_ns", c.p50_host_ns)
+                .set("p99_host_ns", c.p99_host_ns)
+                .set("p999_host_ns", c.p999_host_ns),
+        );
+    }
+    rows
 }
 
 fn main() -> Result<()> {
@@ -316,6 +363,84 @@ fn main() -> Result<()> {
                 .collect();
             payload = Some(json::experiment("xamsearch", jrows));
         }
+        "serve" => {
+            // the KV service driver. Three modes:
+            //   (default)      tail-latency sweep over SERVICE_LOADS
+            //   --trace PATH   capture the stream at --load, then serve it
+            //   --replay PATH  re-serve a captured trace (--shards lanes)
+            let shards = args.usize_or("shards", 8)?;
+            let load = args.f64_or("load", 2.0)?;
+            if let Some(path) = args.get("replay") {
+                let (meta, reqs) = trace::read_trace(path)?;
+                let r =
+                    coordinator::service_replay(&budget, shards, &meta, &reqs);
+                let pt = coordinator::ServicePoint {
+                    system: r.system.clone(),
+                    load,
+                    report: r.clone(),
+                };
+                coordinator::service_table(std::slice::from_ref(&pt)).print();
+                println!(
+                    "  replayed {} requests from {path}; modeled \
+                     fingerprint {}",
+                    reqs.len(),
+                    r.modeled_fingerprint()
+                );
+                payload = Some(json::experiment(
+                    "serve_replay",
+                    service_json_rows(load, &r),
+                ));
+            } else if let Some(path) = args.get("trace") {
+                let (meta, reqs) = coordinator::service_traffic(&budget, load);
+                trace::write_trace(path, &meta, &reqs)?;
+                eprintln!("captured {} requests to {path}", reqs.len());
+                let r =
+                    coordinator::service_replay(&budget, shards, &meta, &reqs);
+                let pt = coordinator::ServicePoint {
+                    system: r.system.clone(),
+                    load,
+                    report: r.clone(),
+                };
+                coordinator::service_table(std::slice::from_ref(&pt)).print();
+                println!(
+                    "  served the captured stream; modeled fingerprint {}",
+                    r.modeled_fingerprint()
+                );
+                payload = Some(json::experiment(
+                    "serve_trace",
+                    service_json_rows(load, &r),
+                ));
+            } else {
+                let pts = coordinator::service_sweep_with(
+                    &builder_factory(args.flag("pjrt")),
+                    &budget,
+                    coordinator::SERVICE_LOADS,
+                );
+                coordinator::service_table(&pts).print();
+                for p in &pts {
+                    let all = p.report.cell("all", None);
+                    if p.load >= 4.0 {
+                        if let Some(c) = all {
+                            println!(
+                                "  {} @ {:.0}x load: p99 {} / p999 {} \
+                                 cycles, {} shed",
+                                p.system,
+                                p.load,
+                                c.p99_cycles,
+                                c.p999_cycles,
+                                p.report.counters.get("shed_interactive")
+                                    + p.report.counters.get("shed_bulk"),
+                            );
+                        }
+                    }
+                }
+                let mut rows = Vec::new();
+                for p in &pts {
+                    rows.extend(service_json_rows(p.load, &p.report));
+                }
+                payload = Some(json::experiment("serve", rows));
+            }
+        }
         "reconfig" => {
             let pts = coordinator::reconfig_sweep_with(
                 &builder_factory(args.flag("pjrt")),
@@ -414,9 +539,12 @@ fn main() -> Result<()> {
             }
             println!(
                 "usage: monarch <table1|fig9|fig10|fig11|fig12|fig13|fig14|\
-                 stringmatch|shards|reconfig|cachewave|xamsearch|selfcheck> \
+                 stringmatch|shards|reconfig|cachewave|xamsearch|serve|\
+                 selfcheck> \
                  [--quick] [--scale S] [--trace-ops N] [--hash-ops N] \
-                 [--threads N] [--seed N] [--pjrt] [--json PATH]"
+                 [--threads N] [--seed N] [--pjrt] [--json PATH]\n\
+                 serve extras: [--load L] [--shards N] [--trace PATH] \
+                 [--replay PATH]"
             );
         }
     }

@@ -1,0 +1,253 @@
+//! Open-loop traffic generation for the KV service driver.
+//!
+//! Requests carry their own *arrival* cycle drawn from an exponential
+//! inter-arrival process — the generator never waits for completions,
+//! which is what makes the stream open-loop: offered load is a
+//! property of the trace, and a slow backend falls behind instead of
+//! silently throttling its own clients (the coordinated-omission trap
+//! of closed-loop drivers).
+//!
+//! A stream runs through three equal-length phases, in order:
+//!
+//! - **steady** — scrambled-zipfian key popularity (YCSB style), hot
+//!   keys spread across the whole population and therefore across all
+//!   shards.
+//! - **storm** — *unscrambled* zipfian popularity whose rank-0 key
+//!   slides linearly through the population over the phase. Because
+//!   key homes are block-mapped onto CAM sets, the hot set marches
+//!   across the shards: every shard takes its turn being the hotspot.
+//! - **burst** — same spread popularity as steady, but the arrival
+//!   process is on/off: long silent gaps followed by dense trains at
+//!   4x the steady rate, with the same *average* offered load.
+//!
+//! Everything is deterministic from `TrafficConfig::seed`, so a
+//! generated stream can be captured to a trace file and regenerated
+//! bit-identically (pinned by `tests/service_replay.rs`).
+
+use crate::util::rng::{fnv1a64, Rng, ScrambledZipf, Zipf};
+
+/// Traffic phase names, in stream order; `Request::phase` indexes this.
+pub const PHASES: [&str; 3] = ["steady", "storm", "burst"];
+
+/// Request class for admission control: interactive requests are shed
+/// immediately when the home queue is full (a timeout would make them
+/// useless anyway), bulk requests are deferred and retried.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Class {
+    Interactive,
+    Bulk,
+}
+
+/// One KV lookup request, fully self-describing: the driver never
+/// consults the generator, so a decoded trace replays identically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Request {
+    /// Arrival cycle (monotone within a stream).
+    pub arrive: u64,
+    /// Key searched in the CAM (odd = planted, even = guaranteed miss).
+    pub key: u64,
+    /// Home CAM set of the key.
+    pub set: u32,
+    /// Flat-RAM block / table slot holding the value.
+    pub value_block: u64,
+    pub class: Class,
+    /// Index into [`PHASES`].
+    pub phase: u8,
+}
+
+/// Knobs of one generated stream.
+#[derive(Clone, Copy, Debug)]
+pub struct TrafficConfig {
+    /// Total requests across all three phases.
+    pub ops: usize,
+    /// Distinct keys (the planted working set).
+    pub population: u64,
+    /// CAM sets the population maps onto.
+    pub num_sets: u32,
+    /// Mean inter-arrival gap in cycles (offered load = 1/mean_gap).
+    pub mean_gap: f64,
+    pub zipf_theta: f64,
+    /// Fraction of requests in the Bulk class.
+    pub bulk_pct: f64,
+    /// Fraction of requests probing absent keys.
+    pub miss_pct: f64,
+    pub seed: u64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        Self {
+            ops: 6_000,
+            population: 256,
+            num_sets: 128,
+            mean_gap: 64.0,
+            zipf_theta: 0.99,
+            bulk_pct: 0.25,
+            miss_pct: 0.05,
+            seed: 0xBEEF,
+        }
+    }
+}
+
+/// Planted key of population index `i`. Always odd, so a random even
+/// key is a guaranteed miss.
+#[inline]
+pub fn key_of(i: u64) -> u64 {
+    fnv1a64(i) | 1
+}
+
+/// Home CAM set of population index `i`: a *blocked* mapping
+/// (contiguous index ranges share a set) so the storm phase's sliding
+/// hot range concentrates on one shard at a time instead of spraying.
+#[inline]
+pub fn home_set(i: u64, population: u64, num_sets: u32) -> u32 {
+    ((i as u128 * num_sets as u128) / population as u128) as u32
+}
+
+/// Exponential inter-arrival gap with the given mean, in whole cycles.
+#[inline]
+fn exp_gap(rng: &mut Rng, mean: f64) -> u64 {
+    // inverse CDF on 1-u so ln never sees 0
+    (-(1.0 - rng.f64()).ln() * mean) as u64
+}
+
+/// Generate one three-phase open-loop stream. Arrival cycles are
+/// strictly derived from the config, so equal configs yield equal
+/// streams byte-for-byte.
+pub fn generate(cfg: &TrafficConfig) -> Vec<Request> {
+    assert!(cfg.population > 0 && cfg.num_sets > 0 && cfg.mean_gap > 0.0);
+    let mut rng = Rng::new(cfg.seed);
+    let spread = ScrambledZipf::new(cfg.population, cfg.zipf_theta);
+    let storm = Zipf::new(cfg.population, cfg.zipf_theta);
+    let per_phase = (cfg.ops / PHASES.len()).max(1);
+    let mut reqs = Vec::with_capacity(per_phase * PHASES.len());
+    let mut now = 0u64;
+    for phase in 0..PHASES.len() as u8 {
+        for j in 0..per_phase {
+            now += match phase {
+                // on/off: every 64th arrival opens a silent window
+                // worth 48 steady gaps, then a train at 4x the steady
+                // rate — the average offered load matches steady
+                // ((48 + 63/4) / 64 ~= 1.0 gaps per request)
+                2 if j % 64 == 0 => (cfg.mean_gap * 48.0) as u64,
+                2 => exp_gap(&mut rng, cfg.mean_gap * 0.25),
+                _ => exp_gap(&mut rng, cfg.mean_gap),
+            };
+            let idx = match phase {
+                1 => {
+                    // hot set slides across the population (and, via
+                    // the blocked home mapping, across the shards)
+                    let off =
+                        (j as u64 * cfg.population) / per_phase as u64;
+                    (storm.sample(&mut rng) + off) % cfg.population
+                }
+                _ => spread.sample(&mut rng),
+            };
+            let (key, set) = if rng.chance(cfg.miss_pct) {
+                // absent key (even; planted keys are odd), uniform set
+                (rng.next_u64() & !1, rng.next_u32() % cfg.num_sets)
+            } else {
+                (key_of(idx), home_set(idx, cfg.population, cfg.num_sets))
+            };
+            let class = if rng.chance(cfg.bulk_pct) {
+                Class::Bulk
+            } else {
+                Class::Interactive
+            };
+            reqs.push(Request {
+                arrive: now,
+                key,
+                set,
+                value_block: idx,
+                class,
+                phase,
+            });
+        }
+    }
+    reqs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streams_are_deterministic_and_monotone() {
+        let cfg = TrafficConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3 * (cfg.ops / 3));
+        for w in a.windows(2) {
+            assert!(w[1].arrive >= w[0].arrive, "arrivals must be sorted");
+        }
+    }
+
+    #[test]
+    fn phases_partition_the_stream_in_order() {
+        let reqs = generate(&TrafficConfig::default());
+        let per_phase = reqs.len() / PHASES.len();
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.phase as usize, i / per_phase);
+        }
+    }
+
+    #[test]
+    fn planted_keys_are_odd_and_home_sets_in_range() {
+        let cfg = TrafficConfig::default();
+        let reqs = generate(&cfg);
+        let mut hits = 0usize;
+        for r in &reqs {
+            assert!(r.set < cfg.num_sets);
+            assert!((r.value_block) < cfg.population);
+            if r.key & 1 == 1 {
+                hits += 1;
+                assert_eq!(r.key, key_of(r.value_block));
+                assert_eq!(
+                    r.set,
+                    home_set(r.value_block, cfg.population, cfg.num_sets)
+                );
+            }
+        }
+        // ~95% of requests probe planted keys
+        assert!(hits as f64 > 0.9 * reqs.len() as f64);
+        assert!(hits < reqs.len(), "some misses must be generated");
+    }
+
+    #[test]
+    fn storm_hot_set_migrates() {
+        // the most popular home set early in the storm phase must
+        // differ from the one late in the phase
+        let cfg = TrafficConfig { ops: 9_000, ..TrafficConfig::default() };
+        let reqs = generate(&cfg);
+        let per_phase = reqs.len() / 3;
+        let storm = &reqs[per_phase..2 * per_phase];
+        let top_set = |rs: &[Request]| -> u32 {
+            let mut counts = vec![0u32; cfg.num_sets as usize];
+            for r in rs {
+                counts[r.set as usize] += 1;
+            }
+            (0..cfg.num_sets).max_by_key(|&s| counts[s as usize]).unwrap()
+        };
+        let early = top_set(&storm[..per_phase / 4]);
+        let late = top_set(&storm[3 * per_phase / 4..]);
+        assert_ne!(early, late, "storm hot set failed to migrate");
+    }
+
+    #[test]
+    fn burst_phase_has_silent_windows() {
+        let cfg = TrafficConfig::default();
+        let reqs = generate(&cfg);
+        let per_phase = reqs.len() / 3;
+        let max_gap = |rs: &[Request]| -> u64 {
+            rs.windows(2).map(|w| w[1].arrive - w[0].arrive).max().unwrap()
+        };
+        let steady = max_gap(&reqs[..per_phase]);
+        let burst = max_gap(&reqs[2 * per_phase..]);
+        assert!(
+            burst >= (cfg.mean_gap * 48.0) as u64,
+            "burst off-periods missing: {burst}"
+        );
+        assert!(burst > 2 * steady);
+    }
+}

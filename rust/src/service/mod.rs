@@ -1,0 +1,554 @@
+//! Production-style KV service driver with tail-latency telemetry.
+//!
+//! Everything else in the repo measures fixed-size batches; this
+//! subsystem *serves*: an open-loop request stream (arrival cycles
+//! baked into the trace — see [`gen`]) flows through bounded per-lane
+//! queues in front of an [`AssocDevice`], admission control sheds or
+//! defers when a queue fills, and every completed request records its
+//! latency — modeled device cycles AND host wall-clock — into
+//! per-(phase, lane) histograms ([`telemetry`]). The output is a
+//! latency *distribution* (p50/p99/p999), not a batch total, which is
+//! what decides whether in-package memory pays off for shrinking
+//! response-time requirements (Lowe-Power et al.).
+//!
+//! **Lanes.** On `ShardedAssoc` a lane IS a shard: the queue partition
+//! reuses the device's own contiguous CAM-set partition
+//! (`sets_per_shard`), so per-lane telemetry is per-shard telemetry.
+//! Conventional backends (no CAM, e.g. the D-Cache table) get the same
+//! number of queue lanes over the same set partition, but each lookup
+//! walks the table image through `access()` — bucket probe then value
+//! fetch — serialized per lane.
+//!
+//! **Determinism.** The modeled side of a run is a pure function of
+//! (backend, stream): replaying a captured trace reproduces every
+//! modeled-cycle figure bit-identically. [`ServiceReport::
+//! modeled_fingerprint`] hashes exactly the modeled fields so two runs
+//! can be compared with a single string; host wall-clock fields are
+//! reported but excluded. Pinned end-to-end by
+//! `tests/service_replay.rs`.
+
+pub mod gen;
+pub mod queue;
+pub mod telemetry;
+pub mod trace;
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::device::assoc::CamLookup;
+use crate::device::AssocDevice;
+use crate::service::gen::{home_set, key_of, Class, Request, PHASES};
+use crate::service::queue::LaneQueues;
+use crate::service::telemetry::Telemetry;
+use crate::service::trace::TraceMeta;
+use crate::util::rng::fnv1a64_bytes;
+use crate::util::stats::{Counters, LogHist};
+
+/// Driver knobs. Defaults are the `monarch serve` sweep's.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Queue lanes for backends that are not sharded ([`ShardedAssoc`]
+    /// backends always get one lane per shard).
+    pub lanes: usize,
+    /// Bounded queue depth; at this depth admission sheds/defers.
+    pub queue_cap: usize,
+    /// Max requests a lane dispatches per wave.
+    pub batch: usize,
+    /// Cycles a deferred bulk request waits before re-arriving.
+    pub defer_gap: u64,
+    /// Deferrals before a bulk request is shed outright.
+    pub max_defers: u8,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            lanes: 8,
+            queue_cap: 32,
+            batch: 16,
+            defer_gap: 2_048,
+            max_defers: 8,
+        }
+    }
+}
+
+/// One row of the latency report: a (phase, lane) cell, a per-phase
+/// aggregate (`shard: None`), or the grand total (`phase: "all"`).
+#[derive(Clone, Debug)]
+pub struct ServiceCell {
+    pub phase: &'static str,
+    /// `Some(lane)` for a per-shard cell, `None` for aggregates.
+    pub shard: Option<usize>,
+    pub count: u64,
+    pub mean_cycles: f64,
+    pub p50_cycles: u64,
+    pub p99_cycles: u64,
+    pub p999_cycles: u64,
+    pub p50_host_ns: u64,
+    pub p99_host_ns: u64,
+    pub p999_host_ns: u64,
+}
+
+/// Everything one service run produced.
+#[derive(Clone, Debug)]
+pub struct ServiceReport {
+    pub system: String,
+    pub lanes: usize,
+    /// Requests in the stream (arrivals offered to admission).
+    pub offered_ops: u64,
+    /// Requests that completed a lookup (offered minus shed).
+    pub completed_ops: u64,
+    /// Keys planted before the epoch; `plant_blocked` counts t_MWW
+    /// rejections (words the durability governor refused).
+    pub planted: u64,
+    pub plant_blocked: u64,
+    /// Cycle the last completion retired (the modeled makespan).
+    pub cycles: u64,
+    pub energy_nj: f64,
+    /// shed_interactive / shed_bulk / deferred_bulk / hits / misses /
+    /// waves / queue_high_water.
+    pub counters: Counters,
+    pub cells: Vec<ServiceCell>,
+}
+
+impl ServiceReport {
+    /// Modeled throughput: completions per thousand device cycles.
+    pub fn ops_per_kcycle(&self) -> f64 {
+        1000.0 * self.completed_ops as f64 / self.cycles.max(1) as f64
+    }
+
+    pub fn cell(&self, phase: &str, shard: Option<usize>) -> Option<&ServiceCell> {
+        self.cells.iter().find(|c| c.phase == phase && c.shard == shard)
+    }
+
+    /// FNV-1a over every *modeled* field — system, shape, counters,
+    /// cycle-domain latency cells — and none of the host wall-clock
+    /// fields. Two runs of the same stream on the same backend must
+    /// produce equal fingerprints on any machine; that is the replay
+    /// acceptance gate, checkable with one string compare.
+    pub fn modeled_fingerprint(&self) -> String {
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(self.system.as_bytes());
+        for v in [
+            self.lanes as u64,
+            self.offered_ops,
+            self.completed_ops,
+            self.planted,
+            self.plant_blocked,
+            self.cycles,
+            self.energy_nj.to_bits(),
+        ] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for (k, v) in self.counters.iter() {
+            bytes.extend_from_slice(k.as_bytes());
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for c in &self.cells {
+            bytes.extend_from_slice(c.phase.as_bytes());
+            let shard = c.shard.map_or(u64::MAX, |s| s as u64);
+            for v in [
+                shard,
+                c.count,
+                c.mean_cycles.to_bits(),
+                c.p50_cycles,
+                c.p99_cycles,
+                c.p999_cycles,
+            ] {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        format!("{:016x}", fnv1a64_bytes(&bytes))
+    }
+}
+
+/// Plant the key population into the CAM ahead of the measured epoch
+/// (column = arrival order within the home set). Backends without a
+/// CAM skip planting — their lookups walk the table image through
+/// `access()` instead. Returns (planted, blocked-by-t_MWW).
+pub fn plant_population(
+    dev: &mut dyn AssocDevice,
+    population: u64,
+    num_sets: u32,
+) -> (u64, u64) {
+    let Some(cam) = dev.cam() else {
+        return (0, 0);
+    };
+    let mut next_col = vec![0usize; num_sets as usize];
+    let (mut planted, mut blocked) = (0u64, 0u64);
+    let mut t = 0u64;
+    for i in 0..population {
+        let set = home_set(i, population, num_sets).min(cam.num_sets as u32 - 1);
+        let col = next_col[set as usize] % cam.cols_per_set;
+        next_col[set as usize] += 1;
+        match dev.cam_write(set as usize, col, key_of(i), t) {
+            Some(a) => {
+                t = a.done_at;
+                planted += 1;
+            }
+            None => blocked += 1,
+        }
+    }
+    (planted, blocked)
+}
+
+/// Serve one request stream. The stream must be arrival-sorted (as
+/// [`gen::generate`] and [`trace::decode`] produce); `meta` sizes the
+/// planted population and the lane partition.
+pub fn run_service(
+    dev: &mut dyn AssocDevice,
+    cfg: &ServiceConfig,
+    meta: &TraceMeta,
+    reqs: &[Request],
+) -> ServiceReport {
+    let (planted, plant_blocked) =
+        plant_population(dev, meta.population, meta.num_sets);
+    // epoch boundary: planting is setup, not service
+    let _ = dev.drain_energy_nj();
+    dev.reset_timing();
+
+    // lane partition: the device's own shard partition when sharded,
+    // an equivalent contiguous slicing otherwise
+    let (lanes, sets_per_lane) = match dev.sharded() {
+        Some(s) => (s.num_shards(), s.sets_per_shard()),
+        None => {
+            let l = cfg.lanes.max(1);
+            (l, (meta.num_sets as usize).div_ceil(l).max(1))
+        }
+    };
+    let lane_of =
+        |set: u32| (set as usize / sets_per_lane).min(lanes - 1);
+    let has_cam = dev.cam().is_some();
+
+    let mut queues = LaneQueues::new(lanes, cfg.queue_cap);
+    let mut tele = Telemetry::new(PHASES.len(), lanes);
+    let mut counters = Counters::new();
+    let mut free_at = vec![0u64; lanes];
+    let mut last_done = 0u64;
+
+    // (eligible cycle, admission sequence, deferral count, stream idx):
+    // arrivals and deferred re-arrivals share one time-ordered heap,
+    // sequence-numbered so ties admit in a deterministic order
+    type Arrival = Reverse<(u64, u64, u8, usize)>;
+    let mut heap: BinaryHeap<Arrival> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, r)| Reverse((r.arrive, i as u64, 0u8, i)))
+        .collect();
+    let mut next_seq = reqs.len() as u64;
+
+    let mut t = 0u64;
+    loop {
+        // 1. admit every arrival eligible at or before `t`
+        while let Some(&Reverse((at, _, defers, idx))) = heap.peek() {
+            if at > t {
+                break;
+            }
+            heap.pop();
+            let lane = lane_of(reqs[idx].set);
+            if !queues.full(lane) {
+                queues.push(lane, idx);
+            } else {
+                match reqs[idx].class {
+                    // an interactive answer past its deadline is
+                    // worthless: shed immediately
+                    Class::Interactive => counters.inc("shed_interactive"),
+                    Class::Bulk if defers < cfg.max_defers => {
+                        counters.inc("deferred_bulk");
+                        heap.push(Reverse((
+                            t + cfg.defer_gap,
+                            next_seq,
+                            defers + 1,
+                            idx,
+                        )));
+                        next_seq += 1;
+                    }
+                    Class::Bulk => counters.inc("shed_bulk"),
+                }
+            }
+        }
+
+        // 2. dispatch one wave: every lane that is free and backlogged
+        let mut wave: Vec<(usize, usize)> = Vec::new(); // (lane, idx)
+        for lane in 0..lanes {
+            if free_at[lane] <= t && !queues.is_empty(lane) {
+                for idx in queues.take(lane, cfg.batch) {
+                    wave.push((lane, idx));
+                }
+            }
+        }
+        if !wave.is_empty() {
+            counters.inc("waves");
+            if has_cam {
+                // one batched lookup across the ready lanes: per-shard
+                // register traffic overlaps inside the device
+                let ops: Vec<CamLookup> = wave
+                    .iter()
+                    .map(|&(_, i)| {
+                        let r = &reqs[i];
+                        CamLookup {
+                            key: r.key,
+                            mask: !0,
+                            set0: r.set as usize,
+                            set1: r.set as usize,
+                            value_block: r.value_block,
+                            fetch_value_on_miss: false,
+                            at: t,
+                        }
+                    })
+                    .collect();
+                let t0 = std::time::Instant::now();
+                let outs = dev.lookup_many(&ops);
+                let ns = t0.elapsed().as_nanos() as u64
+                    / wave.len() as u64;
+                for (&(lane, idx), o) in wave.iter().zip(&outs) {
+                    let r = &reqs[idx];
+                    counters.inc(if o.hit { "hits" } else { "misses" });
+                    tele.record(
+                        r.phase as usize,
+                        lane,
+                        o.done_at.saturating_sub(r.arrive),
+                        ns,
+                    );
+                    free_at[lane] = free_at[lane].max(o.done_at);
+                    last_done = last_done.max(o.done_at);
+                }
+            } else {
+                // conventional table: bucket probe then value fetch
+                // through the cached image, serialized per lane
+                for lane in 0..lanes {
+                    let items: Vec<usize> = wave
+                        .iter()
+                        .filter(|&&(l, _)| l == lane)
+                        .map(|&(_, i)| i)
+                        .collect();
+                    if items.is_empty() {
+                        continue;
+                    }
+                    let t0 = std::time::Instant::now();
+                    let mut cur = t;
+                    let mut done: Vec<(usize, u64, bool)> =
+                        Vec::with_capacity(items.len());
+                    for &idx in &items {
+                        let r = &reqs[idx];
+                        let probe =
+                            dev.access(r.value_block * 64, false, cur);
+                        let value = dev.access(
+                            (meta.population + 1 + r.value_block) * 64,
+                            false,
+                            probe.done_at,
+                        );
+                        cur = value.done_at;
+                        done.push((
+                            r.phase as usize,
+                            cur.saturating_sub(r.arrive),
+                            r.key & 1 == 1,
+                        ));
+                    }
+                    let ns = t0.elapsed().as_nanos() as u64
+                        / items.len() as u64;
+                    for (phase, lat, hit) in done {
+                        counters.inc(if hit { "hits" } else { "misses" });
+                        tele.record(phase, lane, lat, ns);
+                    }
+                    free_at[lane] = cur;
+                    last_done = last_done.max(cur);
+                }
+            }
+        }
+
+        // 3. advance to the next event (arrival or lane becoming free)
+        let mut next: Option<u64> = heap.peek().map(|Reverse((at, ..))| *at);
+        for lane in 0..lanes {
+            if !queues.is_empty(lane) {
+                let f = free_at[lane].max(t + 1);
+                next = Some(next.map_or(f, |n| n.min(f)));
+            }
+        }
+        match next {
+            Some(n) => t = n.max(t + 1),
+            None => break, // heap drained and every queue empty
+        }
+    }
+
+    counters.set("queue_high_water", queues.high_water() as u64);
+    let energy_nj = dev.drain_energy_nj()
+        + dev.static_watts() * (last_done as f64 / 3.2e9) * 1e9
+        + dev.main_static_energy_nj(last_done);
+
+    let cell_row = |phase: &'static str,
+                    shard: Option<usize>,
+                    cy: &LogHist,
+                    ns: &LogHist| ServiceCell {
+        phase,
+        shard,
+        count: cy.count,
+        mean_cycles: cy.mean(),
+        p50_cycles: cy.p50(),
+        p99_cycles: cy.p99(),
+        p999_cycles: cy.p999(),
+        p50_host_ns: ns.p50(),
+        p99_host_ns: ns.p99(),
+        p999_host_ns: ns.p999(),
+    };
+    let mut cells = Vec::new();
+    for (p, &name) in PHASES.iter().enumerate() {
+        for lane in 0..lanes {
+            let (cy, ns) = tele.cell(p, lane);
+            if cy.count > 0 {
+                cells.push(cell_row(name, Some(lane), cy, ns));
+            }
+        }
+        let (cy, ns) = tele.phase_total(p);
+        if cy.count > 0 {
+            cells.push(cell_row(name, None, &cy, &ns));
+        }
+    }
+    let (cy, ns) = tele.grand_total();
+    let completed_ops = cy.count;
+    cells.push(cell_row("all", None, &cy, &ns));
+
+    ServiceReport {
+        system: dev.label().to_string(),
+        lanes,
+        offered_ops: reqs.len() as u64,
+        completed_ops,
+        planted,
+        plant_blocked,
+        cycles: last_done,
+        energy_nj,
+        counters,
+        cells,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{InPackageKind, MonarchGeom};
+    use crate::device::{AssocSpec, DeviceBuilder};
+    use crate::service::gen::{generate, TrafficConfig};
+
+    fn geom() -> MonarchGeom {
+        MonarchGeom {
+            vaults: 8,
+            banks_per_vault: 8,
+            supersets_per_bank: 8,
+            sets_per_superset: 8,
+            rows_per_set: 64,
+            cols_per_set: 512,
+            layers: 1,
+        }
+    }
+
+    fn stream(mean_gap: f64) -> (TraceMeta, Vec<Request>) {
+        let cfg = TrafficConfig {
+            ops: 900,
+            population: 64,
+            num_sets: 32,
+            mean_gap,
+            ..TrafficConfig::default()
+        };
+        let meta = TraceMeta {
+            population: cfg.population,
+            num_sets: cfg.num_sets,
+            seed: cfg.seed,
+        };
+        (meta, generate(&cfg))
+    }
+
+    fn sharded_spec(shards: usize) -> AssocSpec {
+        AssocSpec {
+            kind: InPackageKind::MonarchSharded { shards, m: 3 },
+            capacity_bytes: 0,
+            geom: geom(),
+            cam_sets: 32,
+        }
+    }
+
+    #[test]
+    fn modeled_report_is_deterministic() {
+        let (meta, reqs) = stream(64.0);
+        let builder = DeviceBuilder::new();
+        let run = || {
+            let mut dev = builder.build_assoc(&sharded_spec(4));
+            run_service(
+                dev.as_mut(),
+                &ServiceConfig::default(),
+                &meta,
+                &reqs,
+            )
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.modeled_fingerprint(), b.modeled_fingerprint());
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.completed_ops, b.completed_ops);
+        assert!(a.completed_ops > 0);
+    }
+
+    #[test]
+    fn sharded_run_reports_per_shard_and_per_phase_cells() {
+        let (meta, reqs) = stream(64.0);
+        let mut dev = DeviceBuilder::new().build_assoc(&sharded_spec(4));
+        let r = run_service(
+            dev.as_mut(),
+            &ServiceConfig::default(),
+            &meta,
+            &reqs,
+        );
+        assert_eq!(r.lanes, 4, "sharded backend: one lane per shard");
+        assert!(r.planted > 0);
+        let all = r.cell("all", None).expect("grand total cell");
+        assert_eq!(all.count, r.completed_ops);
+        for phase in PHASES {
+            let agg = r.cell(phase, None).expect("per-phase aggregate");
+            assert!(agg.count > 0);
+            assert!(agg.p50_cycles <= agg.p99_cycles);
+            assert!(agg.p99_cycles <= agg.p999_cycles);
+        }
+        // the blocked home mapping plus zipf traffic reaches several
+        // shards; at least shard 0 (hottest ranks) must have a cell
+        assert!(r.cell("steady", Some(0)).is_some());
+        assert!(r.counters.get("hits") > 0);
+    }
+
+    #[test]
+    fn overload_sheds_interactive_and_defers_bulk() {
+        // offered load far beyond service capacity with tiny queues:
+        // admission control must engage rather than queue unboundedly
+        let (meta, reqs) = stream(2.0);
+        let mut dev = DeviceBuilder::new().build_assoc(&sharded_spec(2));
+        let cfg = ServiceConfig {
+            queue_cap: 4,
+            batch: 4,
+            ..ServiceConfig::default()
+        };
+        let r = run_service(dev.as_mut(), &cfg, &meta, &reqs);
+        assert!(r.counters.get("shed_interactive") > 0);
+        assert!(r.counters.get("deferred_bulk") > 0);
+        assert!(r.completed_ops < r.offered_ops);
+        assert_eq!(r.counters.get("queue_high_water"), 4);
+    }
+
+    #[test]
+    fn conventional_backend_serves_through_access() {
+        let (meta, reqs) = stream(64.0);
+        let spec = AssocSpec {
+            kind: InPackageKind::DramCache,
+            capacity_bytes: 1 << 16,
+            geom: geom(),
+            cam_sets: 32,
+        };
+        let mut dev = DeviceBuilder::new().build_assoc(&spec);
+        let r = run_service(
+            dev.as_mut(),
+            &ServiceConfig::default(),
+            &meta,
+            &reqs,
+        );
+        assert_eq!(r.planted, 0, "no CAM to plant");
+        assert!(r.completed_ops > 0);
+        assert_eq!(r.lanes, ServiceConfig::default().lanes);
+        assert!(r.cell("all", None).unwrap().p999_cycles > 0);
+    }
+}

@@ -1,0 +1,91 @@
+//! Bounded per-lane request queues.
+//!
+//! One lane per shard (or per contiguous set slice on non-sharded
+//! backends). Queues hold *indices* into the request stream, never the
+//! requests themselves, so a queue entry is 8 bytes and the stream
+//! stays immutable for replay comparison. The bound is enforced by the
+//! admission layer in `service::run_service` — `push` itself asserts
+//! rather than sheds, keeping policy out of the container.
+
+use std::collections::VecDeque;
+
+pub struct LaneQueues {
+    lanes: Vec<VecDeque<usize>>,
+    cap: usize,
+    /// Deepest any lane ever got (telemetry).
+    high_water: usize,
+}
+
+impl LaneQueues {
+    pub fn new(lanes: usize, cap: usize) -> Self {
+        assert!(lanes > 0 && cap > 0);
+        Self {
+            lanes: (0..lanes).map(|_| VecDeque::new()).collect(),
+            cap,
+            high_water: 0,
+        }
+    }
+
+    pub fn num_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn depth(&self, lane: usize) -> usize {
+        self.lanes[lane].len()
+    }
+
+    /// True when the admission layer must shed or defer.
+    pub fn full(&self, lane: usize) -> bool {
+        self.depth(lane) >= self.cap
+    }
+
+    pub fn is_empty(&self, lane: usize) -> bool {
+        self.lanes[lane].is_empty()
+    }
+
+    pub fn all_empty(&self) -> bool {
+        self.lanes.iter().all(|q| q.is_empty())
+    }
+
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    pub fn push(&mut self, lane: usize, idx: usize) {
+        debug_assert!(!self.full(lane), "admission layer must gate pushes");
+        self.lanes[lane].push_back(idx);
+        self.high_water = self.high_water.max(self.lanes[lane].len());
+    }
+
+    /// Dequeue up to `max` entries from one lane, FIFO order.
+    pub fn take(&mut self, lane: usize, max: usize) -> Vec<usize> {
+        let n = self.lanes[lane].len().min(max);
+        self.lanes[lane].drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_bounds() {
+        let mut q = LaneQueues::new(2, 3);
+        for i in 0..3 {
+            assert!(!q.full(0));
+            q.push(0, i);
+        }
+        assert!(q.full(0));
+        assert!(!q.full(1));
+        assert_eq!(q.high_water(), 3);
+        assert_eq!(q.take(0, 2), vec![0, 1]);
+        assert_eq!(q.depth(0), 1);
+        assert_eq!(q.take(0, 10), vec![2]);
+        assert!(q.all_empty());
+        assert_eq!(q.take(1, 4), Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,103 @@
+//! Per-(phase, lane) latency telemetry for the service driver.
+//!
+//! Every completed request records TWO samples into its (phase, lane)
+//! cell: the modeled latency in device cycles (deterministic — part
+//! of the replay fingerprint) and the host wall-clock cost of the
+//! batch that served it in nanoseconds (machine-dependent — reported
+//! but excluded from determinism checks). Aggregation across lanes or
+//! phases is exact histogram merging, never re-sampling.
+
+use crate::util::stats::LogHist;
+
+pub struct Telemetry {
+    phases: usize,
+    lanes: usize,
+    /// `[phase][lane]`, flattened; `.0` = modeled cycles, `.1` = host ns.
+    cells: Vec<(LogHist, LogHist)>,
+}
+
+impl Telemetry {
+    pub fn new(phases: usize, lanes: usize) -> Self {
+        assert!(phases > 0 && lanes > 0);
+        Self {
+            phases,
+            lanes,
+            cells: (0..phases * lanes)
+                .map(|_| (LogHist::new(), LogHist::new()))
+                .collect(),
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    #[inline]
+    pub fn record(
+        &mut self,
+        phase: usize,
+        lane: usize,
+        cycles: u64,
+        host_ns: u64,
+    ) {
+        let cell = &mut self.cells[phase * self.lanes + lane];
+        cell.0.record(cycles);
+        cell.1.record(host_ns);
+    }
+
+    /// One (phase, lane) cell: (modeled cycles, host ns).
+    pub fn cell(&self, phase: usize, lane: usize) -> &(LogHist, LogHist) {
+        &self.cells[phase * self.lanes + lane]
+    }
+
+    /// All lanes of one phase merged.
+    pub fn phase_total(&self, phase: usize) -> (LogHist, LogHist) {
+        let mut cy = LogHist::new();
+        let mut ns = LogHist::new();
+        for lane in 0..self.lanes {
+            let c = self.cell(phase, lane);
+            cy.merge(&c.0);
+            ns.merge(&c.1);
+        }
+        (cy, ns)
+    }
+
+    /// Every sample in the run merged.
+    pub fn grand_total(&self) -> (LogHist, LogHist) {
+        let mut cy = LogHist::new();
+        let mut ns = LogHist::new();
+        for p in 0..self.phases {
+            let (pc, pn) = self.phase_total(p);
+            cy.merge(&pc);
+            ns.merge(&pn);
+        }
+        (cy, ns)
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.grand_total().0.count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregation_is_exact_merging() {
+        let mut t = Telemetry::new(2, 3);
+        t.record(0, 0, 10, 100);
+        t.record(0, 2, 30, 300);
+        t.record(1, 1, 20, 200);
+        assert_eq!(t.cell(0, 0).0.count, 1);
+        assert_eq!(t.cell(0, 1).0.count, 0);
+        let (p0, _) = t.phase_total(0);
+        assert_eq!(p0.count, 2);
+        assert_eq!(p0.min(), 10);
+        assert_eq!(p0.max(), 30);
+        let (all, ns) = t.grand_total();
+        assert_eq!(all.count, 3);
+        assert_eq!(ns.max(), 300);
+        assert_eq!(t.completed(), 3);
+    }
+}

@@ -1,0 +1,190 @@
+//! Compact deterministic trace codec for service request streams.
+//!
+//! A trace file is the *workload contract* between two runs: capture a
+//! generated stream once, replay it bit-identically against any
+//! backend (or the same backend in a later PR), and every difference
+//! in the latency report is attributable to the backend — not the
+//! generator. The format is fixed-width little-endian with no
+//! varints, so `encode(decode(x)) == x` byte-for-byte:
+//!
+//! ```text
+//! header (40 bytes):
+//!   magic    8B  "MONSRV01"
+//!   version  2B  u16 (TRACE_VERSION)
+//!   reserved 2B  zero
+//!   num_sets 4B  u32
+//!   population 8B u64
+//!   seed     8B  u64   (of the generating config, for provenance)
+//!   count    8B  u64
+//! records (count x 30 bytes):
+//!   arrive u64 | key u64 | value_block u64 | set u32 | class u8 | phase u8
+//! ```
+
+use crate::bail;
+use crate::service::gen::{Class, Request, PHASES};
+use crate::util::error::{Context, Result};
+
+pub const MAGIC: [u8; 8] = *b"MONSRV01";
+pub const TRACE_VERSION: u16 = 1;
+const HEADER_BYTES: usize = 40;
+const RECORD_BYTES: usize = 30;
+
+/// Stream-level facts a replayer needs that individual records do not
+/// carry (population/set-space sizes drive planting; the seed is
+/// provenance only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceMeta {
+    pub population: u64,
+    pub num_sets: u32,
+    pub seed: u64,
+}
+
+/// Serialize a stream. Infallible: every `Request` is encodable.
+pub fn encode(meta: &TraceMeta, reqs: &[Request]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_BYTES + RECORD_BYTES * reqs.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&TRACE_VERSION.to_le_bytes());
+    out.extend_from_slice(&[0u8; 2]);
+    out.extend_from_slice(&meta.num_sets.to_le_bytes());
+    out.extend_from_slice(&meta.population.to_le_bytes());
+    out.extend_from_slice(&meta.seed.to_le_bytes());
+    out.extend_from_slice(&(reqs.len() as u64).to_le_bytes());
+    for r in reqs {
+        out.extend_from_slice(&r.arrive.to_le_bytes());
+        out.extend_from_slice(&r.key.to_le_bytes());
+        out.extend_from_slice(&r.value_block.to_le_bytes());
+        out.extend_from_slice(&r.set.to_le_bytes());
+        out.push(match r.class {
+            Class::Interactive => 0,
+            Class::Bulk => 1,
+        });
+        out.push(r.phase);
+    }
+    out
+}
+
+/// Parse a trace, validating magic, version, and framing.
+pub fn decode(bytes: &[u8]) -> Result<(TraceMeta, Vec<Request>)> {
+    if bytes.len() < HEADER_BYTES {
+        bail!("trace too short for header: {} bytes", bytes.len());
+    }
+    if bytes[..8] != MAGIC {
+        bail!("bad trace magic {:02x?}", &bytes[..8]);
+    }
+    let u16_at = |o: usize| u16::from_le_bytes(bytes[o..o + 2].try_into().unwrap());
+    let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+    let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+    let version = u16_at(8);
+    if version != TRACE_VERSION {
+        bail!("trace version {version} (this build reads {TRACE_VERSION})");
+    }
+    let meta = TraceMeta {
+        num_sets: u32_at(12),
+        population: u64_at(16),
+        seed: u64_at(24),
+    };
+    let count = u64_at(32) as usize;
+    let body = &bytes[HEADER_BYTES..];
+    if body.len() != count * RECORD_BYTES {
+        bail!(
+            "trace body is {} bytes, header promises {} records ({})",
+            body.len(),
+            count,
+            count * RECORD_BYTES
+        );
+    }
+    let mut reqs = Vec::with_capacity(count);
+    for (i, rec) in body.chunks_exact(RECORD_BYTES).enumerate() {
+        let f64_ = |o: usize| u64::from_le_bytes(rec[o..o + 8].try_into().unwrap());
+        let set = u32::from_le_bytes(rec[24..28].try_into().unwrap());
+        let class = match rec[28] {
+            0 => Class::Interactive,
+            1 => Class::Bulk,
+            c => bail!("record {i}: bad class byte {c}"),
+        };
+        let phase = rec[29];
+        if phase as usize >= PHASES.len() {
+            bail!("record {i}: bad phase byte {phase}");
+        }
+        if set >= meta.num_sets {
+            bail!("record {i}: set {set} outside {} sets", meta.num_sets);
+        }
+        reqs.push(Request {
+            arrive: f64_(0),
+            key: f64_(8),
+            value_block: f64_(16),
+            set,
+            class,
+            phase,
+        });
+    }
+    Ok((meta, reqs))
+}
+
+/// Capture a stream to a file.
+pub fn write_trace(
+    path: &str,
+    meta: &TraceMeta,
+    reqs: &[Request],
+) -> Result<()> {
+    std::fs::write(path, encode(meta, reqs))
+        .with_context(|| format!("writing trace to {path:?}"))
+}
+
+/// Load a captured stream.
+pub fn read_trace(path: &str) -> Result<(TraceMeta, Vec<Request>)> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading trace from {path:?}"))?;
+    decode(&bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::gen::{generate, TrafficConfig};
+
+    fn meta() -> TraceMeta {
+        TraceMeta { population: 256, num_sets: 128, seed: 7 }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        let cfg = TrafficConfig { seed: 7, ..TrafficConfig::default() };
+        let reqs = generate(&cfg);
+        let bytes = encode(&meta(), &reqs);
+        let (m2, r2) = decode(&bytes).unwrap();
+        assert_eq!(m2, meta());
+        assert_eq!(r2, reqs);
+        // and the re-encode is the same byte stream
+        assert_eq!(encode(&m2, &r2), bytes);
+    }
+
+    #[test]
+    fn corrupt_traces_are_rejected() {
+        let reqs = generate(&TrafficConfig::default());
+        let good = encode(&meta(), &reqs);
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(decode(&bad).is_err());
+        // bad version
+        let mut bad = good.clone();
+        bad[8] = 0xEE;
+        assert!(decode(&bad).is_err());
+        // truncated body
+        assert!(decode(&good[..good.len() - 1]).is_err());
+        // bad class byte in the first record
+        let mut bad = good.clone();
+        bad[40 + 28] = 9;
+        assert!(decode(&bad).is_err());
+    }
+
+    #[test]
+    fn empty_stream_roundtrips() {
+        let bytes = encode(&meta(), &[]);
+        assert_eq!(bytes.len(), 40);
+        let (m, r) = decode(&bytes).unwrap();
+        assert_eq!(m, meta());
+        assert!(r.is_empty());
+    }
+}

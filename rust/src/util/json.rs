@@ -134,10 +134,19 @@ impl From<Vec<Json>> for Json {
     }
 }
 
+/// Version of the shared `--json` envelope (DESIGN.md §JSON
+/// envelope). Bump when a field is renamed/removed or its meaning
+/// changes; adding fields to rows is backward-compatible and does
+/// not bump it.
+pub const SCHEMA_VERSION: u64 = 1;
+
 /// Wrap sweep rows in the standard envelope:
-/// `{"experiment": <name>, "rows": [...]}`.
+/// `{"schema_version": N, "experiment": <name>, "rows": [...]}`.
 pub fn experiment(name: &str, rows: Vec<Json>) -> Json {
-    Json::obj().set("experiment", name).set("rows", rows)
+    Json::obj()
+        .set("schema_version", SCHEMA_VERSION)
+        .set("experiment", name)
+        .set("rows", rows)
 }
 
 /// Render `value` to `path` (plus a trailing newline).
@@ -178,7 +187,7 @@ mod tests {
         let j = experiment("fig12", vec![Json::obj().set("cycles", 7u64)]);
         assert_eq!(
             j.render(),
-            r#"{"experiment":"fig12","rows":[{"cycles":7}]}"#
+            r#"{"schema_version":1,"experiment":"fig12","rows":[{"cycles":7}]}"#
         );
     }
 }

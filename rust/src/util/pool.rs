@@ -87,6 +87,33 @@ mod tests {
     }
 
     #[test]
+    fn single_job_runs_on_the_caller() {
+        // one job never spawns workers (workers.min(jobs) == 1): the
+        // serial path must still run it exactly once, in order
+        let out = fan_out(1, |i| i + 41);
+        assert_eq!(out, vec![41]);
+    }
+
+    #[test]
+    fn more_jobs_than_workers_all_complete() {
+        // far more jobs than any machine's available_parallelism:
+        // workers loop claiming indices until the range drains, and
+        // every slot must be filled in index order
+        use std::sync::atomic::AtomicU64;
+        let runs = AtomicU64::new(0);
+        let jobs = 4096;
+        let out = fan_out(jobs, |i| {
+            runs.fetch_add(1, Ordering::Relaxed);
+            i * 3
+        });
+        assert_eq!(runs.load(Ordering::Relaxed), jobs as u64);
+        assert_eq!(out.len(), jobs);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 3);
+        }
+    }
+
+    #[test]
     fn non_send_state_can_be_built_inside_jobs() {
         // the closure is Sync; per-job Rc construction stays local
         let out = fan_out(8, |i| {

@@ -198,6 +198,16 @@ pub fn fnv1a64(x: u64) -> u64 {
     h
 }
 
+/// FNV-1a over a byte slice (report fingerprints, trace checksums).
+pub fn fnv1a64_bytes(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01B3);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -182,6 +182,143 @@ impl Log2Hist {
     }
 }
 
+/// Log-bucketed histogram with bounded relative error, built for
+/// latency percentiles (the service driver's p50/p99/p999 telemetry).
+///
+/// Values below 64 land in exact unit buckets; above that, each
+/// power-of-two octave splits into 32 linear sub-buckets, so a
+/// recorded value's bucket lower bound is within 1/32 (~3.1%) of the
+/// value. Percentiles are nearest-rank over the bucket counts,
+/// reported as the bucket lower bound clamped into the exact observed
+/// `[min, max]` — so a single-sample histogram returns that sample
+/// exactly at every quantile, and the top rank is always the exact
+/// maximum.
+#[derive(Clone, Debug)]
+pub struct LogHist {
+    buckets: Vec<u64>,
+    pub count: u64,
+    total: u128,
+    min: u64,
+    max: u64,
+}
+
+/// Sub-bucket resolution: 2^5 = 32 linear steps per octave.
+const SUB_BITS: u32 = 5;
+const SUBS: usize = 1 << SUB_BITS;
+/// Values below `2 * SUBS` get exact unit buckets.
+const LINEAR: usize = 2 * SUBS;
+/// 64 exact buckets + 58 octaves (msb 6..=63) of 32 sub-buckets.
+const N_BUCKETS: usize = LINEAR + (64 - SUB_BITS as usize - 1) * SUBS;
+
+fn bucket_of(v: u64) -> usize {
+    if v < LINEAR as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    let shift = msb - SUB_BITS;
+    let sub = ((v >> shift) as usize) & (SUBS - 1);
+    LINEAR + (shift as usize - 1) * SUBS + sub
+}
+
+fn bucket_lower(b: usize) -> u64 {
+    if b < LINEAR {
+        return b as u64;
+    }
+    let shift = ((b - LINEAR) / SUBS + 1) as u32;
+    let sub = ((b - LINEAR) % SUBS) as u64;
+    (SUBS as u64 + sub) << shift
+}
+
+impl Default for LogHist {
+    fn default() -> Self {
+        Self {
+            buckets: vec![0; N_BUCKETS],
+            count: 0,
+            total: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+}
+
+impl LogHist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[bucket_of(v)] += 1;
+        self.count += 1;
+        self.total += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total as f64 / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Nearest-rank percentile (`q` in [0, 1]): the bucket lower
+    /// bound of the rank-`ceil(q * count)` sample, clamped into the
+    /// exact observed `[min, max]`. Empty histograms report 0.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        if rank == self.count {
+            return self.max;
+        }
+        let mut acc = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            acc += n;
+            if acc >= rank {
+                return bucket_lower(b).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.percentile(0.999)
+    }
+
+    pub fn merge(&mut self, other: &LogHist) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.total += other.total;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
 /// Geometric mean over a slice of positive numbers (used for the
 /// paper-style "average speedup" rows).
 pub fn geomean(xs: &[f64]) -> f64 {
@@ -246,6 +383,99 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count, 2);
         assert_eq!(a.total, 110);
+    }
+
+    #[test]
+    fn loghist_single_sample_is_exact_everywhere() {
+        // the single-sample edge: every quantile must return the
+        // sample itself, whatever bucket it lands in
+        for v in [0u64, 1, 63, 64, 65, 12_345, u64::MAX / 3] {
+            let mut h = LogHist::new();
+            h.record(v);
+            for q in [0.0, 0.5, 0.99, 0.999, 1.0] {
+                assert_eq!(h.percentile(q), v, "v={v} q={q}");
+            }
+            assert_eq!(h.min(), v);
+            assert_eq!(h.max(), v);
+        }
+    }
+
+    #[test]
+    fn loghist_exact_in_the_linear_range() {
+        // values below 64 get unit buckets: nearest-rank percentiles
+        // are exact
+        let mut h = LogHist::new();
+        for v in 1..=63u64 {
+            h.record(v);
+        }
+        assert_eq!(h.p50(), 32); // ceil(0.5 * 63) = 32nd smallest
+        assert_eq!(h.percentile(0.99), 63);
+        assert_eq!(h.percentile(1.0 / 63.0), 1);
+    }
+
+    #[test]
+    fn loghist_known_distribution_within_bucket_error() {
+        // uniform 1..=10_000: exact nearest-rank percentiles are
+        // 5000 / 9900 / 9990; the histogram must land within its
+        // 1/32 relative bucket error
+        let mut h = LogHist::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count, 10_000);
+        assert!((h.mean() - 5000.5).abs() < 1e-9);
+        for (q, exact) in [(0.50, 5000.0), (0.99, 9900.0), (0.999, 9990.0)] {
+            let got = h.percentile(q) as f64;
+            let rel = (got - exact).abs() / exact;
+            assert!(rel <= 1.0 / 32.0 + 1e-9, "q={q}: got {got} vs {exact}");
+            assert!(got <= exact + 1e-9, "lower bounds cannot overshoot");
+        }
+        assert_eq!(h.percentile(1.0), 10_000);
+    }
+
+    #[test]
+    fn loghist_two_bucket_boundary() {
+        // 63 is the last exact bucket, 64 opens the first log octave;
+        // 64 and 65 share a sub-bucket; 127/128 straddle an octave
+        let mut h = LogHist::new();
+        h.record(63);
+        h.record(64);
+        assert_eq!(h.percentile(0.5), 63);
+        assert_eq!(h.percentile(1.0), 64);
+        let mut h2 = LogHist::new();
+        h2.record(64);
+        h2.record(65); // same sub-bucket as 64
+        assert_eq!(h2.percentile(0.5), 64);
+        assert_eq!(h2.percentile(1.0), 65);
+        let mut h3 = LogHist::new();
+        h3.record(127);
+        h3.record(128);
+        // 127's bucket lower bound is 126; the observed-min clamp
+        // pulls the report back to the exact sample
+        assert_eq!(h3.percentile(0.5), 127);
+        assert_eq!(h3.percentile(1.0), 128);
+    }
+
+    #[test]
+    fn loghist_merge_matches_combined_recording() {
+        let mut a = LogHist::new();
+        let mut b = LogHist::new();
+        let mut c = LogHist::new();
+        for v in 1..=500u64 {
+            a.record(v);
+            c.record(v);
+        }
+        for v in 501..=1000u64 {
+            b.record(v * 7);
+            c.record(v * 7);
+        }
+        a.merge(&b);
+        assert_eq!(a.count, c.count);
+        assert_eq!(a.min(), c.min());
+        assert_eq!(a.max(), c.max());
+        for q in [0.1, 0.5, 0.9, 0.99, 0.999] {
+            assert_eq!(a.percentile(q), c.percentile(q), "q={q}");
+        }
     }
 
     #[test]

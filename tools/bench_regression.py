@@ -1,0 +1,172 @@
+#!/usr/bin/env python3
+"""Bench snapshot regression gate (stdlib only).
+
+Three modes, all exiting non-zero on failure:
+
+  --service  SNAPSHOT FRESH   modeled serve throughput per (system, load)
+                              must stay within TOLERANCE of the snapshot
+  --xamsearch SNAPSHOT FRESH  engine speedup ratios vs the scalar engine
+                              per workload must stay within TOLERANCE
+                              (ratios, never absolute host ops/sec — the
+                              snapshot machine is not the CI machine)
+  --replay-check JSON...      every file's summary rows must carry the
+                              same modeled_fingerprint (the trace
+                              record -> replay acceptance gate)
+
+Snapshots are committed at the repository root and refreshed by copying
+a CI BENCH_* artifact over them. A snapshot marked "bootstrap": true
+(or with no rows) passes with a notice — that is how the gate is armed
+before the first artifact lands: the comparison logic still runs on
+every CI build, it just has nothing trusted to compare against yet.
+"""
+
+import json
+import sys
+
+TOLERANCE = 0.20  # fail when fresh < snapshot * (1 - TOLERANCE)
+
+
+def fail(msg):
+    print(f"bench_regression: FAIL: {msg}")
+    sys.exit(1)
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except OSError as e:
+        fail(f"cannot read {path}: {e}")
+    except ValueError as e:
+        fail(f"{path} is not valid JSON: {e}")
+    if "schema_version" not in doc:
+        fail(f"{path}: missing schema_version (pre-envelope emitter?)")
+    return doc
+
+
+def is_bootstrap(doc, path):
+    if doc.get("bootstrap") or not doc.get("rows"):
+        print(
+            f"bench_regression: NOTICE: {path} is a bootstrap snapshot "
+            "(no trusted numbers yet); refresh it from a CI BENCH_* "
+            "artifact to arm the gate."
+        )
+        return True
+    return False
+
+
+def summaries(doc):
+    """serve envelopes carry summary + cell rows; keep the summaries."""
+    return [r for r in doc["rows"] if r.get("row") == "summary"]
+
+
+def check_service(snap_path, fresh_path):
+    snap, fresh = load(snap_path), load(fresh_path)
+    fresh_by_key = {
+        (r["system"], r["load"]): r for r in summaries(fresh)
+    }
+    if not fresh_by_key:
+        fail(f"{fresh_path}: no summary rows")
+    if is_bootstrap(snap, snap_path):
+        return
+    compared = 0
+    for r in summaries(snap):
+        key = (r["system"], r["load"])
+        cur = fresh_by_key.get(key)
+        if cur is None:
+            fail(f"{fresh_path}: sweep cell {key} disappeared")
+        old, new = r["ops_per_kcycle"], cur["ops_per_kcycle"]
+        if new < old * (1.0 - TOLERANCE):
+            fail(
+                f"serve {key}: ops/kcycle {new:.3f} regressed >"
+                f"{TOLERANCE:.0%} below snapshot {old:.3f}"
+            )
+        compared += 1
+    print(f"bench_regression: service OK ({compared} cells within "
+          f"{TOLERANCE:.0%} of snapshot)")
+
+
+def speedups(doc, path):
+    """xamsearch rows -> {(engine, workload): ops_per_sec / scalar}."""
+    by_key = {(r["engine"], r["workload"]): r["ops_per_sec"]
+              for r in doc["rows"]}
+    out = {}
+    for (engine, wl), ops in by_key.items():
+        if engine == "scalar":
+            continue
+        base = by_key.get(("scalar", wl))
+        if not base:
+            fail(f"{path}: no scalar baseline for workload {wl!r}")
+        out[(engine, wl)] = ops / base
+    return out
+
+
+def check_xamsearch(snap_path, fresh_path):
+    snap, fresh = load(snap_path), load(fresh_path)
+    fresh_ratios = speedups(fresh, fresh_path)
+    if not fresh_ratios:
+        fail(f"{fresh_path}: no non-scalar engine rows")
+    if is_bootstrap(snap, snap_path):
+        return
+    compared = 0
+    for key, old in speedups(snap, snap_path).items():
+        new = fresh_ratios.get(key)
+        if new is None:
+            fail(f"{fresh_path}: engine cell {key} disappeared")
+        if new < old * (1.0 - TOLERANCE):
+            fail(
+                f"xamsearch {key}: speedup {new:.2f}x regressed >"
+                f"{TOLERANCE:.0%} below snapshot {old:.2f}x"
+            )
+        compared += 1
+    print(f"bench_regression: xamsearch OK ({compared} speedup ratios "
+          f"within {TOLERANCE:.0%} of snapshot)")
+
+
+def check_replay(paths):
+    if len(paths) < 2:
+        fail("--replay-check needs at least two serve envelopes")
+    per_file = []
+    for path in paths:
+        rows = summaries(load(path))
+        if not rows:
+            fail(f"{path}: no summary rows")
+        by_system = {}
+        for r in rows:
+            fp = r.get("modeled_fingerprint")
+            if not fp:
+                fail(f"{path}: summary row without modeled_fingerprint")
+            by_system[r["system"]] = fp
+        per_file.append((path, by_system))
+    base_path, base = per_file[0]
+    for path, cur in per_file[1:]:
+        if set(cur) != set(base):
+            fail(f"{path}: systems {sorted(cur)} != {sorted(base)}")
+        for system, fp in cur.items():
+            if fp != base[system]:
+                fail(
+                    f"replay fingerprint diverged for {system}: "
+                    f"{base_path}={base[system]} vs {path}={fp}"
+                )
+    print(
+        f"bench_regression: replay OK ({len(per_file)} envelopes agree "
+        f"on {len(base)} fingerprint(s))"
+    )
+
+
+def main(argv):
+    if len(argv) >= 4 and argv[1] == "--service":
+        check_service(argv[2], argv[3])
+    elif len(argv) >= 4 and argv[1] == "--xamsearch":
+        check_xamsearch(argv[2], argv[3])
+    elif len(argv) >= 2 and argv[1] == "--replay-check":
+        check_replay(argv[2:])
+    else:
+        fail(
+            "usage: bench_regression.py --service SNAPSHOT FRESH | "
+            "--xamsearch SNAPSHOT FRESH | --replay-check JSON JSON..."
+        )
+
+
+if __name__ == "__main__":
+    main(sys.argv)
