@@ -1,0 +1,33 @@
+//! Hybrid MemCache boundary sweep: the `monarch memcache` sweep as a
+//! bench. Every boundary position of the vault-partitioned
+//! `MonarchHybrid` device runs a cache-mode workload through
+//! `sim::System` and then serves YCSB from the same device's
+//! software-managed path, so all-cache, all-memory and the hybrid
+//! splits are priced on the combined total.
+//!
+//! Acceptance gate: on at least one workload a strict hybrid split
+//! (`0 < cache_vaults < total`) beats BOTH extremes on total modeled
+//! cycles — all-cache has no flat region for YCSB, all-memory serves
+//! every L3 miss as a miss-through, and the middle splits dodge both
+//! penalties.
+
+use monarch::coordinator::{self, Budget};
+
+fn main() {
+    let budget = Budget::default().from_env();
+    let t0 = std::time::Instant::now();
+    let pts = coordinator::memcache_sweep(&budget);
+    coordinator::memcache_table(&pts).print();
+    let wins = coordinator::memcache_wins(&pts);
+    for (wl, cv, h, c, m) in &wins {
+        println!(
+            "  {wl}: C={cv} hybrid total {h} cycles beats all-cache \
+             ({c}) and all-memory ({m})"
+        );
+    }
+    assert!(
+        !wins.is_empty(),
+        "some strict hybrid split must beat both extremes: {pts:?}"
+    );
+    println!("wall time: {:?}", t0.elapsed());
+}

@@ -119,6 +119,15 @@ pub enum InPackageKind {
     MonarchAdaptive { m: u32 },
     /// Monarch in pure flat-RAM mode (paper's "RRAM" hashing baseline).
     MonarchFlatRam,
+    /// Monarch hybrid MemCache: the package's vaults are partitioned
+    /// at `cache_vaults` between a hardware-managed cache region
+    /// (vaults `0..cache_vaults`) and a software-managed flat RAM/CAM
+    /// region (the rest), with the boundary movable at runtime and an
+    /// epoch-based hot-page promotion policy installing hot cache
+    /// pages in the flat region. Registers with **both** the
+    /// cache-mode and the flat/assoc device registries, so one device
+    /// serves L3 misses and software accesses in the same run.
+    MonarchHybrid { cache_vaults: usize, m: u32 },
 }
 
 impl InPackageKind {
@@ -136,6 +145,9 @@ impl InPackageKind {
             }
             Self::MonarchAdaptive { m } => format!("Monarch(adaptive,M={m})"),
             Self::MonarchFlatRam => "RRAM(flat)".into(),
+            Self::MonarchHybrid { cache_vaults, m } => {
+                format!("Monarch(hybrid,C={cache_vaults},M={m})")
+            }
         }
     }
 
@@ -147,6 +159,7 @@ impl InPackageKind {
                 | Self::MonarchSharded { .. }
                 | Self::MonarchAdaptive { .. }
                 | Self::MonarchFlatRam
+                | Self::MonarchHybrid { .. }
         )
     }
 }
@@ -515,7 +528,12 @@ mod tests {
     #[test]
     fn labels() {
         assert_eq!(InPackageKind::Monarch { m: 3 }.label(), "Monarch(M=3)");
+        assert_eq!(
+            InPackageKind::MonarchHybrid { cache_vaults: 4, m: 3 }.label(),
+            "Monarch(hybrid,C=4,M=3)"
+        );
         assert!(InPackageKind::MonarchUnbound.is_monarch());
+        assert!(InPackageKind::MonarchHybrid { cache_vaults: 0, m: 3 }.is_monarch());
         assert!(!InPackageKind::DramCache.is_monarch());
     }
 }

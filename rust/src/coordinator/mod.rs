@@ -22,7 +22,7 @@ use crate::workloads::hashing::{
 use crate::workloads::stringmatch::{
     run_string_match, StringMatchConfig, StringReport,
 };
-use crate::workloads::{graph, nas, SyntheticStream, TraceWorkload};
+use crate::workloads::{graph, nas, SyntheticStream, TraceWorkload, Workload};
 
 /// Experiment scale/budget knobs shared by the CLI and benches.
 #[derive(Clone, Copy, Debug)]
@@ -1156,6 +1156,192 @@ pub fn service_table(points: &[ServicePoint]) -> Table {
     t
 }
 
+/// One measured cell of the `monarch memcache` sweep: one hybrid
+/// split serving a cache-mode workload AND a YCSB hashing run against
+/// the same device, so both halves of the MemCache story are priced
+/// together. The extremes (`cache_vaults = 0` / `= total_vaults`)
+/// degrade to the single-mode controllers: all-cache has no flat
+/// region to serve YCSB (it falls back to the main-memory table walk),
+/// all-memory serves every L3 miss as a miss-through — which is why a
+/// middle split can beat both on the combined total.
+#[derive(Clone, Debug)]
+pub struct MemCachePoint {
+    pub workload: String,
+    pub cache_vaults: usize,
+    pub total_vaults: usize,
+    /// Modeled cycles of the cache-mode phase.
+    pub cache_cycles: u64,
+    pub cache_hit_rate: f64,
+    /// Modeled cycles of the YCSB phase on the same device.
+    pub ycsb_cycles: u64,
+    pub total_cycles: u64,
+    /// Hot pages installed in the flat region by the promotion policy.
+    pub promotions: u64,
+    pub demotions: u64,
+    pub energy_nj: f64,
+}
+
+/// YCSB table size of the memcache sweep (buckets = 2^k).
+const MEMCACHE_TABLE_POW2: usize = 12;
+
+/// The boundary positions the sweep compares: both extremes plus the
+/// quartile splits (deduped for tiny vault counts).
+pub fn memcache_splits(vaults: usize) -> Vec<usize> {
+    let mut s = vec![0, vaults / 4, vaults / 2, 3 * vaults / 4, vaults];
+    s.dedup();
+    s
+}
+
+/// The cache-mode workloads the memcache sweep serves (a graph, a
+/// pointer-chase and a stride kernel from the Fig 9 set — enough
+/// diversity without pricing all 11 per split).
+fn memcache_workloads(budget: &Budget) -> Vec<TraceWorkload> {
+    let keep = ["BFS", "PR", "FT"];
+    cache_workloads(budget)
+        .into_iter()
+        .filter(|w| keep.contains(&w.name()))
+        .collect()
+}
+
+/// The `monarch memcache` sweep: every boundary position of the
+/// hybrid device on every workload. Each (workload, split) cell fans
+/// out as its own job: build one `MonarchHybrid`, run the cache-mode
+/// trace through `sim::System`, then tear the system down
+/// ([`System::into_device`]) and drive YCSB through the same device's
+/// software-managed path. The flat region's CAM partition is sized
+/// for the YCSB table up front (clamped to the region's capacity).
+pub fn memcache_sweep(budget: &Budget) -> Vec<MemCachePoint> {
+    let workloads = memcache_workloads(budget);
+    let base =
+        SystemConfig::scaled(InPackageKind::DramCache, budget.scale);
+    let splits = memcache_splits(base.monarch.vaults);
+    let n_splits = splits.len();
+    fan_out(workloads.len() * n_splits, |i| {
+        let (w, s) = (i / n_splits, i % n_splits);
+        let cache_vaults = splits[s];
+        let kind = InPackageKind::MonarchHybrid { cache_vaults, m: 3 };
+        let cfg = SystemConfig::scaled(kind, budget.scale);
+        let geom = cfg.monarch;
+        let mut wear = cfg.wear;
+        wear.m = 3;
+        let window =
+            (wear.t_mww_cycles(cfg.freq_ghz) as f64 * cfg.scale) as u64;
+        // CAM coverage for the YCSB table, like `hash_system_specs`;
+        // the constructor clamps it to the flat region's capacity
+        let cam_sets = (1usize << MEMCACHE_TABLE_POW2)
+            .div_ceil(geom.cols_per_set)
+            + 1;
+        let dev = crate::monarch::MonarchHybrid::new(
+            geom,
+            cache_vaults,
+            cam_sets,
+            wear,
+            window.max(1),
+            true,
+        );
+        let total_vaults = dev.total_vaults();
+        let mut sys = System::with_device(cfg, Box::new(dev));
+        let mut wl = workloads[w].replay();
+        let r = sys.run(&mut wl, u64::MAX);
+        let mut dev = sys.into_device();
+        let h = dev
+            .monarch_hybrid_mut()
+            .expect("memcache sweep builds MonarchHybrid devices");
+        let ycsb = YcsbConfig {
+            table_pow2: MEMCACHE_TABLE_POW2,
+            window: 32,
+            ops: budget.hash_ops,
+            read_pct: 0.95,
+            prefill_density: 0.5,
+            threads: 8,
+            zipf_theta: 0.99,
+            seed: budget.seed,
+        };
+        let hr = run_ycsb(h, &ycsb);
+        MemCachePoint {
+            workload: r.workload.clone(),
+            cache_vaults,
+            total_vaults,
+            cache_cycles: r.cycles,
+            cache_hit_rate: r.inpkg_hit_rate,
+            ycsb_cycles: hr.cycles,
+            total_cycles: r.cycles + hr.cycles,
+            promotions: h.stats.get("promotions"),
+            demotions: h.stats.get("demotions"),
+            energy_nj: r.energy_nj + hr.energy_nj,
+        }
+    })
+}
+
+/// Per workload: the best strict-hybrid split (`0 < cache_vaults <
+/// total`) that beats BOTH extremes on combined modeled cycles, when
+/// one exists — the sweep's acceptance gate.
+pub fn memcache_wins(
+    points: &[MemCachePoint],
+) -> Vec<(String, usize, u64, u64, u64)> {
+    let mut wins = Vec::new();
+    let mut workloads: Vec<&str> =
+        points.iter().map(|p| p.workload.as_str()).collect();
+    workloads.dedup();
+    for wl in workloads {
+        let of = |pred: &dyn Fn(&MemCachePoint) -> bool| {
+            points
+                .iter()
+                .filter(|&p| p.workload == wl && pred(p))
+                .min_by_key(|p| p.total_cycles)
+        };
+        let all_cache = of(&|p| p.cache_vaults == p.total_vaults);
+        let all_mem = of(&|p| p.cache_vaults == 0);
+        let hybrid =
+            of(&|p| p.cache_vaults > 0 && p.cache_vaults < p.total_vaults);
+        if let (Some(c), Some(m), Some(h)) = (all_cache, all_mem, hybrid) {
+            if h.total_cycles < c.total_cycles
+                && h.total_cycles < m.total_cycles
+            {
+                wins.push((
+                    wl.to_string(),
+                    h.cache_vaults,
+                    h.total_cycles,
+                    c.total_cycles,
+                    m.total_cycles,
+                ));
+            }
+        }
+    }
+    wins
+}
+
+pub fn memcache_table(points: &[MemCachePoint]) -> Table {
+    let mut t = Table::new(
+        "MemCache sweep — hybrid splits vs all-cache / all-memory",
+    )
+    .header(vec![
+        "workload",
+        "cache vaults",
+        "cache cycles",
+        "hit rate",
+        "ycsb cycles",
+        "total cycles",
+        "promos",
+        "demos",
+        "energy(uJ)",
+    ]);
+    for p in points {
+        t.row(vec![
+            p.workload.clone(),
+            format!("{}/{}", p.cache_vaults, p.total_vaults),
+            p.cache_cycles.to_string(),
+            format!("{:.1}%", 100.0 * p.cache_hit_rate),
+            p.ycsb_cycles.to_string(),
+            p.total_cycles.to_string(),
+            p.promotions.to_string(),
+            p.demotions.to_string(),
+            format!("{:.1}", p.energy_nj / 1000.0),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1262,6 +1448,42 @@ mod tests {
         assert_eq!(pts[0].report.offered_ops, pts[1].report.offered_ops);
         let t = service_table(&pts);
         assert!(t.render().contains("ops/kcycle"));
+    }
+
+    #[test]
+    fn memcache_sweep_shapes() {
+        let budget = Budget {
+            trace_ops: 1200,
+            hash_ops: 800,
+            threads: 4,
+            ..Budget::quick()
+        };
+        let pts = memcache_sweep(&budget);
+        let splits =
+            memcache_splits(SystemConfig::default().monarch.vaults).len();
+        assert_eq!(pts.len(), 3 * splits, "3 workloads x splits");
+        for p in &pts {
+            assert!(p.cache_cycles > 0, "{}: no cache phase", p.workload);
+            assert!(p.ycsb_cycles > 0, "{}: no ycsb phase", p.workload);
+            assert_eq!(p.total_cycles, p.cache_cycles + p.ycsb_cycles);
+            if p.cache_vaults == 0 {
+                assert_eq!(
+                    p.cache_hit_rate, 0.0,
+                    "all-memory is miss-through"
+                );
+                assert_eq!(p.promotions, 0, "nothing to promote from");
+            }
+            if p.cache_vaults == p.total_vaults {
+                assert_eq!(p.promotions, 0, "no flat region to promote to");
+            }
+        }
+        let t = memcache_table(&pts);
+        assert!(t.render().contains("total cycles"));
+        // wins() only reports strict hybrids that beat both extremes
+        for (_, cv, h, c, m) in memcache_wins(&pts) {
+            assert!(cv > 0);
+            assert!(h < c && h < m);
+        }
     }
 
     #[test]

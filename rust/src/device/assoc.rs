@@ -26,7 +26,7 @@ use crate::mem::ddr4::MainMemory;
 use crate::mem::dram_cache::TechCache;
 use crate::mem::scratchpad::Scratchpad;
 use crate::mem::{Access, MemReq, ReqKind};
-use crate::monarch::MonarchFlat;
+use crate::monarch::{MonarchFlat, MonarchHybrid};
 use crate::runtime::SearchEngine;
 use crate::xam::XamArray;
 
@@ -704,6 +704,20 @@ fn b_monarch(spec: &AssocSpec) -> Box<dyn AssocDevice> {
     }
 }
 
+fn b_monarch_hybrid(spec: &AssocSpec) -> Box<dyn AssocDevice> {
+    let InPackageKind::MonarchHybrid { cache_vaults, m } = spec.kind else {
+        panic!("b_monarch_hybrid constructor needs InPackageKind::MonarchHybrid")
+    };
+    Box::new(MonarchHybrid::new(
+        spec.geom,
+        cache_vaults,
+        spec.cam_sets,
+        WearConfig::default_m(m),
+        u64::MAX / 4,
+        true,
+    ))
+}
+
 fn is_hbm_c(k: InPackageKind) -> bool {
     matches!(k, InPackageKind::DramCache)
 }
@@ -724,6 +738,9 @@ fn is_monarch(k: InPackageKind) -> bool {
             | InPackageKind::MonarchUnbound
     )
 }
+fn is_monarch_hybrid(k: InPackageKind) -> bool {
+    matches!(k, InPackageKind::MonarchHybrid { .. })
+}
 
 type Entry = (
     fn(InPackageKind) -> bool,
@@ -736,6 +753,7 @@ pub(crate) const BUILTIN_ASSOC_BACKENDS: &[Entry] = &[
     (is_cmos, b_cmos),
     (is_rram_flat, b_rram_flat),
     (is_monarch, b_monarch),
+    (is_monarch_hybrid, b_monarch_hybrid),
     (
         crate::device::sharded::is_monarch_sharded,
         crate::device::sharded::b_monarch_sharded,

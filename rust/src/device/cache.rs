@@ -20,7 +20,7 @@ use crate::mem::dram_cache::{LookupResult, TechCache};
 use crate::mem::scratchpad::Scratchpad;
 use crate::mem::sram_cache::s_cache;
 use crate::mem::MemReq;
-use crate::monarch::MonarchCache;
+use crate::monarch::{MonarchCache, MonarchHybrid};
 use crate::util::stats::Counters;
 
 /// Outcome of a miss fill performed after the main-memory fetch.
@@ -106,6 +106,16 @@ pub trait CacheDevice: Send {
     /// Downcast to the Monarch cache controller (lifetime estimation
     /// and wear diagnostics need its snapshot APIs).
     fn monarch(&self) -> Option<&MonarchCache> {
+        None
+    }
+
+    /// Downcast to the hybrid MemCache device (the memcache sweep
+    /// drives its software-managed path after the cache run).
+    fn monarch_hybrid(&self) -> Option<&MonarchHybrid> {
+        None
+    }
+
+    fn monarch_hybrid_mut(&mut self) -> Option<&mut MonarchHybrid> {
         None
     }
 }
@@ -267,6 +277,25 @@ fn monarch_bounded(cfg: &SystemConfig) -> Box<dyn CacheDevice> {
     Box::new(MonarchCache::new(cfg.monarch, wear, window.max(1), true))
 }
 
+fn monarch_hybrid(cfg: &SystemConfig) -> Box<dyn CacheDevice> {
+    let InPackageKind::MonarchHybrid { cache_vaults, m } = cfg.inpkg else {
+        panic!("monarch_hybrid constructor needs InPackageKind::MonarchHybrid")
+    };
+    let mut wear = cfg.wear;
+    wear.m = m;
+    let window = (wear.t_mww_cycles(cfg.freq_ghz) as f64 * cfg.scale) as u64;
+    // cam_sets = 0: cache-mode builds start with the flat region all
+    // RAM; drivers grow the CAM via `AssocDevice::reconfigure`.
+    Box::new(MonarchHybrid::new(
+        cfg.monarch,
+        cache_vaults,
+        0,
+        wear,
+        window.max(1),
+        true,
+    ))
+}
+
 fn dram_scratchpad(cfg: &SystemConfig) -> Box<dyn CacheDevice> {
     Box::new(Scratchpad::hbm_sp(cfg.inpkg_dram_bytes))
 }
@@ -299,6 +328,9 @@ fn is_dram_scratchpad(k: InPackageKind) -> bool {
 fn is_monarch_flat_ram(k: InPackageKind) -> bool {
     matches!(k, InPackageKind::MonarchFlatRam)
 }
+fn is_monarch_hybrid(k: InPackageKind) -> bool {
+    matches!(k, InPackageKind::MonarchHybrid { .. })
+}
 
 type Entry = (
     fn(InPackageKind) -> bool,
@@ -314,4 +346,5 @@ pub(crate) const BUILTIN_CACHE_BACKENDS: &[Entry] = &[
     (is_monarch_bounded, monarch_bounded),
     (is_dram_scratchpad, dram_scratchpad),
     (is_monarch_flat_ram, monarch_flat_ram),
+    (is_monarch_hybrid, monarch_hybrid),
 ];

@@ -176,7 +176,12 @@ impl DeviceBuilder {
             .find(|(m, _)| m(cfg.inpkg))
             .map(|(_, ctor)| ctor(cfg))
             .unwrap_or_else(|| {
-                panic!("no cache backend registered for {:?}", cfg.inpkg)
+                panic!(
+                    "no cache backend registered for {:?}; registered cache \
+                     kinds: [{}]",
+                    cfg.inpkg,
+                    self.registered_kinds(true).join(", ")
+                )
             })
     }
 
@@ -188,13 +193,53 @@ impl DeviceBuilder {
             .find(|(m, _)| m(spec.kind))
             .map(|(_, ctor)| ctor(spec))
             .unwrap_or_else(|| {
-                panic!("no assoc backend registered for {:?}", spec.kind)
+                panic!(
+                    "no assoc backend registered for {:?}; registered assoc \
+                     kinds: [{}]",
+                    spec.kind,
+                    self.registered_kinds(false).join(", ")
+                )
             });
         if let Some(engine) = &self.engine {
             dev.attach_engine(engine.clone());
         }
         dev
     }
+
+    /// Labels of every `InPackageKind` some registered matcher accepts,
+    /// probed against one representative of each variant — so the
+    /// unregistered-kind panics can tell the user what *would* work.
+    fn registered_kinds(&self, cache_side: bool) -> Vec<String> {
+        known_kinds()
+            .iter()
+            .filter(|&&k| {
+                if cache_side {
+                    self.cache.iter().any(|(m, _)| m(k))
+                } else {
+                    self.assoc.iter().any(|(m, _)| m(k))
+                }
+            })
+            .map(|k| k.label())
+            .collect()
+    }
+}
+
+/// One representative of every `InPackageKind` variant (parameters are
+/// placeholders; matchers ignore them).
+fn known_kinds() -> [InPackageKind; 11] {
+    [
+        InPackageKind::DramCache,
+        InPackageKind::DramCacheIdeal,
+        InPackageKind::DramScratchpad,
+        InPackageKind::Sram,
+        InPackageKind::RramUnbound,
+        InPackageKind::MonarchUnbound,
+        InPackageKind::Monarch { m: 3 },
+        InPackageKind::MonarchSharded { shards: 4, m: 3 },
+        InPackageKind::MonarchAdaptive { m: 3 },
+        InPackageKind::MonarchFlatRam,
+        InPackageKind::MonarchHybrid { cache_vaults: 4, m: 3 },
+    ]
 }
 
 #[cfg(test)]
@@ -213,6 +258,7 @@ mod tests {
             InPackageKind::Monarch { m: 3 },
             InPackageKind::DramScratchpad,
             InPackageKind::MonarchFlatRam,
+            InPackageKind::MonarchHybrid { cache_vaults: 4, m: 3 },
         ] {
             let cfg = SystemConfig::scaled(kind, 1.0 / 4096.0);
             let dev = b.build_cache(&cfg);
@@ -234,6 +280,7 @@ mod tests {
             InPackageKind::MonarchSharded { shards: 4, m: 3 },
             InPackageKind::MonarchAdaptive { m: 3 },
             InPackageKind::MonarchUnbound,
+            InPackageKind::MonarchHybrid { cache_vaults: 2, m: 3 },
         ] {
             let spec = AssocSpec {
                 kind,
@@ -244,6 +291,29 @@ mod tests {
             let dev = b.build_assoc(&spec);
             assert!(!dev.label().is_empty(), "{kind:?}");
         }
+    }
+
+    #[test]
+    fn unregistered_kind_panic_names_it_and_lists_the_registry() {
+        // MonarchSharded is assoc-only: the cache side must reject it
+        // with a message naming the kind and the kinds that do work.
+        let b = DeviceBuilder::new();
+        let cfg = SystemConfig::scaled(
+            InPackageKind::MonarchSharded { shards: 4, m: 3 },
+            1.0 / 4096.0,
+        );
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || b.build_cache(&cfg),
+        ))
+        .expect_err("build_cache must reject MonarchSharded");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("MonarchSharded"), "{msg}");
+        assert!(msg.contains("D-Cache"), "{msg}");
+        assert!(msg.contains("Monarch(hybrid,"), "{msg}");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! monarch stringmatch          §10.5
 //! monarch shards               shard-count throughput sweep
 //! monarch reconfig             static vs spill-only vs adaptive
+//! monarch memcache             hybrid MemCache boundary sweep
 //! monarch cachewave            wave-width sweep of the cache-mode pipeline
 //! monarch xamsearch            host throughput of the XAM search engines
 //! monarch serve                KV service tail-latency sweep
@@ -441,6 +442,43 @@ fn main() -> Result<()> {
                 payload = Some(json::experiment("serve", rows));
             }
         }
+        "memcache" => {
+            // hybrid MemCache sweep: every boundary position of the
+            // vault-partitioned device on every workload, each split
+            // serving a cache-mode trace AND YCSB from one device
+            let pts = coordinator::memcache_sweep(&budget);
+            coordinator::memcache_table(&pts).print();
+            let wins = coordinator::memcache_wins(&pts);
+            if wins.is_empty() {
+                println!(
+                    "  no strict hybrid split beat both extremes at this \
+                     budget"
+                );
+            }
+            for (wl, cv, h, c, m) in &wins {
+                println!(
+                    "  {wl}: C={cv} hybrid total {h} cycles beats \
+                     all-cache ({c}) and all-memory ({m})"
+                );
+            }
+            let jrows = pts
+                .iter()
+                .map(|p| {
+                    Json::obj()
+                        .set("workload", p.workload.clone())
+                        .set("cache_vaults", p.cache_vaults)
+                        .set("total_vaults", p.total_vaults)
+                        .set("cache_cycles", p.cache_cycles)
+                        .set("cache_hit_rate", p.cache_hit_rate)
+                        .set("ycsb_cycles", p.ycsb_cycles)
+                        .set("total_cycles", p.total_cycles)
+                        .set("promotions", p.promotions)
+                        .set("demotions", p.demotions)
+                        .set("energy_nj", p.energy_nj)
+                })
+                .collect();
+            payload = Some(json::experiment("memcache", jrows));
+        }
         "reconfig" => {
             let pts = coordinator::reconfig_sweep_with(
                 &builder_factory(args.flag("pjrt")),
@@ -539,8 +577,8 @@ fn main() -> Result<()> {
             }
             println!(
                 "usage: monarch <table1|fig9|fig10|fig11|fig12|fig13|fig14|\
-                 stringmatch|shards|reconfig|cachewave|xamsearch|serve|\
-                 selfcheck> \
+                 stringmatch|shards|reconfig|memcache|cachewave|xamsearch|\
+                 serve|selfcheck> \
                  [--quick] [--scale S] [--trace-ops N] [--hash-ops N] \
                  [--threads N] [--seed N] [--pjrt] [--json PATH]\n\
                  serve extras: [--load L] [--shards N] [--trace PATH] \

@@ -19,10 +19,14 @@
 //! redistributes writes and flushes dirty supersets on rotation.
 
 use crate::cachehier::Eviction;
-use crate::config::{MonarchGeom, Timing, WearConfig};
+use crate::config::{MonarchGeom, WearConfig};
 use crate::mem::dram_cache::LookupResult;
-use crate::mem::timing::{BankEngine, BankState, ChannelState, EngineOpts, Op};
-use crate::mem::{MemReq};
+use crate::mem::timing::{BankEngine, BankState, ChannelState, Op};
+use crate::mem::MemReq;
+use crate::monarch::vault::{
+    monarch_engine, VAULT_STATIC_WATTS, XAM_READ_NJ, XAM_SEARCH_NJ,
+    XAM_WRITE_NJ,
+};
 use crate::monarch::wear::{WearEvent, WearLeveler};
 use crate::util::stats::{Counters, Log2Hist};
 use crate::xam::{Bank as XamBank, SenseMode, XamArray};
@@ -39,11 +43,6 @@ fn pack_entry(tag: u64, valid: bool, dirty: bool) -> u64 {
         | if valid { VALID_BIT } else { 0 }
         | if dirty { DIRTY_BIT } else { 0 }
 }
-
-/// Energy constants (Table 1, 2R XAM row).
-const XAM_READ_NJ: f64 = 0.0215;
-const XAM_WRITE_NJ: f64 = 0.652;
-const XAM_SEARCH_NJ: f64 = 0.0263;
 
 /// Per-vault cache state.
 #[derive(Clone, Debug)]
@@ -154,7 +153,7 @@ impl MonarchCache {
         };
         Self {
             geom,
-            engine: BankEngine::new(Timing::monarch(), EngineOpts::flat()),
+            engine: monarch_engine(),
             vaults,
             sets_per_vault,
             ways,
@@ -630,6 +629,23 @@ impl MonarchCache {
         self.vaults.iter().map(|v| v.wear.rotations()).sum()
     }
 
+    /// Wear leveler of one cache vault (boundary-migration carry-over
+    /// and diagnostics).
+    pub fn vault_wear(&self, vault: usize) -> &WearLeveler {
+        &self.vaults[vault].wear
+    }
+
+    /// Replace one vault's wear leveler with an inherited history (a
+    /// boundary move hands a surviving vault's wear to the rebuilt
+    /// controller). The incoming leveler is resized to this vault's
+    /// superset count with history preserved per
+    /// [`WearLeveler::resize`].
+    pub fn set_vault_wear(&mut self, vault: usize, mut wear: WearLeveler) {
+        let n = self.vaults[vault].wear.num_supersets();
+        wear.resize(n);
+        self.vaults[vault].wear = wear;
+    }
+
     /// Per-vault wear snapshots: (total writes, max cell writes) per
     /// superset proxy — input to the lifetime estimator.
     pub fn wear_totals(&self) -> Vec<(u64, u64)> {
@@ -646,7 +662,7 @@ impl MonarchCache {
     }
 
     pub fn static_watts(&self) -> f64 {
-        0.05 // resistive arrays: leakage only
+        VAULT_STATIC_WATTS
     }
 
     /// Per-vault rotation-interval write snapshots (the §10.3 lifetime

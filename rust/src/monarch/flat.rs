@@ -30,34 +30,15 @@
 //! sets holding the same resident data — with the wear history carried
 //! over, not reset.
 
-use crate::config::{MonarchGeom, Timing, WearConfig};
-use crate::mem::timing::{BankEngine, BankState, ChannelState, EngineOpts, Op};
+use crate::config::{MonarchGeom, WearConfig};
+use crate::mem::timing::{BankEngine, BankState, ChannelState, Op};
 use crate::mem::Access;
+use crate::monarch::vault::{
+    monarch_engine, BankMode, XAM_READ_NJ, XAM_SEARCH_NJ, XAM_WRITE_NJ,
+};
 use crate::monarch::wear::WearLeveler;
 use crate::util::stats::Counters;
 use crate::xam::{PortMode, SenseMode, XamArray};
-
-const XAM_READ_NJ: f64 = 0.0215;
-const XAM_WRITE_NJ: f64 = 0.652;
-const XAM_SEARCH_NJ: f64 = 0.0263;
-
-/// Per-bank mode latches (sense reference + port selector).
-#[derive(Clone, Copy, Debug)]
-struct BankMode {
-    sense: SenseMode,
-    port: PortMode,
-    state: BankState,
-}
-
-impl Default for BankMode {
-    fn default() -> Self {
-        Self {
-            sense: SenseMode::Read,
-            port: PortMode::RowIn,
-            state: BankState::default(),
-        }
-    }
-}
 
 /// Outcome of one [`MonarchFlat::repartition`] call.
 #[derive(Clone, Debug)]
@@ -126,7 +107,7 @@ impl MonarchFlat {
         let supersets = cam_sets.div_ceil(geom.sets_per_superset).max(1);
         Self {
             geom,
-            engine: BankEngine::new(Timing::monarch(), EngineOpts::flat()),
+            engine: monarch_engine(),
             sets: (0..cam_sets)
                 .map(|_| XamArray::new(geom.rows_per_set, geom.cols_per_set))
                 .collect(),
@@ -412,6 +393,16 @@ impl MonarchFlat {
     /// The wear leveler (diagnostics / carry-over tests).
     pub fn wear(&self) -> &WearLeveler {
         &self.wear
+    }
+
+    /// Replace the wear leveler with an inherited history (a boundary
+    /// migration carries wear across controllers the way
+    /// [`Self::repartition`] carries it across partitions). The
+    /// incoming leveler is resized to this controller's superset count
+    /// with history preserved per [`WearLeveler::resize`].
+    pub fn adopt_wear(&mut self, mut wear: WearLeveler) {
+        wear.resize(self.ss_version.len());
+        self.wear = wear;
     }
 
     /// 64B flat-RAM blocks displaced by converting one set to CAM.

@@ -1,0 +1,942 @@
+//! `MonarchHybrid` — one Monarch package partitioned at a vault
+//! boundary between a hardware-managed cache region (a [`MonarchCache`]
+//! over `cache_vaults` vaults, serving L3 misses) and a
+//! software-managed flat/CAM region (a [`MonarchFlat`] over the
+//! remaining vaults, serving the associative path), the MemCache
+//! organization of PAPERS.md "Die-Stacked DRAM: Memory, Cache, or
+//! MemCache?". The device implements **both** surfaces —
+//! [`CacheDevice`] and [`AssocDevice`] — so a single run can serve
+//! cache-mode misses and flat-path software accesses against the same
+//! stack.
+//!
+//! Three mechanisms beyond the two embedded controllers:
+//!
+//! - **Hot-page promotion** ([`MemCachePolicy`]): an epoch/hysteresis
+//!   policy in the shape of `ReconfigPolicy` counts per-page touches on
+//!   the cache-mode path and migrates hot OS-visible pages into the
+//!   flat region's RAM space (promoted pages are served at flat-RAM
+//!   latency and never miss to DDR4), demoting cold ones back.
+//!   Migration traffic runs through the flat controller's real bank
+//!   timing and the device-local main-memory port; its energy stays in
+//!   the controllers' internal accumulators, matching the Monarch
+//!   convention that cache-mode XAM energy never reaches the
+//!   `SimReport` numerics.
+//! - **Runtime boundary moves** ([`MonarchHybrid::set_boundary`]): the
+//!   cache/memory split itself is a runtime quantity. A move drains
+//!   the flat CAM through the RAM-mode read path, demotes every
+//!   resident page, rebuilds both controllers at the new split, and
+//!   reinstalls the CAM words through `migrate_write` bank timing —
+//!   with `WearLeveler` history carried across the boundary
+//!   (surviving cache vaults keep their levelers; crossing vaults
+//!   export/implant per-superset t_MWW state; the flat region's
+//!   device-wide leveler is adopted with history preserved).
+//! - **Batched-path equivalence**: the associative surface rides the
+//!   `AssocDevice` default `search_many`/`lookup_many` compositions,
+//!   which are pinned controller-equivalent to `MonarchAssoc`'s
+//!   batched overrides, so the `cache_vaults = 0` extreme is
+//!   bit-identical to `MonarchAssoc` at whole-report level (and the
+//!   `cache_vaults = all` extreme delegates verbatim to
+//!   `MonarchCache`). `attach_engine` is deliberately a no-op: the
+//!   compiled-kernel handle is not `Send` and [`CacheDevice`] requires
+//!   `Send`; the pure-rust batched fallback evaluates identically.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::cachehier::Eviction;
+use crate::config::{MonarchGeom, WearConfig};
+use crate::device::assoc::write_back_evicted;
+use crate::device::{
+    AssocDevice, CacheDevice, CamGeom, EvictOutcome, ReconfigOutcome,
+};
+use crate::mem::ddr4::MainMemory;
+use crate::mem::dram_cache::LookupResult;
+use crate::mem::{Access, MemReq, ReqKind};
+use crate::monarch::vault::VAULT_STATIC_WATTS;
+use crate::monarch::{MonarchCache, MonarchFlat, WearLeveler};
+use crate::util::stats::Counters;
+
+/// 4KB OS pages over 64B blocks.
+const BLOCKS_PER_PAGE: u64 = 64;
+
+/// Epoch-based hot-page promotion knobs (the spill/hysteresis shape of
+/// `ReconfigPolicy`): every `epoch_ops` cache-mode lookups the policy
+/// promotes up to `max_promote_per_epoch` pages touched at least
+/// `promote_min_touches` times into the flat region and demotes
+/// residents touched at most `demote_max_touches` times; any migration
+/// opens a `cooldown_epochs` hysteresis window during which the
+/// boundary population holds still.
+#[derive(Clone, Copy, Debug)]
+pub struct MemCachePolicy {
+    pub epoch_ops: u64,
+    pub promote_min_touches: u32,
+    pub demote_max_touches: u32,
+    pub max_promote_per_epoch: usize,
+    pub cooldown_epochs: u32,
+    pub enabled: bool,
+}
+
+impl Default for MemCachePolicy {
+    fn default() -> Self {
+        Self {
+            epoch_ops: 1000,
+            promote_min_touches: 4,
+            demote_max_touches: 1,
+            max_promote_per_epoch: 8,
+            cooldown_epochs: 2,
+            enabled: true,
+        }
+    }
+}
+
+/// Outcome of one runtime boundary move.
+#[derive(Clone, Debug)]
+pub struct BoundaryReport {
+    /// Cycle the drain + migration + quiesce barrier completes.
+    pub done_at: u64,
+    /// Dynamic energy of the migration traffic (nJ).
+    pub energy_nj: f64,
+    pub from_cache_vaults: usize,
+    pub to_cache_vaults: usize,
+    /// Resident CAM words drained and reinstalled (or spilled
+    /// off-chip when the new flat region is smaller).
+    pub migrated_words: u64,
+    /// Promoted pages demoted back to main memory by the move.
+    pub demoted_pages: u64,
+}
+
+/// Largest CAM partition a flat region of geometry `g` can hold.
+fn max_cam_sets(g: &MonarchGeom) -> usize {
+    g.vaults * g.banks_per_vault * g.supersets_per_bank * g.sets_per_superset
+}
+
+/// The hybrid MemCache device. See the module docs.
+pub struct MonarchHybrid {
+    /// Whole-package geometry; the two regions split `geom.vaults`.
+    pub geom: MonarchGeom,
+    cache_vaults: usize,
+    /// Target CAM partition of the flat region (clamped to capacity).
+    cam_sets: usize,
+    wear_cfg: WearConfig,
+    window_cycles: u64,
+    bounded: bool,
+    cache: Option<MonarchCache>,
+    flat: Option<MonarchFlat>,
+    main: MainMemory,
+    policy: MemCachePolicy,
+    /// Promoted page -> flat-RAM slot.
+    resident: HashMap<u64, usize>,
+    dirty_pages: HashSet<u64>,
+    free_slots: Vec<usize>,
+    touches: HashMap<u64, u32>,
+    epoch_ops_seen: u64,
+    cooldown: u32,
+    /// First flat-RAM block of the resident-slot span (above the CAM).
+    resident_base: u64,
+    max_slots: usize,
+    /// Boundary-move energy awaiting `drain_energy_nj` (nJ).
+    migration_nj: f64,
+    pub stats: Counters,
+    label: String,
+}
+
+impl MonarchHybrid {
+    /// Partition `geom.vaults` at `cache_vaults` (clamped); the flat
+    /// region starts with `cam_sets` searchable CAM sets (clamped to
+    /// its capacity). `window_cycles`/`bounded` as in the embedded
+    /// controllers.
+    pub fn new(
+        geom: MonarchGeom,
+        cache_vaults: usize,
+        cam_sets: usize,
+        wear_cfg: WearConfig,
+        window_cycles: u64,
+        bounded: bool,
+    ) -> Self {
+        let cache_vaults = cache_vaults.min(geom.vaults);
+        let mut h = Self {
+            geom,
+            cache_vaults,
+            cam_sets,
+            wear_cfg,
+            window_cycles,
+            bounded,
+            cache: None,
+            flat: None,
+            main: MainMemory::default(),
+            policy: MemCachePolicy::default(),
+            resident: HashMap::new(),
+            dirty_pages: HashSet::new(),
+            free_slots: Vec::new(),
+            touches: HashMap::new(),
+            epoch_ops_seen: 0,
+            cooldown: 0,
+            resident_base: 0,
+            max_slots: 0,
+            migration_nj: 0.0,
+            stats: Counters::new(),
+            label: String::new(),
+        };
+        h.rebuild(cache_vaults);
+        h
+    }
+
+    /// (Re)construct both regions at `cache_vaults`; promotion state
+    /// resets (callers carry wear/contents over explicitly).
+    fn rebuild(&mut self, cache_vaults: usize) {
+        self.cache_vaults = cache_vaults;
+        let geom = self.geom;
+        let wear_cfg = self.wear_cfg;
+        let window = self.window_cycles;
+        let bounded = self.bounded;
+        let cam_target = self.cam_sets;
+        let flat_vaults = geom.vaults - cache_vaults;
+        self.cache = (cache_vaults > 0).then(|| {
+            let g = MonarchGeom { vaults: cache_vaults, ..geom };
+            MonarchCache::new(g, wear_cfg, window, bounded)
+        });
+        self.flat = (flat_vaults > 0).then(|| {
+            let g = MonarchGeom { vaults: flat_vaults, ..geom };
+            let sets = cam_target.min(max_cam_sets(&g));
+            MonarchFlat::new(g, sets, wear_cfg, window, bounded)
+        });
+        self.resident.clear();
+        self.dirty_pages.clear();
+        self.touches.clear();
+        self.epoch_ops_seen = 0;
+        self.cooldown = 0;
+        self.recompute_slots();
+        self.label = format!(
+            "Monarch(hybrid,C={cache_vaults},M={})",
+            self.wear_cfg.m
+        );
+    }
+
+    /// Size the resident-page slot span: the flat-RAM block space
+    /// above the CAM partition, in whole pages.
+    fn recompute_slots(&mut self) {
+        let (base, slots) = match &self.flat {
+            Some(f) => {
+                let total_blocks = (f.geom.total_bytes() / 64) as u64;
+                let cam_blocks =
+                    f.num_cam_sets() as u64 * f.blocks_per_set();
+                let free = total_blocks.saturating_sub(cam_blocks);
+                (cam_blocks, ((free / BLOCKS_PER_PAGE) as usize).min(1 << 14))
+            }
+            None => (0, 0),
+        };
+        self.resident_base = base;
+        self.max_slots = slots;
+        // pop() hands out slot 0 first — deterministic placement
+        self.free_slots = (0..slots).rev().collect();
+    }
+
+    pub fn cache_vaults(&self) -> usize {
+        self.cache_vaults
+    }
+
+    pub fn total_vaults(&self) -> usize {
+        self.geom.vaults
+    }
+
+    pub fn cache(&self) -> Option<&MonarchCache> {
+        self.cache.as_ref()
+    }
+
+    pub fn flat(&self) -> Option<&MonarchFlat> {
+        self.flat.as_ref()
+    }
+
+    pub fn resident_pages(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn policy(&self) -> &MemCachePolicy {
+        &self.policy
+    }
+
+    pub fn policy_mut(&mut self) -> &mut MemCachePolicy {
+        &mut self.policy
+    }
+
+    /// Flat-RAM block holding block `addr/64` of a resident page.
+    fn slot_block(&self, slot: usize, addr: u64) -> u64 {
+        self.resident_base
+            + slot as u64 * BLOCKS_PER_PAGE
+            + (addr / 64) % BLOCKS_PER_PAGE
+    }
+
+    /// Count a cache-mode touch; at epoch boundaries run the
+    /// promotion/demotion pass at the touching request's cycle.
+    fn note_lookup(&mut self, req: &MemReq) {
+        if self.flat.is_none() || !self.policy.enabled || self.max_slots == 0
+        {
+            return;
+        }
+        *self.touches.entry(req.addr >> 12).or_insert(0) += 1;
+        self.epoch_ops_seen += 1;
+        if self.epoch_ops_seen >= self.policy.epoch_ops {
+            self.epoch_ops_seen = 0;
+            self.run_epoch(req.at);
+        }
+    }
+
+    /// One policy epoch: hysteresis cooldown, then demote cold
+    /// residents and promote the hottest non-resident pages (sorted
+    /// hottest-first, page id as the deterministic tiebreak).
+    fn run_epoch(&mut self, now: u64) {
+        self.stats.inc("epochs");
+        if self.cooldown > 0 {
+            self.cooldown -= 1;
+            self.touches.clear();
+            return;
+        }
+        let mut cold: Vec<u64> = self
+            .resident
+            .keys()
+            .copied()
+            .filter(|p| {
+                self.touches.get(p).copied().unwrap_or(0)
+                    <= self.policy.demote_max_touches
+            })
+            .collect();
+        cold.sort_unstable();
+        let mut migrated = false;
+        for page in cold {
+            self.demote_page(page, now);
+            migrated = true;
+        }
+        let mut cands: Vec<(u32, u64)> = self
+            .touches
+            .iter()
+            .filter(|&(p, &c)| {
+                c >= self.policy.promote_min_touches
+                    && !self.resident.contains_key(p)
+            })
+            .map(|(&p, &c)| (c, p))
+            .collect();
+        cands.sort_by_key(|&(c, p)| (std::cmp::Reverse(c), p));
+        for &(_, page) in cands.iter().take(self.policy.max_promote_per_epoch)
+        {
+            if self.free_slots.is_empty() {
+                break;
+            }
+            if self.promote_page(page, now) {
+                migrated = true;
+            }
+        }
+        if migrated {
+            self.cooldown = self.policy.cooldown_epochs;
+        }
+        self.touches.clear();
+    }
+
+    /// Copy a page into the flat region: one off-chip read chained
+    /// into one flat-RAM write per 64B block, through real bank
+    /// timing. A t_MWW-blocked write abandons the promotion.
+    fn promote_page(&mut self, page: u64, now: u64) -> bool {
+        let Some(slot) = self.free_slots.pop() else {
+            return false;
+        };
+        let base = self.resident_base;
+        let Some(flat) = self.flat.as_mut() else {
+            self.free_slots.push(slot);
+            return false;
+        };
+        for o in 0..BLOCKS_PER_PAGE {
+            let ra = self.main.access(&MemReq {
+                addr: page * 4096 + o * 64,
+                kind: ReqKind::Read,
+                at: now,
+                thread: 0,
+            });
+            let block = base + slot as u64 * BLOCKS_PER_PAGE + o;
+            if flat.ram_access(block, true, ra.done_at).is_none() {
+                self.stats.inc("promote_wear_blocked");
+                self.free_slots.push(slot);
+                return false;
+            }
+        }
+        self.resident.insert(page, slot);
+        self.stats.inc("promotions");
+        true
+    }
+
+    /// Copy a resident page back out: flat-RAM reads, plus off-chip
+    /// writes when the page was dirtied while resident.
+    fn demote_page(&mut self, page: u64, now: u64) -> (u64, f64) {
+        let Some(slot) = self.resident.remove(&page) else {
+            return (now, 0.0);
+        };
+        let dirty = self.dirty_pages.remove(&page);
+        let base = self.resident_base;
+        let mut done = now;
+        let mut nj = 0.0;
+        if let Some(flat) = self.flat.as_mut() {
+            for o in 0..BLOCKS_PER_PAGE {
+                let block = base + slot as u64 * BLOCKS_PER_PAGE + o;
+                if let Some(a) = flat.ram_access(block, false, now) {
+                    done = done.max(a.done_at);
+                    nj += a.energy_nj;
+                }
+                if dirty {
+                    let wa = self.main.access(&MemReq {
+                        addr: page * 4096 + o * 64,
+                        kind: ReqKind::Write,
+                        at: done,
+                        thread: 0,
+                    });
+                    done = done.max(wa.done_at);
+                    nj += wa.energy_nj;
+                }
+            }
+        }
+        self.free_slots.push(slot);
+        self.stats.inc("demotions");
+        (done, nj)
+    }
+
+    /// Serve one cache-mode request: resident pages at flat-RAM
+    /// latency, everything else through the cache region (miss-through
+    /// when there is none). Monarch convention: XAM energy stays in
+    /// the controllers' internal accumulators, so results carry zero.
+    fn serve(&mut self, req: &MemReq) -> LookupResult {
+        let page = req.addr >> 12;
+        if let Some(&slot) = self.resident.get(&page) {
+            let write = req.kind.is_write();
+            let block = self.slot_block(slot, req.addr);
+            let flat = self
+                .flat
+                .as_mut()
+                .expect("resident pages require a flat region");
+            match flat.ram_access(block, write, req.at) {
+                Some(a) => {
+                    self.stats.inc(if write {
+                        "resident_hit_w"
+                    } else {
+                        "resident_hit_r"
+                    });
+                    if write {
+                        self.dirty_pages.insert(page);
+                    }
+                    return LookupResult {
+                        hit: true,
+                        done_at: a.done_at,
+                        energy_nj: 0.0,
+                    };
+                }
+                None => {
+                    self.stats.inc("resident_write_blocked");
+                    return LookupResult {
+                        hit: false,
+                        done_at: req.at,
+                        energy_nj: 0.0,
+                    };
+                }
+            }
+        }
+        match self.cache.as_mut() {
+            Some(c) => c.lookup(req),
+            None => {
+                self.stats.inc("miss_through");
+                LookupResult { hit: false, done_at: req.at, energy_nj: 0.0 }
+            }
+        }
+    }
+
+    /// Move the cache/memory boundary to `new_cache_vaults` at
+    /// runtime: demote every resident page, drain the flat CAM
+    /// through the RAM-mode read path, rebuild both controllers at
+    /// the new split with wear history carried across the boundary,
+    /// reinstall the CAM words through `migrate_write` bank timing
+    /// (overflow spills to the off-chip table image), and end on a
+    /// quiesce + prepare barrier.
+    pub fn set_boundary(
+        &mut self,
+        new_cache_vaults: usize,
+        now: u64,
+    ) -> BoundaryReport {
+        let to = new_cache_vaults.min(self.geom.vaults);
+        let from = self.cache_vaults;
+        if to == from {
+            return BoundaryReport {
+                done_at: now,
+                energy_nj: 0.0,
+                from_cache_vaults: from,
+                to_cache_vaults: to,
+                migrated_words: 0,
+                demoted_pages: 0,
+            };
+        }
+        self.stats.inc("boundary_moves");
+        let mut done = now;
+        let mut nj = 0.0;
+        // 1. demote every resident page (the flat region is rebuilt)
+        let mut pages: Vec<u64> = self.resident.keys().copied().collect();
+        pages.sort_unstable();
+        let demoted = pages.len() as u64;
+        for page in pages {
+            let (d, e) = self.demote_page(page, now);
+            done = done.max(d);
+            nj += e;
+        }
+        // 2. drain the flat CAM's resident words; save its wear
+        let mut words: Vec<(usize, usize, u64)> = Vec::new();
+        let mut old_flat_wear: Option<WearLeveler> = None;
+        if let Some(flat) = self.flat.as_mut() {
+            for set in 0..flat.num_cam_sets() {
+                let (d, e, w) = flat.drain_set(set, now);
+                done = done.max(d);
+                nj += e;
+                words.extend(w.into_iter().map(|(c, wd)| (set, c, wd)));
+            }
+            old_flat_wear = Some(flat.wear().clone());
+        }
+        // 3. save the old cache region's per-vault wear
+        let old_vault_wear: Vec<WearLeveler> = match &self.cache {
+            Some(c) => (0..from).map(|v| c.vault_wear(v).clone()).collect(),
+            None => Vec::new(),
+        };
+        // 4. rebuild both controllers at the new split
+        self.rebuild(to);
+        // 5. carry wear across the boundary: surviving cache vaults
+        // keep their levelers; crossing vaults export/implant
+        // per-superset t_MWW state; the flat leveler is adopted with
+        // history preserved
+        if let Some(c) = self.cache.as_mut() {
+            for (v, w) in old_vault_wear.iter().enumerate().take(to) {
+                c.set_vault_wear(v, w.clone());
+            }
+            if let Some(fw) = &old_flat_wear {
+                let exported = fw.export_supersets();
+                for v in from..to {
+                    let mut wl = c.vault_wear(v).clone();
+                    for (i, s) in exported.iter().enumerate() {
+                        wl.implant_superset(i, s);
+                    }
+                    c.set_vault_wear(v, wl);
+                }
+            }
+        }
+        if let Some(flat) = self.flat.as_mut() {
+            if let Some(w) = old_flat_wear {
+                flat.adopt_wear(w);
+            }
+            if old_vault_wear.len() > to {
+                let mut wl = flat.wear().clone();
+                for w in old_vault_wear.iter().skip(to) {
+                    for (i, s) in w.export_supersets().iter().enumerate() {
+                        wl.implant_superset(i, s);
+                    }
+                }
+                flat.adopt_wear(wl);
+            }
+        }
+        // 6. reinstall the drained CAM words through real bank
+        // timing; words past the new partition spill off-chip
+        let mut overflow: Vec<(usize, usize, u64)> = Vec::new();
+        if let Some(flat) = self.flat.as_mut() {
+            let nsets = flat.num_cam_sets();
+            for &(set, col, word) in &words {
+                if set < nsets {
+                    let (d, e) = flat.migrate_write(set, col, word, now);
+                    done = done.max(d);
+                    nj += e;
+                } else {
+                    overflow.push((set, col, word));
+                }
+            }
+            done += crate::config::Timing::monarch().t_rp as u64;
+            flat.quiesce();
+        } else {
+            overflow = words.clone();
+        }
+        if !overflow.is_empty() {
+            let (d, e) = write_back_evicted(
+                &mut self.main,
+                &overflow,
+                self.geom.cols_per_set,
+                done,
+            );
+            done = done.max(d);
+            nj += e;
+        }
+        self.migration_nj += nj;
+        BoundaryReport {
+            done_at: done,
+            energy_nj: nj,
+            from_cache_vaults: from,
+            to_cache_vaults: to,
+            migrated_words: words.len() as u64,
+            demoted_pages: demoted,
+        }
+    }
+}
+
+impl CacheDevice for MonarchHybrid {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn hit_rate(&self) -> f64 {
+        let rh = self.stats.get("resident_hit_r")
+            + self.stats.get("resident_hit_w");
+        let rt = rh
+            + self.stats.get("resident_write_blocked")
+            + self.stats.get("miss_through");
+        let (ch, ct) = match &self.cache {
+            Some(c) => {
+                let h = c.stats.get("hit_r") + c.stats.get("hit_w");
+                (h, h + c.stats.get("miss"))
+            }
+            None => (0, 0),
+        };
+        let total = rt + ct;
+        if total == 0 {
+            0.0
+        } else {
+            (rh + ch) as f64 / total as f64
+        }
+    }
+
+    fn static_watts(&self) -> f64 {
+        VAULT_STATIC_WATTS
+    }
+
+    fn lookup(&mut self, req: &MemReq) -> LookupResult {
+        self.note_lookup(req);
+        self.serve(req)
+    }
+
+    fn lookup_many(&mut self, reqs: &[MemReq]) -> Vec<LookupResult> {
+        if self.flat.is_none() {
+            if let Some(c) = self.cache.as_mut() {
+                return c.lookup_many(reqs);
+            }
+        }
+        // residency decisions and flat-side serves run per-request in
+        // submission order (identical to the scalar sequence); only
+        // the cache-bound subset is batched, and the cache region's
+        // bank state is disjoint from the flat region's, so results
+        // stay bit-identical to scalar dispatch
+        let mut out = vec![
+            LookupResult { hit: false, done_at: 0, energy_nj: 0.0 };
+            reqs.len()
+        ];
+        let mut sub: Vec<MemReq> = Vec::new();
+        let mut sub_idx: Vec<usize> = Vec::new();
+        for (i, r) in reqs.iter().enumerate() {
+            self.note_lookup(r);
+            let page = r.addr >> 12;
+            if self.resident.contains_key(&page) || self.cache.is_none() {
+                out[i] = self.serve(r);
+            } else {
+                sub.push(*r);
+                sub_idx.push(i);
+            }
+        }
+        if let Some(c) = self.cache.as_mut() {
+            for (j, res) in c.lookup_many(&sub).into_iter().enumerate() {
+                out[sub_idx[j]] = res;
+            }
+        }
+        out
+    }
+
+    fn on_l3_evict(&mut self, ev: &Eviction, now: u64) -> EvictOutcome {
+        let page = ev.addr >> 12;
+        if let Some(&slot) = self.resident.get(&page) {
+            if !ev.dirty {
+                return EvictOutcome::default();
+            }
+            let block = self.slot_block(slot, ev.addr);
+            let flat = self
+                .flat
+                .as_mut()
+                .expect("resident pages require a flat region");
+            return match flat.ram_access(block, true, now) {
+                Some(_) => {
+                    self.dirty_pages.insert(page);
+                    EvictOutcome { energy_nj: 0.0, writeback: None }
+                }
+                None => {
+                    self.stats.inc("resident_evict_blocked");
+                    EvictOutcome {
+                        energy_nj: 0.0,
+                        writeback: Some((ev.addr, now)),
+                    }
+                }
+            };
+        }
+        match self.cache.as_mut() {
+            Some(c) => {
+                let (_, wb, _) = c.on_l3_evict(ev, now);
+                EvictOutcome {
+                    energy_nj: 0.0,
+                    writeback: wb.map(|a| (a, now)),
+                }
+            }
+            None => EvictOutcome {
+                energy_nj: 0.0,
+                writeback: ev.dirty.then_some((ev.addr, now)),
+            },
+        }
+    }
+
+    fn rotations(&self) -> u64 {
+        self.cache.as_ref().map(|c| c.rotations()).unwrap_or(0)
+    }
+
+    fn counters(&self) -> Option<&Counters> {
+        if self.flat.is_none() {
+            if let Some(c) = &self.cache {
+                return Some(&c.stats);
+            }
+        }
+        Some(&self.stats)
+    }
+
+    fn force_scalar_eval(&mut self, on: bool) {
+        if let Some(c) = self.cache.as_mut() {
+            c.force_scalar_eval(on);
+        }
+        if let Some(f) = self.flat.as_mut() {
+            f.force_scalar_eval(on);
+        }
+    }
+
+    fn monarch(&self) -> Option<&MonarchCache> {
+        self.cache.as_ref()
+    }
+
+    fn monarch_hybrid(&self) -> Option<&MonarchHybrid> {
+        Some(self)
+    }
+
+    fn monarch_hybrid_mut(&mut self) -> Option<&mut MonarchHybrid> {
+        Some(self)
+    }
+}
+
+impl AssocDevice for MonarchHybrid {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn static_watts(&self) -> f64 {
+        VAULT_STATIC_WATTS
+    }
+
+    fn access(&mut self, addr: u64, write: bool, at: u64) -> Access {
+        // the table's conventional image (metadata) lives off-chip
+        self.main_access(addr, write, at)
+    }
+
+    fn main_access(&mut self, addr: u64, write: bool, at: u64) -> Access {
+        let kind = if write { ReqKind::Write } else { ReqKind::Read };
+        self.main.access(&MemReq { addr, kind, at, thread: 0 })
+    }
+
+    fn main_static_energy_nj(&self, cycles: u64) -> f64 {
+        self.main.static_energy_nj(cycles)
+    }
+
+    fn cam(&self) -> Option<CamGeom> {
+        self.flat.as_ref().map(|f| CamGeom {
+            cols_per_set: f.cols_per_set(),
+            num_sets: f.num_cam_sets(),
+        })
+    }
+
+    fn write_key(&mut self, key: u64, at: u64) -> Access {
+        self.flat
+            .as_mut()
+            .expect("MonarchHybrid: no flat region")
+            .write_key(key, at)
+    }
+
+    fn write_mask(&mut self, mask: u64, at: u64) -> Access {
+        self.flat
+            .as_mut()
+            .expect("MonarchHybrid: no flat region")
+            .write_mask(mask, at)
+    }
+
+    fn search(&mut self, set: usize, at: u64) -> (Access, Option<usize>) {
+        self.flat
+            .as_mut()
+            .expect("MonarchHybrid: no flat region")
+            .search(set, at)
+    }
+
+    fn cam_write(
+        &mut self,
+        set: usize,
+        col: usize,
+        word: u64,
+        at: u64,
+    ) -> Option<Access> {
+        self.flat
+            .as_mut()
+            .expect("MonarchHybrid: no flat region")
+            .cam_write(set, col, word, at)
+    }
+
+    fn ram_access(
+        &mut self,
+        block: u64,
+        write: bool,
+        at: u64,
+    ) -> Option<Access> {
+        self.flat
+            .as_mut()
+            .expect("MonarchHybrid: no flat region")
+            .ram_access(block, write, at)
+    }
+
+    fn reconfigure(
+        &mut self,
+        target_cam_sets: usize,
+        now: u64,
+    ) -> Option<ReconfigOutcome> {
+        let r = self.flat.as_mut()?.repartition(target_cam_sets, now);
+        let (done, wnj) = write_back_evicted(
+            &mut self.main,
+            &r.evicted,
+            self.geom.cols_per_set,
+            r.done_at,
+        );
+        self.cam_sets = r.to_sets;
+        // the CAM span moved: demote any resident pages and re-seat
+        // the slot span above the new partition (free when no pages
+        // were promoted, as on the pure-flat extreme)
+        let mut pages: Vec<u64> = self.resident.keys().copied().collect();
+        pages.sort_unstable();
+        for page in pages {
+            self.demote_page(page, now);
+        }
+        self.recompute_slots();
+        Some(ReconfigOutcome {
+            done_at: done,
+            energy_nj: r.energy_nj + wnj,
+            cam_sets_before: r.from_sets,
+            cam_sets_after: r.to_sets,
+            migrated_words: r.evicted.len() as u64,
+            migrated_blocks: r.migrated_blocks,
+        })
+    }
+
+    fn drain_energy_nj(&mut self) -> f64 {
+        let mut e = self.migration_nj;
+        self.migration_nj = 0.0;
+        if let Some(f) = self.flat.as_mut() {
+            e += f.energy_nj;
+            f.energy_nj = 0.0;
+        }
+        e
+    }
+
+    fn reset_timing(&mut self) {
+        if let Some(f) = self.flat.as_mut() {
+            f.reset_timing();
+        }
+    }
+
+    fn force_scalar_eval(&mut self, on: bool) {
+        CacheDevice::force_scalar_eval(self, on);
+    }
+
+    fn monarch_flat(&self) -> Option<&MonarchFlat> {
+        self.flat.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_geom() -> MonarchGeom {
+        MonarchGeom {
+            vaults: 4,
+            banks_per_vault: 8,
+            supersets_per_bank: 8,
+            sets_per_superset: 8,
+            rows_per_set: 64,
+            cols_per_set: 512,
+            layers: 1,
+        }
+    }
+
+    fn hybrid(cache_vaults: usize) -> MonarchHybrid {
+        MonarchHybrid::new(
+            small_geom(),
+            cache_vaults,
+            16,
+            WearConfig::default_m(3),
+            u64::MAX / 4,
+            true,
+        )
+    }
+
+    fn read(addr: u64, at: u64) -> MemReq {
+        MemReq { addr, kind: ReqKind::Read, at, thread: 0 }
+    }
+
+    #[test]
+    fn extremes_construct_the_expected_regions() {
+        let g = small_geom();
+        let all_cache = hybrid(g.vaults);
+        assert!(all_cache.cache().is_some() && all_cache.flat().is_none());
+        assert!(AssocDevice::cam(&all_cache).is_none());
+        let all_mem = hybrid(0);
+        assert!(all_mem.cache().is_none() && all_mem.flat().is_some());
+        assert_eq!(
+            AssocDevice::cam(&all_mem).map(|c| c.num_sets),
+            Some(16)
+        );
+        let mid = hybrid(2);
+        assert!(mid.cache().is_some() && mid.flat().is_some());
+        assert_eq!(AssocDevice::label(&mid), "Monarch(hybrid,C=2,M=3)");
+    }
+
+    #[test]
+    fn hot_pages_promote_and_serve_from_the_flat_region() {
+        let mut h = hybrid(2);
+        h.policy_mut().epoch_ops = 64;
+        h.policy_mut().promote_min_touches = 2;
+        h.policy_mut().cooldown_epochs = 0;
+        let mut now = 0;
+        for i in 0..1024u64 {
+            let addr = (i % 8) * 64; // hammer one hot page
+            let r = CacheDevice::lookup(&mut h, &read(addr, now));
+            now = r.done_at.max(now) + 1;
+        }
+        assert!(h.stats.get("promotions") >= 1, "hot page promoted");
+        assert_eq!(h.resident_pages(), 1);
+        assert!(h.stats.get("resident_hit_r") >= 1, "served from flat RAM");
+        assert!(CacheDevice::hit_rate(&h) > 0.0);
+    }
+
+    #[test]
+    fn boundary_move_demotes_residents_and_rebuilds() {
+        let mut h = hybrid(2);
+        h.policy_mut().epoch_ops = 64;
+        h.policy_mut().promote_min_touches = 2;
+        h.policy_mut().cooldown_epochs = 0;
+        let mut now = 0;
+        for i in 0..512u64 {
+            let r = CacheDevice::lookup(&mut h, &read((i % 8) * 64, now));
+            now = r.done_at.max(now) + 1;
+        }
+        assert!(h.resident_pages() >= 1);
+        let r = h.set_boundary(3, now);
+        assert_eq!((r.from_cache_vaults, r.to_cache_vaults), (2, 3));
+        assert!(r.demoted_pages >= 1);
+        assert!(r.done_at >= now);
+        assert_eq!(h.cache_vaults(), 3);
+        assert_eq!(h.resident_pages(), 0);
+        assert!(h.cache().is_some() && h.flat().is_some());
+        // further lookups keep working against the rebuilt regions
+        let lr = CacheDevice::lookup(&mut h, &read(64, r.done_at));
+        assert!(lr.done_at >= r.done_at);
+    }
+}

@@ -1,16 +1,21 @@
 //! Monarch — the paper's contribution: vault controllers for the
 //! flat-RAM / flat-CAM / hardware-cache operating modes over XAM
 //! arrays, with `t_MWW` durability enforcement, rotary wear leveling,
-//! and snapshot-based lifetime estimation.
+//! and snapshot-based lifetime estimation. `vault` holds the shared
+//! per-vault machinery; `hybrid` partitions one package between the
+//! cache and flat controllers with a runtime-movable boundary.
 
 pub mod alloc;
 pub mod cache;
 pub mod flat;
+pub mod hybrid;
 pub mod lifetime;
+pub mod vault;
 pub mod wear;
 
 pub use alloc::{Allocator, Region, Space};
 pub use cache::MonarchCache;
 pub use flat::{MonarchFlat, RepartitionReport};
+pub use hybrid::{BoundaryReport, MemCachePolicy, MonarchHybrid};
 pub use lifetime::{LifetimeEstimator, LifetimeReport};
 pub use wear::{WearEvent, WearLeveler};

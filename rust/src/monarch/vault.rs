@@ -1,0 +1,48 @@
+//! Shared vault-controller core for the Monarch devices.
+//!
+//! Both Monarch controllers — the hardware-managed cache mode
+//! (`monarch/cache.rs`) and the software-managed flat/CAM mode
+//! (`monarch/flat.rs`) — drive the same physical vault machinery: XAM
+//! arrays behind per-bank sense/port latches, one [`BankEngine`] with
+//! the paper's resistive timing, per-superset [`WearLeveler`] state and
+//! the Table 1 energy constants. This module is the single source of
+//! truth for that machinery; the two controllers (and the hybrid
+//! device built from both, `monarch/hybrid.rs`) import it instead of
+//! duplicating constants and latch structs.
+
+use crate::config::Timing;
+use crate::mem::timing::{BankEngine, BankState, EngineOpts};
+use crate::xam::{PortMode, SenseMode};
+
+/// Energy constants (Table 1, 2R XAM row) shared by every controller.
+pub const XAM_READ_NJ: f64 = 0.0215;
+pub const XAM_WRITE_NJ: f64 = 0.652;
+pub const XAM_SEARCH_NJ: f64 = 0.0263;
+
+/// Static power of a Monarch stack: resistive arrays, leakage only.
+pub const VAULT_STATIC_WATTS: f64 = 0.05;
+
+/// The bank engine every Monarch controller schedules against: the
+/// paper's resistive timing with the flat-mode engine options.
+pub fn monarch_engine() -> BankEngine {
+    BankEngine::new(Timing::monarch(), EngineOpts::flat())
+}
+
+/// Per-bank mode latches (sense reference + port selector) plus the
+/// bank's reservation state.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct BankMode {
+    pub(crate) sense: SenseMode,
+    pub(crate) port: PortMode,
+    pub(crate) state: BankState,
+}
+
+impl Default for BankMode {
+    fn default() -> Self {
+        Self {
+            sense: SenseMode::Read,
+            port: PortMode::RowIn,
+            state: BankState::default(),
+        }
+    }
+}

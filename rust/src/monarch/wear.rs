@@ -100,6 +100,17 @@ pub struct WearLeveler {
     pub snapshots: Vec<Vec<u64>>,
 }
 
+/// Portable per-superset wear state: the t_MWW window (budget spent,
+/// window start) plus the SWT flags. A boundary migration exports
+/// these from the controller losing a vault and implants them into the
+/// controller gaining it, so durability history survives the move the
+/// way [`WearLeveler::resize`] preserves it across a repartition.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SupersetWear {
+    mww: MwwWindow,
+    swt: SwtEntry,
+}
+
 /// What the controller must do after a write is accounted.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WearEvent {
@@ -254,6 +265,34 @@ impl WearLeveler {
         self.offsets.rotations
     }
 
+    /// Export the per-superset wear state for a boundary migration.
+    pub fn export_supersets(&self) -> Vec<SupersetWear> {
+        self.swt
+            .iter()
+            .zip(&self.mww)
+            .map(|(&swt, &mww)| SupersetWear { mww, swt })
+            .collect()
+    }
+
+    /// Implant exported superset state at index `i` (modulo this
+    /// leveler's superset count — cross-controller moves alias the way
+    /// flat-RAM writes alias supersets), merging conservatively: the
+    /// t_MWW window with more budget spent wins, SWT flags OR
+    /// together, and the written/dirty counters are recomputed so a
+    /// merge cannot leave them overcounting.
+    pub fn implant_superset(&mut self, i: usize, s: &SupersetWear) {
+        let i = i % self.swt.len().max(1);
+        if s.mww.writes >= self.mww[i].writes {
+            self.mww[i] = s.mww;
+        }
+        self.swt[i].written |= s.swt.written;
+        self.swt[i].dirty |= s.swt.dirty;
+        self.superset_counter =
+            self.swt.iter().filter(|e| e.written).count() as u64;
+        self.dirty_counter =
+            self.swt.iter().filter(|e| e.dirty).count() as u64;
+    }
+
     /// All recorded intervals including the (unfinished) current one.
     pub fn all_intervals(&self) -> Vec<Vec<u64>> {
         let mut v = self.snapshots.clone();
@@ -396,6 +435,29 @@ mod tests {
         assert_eq!(wl.num_supersets(), 2);
         assert!(wl.locked(0, 800), "surviving lock still held");
         assert_eq!(wl.write_count(), writes + 1);
+    }
+
+    #[test]
+    fn implant_carries_locks_across_levelers() {
+        let mut src = WearLeveler::new(cfg(1), 4, 10_000);
+        for i in 0..512u64 {
+            assert!(src.on_write(0, false, i).0);
+        }
+        src.on_write(2, true, 600);
+        assert!(src.locked(0, 700));
+        let exported = src.export_supersets();
+        assert_eq!(exported.len(), 4);
+        let mut dst = WearLeveler::new(cfg(1), 2, 10_000);
+        for (i, s) in exported.iter().enumerate() {
+            dst.implant_superset(i, s);
+        }
+        // superset 0's exhausted budget survives the move (aliased
+        // modulo the destination's superset count)
+        assert!(dst.locked(0, 700), "lock must survive the implant");
+        assert!(!dst.locked(1, 700));
+        assert!(!dst.locked(0, 10_001), "window still expires");
+        // superset 2 aliased onto 0: its dirty flag merged in
+        assert!(dst.on_write(1, false, 700).0);
     }
 
     #[test]

@@ -112,6 +112,14 @@ impl System {
         }
     }
 
+    /// Tear the system down to its in-package device, so a run can
+    /// continue against the same device state on another surface (the
+    /// memcache sweep serves YCSB through the hybrid device's
+    /// software-managed path after the cache-mode run).
+    pub fn into_device(self) -> Box<dyn CacheDevice> {
+        self.inpkg
+    }
+
     /// Dynamic energy of one on-die probe chain that reached
     /// `level` (1/2/3; misses probe all three levels). The hierarchy
     /// used to contribute zero dynamic nJ on hits, undercounting

@@ -1003,6 +1003,105 @@ fn bitsliced_engine_survives_adaptive_reconfigure_and_stringmatch() {
     assert_eq!(b.energy_nj.to_bits(), s.energy_nj.to_bits());
 }
 
+// ---- hybrid MemCache split extremes ---------------------------------
+
+/// Numeric whole-report comparison for devices whose labels legally
+/// differ (the hybrid extremes report "Monarch(hybrid,...)" while the
+/// single-mode controllers report "Monarch(M=3)" / "Monarch").
+fn assert_sim_reports_numerically_identical(
+    a: &monarch::sim::SimReport,
+    b: &monarch::sim::SimReport,
+    what: &str,
+) {
+    assert_eq!(a.cycles, b.cycles, "{what}: cycles");
+    assert_eq!(a.mem_ops, b.mem_ops, "{what}: mem_ops");
+    assert_eq!(
+        a.l3_hit_rate.to_bits(),
+        b.l3_hit_rate.to_bits(),
+        "{what}: l3 hit rate"
+    );
+    assert_eq!(
+        a.inpkg_hit_rate.to_bits(),
+        b.inpkg_hit_rate.to_bits(),
+        "{what}: in-package hit rate"
+    );
+    assert_eq!(a.rotations, b.rotations, "{what}: rotations");
+    assert_eq!(
+        a.energy_nj.to_bits(),
+        b.energy_nj.to_bits(),
+        "{what}: energy"
+    );
+    let ca: Vec<_> = a.counters.iter().collect();
+    let cb: Vec<_> = b.counters.iter().collect();
+    assert_eq!(ca, cb, "{what}: counters");
+}
+
+#[test]
+fn hybrid_all_cache_extreme_bit_identical_to_monarch_cache() {
+    // cache_vaults = all: the hybrid has no flat region and every
+    // CacheDevice call is pure delegation to the embedded MonarchCache
+    // built from the same geometry/wear/window — whole SimReports must
+    // be bit-identical to the plain Monarch cache-mode device.
+    let scale = 1.0 / 4096.0;
+    let vaults =
+        SystemConfig::scaled(InPackageKind::DramCache, scale).monarch.vaults;
+    let run = |kind: InPackageKind| {
+        let cfg = SystemConfig::scaled(kind, scale);
+        let mut sys = System::build(cfg);
+        let mut wl = SyntheticStream::zipfian(4, 4000, 1 << 21, 0.9, 0.2, 77);
+        sys.run(&mut wl, u64::MAX)
+    };
+    let plain = run(InPackageKind::Monarch { m: 3 });
+    let hybrid =
+        run(InPackageKind::MonarchHybrid { cache_vaults: vaults, m: 3 });
+    assert_eq!(hybrid.system, format!("Monarch(hybrid,C={vaults},M=3)"));
+    assert_sim_reports_numerically_identical(
+        &plain,
+        &hybrid,
+        "all-cache extreme",
+    );
+}
+
+#[test]
+fn hybrid_all_memory_extreme_bit_identical_to_monarch_assoc() {
+    // cache_vaults = 0: the hybrid's AssocDevice surface is the same
+    // MonarchFlat + MainMemory composition as MonarchAssoc (same wear
+    // config, same window), and the software path never trips the
+    // promotion policy — whole HashReports must agree numerically.
+    use monarch::config::WearConfig;
+    let cfg = YcsbConfig {
+        table_pow2: 12,
+        window: 64,
+        ops: 3000,
+        read_pct: 0.9,
+        threads: 8,
+        ..Default::default()
+    };
+    let cam_sets = (1usize << cfg.table_pow2) / 512 + 1;
+    let mut plain = MonarchAssoc::bounded(small_geom(), cam_sets, 3);
+    let mut hybrid = monarch::monarch::MonarchHybrid::new(
+        small_geom(),
+        0,
+        cam_sets,
+        WearConfig::default_m(3),
+        u64::MAX / 4,
+        true,
+    );
+    let p = run_ycsb(&mut plain, &cfg);
+    let h = run_ycsb(&mut hybrid, &cfg);
+    assert_eq!(h.system, "Monarch(hybrid,C=0,M=3)");
+    assert_eq!(p.cycles, h.cycles, "cycles");
+    assert_eq!(p.ops, h.ops, "ops");
+    assert_eq!(p.hits, h.hits, "hits");
+    assert_eq!(p.rehashes, h.rehashes, "rehashes");
+    assert_eq!(p.energy_nj.to_bits(), h.energy_nj.to_bits(), "energy");
+    let cp: Vec<_> = p.counters.iter().collect();
+    let ch: Vec<_> = h.counters.iter().collect();
+    assert_eq!(cp, ch, "counters");
+    // and the device kept zero promotion state
+    assert_eq!(hybrid.resident_pages(), 0);
+}
+
 #[test]
 fn cachewave_monarch_scales_while_scalar_fallback_stays_flat() {
     // The `monarch cachewave` acceptance gate: Monarch's batched

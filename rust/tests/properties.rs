@@ -387,6 +387,102 @@ fn prop_space_of_window_boundaries() {
 }
 
 #[test]
+fn prop_hybrid_boundary_migration_preserves_t_mww_locks() {
+    // Cross-boundary vault migration on the hybrid MemCache device
+    // must carry WearLeveler history: a superset whose t_MWW budget is
+    // exhausted in the flat region stays locked after the boundary
+    // moves — in the surviving flat leveler AND in the crossing vaults
+    // that join the cache — and unlocks only when the window expires.
+    // (`repartition_preserves_t_mww_locks` pins the intra-flat analog.)
+    use monarch::config::MonarchGeom;
+    use monarch::device::AssocDevice;
+    use monarch::monarch::MonarchHybrid;
+    check("hybrid_boundary_wear_carry", 12, |g: &mut Gen| {
+        let geom = MonarchGeom {
+            vaults: 4,
+            banks_per_vault: 2,
+            supersets_per_bank: 2,
+            sets_per_superset: 2,
+            rows_per_set: 64,
+            cols_per_set: 512,
+            layers: 1,
+        };
+        // disable the rotation triggers so only t_MWW state matters
+        let wear = WearConfig {
+            wc_limit: u64::MAX,
+            dc_limit: u64::MAX,
+            wr_shift: 63,
+            ..WearConfig::default_m(1)
+        };
+        let window = 1_000_000u64;
+        // 1 or 2 cache vaults: a flat region survives both moves
+        let from = 1 + g.int(2);
+        let mut h = MonarchHybrid::new(geom, from, 4, wear, window, true);
+        // exhaust flat superset 0's budget (m=1: 512 block writes);
+        // any block with block/sets_per_superset == 0 maps to it
+        let mut now = 10u64;
+        for i in 0..512u64 {
+            let block = g.int(geom.sets_per_superset) as u64;
+            prop_assert!(
+                h.ram_access(block, true, now).is_some(),
+                "write {i} rejected before the budget ran out"
+            );
+            now += 1;
+        }
+        prop_assert!(
+            h.ram_access(0, true, now).is_none(),
+            "superset 0 must lock after 512 writes"
+        );
+        let locked_now = now;
+        // boundary up: one flat vault crosses into the cache region
+        let to = from + 1;
+        let r = h.set_boundary(to, now);
+        prop_assert!(
+            r.from_cache_vaults == from && r.to_cache_vaults == to,
+            "unexpected boundary report: {r:?}"
+        );
+        let flat = h.flat().expect("flat region survives the move");
+        prop_assert!(
+            flat.wear().locked(0, locked_now),
+            "flat lock lost across the boundary move"
+        );
+        prop_assert!(
+            !flat.wear().locked(1, locked_now),
+            "untouched superset must stay unlocked"
+        );
+        let cache = h.cache().expect("cache region exists");
+        for v in from..to {
+            prop_assert!(
+                cache.vault_wear(v).locked(0, locked_now),
+                "crossing vault {v} did not inherit the lock"
+            );
+        }
+        // boundary back down: the crossing vault returns its history
+        h.set_boundary(from, now);
+        let flat = h.flat().expect("flat region");
+        prop_assert!(
+            flat.wear().locked(0, locked_now),
+            "lock lost on the return move"
+        );
+        prop_assert!(
+            h.ram_access(0, true, locked_now).is_none(),
+            "migrated lock must still block flat-RAM writes"
+        );
+        // window expiry frees the superset and its budget
+        let later = window + 1;
+        prop_assert!(
+            !h.flat().unwrap().wear().locked(0, later),
+            "lock must expire with the window"
+        );
+        prop_assert!(
+            h.ram_access(0, true, later).is_some(),
+            "expired window must accept writes again"
+        );
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_wear_leveler_counts_consistent() {
     check("wear_counts", 30, |g: &mut Gen| {
         let ss = 2 + g.int(32);

@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Bench snapshot regression gate (stdlib only).
 
-Three modes, all exiting non-zero on failure:
+Four modes, all exiting non-zero on failure:
 
   --service  SNAPSHOT FRESH   modeled serve throughput per (system, load)
                               must stay within TOLERANCE of the snapshot
@@ -9,6 +9,10 @@ Three modes, all exiting non-zero on failure:
                               per workload must stay within TOLERANCE
                               (ratios, never absolute host ops/sec — the
                               snapshot machine is not the CI machine)
+  --memcache SNAPSHOT FRESH   hybrid MemCache total cycles per
+                              (workload, cache_vaults) must stay within
+                              TOLERANCE, and some strict hybrid split
+                              must still beat both extremes
   --replay-check JSON...      every file's summary rows must carry the
                               same modeled_fingerprint (the trace
                               record -> replay acceptance gate)
@@ -123,6 +127,58 @@ def check_xamsearch(snap_path, fresh_path):
           f"within {TOLERANCE:.0%} of snapshot)")
 
 
+def hybrid_beats_extremes(doc, path):
+    """The memcache acceptance gate: on some workload a strict split
+    (0 < cache_vaults < total) wins on total cycles over BOTH extremes."""
+    by_wl = {}
+    for r in doc["rows"]:
+        by_wl.setdefault(r["workload"], []).append(r)
+    for wl, rows in by_wl.items():
+        def best(pred):
+            sel = [r["total_cycles"] for r in rows if pred(r)]
+            return min(sel) if sel else None
+        cache = best(lambda r: r["cache_vaults"] == r["total_vaults"])
+        mem = best(lambda r: r["cache_vaults"] == 0)
+        hybrid = best(lambda r: 0 < r["cache_vaults"] < r["total_vaults"])
+        if None in (cache, mem, hybrid):
+            fail(f"{path}: workload {wl!r} is missing a split class")
+        if hybrid < cache and hybrid < mem:
+            return True
+    return False
+
+
+def check_memcache(snap_path, fresh_path):
+    snap, fresh = load(snap_path), load(fresh_path)
+    if not fresh.get("rows"):
+        fail(f"{fresh_path}: no rows")
+    if not hybrid_beats_extremes(fresh, fresh_path):
+        fail(
+            f"{fresh_path}: no strict hybrid split beats both the "
+            "all-cache and all-memory extremes on any workload"
+        )
+    if is_bootstrap(snap, snap_path):
+        return
+    fresh_by_key = {
+        (r["workload"], r["cache_vaults"]): r for r in fresh["rows"]
+    }
+    compared = 0
+    for r in snap["rows"]:
+        key = (r["workload"], r["cache_vaults"])
+        cur = fresh_by_key.get(key)
+        if cur is None:
+            fail(f"{fresh_path}: sweep cell {key} disappeared")
+        # cycles are a cost: regression means the total going UP
+        old, new = r["total_cycles"], cur["total_cycles"]
+        if new > old * (1.0 + TOLERANCE):
+            fail(
+                f"memcache {key}: total cycles {new} regressed >"
+                f"{TOLERANCE:.0%} above snapshot {old}"
+            )
+        compared += 1
+    print(f"bench_regression: memcache OK ({compared} cells within "
+          f"{TOLERANCE:.0%} of snapshot, hybrid beats both extremes)")
+
+
 def check_replay(paths):
     if len(paths) < 2:
         fail("--replay-check needs at least two serve envelopes")
@@ -159,12 +215,15 @@ def main(argv):
         check_service(argv[2], argv[3])
     elif len(argv) >= 4 and argv[1] == "--xamsearch":
         check_xamsearch(argv[2], argv[3])
+    elif len(argv) >= 4 and argv[1] == "--memcache":
+        check_memcache(argv[2], argv[3])
     elif len(argv) >= 2 and argv[1] == "--replay-check":
         check_replay(argv[2:])
     else:
         fail(
             "usage: bench_regression.py --service SNAPSHOT FRESH | "
-            "--xamsearch SNAPSHOT FRESH | --replay-check JSON JSON..."
+            "--xamsearch SNAPSHOT FRESH | --memcache SNAPSHOT FRESH | "
+            "--replay-check JSON JSON..."
         )
 
 
