@@ -1,21 +1,32 @@
 //! Host wall-clock throughput of the XAM functional search engines
-//! (`monarch xamsearch`): the forced-scalar per-column loop vs the
-//! bit-sliced plane engine, single-search and 64-key waves, on the
-//! paper's 64x512 set geometry. This is the repo's first HOST-perf
-//! trajectory point (`BENCH_xamsearch.json`): wall-clock, not modeled
-//! device cycles — modeled observables are engine-independent
-//! (pinned by `tests/device_differential.rs`).
+//! (`monarch xamsearch`), one row per speedup source: the
+//! forced-scalar per-column loop, the bit-sliced plane engine pinned
+//! to the scalar ISA tier (the pre-SIMD baseline), the same engine at
+//! the host's best ISA single-key, batched 64-key waves, and waves
+//! fanned out across host cores — all on the paper's 64x512 set
+//! geometry. This is the repo's first HOST-perf trajectory point
+//! (`BENCH_xamsearch.json`): wall-clock, not modeled device cycles —
+//! modeled observables are engine- and ISA-independent (pinned by
+//! `tests/device_differential.rs`).
 //!
-//! Acceptance gate: the bit-sliced engine must retire miss-heavy
-//! 512-column masked searches at >= 4x the scalar engine's host
-//! throughput (the common miss collapses to a handful of word-wide
-//! plane ops instead of 512 per-column popcount steps), and the
-//! batched wave entry point must hold that margin too.
+//! Acceptance gates:
+//! - every bit-sliced tier retires miss-heavy 512-column searches at
+//!   >= 4x the scalar engine (the common miss collapses to a handful
+//!   of word-wide plane ops instead of 512 per-column steps);
+//! - on hosts where SIMD is live (detected or forced above scalar),
+//!   the wave path must beat the scalar-tier bit-sliced engine by
+//!   >= 2x on miss-heavy masked searches (>= 1.5x under the short
+//!   smoke cells, which are timer-noise bound);
+//! - on hosts with >= 4 workers, the multicore tier must beat the
+//!   single-thread wave by >= 1.2x on misses.
 
 use monarch::coordinator::{self, Budget};
+use monarch::util::pool;
+use monarch::xam::Isa;
 
 fn main() {
     let budget = Budget::default().from_env();
+    let smoke = budget.hash_ops <= Budget::quick().hash_ops;
     let t0 = std::time::Instant::now();
     let pts = coordinator::xamsearch_sweep(&budget);
     coordinator::xamsearch_table(&pts).print();
@@ -25,26 +36,39 @@ fn main() {
             .find(|p| p.engine == engine && p.workload == wl)
             .unwrap_or_else(|| panic!("missing cell {engine}/{wl}"))
     };
+    println!(
+        "  isa: {} (forceable via MONARCH_FORCE_ISA), workers: {}",
+        Isa::active(),
+        pool::max_workers()
+    );
     for wl in ["miss", "masked-miss", "hit"] {
         let s = of("scalar", wl);
         let b = of("bitsliced", wl);
-        let w = of("bitsliced-wave", wl);
+        let v = of("simd", wl);
+        let w = of("simd+wave", wl);
+        let c = of("simd+wave+cores", wl);
         println!(
-            "  {wl}: scalar {:.2} -> bitsliced {:.2} ({:.1}x), \
-             wave {:.2} Msearch/s ({:.1}x)",
+            "  {wl}: scalar {:.2} -> bitsliced {:.2} ({:.1}x), simd \
+             {:.2} ({:.1}x), wave {:.2} ({:.1}x), cores {:.2} \
+             Msearch/s ({:.1}x)",
             s.ops_per_sec / 1e6,
             b.ops_per_sec / 1e6,
             b.ops_per_sec / s.ops_per_sec,
+            v.ops_per_sec / 1e6,
+            v.ops_per_sec / s.ops_per_sec,
             w.ops_per_sec / 1e6,
             w.ops_per_sec / s.ops_per_sec,
+            c.ops_per_sec / 1e6,
+            c.ops_per_sec / s.ops_per_sec,
         );
     }
 
-    // the acceptance gate: >= 4x on the miss-heavy workloads, single
-    // and batched
+    // gate 1: every bit-sliced tier >= 4x scalar on the miss-heavy
+    // workloads
     for wl in ["miss", "masked-miss"] {
         let s = of("scalar", wl).ops_per_sec;
-        for engine in ["bitsliced", "bitsliced-wave"] {
+        for engine in ["bitsliced", "simd", "simd+wave", "simd+wave+cores"]
+        {
             let e = of(engine, wl).ops_per_sec;
             assert!(
                 e >= 4.0 * s,
@@ -52,6 +76,32 @@ fn main() {
                  {e:.0} vs {s:.0} searches/s"
             );
         }
+    }
+
+    // gate 2: with SIMD live, the wave path must clear the PR-5
+    // scalar-tier bit-sliced engine by 2x (1.5x in smoke cells)
+    if Isa::active() > Isa::Scalar {
+        let need = if smoke { 1.5 } else { 2.0 };
+        for wl in ["miss", "masked-miss"] {
+            let b = of("bitsliced", wl).ops_per_sec;
+            let w = of("simd+wave", wl).ops_per_sec;
+            assert!(
+                w >= need * b,
+                "simd+wave must beat scalar-tier bitsliced >= \
+                 {need}x on {wl}: {w:.0} vs {b:.0} searches/s"
+            );
+        }
+    }
+
+    // gate 3: with real parallelism, cores must add on top of waves
+    if pool::max_workers() >= 4 && !smoke {
+        let w = of("simd+wave", "miss").ops_per_sec;
+        let c = of("simd+wave+cores", "miss").ops_per_sec;
+        assert!(
+            c >= 1.2 * w,
+            "simd+wave+cores must beat simd+wave >= 1.2x on miss: \
+             {c:.0} vs {w:.0} searches/s"
+        );
     }
     println!("wall time: {:?}", t0.elapsed());
 }

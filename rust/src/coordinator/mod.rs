@@ -856,12 +856,18 @@ pub fn shard_table(points: &[ShardSweepPoint]) -> Table {
 /// functional XAM search engines, not modeled device cycles.
 #[derive(Clone, Debug)]
 pub struct XamSearchPoint {
-    /// `"scalar"` (forced per-column), `"bitsliced"` (plane engine),
-    /// or `"bitsliced-wave"` (batched 64-key plane sweeps).
+    /// `"scalar"` (forced per-column), `"bitsliced"` (plane engine
+    /// pinned to the scalar ISA tier — the pre-SIMD baseline),
+    /// `"simd"` (plane engine at the host's best ISA, single-key),
+    /// `"simd+wave"` (batched 64-key plane sweeps at the best ISA) or
+    /// `"simd+wave+cores"` (waves fanned out across host cores).
     pub engine: String,
     /// `"miss"` (random keys, full mask), `"masked-miss"` (random
     /// keys, 32-bit mask) or `"hit"` (stored keys, full mask).
     pub workload: String,
+    /// ISA tier the cell's plane sweeps actually ran at (`"scalar"`,
+    /// `"sse2"` or `"avx2"`); `"scalar"` for the per-column engine.
+    pub isa: String,
     /// Searches retired in this cell.
     pub searches: u64,
     /// Host wall-clock the cell ran for (ms).
@@ -892,15 +898,18 @@ fn xamsearch_cell(
 }
 
 /// Host wall-clock throughput of the XAM functional search engines on
-/// the paper's 64x512 set geometry: forced-scalar per-column vs the
-/// bit-sliced plane engine, single-search and batched (64-key waves
-/// through `search_many_bitsliced` against one array). Each cell runs
-/// for a fixed minimum wall time, so ops/sec stays stable at smoke
-/// budgets too. Feeds the `xam_search` bench, the `monarch xamsearch`
-/// CLI row set and the `BENCH_xamsearch.json` trajectory.
+/// the paper's 64x512 set geometry, one row per speedup source:
+/// forced-scalar per-column, the bit-sliced plane engine pinned to
+/// the scalar ISA tier (the pre-SIMD baseline), the same engine at
+/// the host's best ISA single-key, batched 64-key waves through
+/// `search_many_bitsliced`, and waves fanned out across host cores
+/// via `pool::fan_out`. Each cell runs for a fixed minimum wall time,
+/// so ops/sec stays stable at smoke budgets too. Feeds the
+/// `xam_search` bench, the `monarch xamsearch` CLI row set and the
+/// `BENCH_xamsearch.json` trajectory.
 pub fn xamsearch_sweep(budget: &Budget) -> Vec<XamSearchPoint> {
     use crate::util::rng::Rng;
-    use crate::xam::{SearchScratch, XamArray};
+    use crate::xam::{Isa, SearchScratch, XamArray};
 
     let mut rng = Rng::new(budget.seed);
     let mut bits = XamArray::new(64, 512);
@@ -909,7 +918,12 @@ pub fn xamsearch_sweep(budget: &Budget) -> Vec<XamSearchPoint> {
     }
     let mut scalar = bits.clone();
     scalar.force_scalar(true);
+    let mut sliced = bits.clone();
+    sliced.force_isa(Isa::Scalar);
     const N_KEYS: usize = 512;
+    // the cores tier widens each timed pass so every worker gets a
+    // meaningful slice of 64-key waves
+    const CORE_REPEATS: usize = 8;
     let miss: Vec<u64> = (0..N_KEYS).map(|_| rng.next_u64()).collect();
     let hit: Vec<u64> = (0..N_KEYS)
         .map(|_| bits.read_col(rng.usize_below(512)))
@@ -921,10 +935,12 @@ pub fn xamsearch_sweep(budget: &Budget) -> Vec<XamSearchPoint> {
     } else {
         40.0
     };
-    let point = |engine: &str, wl: &str, searches: u64, ms: f64| {
+    let isa = bits.isa().name();
+    let point = |engine: &str, wl: &str, isa: &str, searches: u64, ms: f64| {
         XamSearchPoint {
             engine: engine.to_string(),
             workload: wl.to_string(),
+            isa: isa.to_string(),
             searches,
             host_wall_ms: ms,
             ops_per_sec: searches as f64 / (ms / 1e3).max(1e-9),
@@ -947,7 +963,15 @@ pub fn xamsearch_sweep(budget: &Budget) -> Vec<XamSearchPoint> {
             }
             s
         });
-        points.push(point("scalar", wl, n, ms));
+        points.push(point("scalar", wl, "scalar", n, ms));
+        let (n, ms) = xamsearch_cell(min_wall_ms, keys.len() as u64, || {
+            let mut s = 0u64;
+            for &k in keys {
+                s = s.wrapping_add(fold(sliced.search_first(k, mask)));
+            }
+            s
+        });
+        points.push(point("bitsliced", wl, "scalar", n, ms));
         let (n, ms) = xamsearch_cell(min_wall_ms, keys.len() as u64, || {
             let mut s = 0u64;
             for &k in keys {
@@ -955,7 +979,7 @@ pub fn xamsearch_sweep(budget: &Budget) -> Vec<XamSearchPoint> {
             }
             s
         });
-        points.push(point("bitsliced", wl, n, ms));
+        points.push(point("simd", wl, isa, n, ms));
         let (n, ms) = xamsearch_cell(min_wall_ms, keys.len() as u64, || {
             let mut s = 0u64;
             for (kc, mc) in keys.chunks(64).zip(masks.chunks(64)) {
@@ -972,7 +996,39 @@ pub fn xamsearch_sweep(budget: &Budget) -> Vec<XamSearchPoint> {
             }
             s
         });
-        points.push(point("bitsliced-wave", wl, n, ms));
+        points.push(point("simd+wave", wl, isa, n, ms));
+        // fan the same waves out across host cores: one 64-key chunk
+        // per job, per-job scratch, shared read-only array
+        let wide_keys: Vec<u64> = keys
+            .iter()
+            .cycle()
+            .take(N_KEYS * CORE_REPEATS)
+            .copied()
+            .collect();
+        let wide_masks = vec![mask; wide_keys.len()];
+        let chunks: Vec<(&[u64], &[u64])> =
+            wide_keys.chunks(64).zip(wide_masks.chunks(64)).collect();
+        let bits_ref = &bits;
+        let (n, ms) =
+            xamsearch_cell(min_wall_ms, wide_keys.len() as u64, || {
+                fan_out(chunks.len(), |i| {
+                    let (kc, mc) = chunks[i];
+                    let mut scratch = SearchScratch::new();
+                    let mut out = Vec::with_capacity(kc.len());
+                    bits_ref.search_many_bitsliced(
+                        kc,
+                        mc,
+                        &mut scratch,
+                        &mut out,
+                    );
+                    out.iter()
+                        .map(|&o| fold(o))
+                        .fold(0u64, u64::wrapping_add)
+                })
+                .into_iter()
+                .fold(0u64, u64::wrapping_add)
+            });
+        points.push(point("simd+wave+cores", wl, isa, n, ms));
     }
     points
 }
@@ -984,6 +1040,7 @@ pub fn xamsearch_table(points: &[XamSearchPoint]) -> Table {
     .header(vec![
         "engine",
         "workload",
+        "isa",
         "searches",
         "wall ms",
         "Msearch/s",
@@ -998,6 +1055,7 @@ pub fn xamsearch_table(points: &[XamSearchPoint]) -> Table {
         t.row(vec![
             p.engine.clone(),
             p.workload.clone(),
+            p.isa.clone(),
             p.searches.to_string(),
             format!("{:.1}", p.host_wall_ms),
             format!("{:.2}", p.ops_per_sec / 1e6),

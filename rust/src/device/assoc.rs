@@ -221,6 +221,13 @@ pub trait AssocDevice {
     /// XAM arrays ignore it.
     fn force_scalar_eval(&mut self, _on: bool) {}
 
+    /// Pin the SIMD tier of the bit-sliced engine (clamped to host
+    /// support). Like [`AssocDevice::force_scalar_eval`] this is a
+    /// host-speed toggle only — every tier is bit-identical on modeled
+    /// cycles, energy, wear and counters. Backends without XAM arrays
+    /// ignore it.
+    fn force_isa(&mut self, _isa: crate::xam::Isa) {}
+
     /// Downcast to the flat-mode controller (tests / diagnostics).
     fn monarch_flat(&self) -> Option<&MonarchFlat> {
         None
@@ -627,6 +634,10 @@ impl AssocDevice for MonarchAssoc {
 
     fn force_scalar_eval(&mut self, on: bool) {
         self.flat.force_scalar_eval(on);
+    }
+
+    fn force_isa(&mut self, isa: crate::xam::Isa) {
+        self.flat.force_isa(isa);
     }
 
     fn monarch_flat(&self) -> Option<&MonarchFlat> {

@@ -103,6 +103,13 @@ pub trait CacheDevice: Send {
     /// `tests/device_differential.rs`). Non-XAM devices ignore it.
     fn force_scalar_eval(&mut self, _on: bool) {}
 
+    /// Pin the SIMD tier of the bit-sliced engine (clamped to host
+    /// support). Host-speed toggle only, like
+    /// [`CacheDevice::force_scalar_eval`]: every tier is bit-identical
+    /// on modeled cycles, energy, wear and counters. Non-XAM devices
+    /// ignore it.
+    fn force_isa(&mut self, _isa: crate::xam::Isa) {}
+
     /// Downcast to the Monarch cache controller (lifetime estimation
     /// and wear diagnostics need its snapshot APIs).
     fn monarch(&self) -> Option<&MonarchCache> {
@@ -203,6 +210,10 @@ impl CacheDevice for MonarchCache {
 
     fn force_scalar_eval(&mut self, on: bool) {
         MonarchCache::force_scalar_eval(self, on);
+    }
+
+    fn force_isa(&mut self, isa: crate::xam::Isa) {
+        MonarchCache::force_isa(self, isa);
     }
 
     fn counters(&self) -> Option<&Counters> {

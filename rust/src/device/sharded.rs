@@ -192,7 +192,57 @@ impl ShardedAssoc {
         }
         SearchEngine::search_sets_fallback(&arrays, keys, masks)
     }
+
+    /// Functional evaluation of a whole batch, one sub-batch per shard
+    /// (`sets[s]` are shard-local). When no PJRT engine is attached
+    /// (the engine holds `Rc` state and must stay on the caller
+    /// thread), more than one shard is busy, and the batch is big
+    /// enough to amortize thread spawn, each busy shard's pure-rust
+    /// evaluation runs on its own core via [`crate::util::pool::
+    /// fan_out`]. Evaluation is pure (`&self`, arrays only — no
+    /// controller registers, timing, energy or wear), so the parallel
+    /// and serial paths are bit-identical by construction; the
+    /// differential suite pins it anyway.
+    fn eval_shards(
+        &self,
+        sets: &[Vec<usize>],
+        keys: &[Vec<u64>],
+        masks: &[Vec<u64>],
+    ) -> Vec<Vec<Option<usize>>> {
+        let n = self.shards.len();
+        if self.engine.is_none() {
+            let busy = sets.iter().filter(|s| !s.is_empty()).count();
+            let total: usize = sets.iter().map(|s| s.len()).sum();
+            if busy > 1
+                && total >= PARALLEL_EVAL_MIN_OPS
+                && crate::util::pool::max_workers() > 1
+            {
+                let arrays: Vec<Vec<&XamArray>> = (0..n)
+                    .map(|s| {
+                        let flat = &self.shards[s];
+                        sets[s]
+                            .iter()
+                            .map(|&l| flat.set_array(l))
+                            .collect()
+                    })
+                    .collect();
+                return crate::util::pool::fan_out(n, |s| {
+                    SearchEngine::search_sets_fallback(
+                        &arrays[s], &keys[s], &masks[s],
+                    )
+                });
+            }
+        }
+        (0..n)
+            .map(|s| self.batch_eval(s, &sets[s], &keys[s], &masks[s]))
+            .collect()
+    }
 }
+
+/// Minimum total ops in a batch before the per-shard functional
+/// evaluations fan out over OS threads; below it, spawn overhead
+/// dominates the pure evaluation work.
+const PARALLEL_EVAL_MIN_OPS: usize = 32;
 
 impl AssocDevice for ShardedAssoc {
     fn label(&self) -> &str {
@@ -283,31 +333,37 @@ impl AssocDevice for ShardedAssoc {
     /// shards overlap in time instead of serializing through a single
     /// register pair. Results come back in submission order.
     fn search_many(&mut self, ops: &[SearchOp]) -> Vec<SearchHit> {
-        let mut by_shard: Vec<Vec<usize>> =
-            vec![Vec::new(); self.shards.len()];
+        let n = self.shards.len();
+        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); n];
         for (i, op) in ops.iter().enumerate() {
             by_shard[self.shard_of_set(op.set)].push(i);
         }
+        // per-shard functional evaluation lists, then ONE multicore
+        // evaluation pass over every busy shard ...
+        let mut sets: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut keys: Vec<Vec<u64>> = vec![Vec::new(); n];
+        let mut masks: Vec<Vec<u64>> = vec![Vec::new(); n];
+        for (s, idxs) in by_shard.iter().enumerate() {
+            for &i in idxs {
+                sets[s].push(self.local_set(ops[i].set));
+                keys[s].push(ops[i].key);
+                masks[s].push(ops[i].mask);
+            }
+        }
+        let fresh = self.eval_shards(&sets, &keys, &masks);
+        // ... then the serial per-op controller pass, scattering each
+        // result straight into its submission-order slot
         let mut out: Vec<Option<SearchHit>> = vec![None; ops.len()];
         for (s, idxs) in by_shard.iter().enumerate() {
-            if idxs.is_empty() {
-                continue;
-            }
-            let sets: Vec<usize> =
-                idxs.iter().map(|&i| self.local_set(ops[i].set)).collect();
-            let keys: Vec<u64> = idxs.iter().map(|&i| ops[i].key).collect();
-            let masks: Vec<u64> =
-                idxs.iter().map(|&i| ops[i].mask).collect();
-            let fresh = self.batch_eval(s, &sets, &keys, &masks);
             let flat = &mut self.shards[s];
             for (j, &i) in idxs.iter().enumerate() {
                 let op = &ops[i];
                 let ka = flat.write_key(op.key, op.at);
                 let ma = flat.write_mask(op.mask, ka.done_at);
                 let (a, hit) = flat.search_precomputed(
-                    sets[j],
+                    sets[s][j],
                     ma.done_at,
-                    Some(fresh[j]),
+                    Some(fresh[s][j]),
                 );
                 out[i] = Some(SearchHit {
                     done_at: a.done_at,
@@ -352,9 +408,7 @@ impl AssocDevice for ShardedAssoc {
             });
             route.push((s0, i0, spill));
         }
-        let fresh: Vec<Vec<Option<usize>>> = (0..n)
-            .map(|s| self.batch_eval(s, &sets[s], &keys[s], &masks[s]))
-            .collect();
+        let fresh = self.eval_shards(&sets, &keys, &masks);
         lookups
             .iter()
             .zip(route)
@@ -573,6 +627,12 @@ impl AssocDevice for ShardedAssoc {
         }
     }
 
+    fn force_isa(&mut self, isa: crate::xam::Isa) {
+        for flat in self.shards.iter_mut() {
+            flat.force_isa(isa);
+        }
+    }
+
     fn monarch_flat(&self) -> Option<&MonarchFlat> {
         // only meaningful when the device is a single controller;
         // per-shard state is exposed via `shard_flat`
@@ -710,6 +770,52 @@ mod tests {
         let spread =
             done4.iter().max().unwrap() - done4.iter().min().unwrap();
         assert_eq!(spread, 0, "per-shard bursts must overlap: {done4:?}");
+    }
+
+    #[test]
+    fn parallel_shard_eval_is_bit_identical_to_serial_sub_batches() {
+        // one 64-op batch over 4 shards crosses PARALLEL_EVAL_MIN_OPS
+        // and fans its functional evaluation out over cores (when the
+        // host has them); 8-op sub-batches stay on the serial path.
+        // Each shard sees the identical op sequence either way, so
+        // hits, completion cycles and energy must agree bit-for-bit.
+        let plant = |d: &mut ShardedAssoc| {
+            for set in 0..16usize {
+                let _ =
+                    d.cam_write(set, (set * 7) % 512, 0x5000 + set as u64, 0);
+            }
+        };
+        let mut big = ShardedAssoc::new(geom(), 16, 4);
+        let mut small = ShardedAssoc::new(geom(), 16, 4);
+        plant(&mut big);
+        plant(&mut small);
+        let ops: Vec<SearchOp> = (0..64)
+            .map(|i| {
+                let set = (i * 5) % 16;
+                let key = if i % 3 == 0 {
+                    0x5000 + set as u64
+                } else {
+                    0x9999 + i as u64
+                };
+                let mask = if i % 4 == 0 { 0xFFFF } else { !0 };
+                SearchOp::at(set, key, mask, 2_000)
+            })
+            .collect();
+        let a = big.search_many(&ops);
+        let mut b = Vec::new();
+        for chunk in ops.chunks(8) {
+            b.extend(small.search_many(chunk));
+        }
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(x.col, y.col, "op {i}: col");
+            assert_eq!(x.done_at, y.done_at, "op {i}: done_at");
+            assert_eq!(
+                x.energy_nj.to_bits(),
+                y.energy_nj.to_bits(),
+                "op {i}: energy"
+            );
+        }
     }
 
     #[test]

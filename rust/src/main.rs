@@ -328,9 +328,10 @@ fn main() -> Result<()> {
             payload = Some(json::experiment("cachewave", jrows));
         }
         "xamsearch" => {
-            // host wall-clock of the functional search engines: the
-            // forced-scalar per-column loop vs the bit-sliced plane
-            // engine, single-search and 64-key waves
+            // host wall-clock of the functional search engines, one
+            // row per speedup source: forced-scalar per-column, the
+            // bit-sliced plane engine at the scalar ISA tier, then
+            // SIMD single-key, 64-key waves and multicore waves
             let pts = coordinator::xamsearch_sweep(&budget);
             coordinator::xamsearch_table(&pts).print();
             let of = |engine: &str, wl: &str| {
@@ -339,15 +340,20 @@ fn main() -> Result<()> {
                     .map(|p| p.ops_per_sec)
             };
             for wl in ["miss", "masked-miss", "hit"] {
-                if let (Some(s), Some(b), Some(w)) = (
+                if let (Some(s), Some(b), Some(v), Some(w), Some(c)) = (
                     of("scalar", wl),
                     of("bitsliced", wl),
-                    of("bitsliced-wave", wl),
+                    of("simd", wl),
+                    of("simd+wave", wl),
+                    of("simd+wave+cores", wl),
                 ) {
                     println!(
-                        "  {wl}: bitsliced {:.2}x, wave {:.2}x vs scalar",
+                        "  {wl}: bitsliced {:.2}x, simd {:.2}x, wave \
+                         {:.2}x, cores {:.2}x vs scalar",
                         b / s.max(1e-9),
-                        w / s.max(1e-9)
+                        v / s.max(1e-9),
+                        w / s.max(1e-9),
+                        c / s.max(1e-9)
                     );
                 }
             }
@@ -357,6 +363,7 @@ fn main() -> Result<()> {
                     Json::obj()
                         .set("engine", p.engine.clone())
                         .set("workload", p.workload.clone())
+                        .set("isa", p.isa.clone())
                         .set("searches", p.searches)
                         .set("host_wall_ms", p.host_wall_ms)
                         .set("ops_per_sec", p.ops_per_sec)

@@ -178,6 +178,16 @@ impl MonarchCache {
         }
     }
 
+    /// Pin the SIMD tier of the bit-sliced engine on every tag array
+    /// (clamped to host support; host-speed only, bit-identical).
+    pub fn force_isa(&mut self, isa: crate::xam::Isa) {
+        for v in self.vaults.iter_mut() {
+            for a in v.tags.iter_mut() {
+                a.force_isa(isa);
+            }
+        }
+    }
+
     /// Coordinated address mapping (Fig 7): block -> (vault, set,
     /// tag, data superset, ram bank) — RAM and CAM addresses share
     /// vault/superset IDs by construction.

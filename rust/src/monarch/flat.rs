@@ -38,7 +38,7 @@ use crate::monarch::vault::{
 };
 use crate::monarch::wear::WearLeveler;
 use crate::util::stats::Counters;
-use crate::xam::{PortMode, SenseMode, XamArray};
+use crate::xam::{Isa, PortMode, SenseMode, XamArray};
 
 /// Outcome of one [`MonarchFlat::repartition`] call.
 #[derive(Clone, Debug)]
@@ -88,6 +88,10 @@ pub struct MonarchFlat {
     /// per-column search on every set (differential pinning); sets
     /// created later (repartition grows) inherit it.
     scalar_engine: bool,
+    /// SIMD tier of the bit-sliced engine on every set; sets created
+    /// later (repartition grows) inherit it like `scalar_engine`
+    /// (host-speed only, every tier bit-identical).
+    isa: Isa,
     pub stats: Counters,
     pub energy_nj: f64,
 }
@@ -123,6 +127,7 @@ impl MonarchFlat {
             wear: WearLeveler::new(wear_cfg, supersets, window_cycles),
             bounded,
             scalar_engine: false,
+            isa: Isa::active(),
             stats: Counters::new(),
             energy_nj: 0.0,
         }
@@ -136,6 +141,16 @@ impl MonarchFlat {
         self.scalar_engine = on;
         for s in self.sets.iter_mut() {
             s.force_scalar(on);
+        }
+    }
+
+    /// Pin the SIMD tier of the bit-sliced engine on every CAM set
+    /// (clamped to host support); repartition grows inherit it. Pure
+    /// evaluation-speed toggle, bit-identical across tiers.
+    pub fn force_isa(&mut self, isa: Isa) {
+        self.isa = isa.clamped();
+        for s in self.sets.iter_mut() {
+            s.force_isa(isa);
         }
     }
 
@@ -617,10 +632,11 @@ impl MonarchFlat {
             migrated_blocks = blocks;
             let (rows, cols) =
                 (self.geom.rows_per_set, self.geom.cols_per_set);
-            let scalar = self.scalar_engine;
+            let (scalar, isa) = (self.scalar_engine, self.isa);
             self.sets.resize_with(target_sets, || {
                 let mut a = XamArray::new(rows, cols);
                 a.force_scalar(scalar);
+                a.force_isa(isa);
                 a
             });
         }

@@ -30,10 +30,12 @@
 //!   (surviving cache vaults keep their levelers; crossing vaults
 //!   export/implant per-superset t_MWW state; the flat region's
 //!   device-wide leveler is adopted with history preserved).
-//! - **Batched-path equivalence**: the associative surface rides the
-//!   `AssocDevice` default `search_many`/`lookup_many` compositions,
-//!   which are pinned controller-equivalent to `MonarchAssoc`'s
-//!   batched overrides, so the `cache_vaults = 0` extreme is
+//! - **Batched-path equivalence**: the associative surface overrides
+//!   `search_many`/`lookup_many` with the same batched shape as
+//!   `MonarchAssoc` — one pure functional evaluation for the whole
+//!   batch over the flat region's arrays, then the per-op controller
+//!   pass in submission order — pinned controller-equivalent to the
+//!   scalar triple, so the `cache_vaults = 0` extreme stays
 //!   bit-identical to `MonarchAssoc` at whole-report level (and the
 //!   `cache_vaults = all` extreme delegates verbatim to
 //!   `MonarchCache`). `attach_engine` is deliberately a no-op: the
@@ -44,16 +46,19 @@ use std::collections::{HashMap, HashSet};
 
 use crate::cachehier::Eviction;
 use crate::config::{MonarchGeom, WearConfig};
-use crate::device::assoc::write_back_evicted;
+use crate::device::assoc::{write_back_evicted, CamLookup, CamLookupOut};
 use crate::device::{
     AssocDevice, CacheDevice, CamGeom, EvictOutcome, ReconfigOutcome,
+    SearchHit, SearchOp,
 };
 use crate::mem::ddr4::MainMemory;
 use crate::mem::dram_cache::LookupResult;
 use crate::mem::{Access, MemReq, ReqKind};
 use crate::monarch::vault::VAULT_STATIC_WATTS;
 use crate::monarch::{MonarchCache, MonarchFlat, WearLeveler};
+use crate::runtime::SearchEngine;
 use crate::util::stats::Counters;
+use crate::xam::XamArray;
 
 /// 4KB OS pages over 64B blocks.
 const BLOCKS_PER_PAGE: u64 = 64;
@@ -704,6 +709,15 @@ impl CacheDevice for MonarchHybrid {
         }
     }
 
+    fn force_isa(&mut self, isa: crate::xam::Isa) {
+        if let Some(c) = self.cache.as_mut() {
+            c.force_isa(isa);
+        }
+        if let Some(f) = self.flat.as_mut() {
+            f.force_isa(isa);
+        }
+    }
+
     fn monarch(&self) -> Option<&MonarchCache> {
         self.cache.as_ref()
     }
@@ -793,6 +807,106 @@ impl AssocDevice for MonarchHybrid {
             .ram_access(block, write, at)
     }
 
+    fn search_many(&mut self, ops: &[SearchOp]) -> Vec<SearchHit> {
+        // one pure functional evaluation for the whole batch over the
+        // flat surface's arrays (no engine — see `attach_engine`) ...
+        let flat =
+            self.flat.as_ref().expect("MonarchHybrid: no flat region");
+        let arrays: Vec<&XamArray> =
+            ops.iter().map(|o| flat.set_array(o.set)).collect();
+        let keys: Vec<u64> = ops.iter().map(|o| o.key).collect();
+        let masks: Vec<u64> = ops.iter().map(|o| o.mask).collect();
+        let fresh =
+            SearchEngine::search_sets_fallback(&arrays, &keys, &masks);
+        drop(arrays);
+        // ... then the per-op controller pass, in submission order
+        let flat =
+            self.flat.as_mut().expect("MonarchHybrid: no flat region");
+        ops.iter()
+            .enumerate()
+            .map(|(i, op)| {
+                let ka = flat.write_key(op.key, op.at);
+                let ma = flat.write_mask(op.mask, ka.done_at);
+                let (a, hit) = flat.search_precomputed(
+                    op.set,
+                    ma.done_at,
+                    Some(fresh[i]),
+                );
+                SearchHit {
+                    done_at: a.done_at,
+                    col: hit,
+                    energy_nj: ka.energy_nj + ma.energy_nj + a.energy_nj,
+                }
+            })
+            .collect()
+    }
+
+    fn lookup_many(&mut self, lookups: &[CamLookup]) -> Vec<CamLookupOut> {
+        // aggregate home + spill searches into one evaluation, exactly
+        // like `MonarchAssoc::lookup_many`
+        let flat =
+            self.flat.as_ref().expect("MonarchHybrid: no flat region");
+        let mut arrays: Vec<&XamArray> =
+            Vec::with_capacity(2 * lookups.len());
+        let mut keys = Vec::with_capacity(2 * lookups.len());
+        let mut masks = Vec::with_capacity(2 * lookups.len());
+        let mut idx: Vec<(usize, Option<usize>)> =
+            Vec::with_capacity(lookups.len());
+        for l in lookups {
+            let spill = (l.set1 != l.set0).then_some(arrays.len() + 1);
+            idx.push((arrays.len(), spill));
+            arrays.push(flat.set_array(l.set0));
+            keys.push(l.key);
+            masks.push(l.mask);
+            if l.set1 != l.set0 {
+                arrays.push(flat.set_array(l.set1));
+                keys.push(l.key);
+                masks.push(l.mask);
+            }
+        }
+        let fresh =
+            SearchEngine::search_sets_fallback(&arrays, &keys, &masks);
+        drop(arrays);
+        let flat =
+            self.flat.as_mut().expect("MonarchHybrid: no flat region");
+        lookups
+            .iter()
+            .zip(idx)
+            .map(|(l, (i0, i1))| {
+                let ka = flat.write_key(l.key, l.at);
+                let ma = flat.write_mask(l.mask, ka.done_at);
+                let (a, mut hit) = flat.search_precomputed(
+                    l.set0,
+                    ma.done_at,
+                    Some(fresh[i0]),
+                );
+                let mut e = ka.energy_nj + ma.energy_nj + a.energy_nj;
+                let mut t = a.done_at;
+                if hit.is_none() {
+                    if let Some(i1) = i1 {
+                        let (a2, h2) = flat.search_precomputed(
+                            l.set1,
+                            t,
+                            Some(fresh[i1]),
+                        );
+                        e += a2.energy_nj;
+                        t = a2.done_at;
+                        hit = h2;
+                    }
+                }
+                if hit.is_some() || l.fetch_value_on_miss {
+                    if let Some(va) =
+                        flat.ram_access(l.value_block, false, t)
+                    {
+                        e += va.energy_nj;
+                        t = va.done_at;
+                    }
+                }
+                CamLookupOut { done_at: t, hit: hit.is_some(), energy_nj: e }
+            })
+            .collect()
+    }
+
     fn reconfigure(
         &mut self,
         target_cam_sets: usize,
@@ -843,6 +957,10 @@ impl AssocDevice for MonarchHybrid {
 
     fn force_scalar_eval(&mut self, on: bool) {
         CacheDevice::force_scalar_eval(self, on);
+    }
+
+    fn force_isa(&mut self, isa: crate::xam::Isa) {
+        CacheDevice::force_isa(self, isa);
     }
 
     fn monarch_flat(&self) -> Option<&MonarchFlat> {

@@ -148,6 +148,14 @@ impl SearchEngine {
     ) -> Vec<Option<usize>> {
         fallback_impl(sets, keys, masks)
     }
+
+    /// SIMD tier the pure-rust fallback runs at: the hardware best, or
+    /// whatever `MONARCH_FORCE_ISA={scalar,sse2,avx2}` pins (clamped
+    /// to host support). Arrays snapshot this at construction; devices
+    /// re-pin per array via `force_isa`.
+    pub fn active_isa() -> crate::xam::Isa {
+        crate::xam::Isa::active()
+    }
 }
 
 // ---- featureless stub ----------------------------------------------

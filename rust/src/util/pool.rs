@@ -13,10 +13,33 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// Worker budget of [`fan_out`]: `available_parallelism`, overridable
+/// by `MONARCH_THREADS` (clamped to `1..=available_parallelism` — the
+/// override makes bench runs and CI reproducible, it never
+/// oversubscribes the host).
+pub fn max_workers() -> usize {
+    let avail = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4);
+    let requested = std::env::var("MONARCH_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok());
+    clamp_workers(requested, avail)
+}
+
+/// The `MONARCH_THREADS` clamp rule, separated from the env read so it
+/// is unit-testable without racy process-global env mutation.
+fn clamp_workers(requested: Option<usize>, avail: usize) -> usize {
+    match requested {
+        Some(n) => n.clamp(1, avail.max(1)),
+        None => avail.max(1),
+    }
+}
+
 /// Run `jobs` invocations of `f` (one per index `0..jobs`) across up
-/// to `available_parallelism` OS threads; returns results in index
-/// order. `f` must be `Sync` (it is shared by the workers) and is
-/// invoked exactly once per index.
+/// to [`max_workers`] OS threads; returns results in index order. `f`
+/// must be `Sync` (it is shared by the workers) and is invoked exactly
+/// once per index.
 pub fn fan_out<R, F>(jobs: usize, f: F) -> Vec<R>
 where
     R: Send,
@@ -25,10 +48,7 @@ where
     if jobs == 0 {
         return Vec::new();
     }
-    let workers = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4)
-        .min(jobs);
+    let workers = max_workers().min(jobs);
     if workers <= 1 {
         return (0..jobs).map(f).collect();
     }
@@ -111,6 +131,26 @@ mod tests {
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i * 3);
         }
+    }
+
+    #[test]
+    fn monarch_threads_clamp_rule() {
+        // no override: the full host budget (never below one worker)
+        assert_eq!(clamp_workers(None, 8), 8);
+        assert_eq!(clamp_workers(None, 0), 1);
+        // override: honored within 1..=available_parallelism
+        assert_eq!(clamp_workers(Some(4), 8), 4);
+        assert_eq!(clamp_workers(Some(1), 8), 1);
+        // clamped at both ends: 0 serializes, huge values never
+        // oversubscribe the host
+        assert_eq!(clamp_workers(Some(0), 8), 1);
+        assert_eq!(clamp_workers(Some(64), 8), 8);
+        // and the live resolver respects whatever the host offers
+        let avail = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4);
+        let got = max_workers();
+        assert!((1..=avail).contains(&got));
     }
 
     #[test]

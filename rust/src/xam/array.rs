@@ -23,6 +23,7 @@
 
 use crate::config::tech::{DeviceParams, RRAM_DEVICE};
 use crate::util::bitvec::BitVec;
+use crate::xam::simd::{self, Isa};
 
 /// Column-chunk width of the stack-allocated search accumulator
 /// (8 words = the 512-column paper geometry in one chunk).
@@ -90,6 +91,9 @@ pub struct XamArray {
     /// the bit-sliced planes (differential tests and benches pin the
     /// two engines identical through this).
     scalar_engine: bool,
+    /// SIMD tier of the bit-sliced plane sweep (host-speed only; every
+    /// tier is bit-identical — see [`crate::xam::simd`]).
+    isa: Isa,
 }
 
 impl XamArray {
@@ -108,6 +112,7 @@ impl XamArray {
             col_writes: vec![0; cols],
             device: RRAM_DEVICE,
             scalar_engine: false,
+            isa: Isa::active(),
         }
     }
 
@@ -150,6 +155,20 @@ impl XamArray {
     /// the property and device-differential suites.
     pub fn force_scalar(&mut self, on: bool) {
         self.scalar_engine = on;
+    }
+
+    /// Pin the SIMD tier of the bit-sliced plane sweep, clamped to
+    /// what the host actually supports. Like
+    /// [`XamArray::force_scalar`] this is a host-speed choice only:
+    /// every tier computes bit-identical results.
+    pub fn force_isa(&mut self, isa: Isa) {
+        self.isa = isa.clamped();
+    }
+
+    /// The active SIMD tier of this array's plane sweep.
+    #[inline]
+    pub fn isa(&self) -> Isa {
+        self.isa
     }
 
     /// Column-wise write (§4.1.2, ColumnIn mode): store a full word
@@ -282,16 +301,14 @@ impl XamArray {
             let mut live = true;
             for &r in &order[..n] {
                 let r = r as usize;
-                let keep = (key >> r) & 1 == 1;
+                let invert = (key >> r) & 1 == 0;
                 let base = r * pwords + start;
-                let mut any = 0u64;
-                for (a, &p) in
-                    acc[..cw].iter_mut().zip(&self.planes[base..base + cw])
-                {
-                    let v = if keep { *a & p } else { *a & !p };
-                    *a = v;
-                    any |= v;
-                }
+                let any = simd::and_plane(
+                    self.isa,
+                    &mut acc[..cw],
+                    &self.planes[base..base + cw],
+                    invert,
+                );
                 if any == 0 {
                     live = false;
                     break;
@@ -364,18 +381,14 @@ impl XamArray {
             };
             for &r in &order[..n] {
                 let r = r as usize;
-                let keep = (key >> r) & 1 == 1;
+                let invert = (key >> r) & 1 == 0;
                 let base = r * pwords;
-                let mut any = 0u64;
-                for (a, &p) in scratch
-                    .match_words
-                    .iter_mut()
-                    .zip(&self.planes[base..base + pwords])
-                {
-                    let v = if keep { *a & p } else { *a & !p };
-                    *a = v;
-                    any |= v;
-                }
+                let any = simd::and_plane(
+                    self.isa,
+                    &mut scratch.match_words,
+                    &self.planes[base..base + pwords],
+                    invert,
+                );
                 if any == 0 {
                     return (None, 0);
                 }
@@ -468,17 +481,13 @@ impl XamArray {
                 {
                     continue;
                 }
-                let keep = (keys[i] >> r) & 1 == 1;
-                let mut any = 0u64;
-                for (a, &p) in scratch.accs
-                    [i * pwords..(i + 1) * pwords]
-                    .iter_mut()
-                    .zip(plane)
-                {
-                    let v = if keep { *a & p } else { *a & !p };
-                    *a = v;
-                    any |= v;
-                }
+                let invert = (keys[i] >> r) & 1 == 0;
+                let any = simd::and_plane(
+                    self.isa,
+                    &mut scratch.accs[i * pwords..(i + 1) * pwords],
+                    plane,
+                    invert,
+                );
                 if any == 0 {
                     scratch.alive[i] = false;
                     remaining -= 1;
@@ -670,6 +679,64 @@ mod tests {
                 assert_eq!(ob.first_match, os.first_match);
                 assert_eq!(ob.matches, os.matches);
                 assert_eq!(ob.match_vec, os.match_vec);
+            }
+        }
+    }
+
+    #[test]
+    fn every_isa_tier_matches_forced_scalar() {
+        let mut a = XamArray::new(64, 517); // off-grid: odd tail word
+        let mut rng = Rng::new(0x51D);
+        for j in 0..517 {
+            a.write_col(j, rng.next_u64());
+        }
+        let mut scalar = a.clone();
+        scalar.force_scalar(true);
+        let mut scratch = SearchScratch::new();
+        let mut sscratch = SearchScratch::new();
+        for tier in Isa::supported_tiers() {
+            let mut t = a.clone();
+            t.force_isa(tier);
+            assert_eq!(t.isa(), tier);
+            for trial in 0..64 {
+                let key = if trial % 3 == 0 {
+                    a.read_col(rng.usize_below(517))
+                } else {
+                    rng.next_u64()
+                };
+                for mask in [!0u64, 0, 0xFF00, rng.next_u64()] {
+                    assert_eq!(
+                        t.search_first(key, mask),
+                        scalar.search_first(key, mask),
+                        "{tier} trial {trial} mask {mask:#x}"
+                    );
+                    let tb = t.search_into(key, mask, &mut scratch);
+                    let sb = scalar.search_into(key, mask, &mut sscratch);
+                    assert_eq!(tb, sb, "{tier} search_into");
+                    assert_eq!(
+                        scratch.match_words(),
+                        sscratch.match_words(),
+                        "{tier} match words"
+                    );
+                }
+            }
+            // and the wave entry point, per tier
+            let keys: Vec<u64> = (0..33).map(|_| rng.next_u64()).collect();
+            let masks: Vec<u64> = (0..33)
+                .map(|i| match i % 3 {
+                    0 => !0u64,
+                    1 => 0xFFFF_FFFFu64,
+                    _ => rng.next_u64(),
+                })
+                .collect();
+            let mut out = Vec::new();
+            t.search_many_bitsliced(&keys, &masks, &mut scratch, &mut out);
+            for (i, got) in out.iter().enumerate() {
+                assert_eq!(
+                    *got,
+                    scalar.search_first(keys[i], masks[i]),
+                    "{tier} wave member {i}"
+                );
             }
         }
     }

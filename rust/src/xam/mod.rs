@@ -4,8 +4,10 @@
 
 pub mod array;
 pub mod bank;
+pub mod simd;
 pub mod superset;
 
 pub use array::{SearchOutcome, SearchScratch, XamArray};
+pub use simd::Isa;
 pub use bank::{Bank, SenseMode};
 pub use superset::{PortMode, Superset};

@@ -1,0 +1,324 @@
+//! Explicit-SIMD kernels for the bit-sliced plane sweep.
+//!
+//! The whole search engine reduces to one inner operation: AND a
+//! contiguous run of accumulator words with a plane's words (or their
+//! complement) and learn whether anything is still alive. That kernel
+//! is lifted here and widened to 128-bit (SSE2) and 256-bit (AVX2)
+//! strides behind a runtime-detected [`Isa`] tier. Every tier computes
+//! the exact same words — the operation is pure bitwise AND/NOT — so
+//! tier choice is a host-speed decision with no modeled observables
+//! attached, and the scalar loop stays as the portable fallback for
+//! non-x86 targets.
+//!
+//! Tier selection happens once per process via [`Isa::active`]
+//! (`is_x86_feature_detected!` behind a `cfg(target_arch)` shim) and
+//! can be pinned with `MONARCH_FORCE_ISA={scalar,sse2,avx2}` so every
+//! tier is testable on any machine; forcing a tier the host cannot run
+//! clamps down to the best supported one with a notice.
+
+use std::fmt;
+use std::sync::OnceLock;
+
+/// Instruction-set tier for the plane-sweep kernel. Ordered: a tier
+/// compares greater than every tier it strictly extends, so clamping
+/// a request against hardware support is just `min`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Isa {
+    /// Portable `u64` loop; always available.
+    Scalar,
+    /// 128-bit strides (`__m128i`), baseline on x86_64.
+    Sse2,
+    /// 256-bit strides (`__m256i`).
+    Avx2,
+}
+
+impl Isa {
+    /// Best tier the host CPU can actually execute.
+    pub fn detect() -> Isa {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::is_x86_feature_detected!("avx2") {
+                return Isa::Avx2;
+            }
+            if std::is_x86_feature_detected!("sse2") {
+                return Isa::Sse2;
+            }
+        }
+        Isa::Scalar
+    }
+
+    /// Process-wide tier: `MONARCH_FORCE_ISA` when set (clamped to
+    /// hardware support with a stderr notice), hardware best
+    /// otherwise. Resolved once and cached.
+    pub fn active() -> Isa {
+        static ACTIVE: OnceLock<Isa> = OnceLock::new();
+        *ACTIVE.get_or_init(|| {
+            let hw = Isa::detect();
+            let Ok(raw) = std::env::var("MONARCH_FORCE_ISA") else {
+                return hw;
+            };
+            let raw = raw.trim();
+            if raw.is_empty() {
+                // empty = unset: lets CI matrices pass "" on the
+                // unforced leg without a spurious notice
+                return hw;
+            }
+            match Isa::parse(raw) {
+                Some(want) if want <= hw => want,
+                Some(want) => {
+                    eprintln!(
+                        "MONARCH_FORCE_ISA={raw}: {want} not supported \
+                         on this host, clamping to {hw}"
+                    );
+                    hw
+                }
+                None => {
+                    eprintln!(
+                        "MONARCH_FORCE_ISA={raw}: unknown tier (want \
+                         scalar|sse2|avx2); using {hw}"
+                    );
+                    hw
+                }
+            }
+        })
+    }
+
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(Isa::Scalar),
+            "sse2" => Some(Isa::Sse2),
+            "avx2" => Some(Isa::Avx2),
+            _ => None,
+        }
+    }
+
+    /// This tier, lowered to the best one the host supports.
+    pub fn clamped(self) -> Isa {
+        self.min(Isa::detect())
+    }
+
+    /// Can the host execute this tier?
+    pub fn supported(self) -> bool {
+        self <= Isa::detect()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse2 => "sse2",
+            Isa::Avx2 => "avx2",
+        }
+    }
+
+    /// Every tier the host can execute, worst to best — the iteration
+    /// set for per-tier differential tests and bench rows.
+    pub fn supported_tiers() -> Vec<Isa> {
+        [Isa::Scalar, Isa::Sse2, Isa::Avx2]
+            .into_iter()
+            .filter(|t| t.supported())
+            .collect()
+    }
+}
+
+impl fmt::Display for Isa {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The plane-sweep kernel: `acc[i] &= plane[i]` (or `&= !plane[i]`
+/// when `invert`), returning the OR of the resulting words so callers
+/// can test "anything still alive?" without a second pass. All tiers
+/// are bit-identical by construction; `acc` and `plane` must be the
+/// same length.
+#[inline]
+pub fn and_plane(isa: Isa, acc: &mut [u64], plane: &[u64], invert: bool) -> u64 {
+    debug_assert_eq!(acc.len(), plane.len());
+    match isa {
+        Isa::Scalar => and_plane_scalar(acc, plane, invert),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: tiers above Scalar are only ever constructed after a
+        // successful runtime feature check (`detect`/`clamped`).
+        Isa::Sse2 => unsafe { and_plane_sse2(acc, plane, invert) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { and_plane_avx2(acc, plane, invert) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Isa::Sse2 | Isa::Avx2 => and_plane_scalar(acc, plane, invert),
+    }
+}
+
+fn and_plane_scalar(acc: &mut [u64], plane: &[u64], invert: bool) -> u64 {
+    let mut any = 0u64;
+    if invert {
+        for (a, &p) in acc.iter_mut().zip(plane) {
+            *a &= !p;
+            any |= *a;
+        }
+    } else {
+        for (a, &p) in acc.iter_mut().zip(plane) {
+            *a &= p;
+            any |= *a;
+        }
+    }
+    any
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn and_plane_sse2(acc: &mut [u64], plane: &[u64], invert: bool) -> u64 {
+    use std::arch::x86_64::*;
+    let lanes = acc.len() & !1;
+    let flip = if invert {
+        _mm_set1_epi64x(-1)
+    } else {
+        _mm_setzero_si128()
+    };
+    let mut anyv = _mm_setzero_si128();
+    let mut i = 0;
+    while i < lanes {
+        let ap = acc.as_mut_ptr().add(i) as *mut __m128i;
+        let pp = plane.as_ptr().add(i) as *const __m128i;
+        let v = _mm_and_si128(
+            _mm_loadu_si128(ap as *const __m128i),
+            _mm_xor_si128(_mm_loadu_si128(pp), flip),
+        );
+        _mm_storeu_si128(ap, v);
+        anyv = _mm_or_si128(anyv, v);
+        i += 2;
+    }
+    let hi = _mm_unpackhi_epi64(anyv, anyv);
+    let mut any = (_mm_cvtsi128_si64(anyv) | _mm_cvtsi128_si64(hi)) as u64;
+    any |= and_plane_scalar(&mut acc[lanes..], &plane[lanes..], invert);
+    any
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn and_plane_avx2(acc: &mut [u64], plane: &[u64], invert: bool) -> u64 {
+    use std::arch::x86_64::*;
+    let lanes = acc.len() & !3;
+    let flip = if invert {
+        _mm256_set1_epi64x(-1)
+    } else {
+        _mm256_setzero_si256()
+    };
+    let mut anyv = _mm256_setzero_si256();
+    let mut i = 0;
+    while i < lanes {
+        let ap = acc.as_mut_ptr().add(i) as *mut __m256i;
+        let pp = plane.as_ptr().add(i) as *const __m256i;
+        let v = _mm256_and_si256(
+            _mm256_loadu_si256(ap as *const __m256i),
+            _mm256_xor_si256(_mm256_loadu_si256(pp), flip),
+        );
+        _mm256_storeu_si256(ap, v);
+        anyv = _mm256_or_si256(anyv, v);
+        i += 4;
+    }
+    let fold = _mm_or_si128(
+        _mm256_castsi256_si128(anyv),
+        _mm256_extracti128_si256(anyv, 1),
+    );
+    let hi = _mm_unpackhi_epi64(fold, fold);
+    let mut any = (_mm_cvtsi128_si64(fold) | _mm_cvtsi128_si64(hi)) as u64;
+    any |= and_plane_scalar(&mut acc[lanes..], &plane[lanes..], invert);
+    any
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xorshift(state: &mut u64) -> u64 {
+        let mut x = *state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        *state = x;
+        x
+    }
+
+    #[test]
+    fn tier_order_and_clamp() {
+        assert!(Isa::Scalar < Isa::Sse2);
+        assert!(Isa::Sse2 < Isa::Avx2);
+        assert_eq!(Isa::Scalar.clamped(), Isa::Scalar);
+        assert!(Isa::Avx2.clamped() <= Isa::detect());
+        assert!(Isa::Scalar.supported());
+        let tiers = Isa::supported_tiers();
+        assert_eq!(tiers[0], Isa::Scalar);
+        assert!(tiers.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn parse_is_case_insensitive_and_total() {
+        assert_eq!(Isa::parse("scalar"), Some(Isa::Scalar));
+        assert_eq!(Isa::parse("SSE2"), Some(Isa::Sse2));
+        assert_eq!(Isa::parse("Avx2"), Some(Isa::Avx2));
+        assert_eq!(Isa::parse("neon"), None);
+        for t in Isa::supported_tiers() {
+            assert_eq!(Isa::parse(t.name()), Some(t));
+        }
+    }
+
+    #[test]
+    fn every_supported_tier_matches_scalar_bit_for_bit() {
+        let mut rng = 0x9E37_79B9_7F4A_7C15u64;
+        for len in 0..=19usize {
+            for trial in 0..16 {
+                let plane: Vec<u64> =
+                    (0..len).map(|_| xorshift(&mut rng)).collect();
+                let base: Vec<u64> = (0..len)
+                    .map(|_| {
+                        // mix sparse and dense accumulators so the
+                        // early-dead and still-alive cases both occur
+                        if trial % 3 == 0 {
+                            xorshift(&mut rng) & xorshift(&mut rng)
+                        } else {
+                            xorshift(&mut rng)
+                        }
+                    })
+                    .collect();
+                for invert in [false, true] {
+                    let mut want = base.clone();
+                    let want_any =
+                        and_plane(Isa::Scalar, &mut want, &plane, invert);
+                    assert_eq!(
+                        want_any,
+                        want.iter().fold(0, |o, &w| o | w),
+                        "scalar any must be the OR of the result"
+                    );
+                    for tier in Isa::supported_tiers() {
+                        let mut got = base.clone();
+                        let got_any =
+                            and_plane(tier, &mut got, &plane, invert);
+                        assert_eq!(
+                            got, want,
+                            "{tier} words diverge (len={len} invert={invert})"
+                        );
+                        assert_eq!(
+                            got_any, want_any,
+                            "{tier} any diverges (len={len} invert={invert})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn odd_tails_hit_the_scalar_remainder() {
+        // lengths chosen to exercise every lane remainder of the
+        // 4-wide AVX2 and 2-wide SSE2 strides
+        let plane: Vec<u64> = (0..7).map(|i| !0u64 << i).collect();
+        for cut in 0..=plane.len() {
+            let mut want = vec![!0u64; cut];
+            let w = and_plane(Isa::Scalar, &mut want, &plane[..cut], true);
+            for tier in Isa::supported_tiers() {
+                let mut got = vec![!0u64; cut];
+                let g = and_plane(tier, &mut got, &plane[..cut], true);
+                assert_eq!((got, g), (want.clone(), w), "{tier} len={cut}");
+            }
+        }
+    }
+}

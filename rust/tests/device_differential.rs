@@ -19,6 +19,8 @@ use monarch::prop_assert;
 use monarch::sim::System;
 use monarch::util::prop::{check, Gen};
 use monarch::coordinator::{self, Budget};
+use monarch::service::{run_service, ServiceConfig};
+use monarch::xam::Isa;
 use monarch::workloads::hashing::{
     run_ycsb, run_ycsb_adaptive, ReconfigPolicy, YcsbConfig,
 };
@@ -1001,6 +1003,169 @@ fn bitsliced_engine_survives_adaptive_reconfigure_and_stringmatch() {
     assert_eq!(b.cycles, s.cycles, "stringmatch cycles");
     assert_eq!(b.matches, s.matches, "stringmatch matches");
     assert_eq!(b.energy_nj.to_bits(), s.energy_nj.to_bits());
+}
+
+// ---- SIMD ISA tiers --------------------------------------------------
+//
+// The SIMD tier (scalar / sse2 / avx2) is a host-speed choice exactly
+// like the engine choice above: every supported tier must leave whole
+// reports bit-identical to the forced-scalar tier, on every path. On
+// non-x86 hosts `supported_tiers()` is just `[scalar]` and these pass
+// trivially; the CI `MONARCH_FORCE_ISA=scalar` leg pins the other
+// direction (forced-down default with per-test tiers still live).
+
+#[test]
+fn every_isa_tier_bit_identical_cache_mode() {
+    for kind in all_cache_kinds() {
+        let run = |tier: Isa| {
+            let cfg = SystemConfig::scaled(kind, 1.0 / 4096.0);
+            let mut sys = System::build(cfg);
+            sys.inpkg.force_isa(tier);
+            let mut wl =
+                SyntheticStream::zipfian(4, 4000, 1 << 21, 0.9, 0.2, 55);
+            sys.run(&mut wl, u64::MAX)
+        };
+        let scalar = run(Isa::Scalar);
+        for tier in Isa::supported_tiers() {
+            assert_sim_reports_identical(
+                &run(tier),
+                &scalar,
+                &format!("{kind:?} isa={tier}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn every_isa_tier_bit_identical_flat_path() {
+    let cfg = YcsbConfig {
+        table_pow2: 12,
+        window: 64, // windows cross set boundaries: spill searches too
+        ops: 3000,
+        read_pct: 0.9,
+        threads: 8,
+        ..Default::default()
+    };
+    let cam_sets = (1usize << cfg.table_pow2) / 512 + 1;
+    for kind in all_assoc_kinds() {
+        let run = |tier: Isa| {
+            let spec = AssocSpec {
+                kind,
+                capacity_bytes: 1 << 18,
+                geom: small_geom(),
+                cam_sets,
+            };
+            let mut dev = DeviceBuilder::new().build_assoc(&spec);
+            dev.force_isa(tier);
+            run_ycsb(dev.as_mut(), &cfg)
+        };
+        let s = run(Isa::Scalar);
+        for tier in Isa::supported_tiers() {
+            let b = run(tier);
+            assert_eq!(b.system, s.system, "{kind:?} isa={tier}");
+            assert_eq!(b.cycles, s.cycles, "{kind:?} isa={tier}: cycles");
+            assert_eq!(b.hits, s.hits, "{kind:?} isa={tier}: hits");
+            assert_eq!(b.ops, s.ops, "{kind:?} isa={tier}: ops");
+            assert_eq!(
+                b.rehashes,
+                s.rehashes,
+                "{kind:?} isa={tier}: rehashes"
+            );
+            assert_eq!(
+                b.energy_nj.to_bits(),
+                s.energy_nj.to_bits(),
+                "{kind:?} isa={tier}: energy"
+            );
+            let cb: Vec<_> = b.counters.iter().collect();
+            let cs: Vec<_> = s.counters.iter().collect();
+            assert_eq!(cb, cs, "{kind:?} isa={tier}: counters");
+        }
+    }
+}
+
+#[test]
+fn every_isa_tier_survives_adaptive_reconfigure_and_stringmatch() {
+    // reconfigure grows create new CAM sets mid-run: they must inherit
+    // the forced tier, exactly like the forced engine
+    let cfg = YcsbConfig {
+        table_pow2: 12,
+        window: 32,
+        ops: 6000,
+        read_pct: 0.95,
+        threads: 8,
+        ..Default::default()
+    };
+    let policy = ReconfigPolicy::default();
+    let run = |tier: Isa| {
+        let mut dev = MonarchAssoc::new(small_geom(), 2);
+        dev.force_isa(tier);
+        run_ycsb_adaptive(&mut dev, &cfg, &policy)
+    };
+    let s = run(Isa::Scalar);
+    assert!(s.counters.get("reconfigs") >= 1, "policy must trip");
+    for tier in Isa::supported_tiers() {
+        let b = run(tier);
+        assert_eq!(b.cycles, s.cycles, "adaptive isa={tier}: cycles");
+        assert_eq!(b.hits, s.hits, "adaptive isa={tier}: hits");
+        assert_eq!(b.energy_nj.to_bits(), s.energy_nj.to_bits());
+        let cb: Vec<_> = b.counters.iter().collect();
+        let cs: Vec<_> = s.counters.iter().collect();
+        assert_eq!(cb, cs, "adaptive isa={tier}: counters");
+    }
+    // the stringmatch wave driver over the sharded backend rides both
+    // the SIMD wave sweep and the multicore per-shard eval fan-out
+    let smc = StringMatchConfig {
+        corpus_words: 1 << 13,
+        targets: 8,
+        threads: 4,
+        seed: 21,
+    };
+    let sm_sets = smc.corpus_words / 512 + 1;
+    let run_sm = |tier: Isa| {
+        let mut dev = ShardedAssoc::new(small_geom(), sm_sets, 4);
+        dev.force_isa(tier);
+        run_string_match(&mut dev, &smc)
+    };
+    let s = run_sm(Isa::Scalar);
+    for tier in Isa::supported_tiers() {
+        let b = run_sm(tier);
+        assert_eq!(b.cycles, s.cycles, "stringmatch isa={tier}: cycles");
+        assert_eq!(
+            b.matches,
+            s.matches,
+            "stringmatch isa={tier}: matches"
+        );
+        assert_eq!(b.energy_nj.to_bits(), s.energy_nj.to_bits());
+    }
+}
+
+#[test]
+fn every_isa_tier_preserves_service_fingerprint() {
+    // the production service driver hashes exactly the modeled fields
+    // into a replayable fingerprint; every ISA tier must reproduce the
+    // forced-scalar fingerprint on the sharded backend
+    let budget = Budget { hash_ops: 900, ..Budget::quick() };
+    let (meta, reqs) = coordinator::service_traffic(&budget, 2.0);
+    let geom = MonarchGeom::FULL.scaled(budget.scale * 4.0);
+    let run = |tier: Isa| {
+        let spec = AssocSpec {
+            kind: InPackageKind::MonarchSharded { shards: 4, m: 3 },
+            capacity_bytes: 0,
+            geom,
+            cam_sets: meta.num_sets as usize,
+        };
+        let mut dev = DeviceBuilder::new().build_assoc(&spec);
+        dev.force_isa(tier);
+        run_service(dev.as_mut(), &ServiceConfig::default(), &meta, &reqs)
+    };
+    let s = run(Isa::Scalar);
+    for tier in Isa::supported_tiers() {
+        assert_eq!(
+            run(tier).modeled_fingerprint(),
+            s.modeled_fingerprint(),
+            "service fingerprint isa={tier}"
+        );
+    }
 }
 
 // ---- hybrid MemCache split extremes ---------------------------------

@@ -14,7 +14,7 @@ use monarch::prop_assert;
 use monarch::util::prop::{check, Gen};
 use monarch::workloads::hashing::{Hopscotch, InsertOutcome};
 use monarch::xam::superset::{diagonal_select, diagonal_set};
-use monarch::xam::{SearchScratch, XamArray};
+use monarch::xam::{Isa, SearchScratch, XamArray};
 
 #[test]
 fn prop_remap_is_bijective() {
@@ -296,6 +296,131 @@ fn prop_bitsliced_engine_matches_scalar() {
                 want |= ((a.read_col(j) >> r) & 1) << j;
             }
             prop_assert!(a.read_row(r) == want, "read_row({r}) diverged");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simd_tiers_match_scalar_sweep() {
+    // Every supported SIMD tier of the plane sweep must agree with
+    // the forced-scalar tier — and with the per-column scalar engine
+    // — on arbitrary off-grid geometries (cols straddling the 64-,
+    // 128- and 256-bit lane boundaries), partial masks and
+    // write-driven plane coherence storms interleaved with searches.
+    // On non-x86 hosts `supported_tiers()` is `[scalar]` and this
+    // reduces to the engine property above.
+    check("simd_tiers_vs_scalar", 40, |g: &mut Gen| {
+        let rows = 1 + g.int(64).min(63);
+        // bias cols toward the lane edges the SIMD remainder handles:
+        // 1..=4 words of planes plus an off-grid tail
+        let cols = match g.int(4) {
+            0 => 1 + g.int(64),
+            1 => 63 + g.int(4),   // straddle one word
+            2 => 255 + g.int(6),  // straddle the AVX2 stride
+            _ => 1 + g.int(600),
+        };
+        let mut tiers: Vec<XamArray> = Isa::supported_tiers()
+            .into_iter()
+            .map(|t| {
+                let mut a = XamArray::new(rows, cols);
+                a.force_isa(t);
+                a
+            })
+            .collect();
+        let mut scalar = XamArray::new(rows, cols);
+        scalar.force_scalar(true);
+        let mut sb = SearchScratch::new();
+        let mut ss = SearchScratch::new();
+        for storm in 0..3usize {
+            // a coherence storm: writes that dirty planes mid-stream
+            for _ in 0..g.int(120) {
+                if g.int(3) == 0 {
+                    let (r, w, n) =
+                        (g.int(rows).min(rows - 1), g.u64(), g.int(65));
+                    for a in tiers.iter_mut() {
+                        a.write_row(r, w, n);
+                    }
+                    scalar.write_row(r, w, n);
+                } else {
+                    let (c, w) = (g.int(cols).min(cols - 1), g.u64());
+                    for a in tiers.iter_mut() {
+                        a.write_col(c, w);
+                    }
+                    scalar.write_col(c, w);
+                }
+            }
+            for trial in 0..12usize {
+                let key = match trial % 3 {
+                    0 => g.u64(),
+                    1 => scalar.read_col(g.int(cols).min(cols - 1)),
+                    _ => 0,
+                };
+                let mask = match trial % 5 {
+                    0 => !0u64,
+                    1 => 0,
+                    2 => 0xFF00,
+                    3 => 1u64 << g.int(64).min(63),
+                    _ => g.u64(),
+                };
+                let want_first = scalar.search_first(key, mask);
+                let want = scalar.search_into(key, mask, &mut ss);
+                for a in tiers.iter() {
+                    let tier = a.isa();
+                    prop_assert!(
+                        a.search_first(key, mask) == want_first,
+                        "first diverged at isa={tier} storm={storm} \
+                         (rows={rows} cols={cols} key={key:#x} \
+                         mask={mask:#x})"
+                    );
+                    let got = a.search_into(key, mask, &mut sb);
+                    prop_assert!(
+                        got == want,
+                        "outcome diverged at isa={tier}: {got:?} vs \
+                         {want:?} (key={key:#x} mask={mask:#x})"
+                    );
+                    prop_assert!(
+                        sb.match_words() == ss.match_words(),
+                        "match flags diverged at isa={tier} \
+                         (key={key:#x} mask={mask:#x})"
+                    );
+                }
+            }
+            // a batched wave per storm, mixed hit/miss keys and masks
+            let n = 1 + g.int(96);
+            let keys: Vec<u64> = (0..n)
+                .map(|i| {
+                    if i % 2 == 0 {
+                        g.u64()
+                    } else {
+                        scalar.read_col(g.int(cols).min(cols - 1))
+                    }
+                })
+                .collect();
+            let masks: Vec<u64> = (0..n)
+                .map(|i| match i % 4 {
+                    0 => !0u64,
+                    1 => 0xFFFF,
+                    2 => 0,
+                    _ => g.u64(),
+                })
+                .collect();
+            let mut out = Vec::new();
+            for a in tiers.iter() {
+                let tier = a.isa();
+                out.clear();
+                a.search_many_bitsliced(&keys, &masks, &mut sb, &mut out);
+                prop_assert!(out.len() == n, "wave length at isa={tier}");
+                for (i, got) in out.iter().enumerate() {
+                    prop_assert!(
+                        *got == scalar.search_first(keys[i], masks[i]),
+                        "wave member {i} diverged at isa={tier} \
+                         (key={:#x} mask={:#x})",
+                        keys[i],
+                        masks[i]
+                    );
+                }
+            }
         }
         Ok(())
     });

@@ -6,9 +6,10 @@ Four modes, all exiting non-zero on failure:
   --service  SNAPSHOT FRESH   modeled serve throughput per (system, load)
                               must stay within TOLERANCE of the snapshot
   --xamsearch SNAPSHOT FRESH  engine speedup ratios vs the scalar engine
-                              per workload must stay within TOLERANCE
-                              (ratios, never absolute host ops/sec — the
-                              snapshot machine is not the CI machine)
+                              per (engine, isa, workload) must stay
+                              within TOLERANCE (ratios, never absolute
+                              host ops/sec — the snapshot machine is not
+                              the CI machine)
   --memcache SNAPSHOT FRESH   hybrid MemCache total cycles per
                               (workload, cache_vaults) must stay within
                               TOLERANCE, and some strict hybrid split
@@ -17,11 +18,24 @@ Four modes, all exiting non-zero on failure:
                               same modeled_fingerprint (the trace
                               record -> replay acceptance gate)
 
-Snapshots are committed at the repository root and refreshed by copying
-a CI BENCH_* artifact over them. A snapshot marked "bootstrap": true
-(or with no rows) passes with a notice — that is how the gate is armed
-before the first artifact lands: the comparison logic still runs on
-every CI build, it just has nothing trusted to compare against yet.
+Snapshots are committed at the repository root. Two armed shapes:
+
+  "mode": "floors"   machine-portable minimums: xamsearch snapshots
+                     carry a "floors" list of {engine, workload,
+                     vs?, min_ratio, needs_simd?} rows checked against
+                     the fresh speedup ratios (ratios survive machine
+                     changes; absolute ops/sec do not); service and
+                     memcache snapshots carry "min_cells" plus
+                     shape/sanity requirements on every fresh row.
+                     This is how the gate ships armed without a
+                     trusted same-machine artifact.
+  full rows          a copied CI BENCH_* artifact: per-cell drift
+                     comparison within TOLERANCE (tightest gate, but
+                     only trustworthy against the same runner class).
+
+A snapshot marked "bootstrap": true (or with no rows AND no floors
+mode) passes with a notice — the disarmed bootstrap shape older
+revisions shipped.
 """
 
 import json
@@ -53,7 +67,7 @@ def is_bootstrap(doc, path):
         print(
             f"bench_regression: NOTICE: {path} is a bootstrap snapshot "
             "(no trusted numbers yet); refresh it from a CI BENCH_* "
-            "artifact to arm the gate."
+            "artifact (or switch it to floors mode) to arm the gate."
         )
         return True
     return False
@@ -64,6 +78,26 @@ def summaries(doc):
     return [r for r in doc["rows"] if r.get("row") == "summary"]
 
 
+def check_service_floors(snap, fresh, snap_path, fresh_path):
+    rows = summaries(fresh)
+    need = snap.get("min_cells", 1)
+    if len(rows) < need:
+        fail(
+            f"{fresh_path}: {len(rows)} summary cells < floor of "
+            f"{need} (sweep shrank?)"
+        )
+    for r in rows:
+        key = (r.get("system"), r.get("load"))
+        if not r.get("ops_per_kcycle", 0) > 0:
+            fail(f"{fresh_path}: cell {key} has no modeled throughput")
+        if not r.get("modeled_fingerprint"):
+            fail(f"{fresh_path}: cell {key} lost its modeled_fingerprint")
+    print(
+        f"bench_regression: service OK ({len(rows)} cells >= floor of "
+        f"{need}, all with throughput + fingerprint)"
+    )
+
+
 def check_service(snap_path, fresh_path):
     snap, fresh = load(snap_path), load(fresh_path)
     fresh_by_key = {
@@ -71,6 +105,8 @@ def check_service(snap_path, fresh_path):
     }
     if not fresh_by_key:
         fail(f"{fresh_path}: no summary rows")
+    if snap.get("mode") == "floors":
+        return check_service_floors(snap, fresh, snap_path, fresh_path)
     if is_bootstrap(snap, snap_path):
         return
     compared = 0
@@ -90,19 +126,70 @@ def check_service(snap_path, fresh_path):
           f"{TOLERANCE:.0%} of snapshot)")
 
 
-def speedups(doc, path):
-    """xamsearch rows -> {(engine, workload): ops_per_sec / scalar}."""
-    by_key = {(r["engine"], r["workload"]): r["ops_per_sec"]
-              for r in doc["rows"]}
+def xam_cells(doc, path):
+    """xamsearch rows -> {(engine, workload): (ops_per_sec, isa)}."""
     out = {}
-    for (engine, wl), ops in by_key.items():
+    for r in doc["rows"]:
+        out[(r["engine"], r["workload"])] = (
+            r["ops_per_sec"],
+            r.get("isa", "scalar"),
+        )
+    if not out:
+        fail(f"{path}: no xamsearch rows")
+    return out
+
+
+def speedups(doc, path):
+    """{(engine, isa, workload): ops_per_sec / scalar} for the drift
+    compare — keyed per ISA tier so a snapshot taken at avx2 is never
+    compared against a run forced down to sse2/scalar."""
+    cells = xam_cells(doc, path)
+    out = {}
+    for (engine, wl), (ops, isa) in cells.items():
         if engine == "scalar":
             continue
-        base = by_key.get(("scalar", wl))
+        base = cells.get(("scalar", wl))
         if not base:
             fail(f"{path}: no scalar baseline for workload {wl!r}")
-        out[(engine, wl)] = ops / base
+        out[(engine, isa, wl)] = ops / base[0]
     return out
+
+
+def check_xamsearch_floors(snap, fresh, snap_path, fresh_path):
+    cells = xam_cells(fresh, fresh_path)
+    checked, skipped = 0, 0
+    floors = snap.get("floors", [])
+    if not floors:
+        fail(f"{snap_path}: floors mode without a floors list")
+    for fl in floors:
+        engine, wl = fl["engine"], fl["workload"]
+        vs = fl.get("vs", "scalar")
+        cell = cells.get((engine, wl))
+        base = cells.get((vs, wl))
+        if cell is None:
+            fail(f"{fresh_path}: floor cell ({engine}, {wl}) missing")
+        if base is None:
+            fail(f"{fresh_path}: floor baseline ({vs}, {wl}) missing")
+        if fl.get("needs_simd") and cell[1] == "scalar":
+            # forced-scalar leg or non-SIMD host: the SIMD-over-scalar
+            # margin legitimately does not exist there
+            skipped += 1
+            continue
+        ratio = cell[0] / base[0]
+        if ratio < fl["min_ratio"]:
+            fail(
+                f"xamsearch floor: {engine} vs {vs} on {wl} is "
+                f"{ratio:.2f}x < required {fl['min_ratio']}x "
+                f"(isa={cell[1]})"
+            )
+        checked += 1
+    if checked == 0:
+        fail(f"{snap_path}: no applicable floors were checked")
+    note = f", {skipped} SIMD-only skipped" if skipped else ""
+    print(
+        f"bench_regression: xamsearch OK ({checked} speedup floors "
+        f"held{note})"
+    )
 
 
 def check_xamsearch(snap_path, fresh_path):
@@ -110,6 +197,8 @@ def check_xamsearch(snap_path, fresh_path):
     fresh_ratios = speedups(fresh, fresh_path)
     if not fresh_ratios:
         fail(f"{fresh_path}: no non-scalar engine rows")
+    if snap.get("mode") == "floors":
+        return check_xamsearch_floors(snap, fresh, snap_path, fresh_path)
     if is_bootstrap(snap, snap_path):
         return
     compared = 0
@@ -156,6 +245,23 @@ def check_memcache(snap_path, fresh_path):
             f"{fresh_path}: no strict hybrid split beats both the "
             "all-cache and all-memory extremes on any workload"
         )
+    if snap.get("mode") == "floors":
+        need = snap.get("min_cells", 1)
+        rows = fresh["rows"]
+        if len(rows) < need:
+            fail(
+                f"{fresh_path}: {len(rows)} sweep cells < floor of "
+                f"{need} (sweep shrank?)"
+            )
+        for r in rows:
+            key = (r.get("workload"), r.get("cache_vaults"))
+            if not r.get("total_cycles", 0) > 0:
+                fail(f"{fresh_path}: cell {key} has no modeled cycles")
+        print(
+            f"bench_regression: memcache OK ({len(rows)} cells >= "
+            f"floor of {need}, hybrid beats both extremes)"
+        )
+        return
     if is_bootstrap(snap, snap_path):
         return
     fresh_by_key = {
