@@ -1,34 +1,78 @@
-//! Tail latency under offered load (`monarch serve`): the production
-//! KV service driver pushes an open-loop three-phase request stream
-//! (zipfian steady state, migrating skew storm, bursty on/off) through
-//! bounded per-shard queues on Monarch sharded vs the D-Cache table
-//! walk, at offered loads from half the base rate to 8x. Admission
-//! control sheds interactive requests and defers bulk ones once a
-//! queue fills, and every completion lands in per-(phase, shard)
-//! log-bucketed histograms, so the sweep reports p50/p99/p999 rather
-//! than a batch mean.
+//! Tail latency and host throughput of the KV service driver
+//! (`monarch serve`).
 //!
-//! Acceptance gates are structural (the modeled side is deterministic,
-//! the gates must hold on any machine): both systems serve the same
-//! offered stream at every load, percentiles are ordered, latency
-//! tails do not shrink as offered load grows, and overload never
-//! completes more than was offered.
+//! Three sections:
+//!
+//! 1. **Sweep gates** — the open-loop four-phase stream (warm ingest,
+//!    zipfian steady state, migrating skew storm, bursty on/off) runs
+//!    on every service backend at offered loads from half the base
+//!    rate to 8x. Gates are structural (the modeled side is
+//!    deterministic, so they must hold on any machine): every system
+//!    serves the same offered stream at every load, percentiles are
+//!    ordered, latency tails do not shrink as offered load grows, and
+//!    overload never completes more than was offered.
+//! 2. **Thread scaling** — the same stream served on the sharded
+//!    backend under `with_workers(1/2/4)`. The modeled fingerprint
+//!    must be bit-identical across worker counts (the determinism
+//!    contract of the parallel dispatch loop), and host throughput
+//!    must not collapse as workers are added: adjacent steps may lose
+//!    at most the noise tolerance, and on a >= 4-core host the 4-worker
+//!    run must beat the single-worker run outright.
+//! 3. **Million-key smoke** — a 10^6-key population streams in through
+//!    the warm phase (no pre-plant) and churns under insert/delete
+//!    traffic on a 2048-set CAM partition. Gates: the ingest lands
+//!    (planted + blocked accounts for the population, with >= 90%
+//!    actually planted) and the run completes inside the bench-smoke
+//!    budget.
+//!
+//! Sections 2 and 3 also emit `BENCH_service_scaling.json` (uploaded
+//! by CI as the host-throughput trajectory artifact).
 
+use monarch::config::{InPackageKind, MonarchGeom};
 use monarch::coordinator::{self, Budget};
+use monarch::device::{AssocSpec, DeviceBuilder};
+use monarch::service::gen::{generate, Request, TrafficConfig};
+use monarch::service::trace::TraceMeta;
+use monarch::service::{run_service, ServiceConfig, ServiceReport};
+use monarch::util::json::{self, Json};
+use monarch::util::pool::with_workers;
 
-fn main() {
-    let budget = Budget::default().from_env();
-    let t0 = std::time::Instant::now();
+/// Adjacent thread-count steps may lose at most this fraction to
+/// measurement noise before the scaling gate trips.
+const STEP_TOLERANCE: f64 = 0.85;
+
+fn sharded_run(
+    budget: &Budget,
+    meta: &TraceMeta,
+    reqs: &[Request],
+) -> ServiceReport {
+    let spec = AssocSpec {
+        kind: InPackageKind::MonarchSharded { shards: 8, m: 3 },
+        capacity_bytes: 0,
+        geom: MonarchGeom::FULL.scaled(budget.scale * 4.0),
+        cam_sets: meta.num_sets as usize,
+    };
+    let mut dev = DeviceBuilder::new().build_assoc(&spec);
+    run_service(dev.as_mut(), &ServiceConfig::default(), meta, reqs)
+}
+
+fn sweep_gates(budget: &Budget) {
     let loads = [0.5, 2.0, 8.0];
-    let pts = coordinator::service_sweep(&budget, &loads);
+    let pts = coordinator::service_sweep(budget, &loads);
     coordinator::service_table(&pts).print();
 
+    let systems: Vec<String> = pts
+        .iter()
+        .take_while(|p| p.load == loads[0])
+        .map(|p| p.system.clone())
+        .collect();
+    assert_eq!(systems.len(), 3, "want all three service backends");
     let of = |sys: &str, load: f64| {
         pts.iter()
             .find(|p| p.system == sys && p.load == load)
             .expect("sweep covers every cell")
     };
-    for sys in ["Monarch(S=8)", "HBM-C"] {
+    for sys in &systems {
         let (lo, hi) = (of(sys, 0.5), of(sys, 8.0));
         let tail = |p: &coordinator::ServicePoint| {
             p.report.cell("all", None).expect("grand total").p999_cycles
@@ -42,9 +86,9 @@ fn main() {
             tail(hi),
             hi.report.counters.get("shed_interactive")
                 + hi.report.counters.get("shed_bulk")
+                + hi.report.counters.get("shed_deadline")
                 + hi.report.counters.get("deferred_bulk"),
         );
-
         for load in loads {
             let p = of(sys, load);
             let r = &p.report;
@@ -52,6 +96,10 @@ fn main() {
             assert!(
                 r.completed_ops <= r.offered_ops,
                 "{sys}@{load}: served more than offered"
+            );
+            assert!(
+                r.counters.get("inserts") > 0,
+                "{sys}@{load}: warm ingest planted nothing"
             );
             let all = r.cell("all", None).expect("grand total cell");
             assert!(all.p50_cycles <= all.p99_cycles);
@@ -64,11 +112,176 @@ fn main() {
         );
     }
     for load in loads {
+        for sys in &systems[1..] {
+            assert_eq!(
+                of(&systems[0], load).report.offered_ops,
+                of(sys, load).report.offered_ops,
+                "all systems must serve the same deterministic stream"
+            );
+        }
+    }
+}
+
+fn thread_scaling(budget: &Budget) -> Vec<Json> {
+    let cfg = TrafficConfig {
+        ops: (budget.hash_ops * 4).max(16_000),
+        population: 65_536,
+        num_sets: 512,
+        mean_gap: 8.0,
+        seed: budget.seed,
+        ..TrafficConfig::default()
+    };
+    let meta = TraceMeta {
+        population: cfg.population,
+        num_sets: cfg.num_sets,
+        seed: cfg.seed,
+    };
+    let reqs = generate(&cfg);
+    let workers = [1usize, 2, 4];
+    let mut rows = Vec::new();
+    let mut fp = String::new();
+    let mut hops = Vec::new();
+    for &w in &workers {
+        // best-of-2 damps scheduler noise; the modeled side is
+        // identical between repetitions so either report serves
+        let a = with_workers(w, || sharded_run(budget, &meta, &reqs));
+        let b = with_workers(w, || sharded_run(budget, &meta, &reqs));
         assert_eq!(
-            of("Monarch(S=8)", load).report.offered_ops,
-            of("HBM-C", load).report.offered_ops,
-            "both systems must serve the same deterministic stream"
+            a.modeled_fingerprint(),
+            b.modeled_fingerprint(),
+            "{w} workers: back-to-back runs of one stream diverged"
+        );
+        let r = if a.host_ops_per_sec() >= b.host_ops_per_sec() { a } else { b };
+        if fp.is_empty() {
+            fp = r.modeled_fingerprint();
+        } else {
+            assert_eq!(
+                fp,
+                r.modeled_fingerprint(),
+                "{w} workers changed the modeled report — the parallel \
+                 dispatch loop leaked nondeterminism"
+            );
+        }
+        println!(
+            "  {w} worker(s): {:.2} Mop/s host, {:.2} ops/kcycle modeled, \
+             fingerprint {}",
+            r.host_ops_per_sec() / 1e6,
+            r.ops_per_kcycle(),
+            r.modeled_fingerprint()
+        );
+        hops.push(r.host_ops_per_sec());
+        rows.push(
+            Json::obj()
+                .set("row", "scaling")
+                .set("workers", w as u64)
+                .set("host_ops_per_sec", r.host_ops_per_sec())
+                .set("host_wall_ns", r.host_wall_ns)
+                .set("completed_ops", r.completed_ops)
+                .set("ops_per_kcycle", r.ops_per_kcycle())
+                .set("modeled_fingerprint", r.modeled_fingerprint()),
         );
     }
+    for i in 1..workers.len() {
+        assert!(
+            hops[i] >= hops[i - 1] * STEP_TOLERANCE,
+            "host throughput collapsed {} -> {} workers: {:.2} -> {:.2} \
+             Mop/s",
+            workers[i - 1],
+            workers[i],
+            hops[i - 1] / 1e6,
+            hops[i] / 1e6
+        );
+    }
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    if cores >= 4 {
+        assert!(
+            hops[2] > hops[0],
+            "4 workers on a {cores}-core host must beat 1 worker: \
+             {:.2} vs {:.2} Mop/s",
+            hops[2] / 1e6,
+            hops[0] / 1e6
+        );
+    } else {
+        println!("  ({cores}-core host: absolute 4v1 gate skipped)");
+    }
+    rows
+}
+
+fn million_key_smoke(budget: &Budget) -> Json {
+    let cfg = TrafficConfig {
+        ops: budget.hash_ops.max(4_000),
+        population: 1_000_000,
+        num_sets: 2_048,
+        // warm ingest at the sweep's load-1.0 rate: below saturation,
+        // so the ingest is bounded by CAM capacity, not by shedding
+        mean_gap: 64.0,
+        warm_gap: 64.0,
+        seed: budget.seed ^ 0xA5A5,
+        ..TrafficConfig::default()
+    };
+    let meta = TraceMeta {
+        population: cfg.population,
+        num_sets: cfg.num_sets,
+        seed: cfg.seed,
+    };
+    let reqs = generate(&cfg);
+    assert!(reqs.len() as u64 > cfg.population, "warm phase missing");
+    let t0 = std::time::Instant::now();
+    let r = sharded_run(budget, &meta, &reqs);
+    let wall = t0.elapsed();
+    println!(
+        "  million-key: planted {} / blocked {} of {}, completed {}, \
+         {:.2} Mop/s host, {} spills, {} deletes, wall {wall:?}",
+        r.planted,
+        r.plant_blocked,
+        cfg.population,
+        r.completed_ops,
+        r.host_ops_per_sec() / 1e6,
+        r.counters.get("cam_spills"),
+        r.counters.get("deletes"),
+    );
+    // conservation: every phase-0 insert either planted or was
+    // accounted as blocked/shed — and the vast majority must land
+    assert!(
+        r.planted + r.plant_blocked <= cfg.population,
+        "plant accounting exceeds the population"
+    );
+    assert!(
+        r.planted >= cfg.population * 9 / 10,
+        "only {} of {} keys planted",
+        r.planted,
+        cfg.population
+    );
+    assert!(r.completed_ops > 0);
+    Json::obj()
+        .set("row", "million")
+        .set("population", cfg.population)
+        .set("planted", r.planted)
+        .set("plant_blocked", r.plant_blocked)
+        .set("completed_ops", r.completed_ops)
+        .set("host_wall_ns", r.host_wall_ns)
+        .set("host_ops_per_sec", r.host_ops_per_sec())
+        .set("modeled_fingerprint", r.modeled_fingerprint())
+}
+
+fn main() {
+    let budget = Budget::default().from_env();
+    let t0 = std::time::Instant::now();
+
+    println!("== sweep gates ==");
+    sweep_gates(&budget);
+
+    println!("== thread scaling (sharded backend) ==");
+    let mut rows = thread_scaling(&budget);
+
+    println!("== million-key ingest + churn ==");
+    rows.push(million_key_smoke(&budget));
+
+    let payload = json::experiment("service_scaling", rows);
+    json::write_json("BENCH_service_scaling.json", &payload)
+        .expect("writing BENCH_service_scaling.json");
+    println!("wrote BENCH_service_scaling.json");
     println!("wall time: {:?}", t0.elapsed());
 }

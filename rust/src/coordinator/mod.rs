@@ -1072,8 +1072,16 @@ pub const SERVICE_LOADS: &[f64] = &[0.5, 1.0, 2.0, 4.0, 8.0];
 /// Mean inter-arrival gap at load 1.0, in device cycles.
 const SERVICE_BASE_GAP: f64 = 64.0;
 const SERVICE_SETS: u32 = 128;
-const SERVICE_POPULATION: u64 = 256;
-const N_SERVICE_SYSTEMS: usize = 2;
+const N_SERVICE_SYSTEMS: usize = 3;
+
+/// Resident key population of the service sweep, scaled with the op
+/// budget so bigger budgets exercise bigger tables. Capped at half the
+/// sweep CAM's slot count (128 sets x 512 cols at the standard
+/// geometry) so the warm ingest phase fills without mass drops, and
+/// floored so even tiny test budgets churn a non-trivial table.
+fn service_population(budget: &Budget) -> u64 {
+    (budget.hash_ops as u64 * 8).clamp(2_048, 32_768)
+}
 
 /// One measured cell of the `monarch serve` sweep.
 #[derive(Clone, Debug)]
@@ -1092,7 +1100,7 @@ pub fn service_traffic(
 ) -> (TraceMeta, Vec<Request>) {
     let cfg = TrafficConfig {
         ops: budget.hash_ops.max(600),
-        population: SERVICE_POPULATION,
+        population: service_population(budget),
         num_sets: SERVICE_SETS,
         mean_gap: SERVICE_BASE_GAP / load,
         seed: budget.seed,
@@ -1106,8 +1114,11 @@ pub fn service_traffic(
     (meta, generate(&cfg))
 }
 
-/// The two service backends: Monarch sharded (one queue lane per
-/// vault-group controller) vs the D-Cache table walk.
+/// The three service backends: Monarch sharded (one queue lane per
+/// vault-group controller), the hybrid MemCache split (half the vaults
+/// cache-mode, the rest hosting the CAM partition — prices the service
+/// workload on a package that is ALSO serving L3 misses), and the
+/// D-Cache table walk.
 fn service_system_specs(geom: MonarchGeom) -> Vec<AssocSpec> {
     let spec = |kind, capacity_bytes| AssocSpec {
         kind,
@@ -1117,14 +1128,18 @@ fn service_system_specs(geom: MonarchGeom) -> Vec<AssocSpec> {
     };
     vec![
         spec(InPackageKind::MonarchSharded { shards: 8, m: 3 }, 0),
+        spec(
+            InPackageKind::MonarchHybrid { cache_vaults: geom.vaults / 2, m: 3 },
+            1 << 16,
+        ),
         spec(InPackageKind::DramCache, 1 << 16),
     ]
 }
 
-/// The `monarch serve` sweep: both backends under increasing offered
+/// The `monarch serve` sweep: every backend under increasing offered
 /// load until saturation. Every (load, system) cell fans out as its
 /// own job; each job regenerates the deterministic stream for its
-/// load, so the two systems at one load serve identical requests.
+/// load, so all systems at one load serve identical requests.
 pub fn service_sweep(budget: &Budget, loads: &[f64]) -> Vec<ServicePoint> {
     service_sweep_with(&DeviceBuilder::new, budget, loads)
 }
@@ -1185,6 +1200,7 @@ pub fn service_table(points: &[ServicePoint]) -> Table {
         "offered",
         "completed",
         "ops/kcycle",
+        "host Mop/s",
         "p50",
         "p99",
         "p999",
@@ -1197,13 +1213,15 @@ pub fn service_table(points: &[ServicePoint]) -> Table {
             .map(|c| (c.p50_cycles, c.p99_cycles, c.p999_cycles))
             .unwrap_or((0, 0, 0));
         let shed = p.report.counters.get("shed_interactive")
-            + p.report.counters.get("shed_bulk");
+            + p.report.counters.get("shed_bulk")
+            + p.report.counters.get("shed_deadline");
         t.row(vec![
             p.system.clone(),
             format!("{:.1}", p.load),
             p.report.offered_ops.to_string(),
             p.report.completed_ops.to_string(),
             format!("{:.2}", p.report.ops_per_kcycle()),
+            format!("{:.2}", p.report.host_ops_per_sec() / 1e6),
             p50.to_string(),
             p99.to_string(),
             p999.to_string(),
@@ -1492,18 +1510,25 @@ mod tests {
     fn service_sweep_shapes() {
         let budget = Budget { hash_ops: 600, ..Budget::quick() };
         let pts = service_sweep(&budget, &[1.0, 8.0]);
-        assert_eq!(pts.len(), 4, "2 loads x 2 systems");
+        assert_eq!(pts.len(), 6, "2 loads x 3 systems");
         assert_eq!(pts[0].system, "Monarch(S=8)");
-        assert_eq!(pts[1].system, "HBM-C");
+        assert!(
+            pts[1].system.starts_with("Monarch(hybrid,C="),
+            "want the MemCache split second: {}",
+            pts[1].system
+        );
+        assert_eq!(pts[2].system, "HBM-C");
         for p in &pts {
             assert!(p.report.completed_ops > 0, "{}: nothing served", p.system);
             assert!(p.report.cycles > 0);
+            assert!(p.report.host_wall_ns > 0, "{}: no wall clock", p.system);
             let all = p.report.cell("all", None).expect("grand total");
             assert!(all.p50_cycles <= all.p99_cycles);
             assert!(all.p99_cycles <= all.p999_cycles);
         }
-        // both systems at one load served the SAME offered stream
+        // every system at one load served the SAME offered stream
         assert_eq!(pts[0].report.offered_ops, pts[1].report.offered_ops);
+        assert_eq!(pts[0].report.offered_ops, pts[2].report.offered_ops);
         let t = service_table(&pts);
         assert!(t.render().contains("ops/kcycle"));
     }

@@ -240,9 +240,11 @@ impl ShardedAssoc {
 }
 
 /// Minimum total ops in a batch before the per-shard functional
-/// evaluations fan out over OS threads; below it, spawn overhead
-/// dominates the pure evaluation work.
-const PARALLEL_EVAL_MIN_OPS: usize = 32;
+/// evaluations fan out over OS threads; below it, hand-off overhead
+/// dominates the pure evaluation work. Lowered from 32 once the pool
+/// became persistent (no per-batch thread spawn): service waves of
+/// 16+ ops already amortize a claim/park cycle.
+const PARALLEL_EVAL_MIN_OPS: usize = 16;
 
 impl AssocDevice for ShardedAssoc {
     fn label(&self) -> &str {

@@ -139,10 +139,19 @@ fn service_json_rows(load: f64, r: &ServiceReport) -> Vec<Json> {
         .set("plant_blocked", r.plant_blocked)
         .set("cycles", r.cycles)
         .set("ops_per_kcycle", r.ops_per_kcycle())
+        .set("host_wall_ns", r.host_wall_ns)
+        .set("host_ops_per_sec", r.host_ops_per_sec())
         .set("energy_nj", r.energy_nj)
+        .set("inserts", r.counters.get("inserts"))
+        .set("updates", r.counters.get("updates"))
+        .set("deletes", r.counters.get("deletes"))
+        .set("cam_spills", r.counters.get("cam_spills"))
+        .set("insert_dropped", r.counters.get("insert_dropped"))
         .set("shed_interactive", r.counters.get("shed_interactive"))
         .set("shed_bulk", r.counters.get("shed_bulk"))
+        .set("shed_deadline", r.counters.get("shed_deadline"))
         .set("deferred_bulk", r.counters.get("deferred_bulk"))
+        .set("wear_deferred", r.counters.get("wear_deferred"))
         .set("queue_high_water", r.counters.get("queue_high_water"))
         .set("modeled_fingerprint", r.modeled_fingerprint())];
     for c in &r.cells {
@@ -437,7 +446,8 @@ fn main() -> Result<()> {
                                 c.p99_cycles,
                                 c.p999_cycles,
                                 p.report.counters.get("shed_interactive")
-                                    + p.report.counters.get("shed_bulk"),
+                                    + p.report.counters.get("shed_bulk")
+                                    + p.report.counters.get("shed_deadline"),
                             );
                         }
                     }

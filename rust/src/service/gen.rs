@@ -7,8 +7,16 @@
 //! silently throttling its own clients (the coordinated-omission trap
 //! of closed-loop drivers).
 //!
-//! A stream runs through three equal-length phases, in order:
+//! A stream opens with a **warm** ingest phase and then runs through
+//! three equal-length measured phases, in order:
 //!
+//! - **warm** — the population streams in as `Insert` traffic at a
+//!   fixed ingest rate (not scaled by offered load), ordered
+//!   *round-robin across the home sets* so consecutive CAM writes land
+//!   on different supersets — wear-aware planting that keeps the t_MWW
+//!   governor from serializing the fill the way a set-by-set bulk load
+//!   would. Millions of keys arrive this way instead of being
+//!   pre-planted outside the measured run.
 //! - **steady** — scrambled-zipfian key popularity (YCSB style), hot
 //!   keys spread across the whole population and therefore across all
 //!   shards.
@@ -20,6 +28,14 @@
 //!   process is on/off: long silent gaps followed by dense trains at
 //!   4x the steady rate, with the same *average* offered load.
 //!
+//! The measured phases carry **churn**: a `churn_pct` fraction of
+//! requests are `Insert`/`Delete` ops over an extended index space
+//! (`population * 9/8`), so the population keeps mutating under load —
+//! deletes open columns, reinserts update in place, and the extra
+//! eighth of keys piles onto already-full home sets to exercise the
+//! CAM spill path. Interactive lookups carry an SLO budget
+//! (`slo_cycles`) for deadline-aware admission.
+//!
 //! Everything is deterministic from `TrafficConfig::seed`, so a
 //! generated stream can be captured to a trace file and regenerated
 //! bit-identically (pinned by `tests/service_replay.rs`).
@@ -27,7 +43,9 @@
 use crate::util::rng::{fnv1a64, Rng, ScrambledZipf, Zipf};
 
 /// Traffic phase names, in stream order; `Request::phase` indexes this.
-pub const PHASES: [&str; 3] = ["steady", "storm", "burst"];
+/// Phase 0 is the warm ingest; MONSRV01-era traces (which had no warm
+/// phase) decode onto indices 1..=3.
+pub const PHASES: [&str; 4] = ["warm", "steady", "storm", "burst"];
 
 /// Request class for admission control: interactive requests are shed
 /// immediately when the home queue is full (a timeout would make them
@@ -38,29 +56,47 @@ pub enum Class {
     Bulk,
 }
 
-/// One KV lookup request, fully self-describing: the driver never
-/// consults the generator, so a decoded trace replays identically.
+/// What a request asks the store to do. Lookups search the CAM;
+/// inserts and deletes mutate it (the driver owns placement — column
+/// choice, spill, wear retry — the trace only carries intent).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Lookup,
+    Insert,
+    Delete,
+}
+
+/// One KV request, fully self-describing: the driver never consults
+/// the generator, so a decoded trace replays identically.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Request {
     /// Arrival cycle (monotone within a stream).
     pub arrive: u64,
-    /// Key searched in the CAM (odd = planted, even = guaranteed miss).
+    /// Key searched in the CAM (odd = populated, even = guaranteed
+    /// miss).
     pub key: u64,
     /// Home CAM set of the key.
     pub set: u32,
-    /// Flat-RAM block / table slot holding the value.
+    /// Flat-RAM block / table slot holding the value. For churn ops
+    /// this is the (possibly extended) population index.
     pub value_block: u64,
     pub class: Class,
     /// Index into [`PHASES`].
     pub phase: u8,
+    pub op: Op,
+    /// SLO budget in cycles for deadline-aware admission; 0 = none.
+    /// An interactive request is shed when `arrive + slo` precedes its
+    /// earliest feasible dispatch.
+    pub slo: u32,
 }
 
 /// Knobs of one generated stream.
 #[derive(Clone, Copy, Debug)]
 pub struct TrafficConfig {
-    /// Total requests across all three phases.
+    /// Total requests across the three measured phases (the warm
+    /// phase adds `population` inserts on top when `warm` is set).
     pub ops: usize,
-    /// Distinct keys (the planted working set).
+    /// Distinct keys (the populated working set).
     pub population: u64,
     /// CAM sets the population maps onto.
     pub num_sets: u32,
@@ -69,8 +105,19 @@ pub struct TrafficConfig {
     pub zipf_theta: f64,
     /// Fraction of requests in the Bulk class.
     pub bulk_pct: f64,
-    /// Fraction of requests probing absent keys.
+    /// Fraction of lookups probing absent keys.
     pub miss_pct: f64,
+    /// Stream the population in as a warm insert phase (wear-aware
+    /// order) instead of relying on pre-planting.
+    pub warm: bool,
+    /// Mean inter-arrival gap of warm inserts, in cycles. Fixed — the
+    /// ingest rate is a property of the loader, not of offered load.
+    pub warm_gap: f64,
+    /// Fraction of measured-phase requests that are insert/delete
+    /// churn over the extended (9/8) index space.
+    pub churn_pct: f64,
+    /// SLO budget stamped on interactive lookups, in cycles.
+    pub slo_cycles: u32,
     pub seed: u64,
 }
 
@@ -84,13 +131,18 @@ impl Default for TrafficConfig {
             zipf_theta: 0.99,
             bulk_pct: 0.25,
             miss_pct: 0.05,
+            warm: true,
+            warm_gap: 8.0,
+            churn_pct: 0.10,
+            slo_cycles: 8_192,
             seed: 0xBEEF,
         }
     }
 }
 
-/// Planted key of population index `i`. Always odd, so a random even
-/// key is a guaranteed miss.
+/// Populated key of index `i`. Always odd, so a random even key is a
+/// guaranteed miss (and a cleared CAM column — word 0 — can never
+/// alias a key).
 #[inline]
 pub fn key_of(i: u64) -> u64 {
     fnv1a64(i) | 1
@@ -104,6 +156,14 @@ pub fn home_set(i: u64, population: u64, num_sets: u32) -> u32 {
     ((i as u128 * num_sets as u128) / population as u128) as u32
 }
 
+/// Extended churn index space: an extra eighth of keys whose homes
+/// alias the base population's sets (via `idx % population`), so churn
+/// inserts push nearly-full sets past capacity and exercise spill.
+#[inline]
+pub fn churn_space(population: u64) -> u64 {
+    population + (population / 8).max(1)
+}
+
 /// Exponential inter-arrival gap with the given mean, in whole cycles.
 #[inline]
 fn exp_gap(rng: &mut Rng, mean: f64) -> u64 {
@@ -111,30 +171,96 @@ fn exp_gap(rng: &mut Rng, mean: f64) -> u64 {
     (-(1.0 - rng.f64()).ln() * mean) as u64
 }
 
-/// Generate one three-phase open-loop stream. Arrival cycles are
-/// strictly derived from the config, so equal configs yield equal
-/// streams byte-for-byte.
+/// First population index homed on `set` under the blocked mapping
+/// (the inverse of [`home_set`]): `ceil(set * population / num_sets)`.
+#[inline]
+fn set_lo(set: u64, population: u64, num_sets: u32) -> u64 {
+    ((set as u128 * population as u128 + num_sets as u128 - 1)
+        / num_sets as u128) as u64
+}
+
+/// Generate one open-loop stream: warm ingest (when configured) then
+/// the three measured phases. Arrival cycles are strictly derived from
+/// the config, so equal configs yield equal streams byte-for-byte.
 pub fn generate(cfg: &TrafficConfig) -> Vec<Request> {
     assert!(cfg.population > 0 && cfg.num_sets > 0 && cfg.mean_gap > 0.0);
     let mut rng = Rng::new(cfg.seed);
     let spread = ScrambledZipf::new(cfg.population, cfg.zipf_theta);
     let storm = Zipf::new(cfg.population, cfg.zipf_theta);
-    let per_phase = (cfg.ops / PHASES.len()).max(1);
-    let mut reqs = Vec::with_capacity(per_phase * PHASES.len());
+    let per_phase = (cfg.ops / 3).max(1);
+    let warm_ops = if cfg.warm { cfg.population as usize } else { 0 };
+    let mut reqs = Vec::with_capacity(warm_ops + per_phase * 3);
     let mut now = 0u64;
-    for phase in 0..PHASES.len() as u8 {
+
+    if cfg.warm {
+        assert!(cfg.warm_gap > 0.0);
+        // wear-aware ingest order: visit the home sets round-robin
+        // (row r of set 0, row r of set 1, ...) so back-to-back CAM
+        // writes land on different supersets and the t_MWW write
+        // window recovers between touches of any one superset
+        let (pop, sets) = (cfg.population, cfg.num_sets);
+        'rows: for row in 0u64.. {
+            let mut emitted = false;
+            for s in 0..sets as u64 {
+                let i = set_lo(s, pop, sets) + row;
+                if i >= set_lo(s + 1, pop, sets) {
+                    continue;
+                }
+                emitted = true;
+                now += exp_gap(&mut rng, cfg.warm_gap);
+                reqs.push(Request {
+                    arrive: now,
+                    key: key_of(i),
+                    set: home_set(i, pop, sets),
+                    value_block: i,
+                    class: Class::Bulk,
+                    phase: 0,
+                    op: Op::Insert,
+                    slo: 0,
+                });
+            }
+            if !emitted {
+                break 'rows;
+            }
+        }
+    }
+
+    for phase in 1..PHASES.len() as u8 {
         for j in 0..per_phase {
             now += match phase {
                 // on/off: every 64th arrival opens a silent window
                 // worth 48 steady gaps, then a train at 4x the steady
                 // rate — the average offered load matches steady
                 // ((48 + 63/4) / 64 ~= 1.0 gaps per request)
-                2 if j % 64 == 0 => (cfg.mean_gap * 48.0) as u64,
-                2 => exp_gap(&mut rng, cfg.mean_gap * 0.25),
+                3 if j % 64 == 0 => (cfg.mean_gap * 48.0) as u64,
+                3 => exp_gap(&mut rng, cfg.mean_gap * 0.25),
                 _ => exp_gap(&mut rng, cfg.mean_gap),
             };
+            if rng.chance(cfg.churn_pct) {
+                // population churn: delete an existing key, or insert
+                // over the extended index space (reinsert = in-place
+                // update; the extra eighth overfills home sets and
+                // forces spill placement)
+                let idx = rng.below(churn_space(cfg.population));
+                let op = if rng.chance(0.5) { Op::Insert } else { Op::Delete };
+                reqs.push(Request {
+                    arrive: now,
+                    key: key_of(idx),
+                    set: home_set(
+                        idx % cfg.population,
+                        cfg.population,
+                        cfg.num_sets,
+                    ),
+                    value_block: idx,
+                    class: Class::Bulk,
+                    phase,
+                    op,
+                    slo: 0,
+                });
+                continue;
+            }
             let idx = match phase {
-                1 => {
+                2 => {
                     // hot set slides across the population (and, via
                     // the blocked home mapping, across the shards)
                     let off =
@@ -144,7 +270,7 @@ pub fn generate(cfg: &TrafficConfig) -> Vec<Request> {
                 _ => spread.sample(&mut rng),
             };
             let (key, set) = if rng.chance(cfg.miss_pct) {
-                // absent key (even; planted keys are odd), uniform set
+                // absent key (even; populated keys are odd), uniform set
                 (rng.next_u64() & !1, rng.next_u32() % cfg.num_sets)
             } else {
                 (key_of(idx), home_set(idx, cfg.population, cfg.num_sets))
@@ -154,6 +280,10 @@ pub fn generate(cfg: &TrafficConfig) -> Vec<Request> {
             } else {
                 Class::Interactive
             };
+            let slo = match class {
+                Class::Interactive => cfg.slo_cycles,
+                Class::Bulk => 0,
+            };
             reqs.push(Request {
                 arrive: now,
                 key,
@@ -161,6 +291,8 @@ pub fn generate(cfg: &TrafficConfig) -> Vec<Request> {
                 value_block: idx,
                 class,
                 phase,
+                op: Op::Lookup,
+                slo,
             });
         }
     }
@@ -177,7 +309,11 @@ mod tests {
         let a = generate(&cfg);
         let b = generate(&cfg);
         assert_eq!(a, b);
-        assert_eq!(a.len(), 3 * (cfg.ops / 3));
+        assert_eq!(
+            a.len(),
+            cfg.population as usize + 3 * (cfg.ops / 3),
+            "warm ingest plus three measured phases"
+        );
         for w in a.windows(2) {
             assert!(w[1].arrive >= w[0].arrive, "arrivals must be sorted");
         }
@@ -185,21 +321,113 @@ mod tests {
 
     #[test]
     fn phases_partition_the_stream_in_order() {
-        let reqs = generate(&TrafficConfig::default());
-        let per_phase = reqs.len() / PHASES.len();
+        let cfg = TrafficConfig::default();
+        let reqs = generate(&cfg);
+        let warm = cfg.population as usize;
+        let per_phase = (reqs.len() - warm) / 3;
         for (i, r) in reqs.iter().enumerate() {
-            assert_eq!(r.phase as usize, i / per_phase);
+            let want = if i < warm { 0 } else { 1 + (i - warm) / per_phase };
+            assert_eq!(r.phase as usize, want);
         }
     }
 
     #[test]
-    fn planted_keys_are_odd_and_home_sets_in_range() {
+    fn warm_phase_streams_the_whole_population_wear_aware() {
         let cfg = TrafficConfig::default();
         let reqs = generate(&cfg);
-        let mut hits = 0usize;
+        let warm: Vec<&Request> =
+            reqs.iter().filter(|r| r.phase == 0).collect();
+        assert_eq!(warm.len(), cfg.population as usize);
+        // every index inserted exactly once, correctly keyed and homed
+        let mut seen = vec![false; cfg.population as usize];
+        for r in &warm {
+            assert_eq!(r.op, Op::Insert);
+            assert_eq!(r.class, Class::Bulk);
+            assert_eq!(r.key, key_of(r.value_block));
+            assert_eq!(
+                r.set,
+                home_set(r.value_block, cfg.population, cfg.num_sets)
+            );
+            assert!(!std::mem::replace(
+                &mut seen[r.value_block as usize],
+                true
+            ));
+        }
+        assert!(seen.iter().all(|&s| s));
+        // wear-aware order: consecutive warm inserts never hit the
+        // same home set (round-robin across sets)
+        for w in warm.windows(2) {
+            assert_ne!(w[0].set, w[1].set, "consecutive writes share a set");
+        }
+        // disabling warm removes the phase entirely
+        let cold = generate(&TrafficConfig { warm: false, ..cfg });
+        assert!(cold.iter().all(|r| r.phase >= 1));
+        assert_eq!(cold.len(), 3 * (cfg.ops / 3));
+    }
+
+    #[test]
+    fn churn_mutates_over_the_extended_space() {
+        let cfg = TrafficConfig { ops: 12_000, ..TrafficConfig::default() };
+        let reqs = generate(&cfg);
+        let churn: Vec<&Request> = reqs
+            .iter()
+            .filter(|r| r.phase > 0 && r.op != Op::Lookup)
+            .collect();
+        let frac = churn.len() as f64 / (3 * (cfg.ops / 3)) as f64;
+        assert!(
+            (frac - cfg.churn_pct).abs() < 0.05,
+            "churn fraction {frac} far from {}",
+            cfg.churn_pct
+        );
+        assert!(churn.iter().any(|r| r.op == Op::Insert));
+        assert!(churn.iter().any(|r| r.op == Op::Delete));
+        let mut extended = 0usize;
+        for r in &churn {
+            assert!(r.value_block < churn_space(cfg.population));
+            assert_eq!(r.key, key_of(r.value_block));
+            assert_eq!(
+                r.set,
+                home_set(
+                    r.value_block % cfg.population,
+                    cfg.population,
+                    cfg.num_sets
+                )
+            );
+            assert_eq!(r.class, Class::Bulk);
+            if r.value_block >= cfg.population {
+                extended += 1;
+            }
+        }
+        assert!(extended > 0, "no churn over the extended space");
+    }
+
+    #[test]
+    fn interactive_lookups_carry_the_slo_budget() {
+        let cfg = TrafficConfig::default();
+        let reqs = generate(&cfg);
+        let mut interactive = 0usize;
         for r in &reqs {
+            match (r.class, r.op) {
+                (Class::Interactive, Op::Lookup) => {
+                    assert_eq!(r.slo, cfg.slo_cycles);
+                    interactive += 1;
+                }
+                _ => assert_eq!(r.slo, 0, "only interactive lookups have SLOs"),
+            }
+        }
+        assert!(interactive > 0);
+    }
+
+    #[test]
+    fn populated_keys_are_odd_and_home_sets_in_range() {
+        let cfg = TrafficConfig::default();
+        let reqs = generate(&cfg);
+        let lookups: Vec<&Request> =
+            reqs.iter().filter(|r| r.op == Op::Lookup).collect();
+        let mut hits = 0usize;
+        for r in &lookups {
             assert!(r.set < cfg.num_sets);
-            assert!((r.value_block) < cfg.population);
+            assert!(r.value_block < cfg.population);
             if r.key & 1 == 1 {
                 hits += 1;
                 assert_eq!(r.key, key_of(r.value_block));
@@ -209,9 +437,9 @@ mod tests {
                 );
             }
         }
-        // ~95% of requests probe planted keys
-        assert!(hits as f64 > 0.9 * reqs.len() as f64);
-        assert!(hits < reqs.len(), "some misses must be generated");
+        // ~95% of lookups probe populated keys
+        assert!(hits as f64 > 0.9 * lookups.len() as f64);
+        assert!(hits < lookups.len(), "some misses must be generated");
     }
 
     #[test]
@@ -220,17 +448,17 @@ mod tests {
         // differ from the one late in the phase
         let cfg = TrafficConfig { ops: 9_000, ..TrafficConfig::default() };
         let reqs = generate(&cfg);
-        let per_phase = reqs.len() / 3;
-        let storm = &reqs[per_phase..2 * per_phase];
-        let top_set = |rs: &[Request]| -> u32 {
+        let storm: Vec<&Request> =
+            reqs.iter().filter(|r| r.phase == 2).collect();
+        let top_set = |rs: &[&Request]| -> u32 {
             let mut counts = vec![0u32; cfg.num_sets as usize];
             for r in rs {
                 counts[r.set as usize] += 1;
             }
             (0..cfg.num_sets).max_by_key(|&s| counts[s as usize]).unwrap()
         };
-        let early = top_set(&storm[..per_phase / 4]);
-        let late = top_set(&storm[3 * per_phase / 4..]);
+        let early = top_set(&storm[..storm.len() / 4]);
+        let late = top_set(&storm[3 * storm.len() / 4..]);
         assert_ne!(early, late, "storm hot set failed to migrate");
     }
 
@@ -238,12 +466,16 @@ mod tests {
     fn burst_phase_has_silent_windows() {
         let cfg = TrafficConfig::default();
         let reqs = generate(&cfg);
-        let per_phase = reqs.len() / 3;
-        let max_gap = |rs: &[Request]| -> u64 {
-            rs.windows(2).map(|w| w[1].arrive - w[0].arrive).max().unwrap()
+        let gaps = |phase: u8| -> u64 {
+            let rs: Vec<&Request> =
+                reqs.iter().filter(|r| r.phase == phase).collect();
+            rs.windows(2)
+                .map(|w| w[1].arrive - w[0].arrive)
+                .max()
+                .unwrap()
         };
-        let steady = max_gap(&reqs[..per_phase]);
-        let burst = max_gap(&reqs[2 * per_phase..]);
+        let steady = gaps(1);
+        let burst = gaps(3);
         assert!(
             burst >= (cfg.mean_gap * 48.0) as u64,
             "burst off-periods missing: {burst}"

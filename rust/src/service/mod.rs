@@ -1,31 +1,68 @@
-//! Production-style KV service driver with tail-latency telemetry.
+//! Production-style KV service driver with tail-latency telemetry and
+//! multi-threaded, shard-parallel dispatch.
 //!
 //! Everything else in the repo measures fixed-size batches; this
 //! subsystem *serves*: an open-loop request stream (arrival cycles
 //! baked into the trace — see [`gen`]) flows through bounded per-lane
 //! queues in front of an [`AssocDevice`], admission control sheds or
-//! defers when a queue fills, and every completed request records its
-//! latency — modeled device cycles AND host wall-clock — into
-//! per-(phase, lane) histograms ([`telemetry`]). The output is a
-//! latency *distribution* (p50/p99/p999), not a batch total, which is
-//! what decides whether in-package memory pays off for shrinking
-//! response-time requirements (Lowe-Power et al.).
+//! defers when a queue fills (or when an SLO is already dead on
+//! arrival), and every completed request records its latency — modeled
+//! device cycles AND host wall-clock — into per-(phase, lane)
+//! histograms ([`telemetry`]). The output is a latency *distribution*
+//! (p50/p99/p999), not a batch total, which is what decides whether
+//! in-package memory pays off for shrinking response-time requirements
+//! (Lowe-Power et al.).
 //!
 //! **Lanes.** On `ShardedAssoc` a lane IS a shard: the queue partition
 //! reuses the device's own contiguous CAM-set partition
 //! (`sets_per_shard`), so per-lane telemetry is per-shard telemetry.
 //! Conventional backends (no CAM, e.g. the D-Cache table) get the same
-//! number of queue lanes over the same set partition, but each lookup
+//! number of queue lanes over the same set partition, but each request
 //! walks the table image through `access()` — bucket probe then value
-//! fetch — serialized per lane.
+//! slot — serialized per lane.
+//!
+//! **Mutating population.** Streams carry [`gen::Op::Insert`] and
+//! [`gen::Op::Delete`] alongside lookups: the population arrives
+//! during a *warm* ingest phase (wear-aware set order) instead of
+//! being pre-planted, and churn keeps mutating it under load. The
+//! driver owns placement through a [`CamTable`] directory — home-set
+//! column choice rotates (wear-aware), a full home set spills to its
+//! hopscotch neighbour, t_MWW-blocked writes defer and retry. Lookups
+//! search the home set and its spill neighbour (`set0`/`set1` of the
+//! hopscotch window). Legacy lookup-only traces (MONSRV01) still
+//! pre-plant, preserving their replay semantics.
+//!
+//! **Parallel dispatch.** Each wave runs a fixed pipeline:
+//!
+//! 1. *admit* (serial): pop eligible arrivals into per-lane queues,
+//!    shedding on deadline or depth;
+//! 2. *build* (parallel over lanes): each ready lane assembles its
+//!    `CamLookup` ops and splits out its mutations;
+//! 3. *search* (serial issue): one `lookup_many` over the whole wave —
+//!    the device fans its functional evaluation across cores
+//!    internally (`ShardedAssoc::eval_shards`);
+//! 4. *mutate* (serial): per-lane insert/delete placement through the
+//!    `CamTable` — placement is the one step that needs `&mut` device
+//!    and directory;
+//! 5. *scatter* (parallel over lanes): completions record telemetry,
+//!    hit/miss counters, and lane clocks.
+//!
+//! Parallel steps use `util::pool::fan_out_mut` over the lane array:
+//! every write in those steps lands in lane-owned state, so there are
+//! no locks, and per-lane results are byte-identical no matter which
+//! worker ran the lane. Counter bags and histograms merge at the end
+//! of the run with commutative folds (sums, maxes). That is the whole
+//! determinism argument: `modeled_fingerprint()` is bit-identical
+//! across `MONARCH_THREADS` values (pinned by
+//! `tests/service_replay.rs`), while host wall-clock throughput
+//! ([`ServiceReport::host_ops_per_sec`]) scales with cores.
 //!
 //! **Determinism.** The modeled side of a run is a pure function of
 //! (backend, stream): replaying a captured trace reproduces every
 //! modeled-cycle figure bit-identically. [`ServiceReport::
 //! modeled_fingerprint`] hashes exactly the modeled fields so two runs
 //! can be compared with a single string; host wall-clock fields are
-//! reported but excluded. Pinned end-to-end by
-//! `tests/service_replay.rs`.
+//! reported but excluded.
 
 pub mod gen;
 pub mod queue;
@@ -33,14 +70,16 @@ pub mod telemetry;
 pub mod trace;
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
+use std::time::Instant;
 
 use crate::device::assoc::CamLookup;
 use crate::device::AssocDevice;
-use crate::service::gen::{home_set, key_of, Class, Request, PHASES};
-use crate::service::queue::LaneQueues;
-use crate::service::telemetry::Telemetry;
+use crate::service::gen::{home_set, key_of, Class, Op, Request, PHASES};
+use crate::service::queue::LaneQueue;
+use crate::service::telemetry::{LaneCells, Telemetry};
 use crate::service::trace::TraceMeta;
+use crate::util::pool::fan_out_mut;
 use crate::util::rng::fnv1a64_bytes;
 use crate::util::stats::{Counters, LogHist};
 
@@ -54,9 +93,11 @@ pub struct ServiceConfig {
     pub queue_cap: usize,
     /// Max requests a lane dispatches per wave.
     pub batch: usize,
-    /// Cycles a deferred bulk request waits before re-arriving.
+    /// Cycles a deferred request waits before re-arriving (bulk
+    /// queue-full deferrals and t_MWW wear deferrals both use it).
     pub defer_gap: u64,
-    /// Deferrals before a bulk request is shed outright.
+    /// Deferrals before a request is shed/dropped outright. Queue
+    /// deferrals and wear deferrals are budgeted separately.
     pub max_defers: u8,
 }
 
@@ -96,17 +137,25 @@ pub struct ServiceReport {
     pub lanes: usize,
     /// Requests in the stream (arrivals offered to admission).
     pub offered_ops: u64,
-    /// Requests that completed a lookup (offered minus shed).
+    /// Requests that completed (offered minus shed/dropped).
     pub completed_ops: u64,
-    /// Keys planted before the epoch; `plant_blocked` counts t_MWW
-    /// rejections (words the durability governor refused).
+    /// Keys landed in the CAM: warm-phase insert successes when the
+    /// stream carries its own ingest, pre-plant successes otherwise.
     pub planted: u64,
+    /// Ingest failures: t_MWW rejections the retry budget could not
+    /// absorb, plus inserts with no free column in home or spill set.
     pub plant_blocked: u64,
     /// Cycle the last completion retired (the modeled makespan).
     pub cycles: u64,
     pub energy_nj: f64,
-    /// shed_interactive / shed_bulk / deferred_bulk / hits / misses /
-    /// waves / queue_high_water.
+    /// Host wall-clock of the whole serve loop, nanoseconds. Machine-
+    /// dependent: excluded from the fingerprint, reported for the
+    /// throughput headline.
+    pub host_wall_ns: u64,
+    /// hits / misses / waves / inserts / updates / deletes /
+    /// delete_misses / cam_spills / insert_dropped / wear_deferred /
+    /// wear_dropped / shed_interactive / shed_bulk / shed_deadline /
+    /// deferred_bulk / queue_high_water.
     pub counters: Counters,
     pub cells: Vec<ServiceCell>,
 }
@@ -117,6 +166,12 @@ impl ServiceReport {
         1000.0 * self.completed_ops as f64 / self.cycles.max(1) as f64
     }
 
+    /// Host throughput: completions per wall-clock second of driver
+    /// time. The headline the multi-threaded dispatch loop moves.
+    pub fn host_ops_per_sec(&self) -> f64 {
+        1e9 * self.completed_ops as f64 / self.host_wall_ns.max(1) as f64
+    }
+
     pub fn cell(&self, phase: &str, shard: Option<usize>) -> Option<&ServiceCell> {
         self.cells.iter().find(|c| c.phase == phase && c.shard == shard)
     }
@@ -124,8 +179,9 @@ impl ServiceReport {
     /// FNV-1a over every *modeled* field — system, shape, counters,
     /// cycle-domain latency cells — and none of the host wall-clock
     /// fields. Two runs of the same stream on the same backend must
-    /// produce equal fingerprints on any machine; that is the replay
-    /// acceptance gate, checkable with one string compare.
+    /// produce equal fingerprints on any machine at any
+    /// `MONARCH_THREADS`; that is the replay acceptance gate,
+    /// checkable with one string compare.
     pub fn modeled_fingerprint(&self) -> String {
         let mut bytes: Vec<u8> = Vec::new();
         bytes.extend_from_slice(self.system.as_bytes());
@@ -162,28 +218,171 @@ impl ServiceReport {
     }
 }
 
-/// Plant the key population into the CAM ahead of the measured epoch
-/// (column = arrival order within the home set). Backends without a
-/// CAM skip planting — their lookups walk the table image through
-/// `access()` instead. Returns (planted, blocked-by-t_MWW).
-pub fn plant_population(
+/// Driver-side CAM placement directory: which key lives in which
+/// (set, column), which columns are free, and where the next insert
+/// should go. The device models *timing*; the driver owns *placement*
+/// — exactly the split a real Monarch host library would have.
+///
+/// Determinism note: the `HashMap` is only ever point-queried, never
+/// iterated, so its nondeterministic bucket order cannot leak into any
+/// modeled figure.
+struct CamTable {
+    /// key -> (set, col) of the CAM word currently holding it.
+    loc: HashMap<u64, (usize, usize)>,
+    /// Per-set column occupancy bitmaps, `words` u64 words per set.
+    occ: Vec<u64>,
+    /// Per-set rotating column cursor: successive inserts to a set
+    /// take successive columns, spreading writes across the set's
+    /// words instead of hammering column 0 after every delete.
+    cursor: Vec<usize>,
+    cols_per_set: usize,
+    num_sets: usize,
+    words: usize,
+}
+
+impl CamTable {
+    fn new(num_sets: usize, cols_per_set: usize) -> Self {
+        let words = cols_per_set.div_ceil(64);
+        Self {
+            loc: HashMap::new(),
+            occ: vec![0; num_sets * words],
+            cursor: vec![0; num_sets],
+            cols_per_set,
+            num_sets,
+            words,
+        }
+    }
+
+    #[inline]
+    fn get(&self, key: u64) -> Option<(usize, usize)> {
+        self.loc.get(&key).copied()
+    }
+
+    #[inline]
+    fn occupied(&self, set: usize, col: usize) -> bool {
+        (self.occ[set * self.words + col / 64] >> (col % 64)) & 1 == 1
+    }
+
+    /// First free column of `set`, scanning from the rotating cursor.
+    fn free_col(&self, set: usize) -> Option<usize> {
+        let start = self.cursor[set];
+        (0..self.cols_per_set)
+            .map(|k| (start + k) % self.cols_per_set)
+            .find(|&col| !self.occupied(set, col))
+    }
+
+    fn insert(&mut self, key: u64, set: usize, col: usize) {
+        debug_assert!(!self.occupied(set, col));
+        self.occ[set * self.words + col / 64] |= 1 << (col % 64);
+        self.cursor[set] = (col + 1) % self.cols_per_set;
+        self.loc.insert(key, (set, col));
+    }
+
+    fn remove(&mut self, key: u64) -> Option<(usize, usize)> {
+        let (set, col) = self.loc.remove(&key)?;
+        self.occ[set * self.words + col / 64] &= !(1 << (col % 64));
+        Some((set, col))
+    }
+}
+
+/// Everything one lane owns. The parallel steps of the wave pipeline
+/// hand each `LaneState` to exactly one pool worker
+/// (`fan_out_mut`), so every field here is written without locks and
+/// the per-lane outcome cannot depend on worker scheduling.
+struct LaneState {
+    queue: LaneQueue,
+    /// Cycle the lane's last dispatched work retires.
+    free_at: u64,
+    last_done: u64,
+    /// Recent modeled cycles per served op (deadline admission's
+    /// service-rate estimate); 0 until the lane serves its first wave.
+    est_per_op: u64,
+    /// Lane-local counter bag (hits/misses), merged into the run
+    /// totals after the loop.
+    counters: Counters,
+    cells: LaneCells,
+    /// Wave scratch, reused across waves (allocation-free steady
+    /// state): the dequeued batch, the built lookup ops, the stream
+    /// index behind each lookup, the mutation indices, and completed
+    /// mutations as (stream idx, done_at).
+    batch: Vec<usize>,
+    lookups: Vec<CamLookup>,
+    lk_idx: Vec<usize>,
+    muts: Vec<usize>,
+    mut_done: Vec<(usize, u64)>,
+    /// This lane's slice of the wave-wide lookup array starts here.
+    out_base: usize,
+    /// Host-ns this lane spent building ops / applying mutations this
+    /// wave (per-lane measurement, not a whole-wave average).
+    build_ns: u64,
+    mut_ns: u64,
+}
+
+impl LaneState {
+    fn new(queue_cap: usize) -> Self {
+        Self {
+            queue: LaneQueue::new(queue_cap),
+            free_at: 0,
+            last_done: 0,
+            est_per_op: 0,
+            counters: Counters::new(),
+            cells: LaneCells::new(PHASES.len()),
+            batch: Vec::new(),
+            lookups: Vec::new(),
+            lk_idx: Vec::new(),
+            muts: Vec::new(),
+            mut_done: Vec::new(),
+            out_base: 0,
+            build_ns: 0,
+            mut_ns: 0,
+        }
+    }
+}
+
+/// Waves below this many requests stay serial: a pool hand-off costs
+/// a few microseconds of wakeup latency, which only amortizes once the
+/// lanes carry real work. Either path writes the same lane-owned state
+/// the same way, so the cutover cannot affect modeled results.
+const PARALLEL_WAVE_MIN_OPS: usize = 64;
+
+/// Run `f` over every lane — through the worker pool when the wave is
+/// big enough to pay for the hand-off, inline otherwise.
+fn for_each_lane<F>(lanes: &mut [LaneState], parallel: bool, f: F)
+where
+    F: Fn(usize, &mut LaneState) + Sync,
+{
+    if parallel {
+        fan_out_mut(lanes, f);
+    } else {
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            f(i, lane);
+        }
+    }
+}
+
+/// Plant the key population into the CAM ahead of the measured epoch,
+/// registering every placement in the directory. Only used for streams
+/// that do not carry their own warm ingest (legacy MONSRV01 traces).
+/// Returns (planted, blocked-by-t_MWW-or-capacity).
+fn plant_into(
     dev: &mut dyn AssocDevice,
+    table: &mut CamTable,
     population: u64,
     num_sets: u32,
 ) -> (u64, u64) {
-    let Some(cam) = dev.cam() else {
-        return (0, 0);
-    };
-    let mut next_col = vec![0usize; num_sets as usize];
     let (mut planted, mut blocked) = (0u64, 0u64);
     let mut t = 0u64;
     for i in 0..population {
-        let set = home_set(i, population, num_sets).min(cam.num_sets as u32 - 1);
-        let col = next_col[set as usize] % cam.cols_per_set;
-        next_col[set as usize] += 1;
-        match dev.cam_write(set as usize, col, key_of(i), t) {
+        let set = (home_set(i, population, num_sets) as usize)
+            .min(table.num_sets - 1);
+        let Some(col) = table.free_col(set) else {
+            blocked += 1;
+            continue;
+        };
+        match dev.cam_write(set, col, key_of(i), t) {
             Some(a) => {
                 t = a.done_at;
+                table.insert(key_of(i), set, col);
                 planted += 1;
             }
             None => blocked += 1,
@@ -194,22 +393,39 @@ pub fn plant_population(
 
 /// Serve one request stream. The stream must be arrival-sorted (as
 /// [`gen::generate`] and [`trace::decode`] produce); `meta` sizes the
-/// planted population and the lane partition.
+/// population and the lane partition.
 pub fn run_service(
     dev: &mut dyn AssocDevice,
     cfg: &ServiceConfig,
     meta: &TraceMeta,
     reqs: &[Request],
 ) -> ServiceReport {
-    let (planted, plant_blocked) =
-        plant_population(dev, meta.population, meta.num_sets);
-    // epoch boundary: planting is setup, not service
-    let _ = dev.drain_energy_nj();
-    dev.reset_timing();
+    let wall0 = Instant::now();
+    let cam_geom = dev.cam();
+    let has_cam = cam_geom.is_some();
+    let mut table =
+        cam_geom.map(|g| CamTable::new(g.num_sets, g.cols_per_set));
+
+    // streams with their own warm ingest plant under measurement; only
+    // legacy lookup-only streams pre-plant outside the epoch
+    let streamed_plant =
+        reqs.iter().any(|r| r.op == Op::Insert && r.phase == 0);
+    let (mut planted, mut plant_blocked) = (0u64, 0u64);
+    if !streamed_plant {
+        if let Some(table) = table.as_mut() {
+            let (p, b) =
+                plant_into(dev, table, meta.population, meta.num_sets);
+            planted = p;
+            plant_blocked = b;
+        }
+        // epoch boundary: pre-planting is setup, not service
+        let _ = dev.drain_energy_nj();
+        dev.reset_timing();
+    }
 
     // lane partition: the device's own shard partition when sharded,
     // an equivalent contiguous slicing otherwise
-    let (lanes, sets_per_lane) = match dev.sharded() {
+    let (lanes_n, sets_per_lane) = match dev.sharded() {
         Some(s) => (s.num_shards(), s.sets_per_shard()),
         None => {
             let l = cfg.lanes.max(1);
@@ -217,14 +433,15 @@ pub fn run_service(
         }
     };
     let lane_of =
-        |set: u32| (set as usize / sets_per_lane).min(lanes - 1);
-    let has_cam = dev.cam().is_some();
+        |set: u32| (set as usize / sets_per_lane).min(lanes_n - 1);
+    let cam_sets = cam_geom.map_or(1, |g| g.num_sets);
 
-    let mut queues = LaneQueues::new(lanes, cfg.queue_cap);
-    let mut tele = Telemetry::new(PHASES.len(), lanes);
+    let mut lanes: Vec<LaneState> =
+        (0..lanes_n).map(|_| LaneState::new(cfg.queue_cap)).collect();
     let mut counters = Counters::new();
-    let mut free_at = vec![0u64; lanes];
-    let mut last_done = 0u64;
+    // t_MWW retry budget per stream index (separate from the queue
+    // deferral budget carried in the heap entry)
+    let mut wear_defers: Vec<u8> = vec![0; reqs.len()];
 
     // (eligible cycle, admission sequence, deferral count, stream idx):
     // arrivals and deferred re-arrivals share one time-ordered heap,
@@ -237,6 +454,9 @@ pub fn run_service(
         .collect();
     let mut next_seq = reqs.len() as u64;
 
+    // wave-wide lookup array, reused across waves
+    let mut wave_ops: Vec<CamLookup> = Vec::new();
+
     let mut t = 0u64;
     loop {
         // 1. admit every arrival eligible at or before `t`
@@ -245,11 +465,24 @@ pub fn run_service(
                 break;
             }
             heap.pop();
-            let lane = lane_of(reqs[idx].set);
-            if !queues.full(lane) {
-                queues.push(lane, idx);
+            let r = &reqs[idx];
+            let lane = &mut lanes[lane_of(r.set)];
+            // deadline-aware admission: if the SLO expires before the
+            // earliest feasible dispatch — the lane frees up, then the
+            // queue ahead drains at its recent per-op rate — the
+            // answer would arrive dead; shed now, not after queueing
+            if r.slo > 0 {
+                let feasible = lane.free_at.max(t)
+                    + lane.queue.depth() as u64 * lane.est_per_op;
+                if r.arrive + r.slo as u64 < feasible {
+                    counters.inc("shed_deadline");
+                    continue;
+                }
+            }
+            if !lane.queue.full() {
+                lane.queue.push(idx);
             } else {
-                match reqs[idx].class {
+                match r.class {
                     // an interactive answer past its deadline is
                     // worthless: shed immediately
                     Class::Interactive => counters.inc("shed_interactive"),
@@ -268,100 +501,298 @@ pub fn run_service(
             }
         }
 
-        // 2. dispatch one wave: every lane that is free and backlogged
-        let mut wave: Vec<(usize, usize)> = Vec::new(); // (lane, idx)
-        for lane in 0..lanes {
-            if free_at[lane] <= t && !queues.is_empty(lane) {
-                for idx in queues.take(lane, cfg.batch) {
-                    wave.push((lane, idx));
-                }
+        // 2. harvest ready lanes: every lane that is free and
+        // backlogged dequeues up to one batch
+        let mut wave_len = 0usize;
+        for lane in lanes.iter_mut() {
+            lane.batch.clear();
+            if lane.free_at <= t && !lane.queue.is_empty() {
+                lane.queue.take_into(cfg.batch, &mut lane.batch);
+                wave_len += lane.batch.len();
             }
         }
-        if !wave.is_empty() {
+
+        if wave_len > 0 {
             counters.inc("waves");
+            let par = wave_len >= PARALLEL_WAVE_MIN_OPS;
             if has_cam {
-                // one batched lookup across the ready lanes: per-shard
-                // register traffic overlaps inside the device
-                let ops: Vec<CamLookup> = wave
-                    .iter()
-                    .map(|&(_, i)| {
-                        let r = &reqs[i];
-                        CamLookup {
-                            key: r.key,
-                            mask: !0,
-                            set0: r.set as usize,
-                            set1: r.set as usize,
-                            value_block: r.value_block,
-                            fetch_value_on_miss: false,
-                            at: t,
+                // 3. build (parallel): each lane assembles its lookup
+                // ops — home set plus hopscotch spill neighbour — and
+                // splits out its mutations
+                for_each_lane(&mut lanes, par, |_, lane| {
+                    let t0 = Instant::now();
+                    lane.lookups.clear();
+                    lane.lk_idx.clear();
+                    lane.muts.clear();
+                    for &idx in &lane.batch {
+                        let r = &reqs[idx];
+                        if r.op == Op::Lookup {
+                            let set = (r.set as usize).min(cam_sets - 1);
+                            lane.lookups.push(CamLookup {
+                                key: r.key,
+                                mask: !0,
+                                set0: set,
+                                set1: (set + 1) % cam_sets,
+                                value_block: r.value_block,
+                                fetch_value_on_miss: false,
+                                at: t,
+                            });
+                            lane.lk_idx.push(idx);
+                        } else {
+                            lane.muts.push(idx);
                         }
-                    })
-                    .collect();
-                let t0 = std::time::Instant::now();
-                let outs = dev.lookup_many(&ops);
-                let ns = t0.elapsed().as_nanos() as u64
-                    / wave.len() as u64;
-                for (&(lane, idx), o) in wave.iter().zip(&outs) {
-                    let r = &reqs[idx];
-                    counters.inc(if o.hit { "hits" } else { "misses" });
-                    tele.record(
-                        r.phase as usize,
-                        lane,
-                        o.done_at.saturating_sub(r.arrive),
-                        ns,
-                    );
-                    free_at[lane] = free_at[lane].max(o.done_at);
-                    last_done = last_done.max(o.done_at);
+                    }
+                    lane.build_ns = t0.elapsed().as_nanos() as u64;
+                });
+
+                // 4. search (serial issue): one batched lookup across
+                // the ready lanes; the device overlaps per-shard
+                // register traffic and fans the functional evaluation
+                // across cores internally
+                wave_ops.clear();
+                for lane in lanes.iter_mut() {
+                    lane.out_base = wave_ops.len();
+                    wave_ops.extend_from_slice(&lane.lookups);
                 }
-            } else {
-                // conventional table: bucket probe then value fetch
-                // through the cached image, serialized per lane
-                for lane in 0..lanes {
-                    let items: Vec<usize> = wave
-                        .iter()
-                        .filter(|&&(l, _)| l == lane)
-                        .map(|&(_, i)| i)
-                        .collect();
-                    if items.is_empty() {
+                let t0 = Instant::now();
+                let outs = if wave_ops.is_empty() {
+                    Vec::new()
+                } else {
+                    dev.lookup_many(&wave_ops)
+                };
+                // the single device call serves every lane at once, so
+                // its host cost is attributed per-op; build/mutate
+                // costs are measured per-lane
+                let dev_ns_per_op = if wave_ops.is_empty() {
+                    0
+                } else {
+                    t0.elapsed().as_nanos() as u64 / wave_ops.len() as u64
+                };
+
+                // 5. mutate (serial): placement through the directory.
+                // Lookups were issued against the pre-wave CAM state
+                // (snapshot semantics: a wave's searches do not see its
+                // own wave's mutations), which keeps the order inside
+                // the wave irrelevant and the result deterministic.
+                let tbl = table.as_mut().expect("CAM backend has a table");
+                for lane in lanes.iter_mut() {
+                    lane.mut_done.clear();
+                    lane.mut_ns = 0;
+                    if lane.muts.is_empty() {
                         continue;
                     }
-                    let t0 = std::time::Instant::now();
+                    let t0 = Instant::now();
+                    let mut cur = t;
+                    for &idx in &lane.muts {
+                        let r = &reqs[idx];
+                        // Some(done_at) = completed, None = t_MWW held
+                        // the write back
+                        let completed_at: Option<u64> = match r.op {
+                            Op::Lookup => unreachable!("split in build"),
+                            Op::Insert => match tbl.get(r.key) {
+                                // present: in-place value update — a
+                                // rewrite of the same CAM word, paying
+                                // the same wear-governed write
+                                Some((s, c)) => dev
+                                    .cam_write(s, c, r.key, cur)
+                                    .map(|a| {
+                                        counters.inc("updates");
+                                        a.done_at
+                                    }),
+                                None => {
+                                    let home =
+                                        (r.set as usize).min(cam_sets - 1);
+                                    let slot = tbl
+                                        .free_col(home)
+                                        .map(|c| (home, c, false))
+                                        .or_else(|| {
+                                            let sp = (home + 1) % cam_sets;
+                                            tbl.free_col(sp)
+                                                .map(|c| (sp, c, true))
+                                        });
+                                    match slot {
+                                        None => {
+                                            // home and spill both full:
+                                            // nowhere to put the key
+                                            counters.inc("insert_dropped");
+                                            if r.phase == 0 {
+                                                plant_blocked += 1;
+                                            }
+                                            Some(cur)
+                                        }
+                                        Some((s, c, spilled)) => dev
+                                            .cam_write(s, c, r.key, cur)
+                                            .map(|a| {
+                                                tbl.insert(r.key, s, c);
+                                                counters.inc("inserts");
+                                                if spilled {
+                                                    counters
+                                                        .inc("cam_spills");
+                                                }
+                                                if r.phase == 0 {
+                                                    planted += 1;
+                                                }
+                                                a.done_at
+                                            }),
+                                    }
+                                }
+                            },
+                            Op::Delete => match tbl.get(r.key) {
+                                // clear the CAM word (0 = empty; live
+                                // keys are odd, so no alias)
+                                Some((s, c)) => dev
+                                    .cam_write(s, c, 0, cur)
+                                    .map(|a| {
+                                        tbl.remove(r.key);
+                                        counters.inc("deletes");
+                                        a.done_at
+                                    }),
+                                None => {
+                                    counters.inc("delete_misses");
+                                    Some(cur)
+                                }
+                            },
+                        };
+                        match completed_at {
+                            Some(done) => {
+                                cur = cur.max(done);
+                                lane.mut_done.push((idx, done));
+                            }
+                            None if wear_defers[idx] < cfg.max_defers => {
+                                // the write never happened; re-arrive
+                                // after the wear window has had time
+                                // to recover
+                                wear_defers[idx] += 1;
+                                counters.inc("wear_deferred");
+                                heap.push(Reverse((
+                                    t + cfg.defer_gap,
+                                    next_seq,
+                                    0,
+                                    idx,
+                                )));
+                                next_seq += 1;
+                            }
+                            None => {
+                                counters.inc("wear_dropped");
+                                if r.phase == 0 {
+                                    plant_blocked += 1;
+                                }
+                            }
+                        }
+                    }
+                    lane.mut_ns = t0.elapsed().as_nanos() as u64;
+                }
+
+                // 6. scatter (parallel): completions land in
+                // lane-owned telemetry, counters and clocks
+                let outs_ref: &[_] = &outs;
+                for_each_lane(&mut lanes, par, |_, lane| {
+                    let served = lane.lk_idx.len() + lane.mut_done.len();
+                    if served == 0 {
+                        return;
+                    }
+                    let build_share =
+                        lane.build_ns / lane.batch.len().max(1) as u64;
+                    let mut_share = lane.mut_ns
+                        / lane.mut_done.len().max(1) as u64;
+                    for (&idx, o) in
+                        lane.lk_idx.iter().zip(&outs_ref[lane.out_base..])
+                    {
+                        let r = &reqs[idx];
+                        lane.counters
+                            .inc(if o.hit { "hits" } else { "misses" });
+                        lane.cells.record(
+                            r.phase as usize,
+                            o.done_at.saturating_sub(r.arrive),
+                            build_share + dev_ns_per_op,
+                        );
+                        lane.free_at = lane.free_at.max(o.done_at);
+                    }
+                    for &(idx, done) in &lane.mut_done {
+                        let r = &reqs[idx];
+                        lane.cells.record(
+                            r.phase as usize,
+                            done.saturating_sub(r.arrive),
+                            build_share + mut_share,
+                        );
+                        lane.free_at = lane.free_at.max(done);
+                    }
+                    lane.last_done = lane.last_done.max(lane.free_at);
+                    // refresh the service-rate estimate deadline
+                    // admission quotes (modeled cycles only, so the
+                    // estimate — and the sheds it causes — is
+                    // deterministic)
+                    let span = lane.free_at.saturating_sub(t);
+                    if span > 0 {
+                        lane.est_per_op = (span / served as u64).max(1);
+                    }
+                });
+            } else {
+                // conventional table: bucket probe then value slot
+                // through the cached image, serialized per lane (the
+                // single `&mut` device image is shared by all lanes,
+                // so there is nothing lane-disjoint to fan out)
+                for lane in lanes.iter_mut() {
+                    if lane.batch.is_empty() {
+                        continue;
+                    }
+                    let t0 = Instant::now();
                     let mut cur = t;
                     let mut done: Vec<(usize, u64, bool)> =
-                        Vec::with_capacity(items.len());
-                    for &idx in &items {
+                        Vec::with_capacity(lane.batch.len());
+                    for &idx in &lane.batch {
                         let r = &reqs[idx];
+                        let write = r.op != Op::Lookup;
                         let probe =
                             dev.access(r.value_block * 64, false, cur);
                         let value = dev.access(
                             (meta.population + 1 + r.value_block) * 64,
-                            false,
+                            write,
                             probe.done_at,
                         );
                         cur = value.done_at;
+                        let hit = match r.op {
+                            Op::Lookup => r.key & 1 == 1,
+                            Op::Insert => {
+                                counters.inc("inserts");
+                                true
+                            }
+                            Op::Delete => {
+                                counters.inc("deletes");
+                                true
+                            }
+                        };
                         done.push((
                             r.phase as usize,
                             cur.saturating_sub(r.arrive),
-                            r.key & 1 == 1,
+                            hit,
                         ));
                     }
+                    // per-lane host-ns: this lane's own wall time over
+                    // its own ops, not a whole-wave average
                     let ns = t0.elapsed().as_nanos() as u64
-                        / items.len() as u64;
+                        / lane.batch.len() as u64;
+                    let served = done.len() as u64;
                     for (phase, lat, hit) in done {
-                        counters.inc(if hit { "hits" } else { "misses" });
-                        tele.record(phase, lane, lat, ns);
+                        lane.counters
+                            .inc(if hit { "hits" } else { "misses" });
+                        lane.cells.record(phase, lat, ns);
                     }
-                    free_at[lane] = cur;
-                    last_done = last_done.max(cur);
+                    lane.free_at = cur;
+                    lane.last_done = lane.last_done.max(cur);
+                    let span = cur.saturating_sub(t);
+                    if span > 0 {
+                        lane.est_per_op = (span / served.max(1)).max(1);
+                    }
                 }
             }
         }
 
-        // 3. advance to the next event (arrival or lane becoming free)
+        // 7. advance to the next event (arrival or lane becoming free)
         let mut next: Option<u64> = heap.peek().map(|Reverse((at, ..))| *at);
-        for lane in 0..lanes {
-            if !queues.is_empty(lane) {
-                let f = free_at[lane].max(t + 1);
+        for lane in &lanes {
+            if !lane.queue.is_empty() {
+                let f = lane.free_at.max(t + 1);
                 next = Some(next.map_or(f, |n| n.min(f)));
             }
         }
@@ -371,11 +802,23 @@ pub fn run_service(
         }
     }
 
-    counters.set("queue_high_water", queues.high_water() as u64);
+    // merge the lane-owned partials into the run totals: sums for
+    // event counters, max for the queue watermark — both commutative,
+    // so the totals are independent of lane/worker order
+    for lane in &lanes {
+        counters.merge(&lane.counters);
+        counters.set_max("queue_high_water", lane.queue.high_water() as u64);
+    }
+    let last_done =
+        lanes.iter().map(|l| l.last_done).max().unwrap_or(0);
     let energy_nj = dev.drain_energy_nj()
         + dev.static_watts() * (last_done as f64 / 3.2e9) * 1e9
         + dev.main_static_energy_nj(last_done);
 
+    let tele = Telemetry::from_lanes(
+        PHASES.len(),
+        lanes.into_iter().map(|l| l.cells).collect(),
+    );
     let cell_row = |phase: &'static str,
                     shard: Option<usize>,
                     cy: &LogHist,
@@ -393,7 +836,7 @@ pub fn run_service(
     };
     let mut cells = Vec::new();
     for (p, &name) in PHASES.iter().enumerate() {
-        for lane in 0..lanes {
+        for lane in 0..lanes_n {
             let (cy, ns) = tele.cell(p, lane);
             if cy.count > 0 {
                 cells.push(cell_row(name, Some(lane), cy, ns));
@@ -410,13 +853,14 @@ pub fn run_service(
 
     ServiceReport {
         system: dev.label().to_string(),
-        lanes,
+        lanes: lanes_n,
         offered_ops: reqs.len() as u64,
         completed_ops,
         planted,
         plant_blocked,
         cycles: last_done,
         energy_nj,
+        host_wall_ns: wall0.elapsed().as_nanos() as u64,
         counters,
         cells,
     }
@@ -487,6 +931,62 @@ mod tests {
     }
 
     #[test]
+    fn warm_ingest_plants_and_churn_mutates() {
+        let (meta, reqs) = stream(64.0);
+        let mut dev = DeviceBuilder::new().build_assoc(&sharded_spec(4));
+        let r = run_service(
+            dev.as_mut(),
+            &ServiceConfig::default(),
+            &meta,
+            &reqs,
+        );
+        // the population lands through the measured warm phase
+        assert!(r.planted > 0);
+        assert!(r.cell("warm", None).is_some());
+        assert!(r.counters.get("inserts") >= r.planted);
+        // churn keeps mutating the population under load: in-place
+        // updates of live keys, deletes (or misses on keys another
+        // churn op already removed)
+        assert!(r.counters.get("updates") > 0);
+        assert!(
+            r.counters.get("deletes") + r.counters.get("delete_misses")
+                > 0
+        );
+        assert!(r.counters.get("hits") > 0);
+    }
+
+    #[test]
+    fn legacy_lookup_only_streams_pre_plant() {
+        // a stream with no warm inserts (what a MONSRV01 trace decodes
+        // to) falls back to pre-planting outside the measured epoch
+        let cfg = TrafficConfig {
+            ops: 600,
+            population: 64,
+            num_sets: 32,
+            warm: false,
+            churn_pct: 0.0,
+            ..TrafficConfig::default()
+        };
+        let meta = TraceMeta {
+            population: cfg.population,
+            num_sets: cfg.num_sets,
+            seed: cfg.seed,
+        };
+        let reqs = generate(&cfg);
+        assert!(reqs.iter().all(|r| r.op == Op::Lookup));
+        let mut dev = DeviceBuilder::new().build_assoc(&sharded_spec(4));
+        let r = run_service(
+            dev.as_mut(),
+            &ServiceConfig::default(),
+            &meta,
+            &reqs,
+        );
+        assert_eq!(r.planted, meta.population, "pre-plant fills the CAM");
+        assert!(r.cell("warm", None).is_none(), "no warm-phase cells");
+        assert!(r.counters.get("hits") > 0);
+    }
+
+    #[test]
     fn sharded_run_reports_per_shard_and_per_phase_cells() {
         let (meta, reqs) = stream(64.0);
         let mut dev = DeviceBuilder::new().build_assoc(&sharded_spec(4));
@@ -524,10 +1024,119 @@ mod tests {
             ..ServiceConfig::default()
         };
         let r = run_service(dev.as_mut(), &cfg, &meta, &reqs);
-        assert!(r.counters.get("shed_interactive") > 0);
+        assert!(
+            r.counters.get("shed_interactive")
+                + r.counters.get("shed_deadline")
+                > 0
+        );
         assert!(r.counters.get("deferred_bulk") > 0);
         assert!(r.completed_ops < r.offered_ops);
         assert_eq!(r.counters.get("queue_high_water"), 4);
+    }
+
+    #[test]
+    fn deadline_admission_sheds_dead_on_arrival() {
+        // burst A (no SLO) occupies the single lane far into the
+        // future; burst B arrives one cycle later with a 1-cycle SLO —
+        // every B request must be shed at admission even though the
+        // queue has room, because its deadline precedes the earliest
+        // feasible dispatch
+        let meta = TraceMeta { population: 64, num_sets: 8, seed: 1 };
+        let mk = |i: u64, arrive: u64, slo: u32| Request {
+            arrive,
+            key: key_of(i),
+            set: 0,
+            value_block: i,
+            class: Class::Interactive,
+            phase: 1,
+            op: Op::Lookup,
+            slo,
+        };
+        let mut reqs: Vec<Request> =
+            (0..32).map(|i| mk(i, 0, 0)).collect();
+        reqs.extend((0..32).map(|i| mk(i, 1, 1)));
+        let mut dev = DeviceBuilder::new().build_assoc(&AssocSpec {
+            cam_sets: 8,
+            ..sharded_spec(1)
+        });
+        let r = run_service(
+            dev.as_mut(),
+            &ServiceConfig::default(),
+            &meta,
+            &reqs,
+        );
+        assert_eq!(r.counters.get("shed_deadline"), 32);
+        assert_eq!(r.completed_ops, 32, "burst A completes, B is shed");
+        assert_eq!(r.counters.get("shed_interactive"), 0);
+    }
+
+    #[test]
+    fn full_sets_spill_then_drop() {
+        // 2 CAM sets x 512 columns = 1024 slots, 1100 keys streamed in:
+        // the overflow of each home set spills to the neighbour until
+        // the whole CAM is full, then inserts drop
+        let cfg = TrafficConfig {
+            ops: 300,
+            population: 1_100,
+            num_sets: 2,
+            churn_pct: 0.0,
+            ..TrafficConfig::default()
+        };
+        let meta = TraceMeta {
+            population: cfg.population,
+            num_sets: cfg.num_sets,
+            seed: cfg.seed,
+        };
+        let reqs = generate(&cfg);
+        let mut dev = DeviceBuilder::new().build_assoc(&AssocSpec {
+            cam_sets: 2,
+            ..sharded_spec(2)
+        });
+        let cfg = ServiceConfig {
+            queue_cap: 1_200, // admit the whole ingest: capacity is
+            batch: 64,        // the thing under test, not shedding
+            ..ServiceConfig::default()
+        };
+        let r = run_service(dev.as_mut(), &cfg, &meta, &reqs);
+        assert!(r.counters.get("cam_spills") > 0, "no spill placements");
+        assert!(r.counters.get("insert_dropped") > 0, "no full-CAM drops");
+        assert_eq!(r.planted, 1_024, "every slot fills exactly once");
+        assert_eq!(r.plant_blocked, 1_100 - 1_024);
+    }
+
+    #[test]
+    fn wear_blocked_mutations_defer_then_drop() {
+        // hammer one CAM word with in-place updates: t_MWW charges a
+        // block write every 8 column writes, and once the superset's
+        // window budget exhausts, further updates are deferred and —
+        // with the window never recovering — dropped
+        let meta = TraceMeta { population: 1, num_sets: 8, seed: 1 };
+        let reqs: Vec<Request> = (0..13_000u64)
+            .map(|i| Request {
+                arrive: i * 50,
+                key: key_of(0),
+                set: 0,
+                value_block: 0,
+                class: Class::Bulk,
+                phase: 1,
+                op: Op::Insert,
+                slo: 0,
+            })
+            .collect();
+        let mut dev = DeviceBuilder::new().build_assoc(&AssocSpec {
+            cam_sets: 8,
+            ..sharded_spec(1)
+        });
+        let r = run_service(
+            dev.as_mut(),
+            &ServiceConfig::default(),
+            &meta,
+            &reqs,
+        );
+        assert!(r.counters.get("updates") > 10_000);
+        assert!(r.counters.get("wear_deferred") > 0, "no t_MWW deferrals");
+        assert!(r.counters.get("wear_dropped") > 0, "no retry exhaustion");
+        assert!(r.completed_ops < r.offered_ops);
     }
 
     #[test]
@@ -547,6 +1156,7 @@ mod tests {
             &reqs,
         );
         assert_eq!(r.planted, 0, "no CAM to plant");
+        assert!(r.counters.get("inserts") > 0, "ingest writes the table");
         assert!(r.completed_ops > 0);
         assert_eq!(r.lanes, ServiceConfig::default().lanes);
         assert!(r.cell("all", None).unwrap().p999_cycles > 0);

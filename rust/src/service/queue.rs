@@ -1,70 +1,64 @@
-//! Bounded per-lane request queues.
+//! Bounded per-lane request queue.
 //!
 //! One lane per shard (or per contiguous set slice on non-sharded
 //! backends). Queues hold *indices* into the request stream, never the
 //! requests themselves, so a queue entry is 8 bytes and the stream
 //! stays immutable for replay comparison. The bound is enforced by the
 //! admission layer in `service::run_service` — `push` itself asserts
-//! rather than sheds, keeping policy out of the container.
+//! rather than sheds, keeping policy out of the container. Each lane
+//! owns its queue directly (inside the driver's per-lane state) so the
+//! parallel dispatch loop can hand whole lanes to workers.
 
 use std::collections::VecDeque;
 
-pub struct LaneQueues {
-    lanes: Vec<VecDeque<usize>>,
+pub struct LaneQueue {
+    q: VecDeque<usize>,
     cap: usize,
-    /// Deepest any lane ever got (telemetry).
+    /// Deepest this lane ever got (telemetry).
     high_water: usize,
 }
 
-impl LaneQueues {
-    pub fn new(lanes: usize, cap: usize) -> Self {
-        assert!(lanes > 0 && cap > 0);
-        Self {
-            lanes: (0..lanes).map(|_| VecDeque::new()).collect(),
-            cap,
-            high_water: 0,
-        }
-    }
-
-    pub fn num_lanes(&self) -> usize {
-        self.lanes.len()
+impl LaneQueue {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self { q: VecDeque::new(), cap, high_water: 0 }
     }
 
     pub fn cap(&self) -> usize {
         self.cap
     }
 
-    pub fn depth(&self, lane: usize) -> usize {
-        self.lanes[lane].len()
+    pub fn depth(&self) -> usize {
+        self.q.len()
     }
 
     /// True when the admission layer must shed or defer.
-    pub fn full(&self, lane: usize) -> bool {
-        self.depth(lane) >= self.cap
+    pub fn full(&self) -> bool {
+        self.q.len() >= self.cap
     }
 
-    pub fn is_empty(&self, lane: usize) -> bool {
-        self.lanes[lane].is_empty()
-    }
-
-    pub fn all_empty(&self) -> bool {
-        self.lanes.iter().all(|q| q.is_empty())
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
     }
 
     pub fn high_water(&self) -> usize {
         self.high_water
     }
 
-    pub fn push(&mut self, lane: usize, idx: usize) {
-        debug_assert!(!self.full(lane), "admission layer must gate pushes");
-        self.lanes[lane].push_back(idx);
-        self.high_water = self.high_water.max(self.lanes[lane].len());
+    pub fn push(&mut self, idx: usize) {
+        debug_assert!(!self.full(), "admission layer must gate pushes");
+        self.q.push_back(idx);
+        self.high_water = self.high_water.max(self.q.len());
     }
 
-    /// Dequeue up to `max` entries from one lane, FIFO order.
-    pub fn take(&mut self, lane: usize, max: usize) -> Vec<usize> {
-        let n = self.lanes[lane].len().min(max);
-        self.lanes[lane].drain(..n).collect()
+    /// Dequeue up to `max` entries into `out` (cleared first), FIFO
+    /// order. Draining into a caller-owned buffer keeps the dispatch
+    /// loop allocation-free after warmup: the wave scratch vectors are
+    /// reused across tens of thousands of waves.
+    pub fn take_into(&mut self, max: usize, out: &mut Vec<usize>) {
+        out.clear();
+        let n = self.q.len().min(max);
+        out.extend(self.q.drain(..n));
     }
 }
 
@@ -74,18 +68,40 @@ mod tests {
 
     #[test]
     fn fifo_order_and_bounds() {
-        let mut q = LaneQueues::new(2, 3);
+        let mut q = LaneQueue::new(3);
         for i in 0..3 {
-            assert!(!q.full(0));
-            q.push(0, i);
+            assert!(!q.full());
+            q.push(i);
         }
-        assert!(q.full(0));
-        assert!(!q.full(1));
+        assert!(q.full());
         assert_eq!(q.high_water(), 3);
-        assert_eq!(q.take(0, 2), vec![0, 1]);
-        assert_eq!(q.depth(0), 1);
-        assert_eq!(q.take(0, 10), vec![2]);
-        assert!(q.all_empty());
-        assert_eq!(q.take(1, 4), Vec::<usize>::new());
+        let mut out = Vec::new();
+        q.take_into(2, &mut out);
+        assert_eq!(out, vec![0, 1]);
+        assert_eq!(q.depth(), 1);
+        q.take_into(10, &mut out);
+        assert_eq!(out, vec![2]);
+        assert!(q.is_empty());
+        q.take_into(4, &mut out);
+        assert!(out.is_empty());
+        // high water survives draining
+        assert_eq!(q.high_water(), 3);
+    }
+
+    #[test]
+    fn take_into_reuses_the_buffer() {
+        let mut q = LaneQueue::new(8);
+        for i in 0..8 {
+            q.push(i);
+        }
+        let mut out = Vec::with_capacity(8);
+        q.take_into(8, &mut out);
+        let cap_before = out.capacity();
+        for i in 8..16 {
+            q.push(i);
+        }
+        q.take_into(8, &mut out);
+        assert_eq!(out, (8..16).collect::<Vec<_>>());
+        assert_eq!(out.capacity(), cap_before, "no reallocation");
     }
 }

@@ -6,14 +6,58 @@
 //! batch that served it in nanoseconds (machine-dependent — reported
 //! but excluded from determinism checks). Aggregation across lanes or
 //! phases is exact histogram merging, never re-sampling.
+//!
+//! Storage is *lane-major* ([`LaneCells`]): the multi-threaded
+//! dispatch loop hands each lane's cells to exactly one worker per
+//! wave (`util::pool::fan_out_mut`), so recording needs no locks, and
+//! because `LogHist` buckets are plain sums, merging the lane-owned
+//! histograms at report time is exact and order-independent — which is
+//! the heart of the argument that `modeled_fingerprint()` is
+//! bit-identical across `MONARCH_THREADS` values.
 
 use crate::util::stats::LogHist;
 
+/// One lane's telemetry: a `(modeled cycles, host ns)` histogram pair
+/// per phase, owned by whichever worker is scattering that lane.
+pub struct LaneCells {
+    cells: Vec<(LogHist, LogHist)>,
+}
+
+impl LaneCells {
+    pub fn new(phases: usize) -> Self {
+        assert!(phases > 0);
+        Self {
+            cells: (0..phases)
+                .map(|_| (LogHist::new(), LogHist::new()))
+                .collect(),
+        }
+    }
+
+    #[inline]
+    pub fn record(&mut self, phase: usize, cycles: u64, host_ns: u64) {
+        let cell = &mut self.cells[phase];
+        cell.0.record(cycles);
+        cell.1.record(host_ns);
+    }
+
+    pub fn cell(&self, phase: usize) -> &(LogHist, LogHist) {
+        &self.cells[phase]
+    }
+
+    /// Exact per-phase histogram merge (bucket sums commute, so merge
+    /// order cannot affect any derived statistic).
+    pub fn merge(&mut self, other: &LaneCells) {
+        assert_eq!(self.cells.len(), other.cells.len());
+        for (a, b) in self.cells.iter_mut().zip(&other.cells) {
+            a.0.merge(&b.0);
+            a.1.merge(&b.1);
+        }
+    }
+}
+
 pub struct Telemetry {
     phases: usize,
-    lanes: usize,
-    /// `[phase][lane]`, flattened; `.0` = modeled cycles, `.1` = host ns.
-    cells: Vec<(LogHist, LogHist)>,
+    lanes: Vec<LaneCells>,
 }
 
 impl Telemetry {
@@ -21,15 +65,20 @@ impl Telemetry {
         assert!(phases > 0 && lanes > 0);
         Self {
             phases,
-            lanes,
-            cells: (0..phases * lanes)
-                .map(|_| (LogHist::new(), LogHist::new()))
-                .collect(),
+            lanes: (0..lanes).map(|_| LaneCells::new(phases)).collect(),
         }
     }
 
+    /// Re-assemble from lane-owned cells (the parallel dispatch loop's
+    /// merge point: each worker recorded into its own `LaneCells`).
+    pub fn from_lanes(phases: usize, lanes: Vec<LaneCells>) -> Self {
+        assert!(!lanes.is_empty());
+        assert!(lanes.iter().all(|l| l.cells.len() == phases));
+        Self { phases, lanes }
+    }
+
     pub fn lanes(&self) -> usize {
-        self.lanes
+        self.lanes.len()
     }
 
     #[inline]
@@ -40,22 +89,20 @@ impl Telemetry {
         cycles: u64,
         host_ns: u64,
     ) {
-        let cell = &mut self.cells[phase * self.lanes + lane];
-        cell.0.record(cycles);
-        cell.1.record(host_ns);
+        self.lanes[lane].record(phase, cycles, host_ns);
     }
 
     /// One (phase, lane) cell: (modeled cycles, host ns).
     pub fn cell(&self, phase: usize, lane: usize) -> &(LogHist, LogHist) {
-        &self.cells[phase * self.lanes + lane]
+        self.lanes[lane].cell(phase)
     }
 
     /// All lanes of one phase merged.
     pub fn phase_total(&self, phase: usize) -> (LogHist, LogHist) {
         let mut cy = LogHist::new();
         let mut ns = LogHist::new();
-        for lane in 0..self.lanes {
-            let c = self.cell(phase, lane);
+        for lane in &self.lanes {
+            let c = lane.cell(phase);
             cy.merge(&c.0);
             ns.merge(&c.1);
         }
@@ -72,6 +119,16 @@ impl Telemetry {
             ns.merge(&pn);
         }
         (cy, ns)
+    }
+
+    /// Exact whole-telemetry merge (per-worker partials at a phase
+    /// boundary fold into the run total cell-by-cell).
+    pub fn merge(&mut self, other: &Telemetry) {
+        assert_eq!(self.phases, other.phases);
+        assert_eq!(self.lanes.len(), other.lanes.len());
+        for (a, b) in self.lanes.iter_mut().zip(&other.lanes) {
+            a.merge(b);
+        }
     }
 
     pub fn completed(&self) -> u64 {
@@ -99,5 +156,49 @@ mod tests {
         assert_eq!(all.count, 3);
         assert_eq!(ns.max(), 300);
         assert_eq!(t.completed(), 3);
+    }
+
+    #[test]
+    fn merge_equals_serial_recording() {
+        // recording split across two Telemetry instances then merged
+        // must be indistinguishable from recording serially into one —
+        // the determinism argument for per-worker partials
+        let samples: Vec<(usize, usize, u64)> =
+            (0..100).map(|i| (i % 2, i % 3, (i as u64 + 1) * 7)).collect();
+        let mut serial = Telemetry::new(2, 3);
+        let mut a = Telemetry::new(2, 3);
+        let mut b = Telemetry::new(2, 3);
+        for (i, &(p, l, v)) in samples.iter().enumerate() {
+            serial.record(p, l, v, v);
+            if i % 2 == 0 {
+                a.record(p, l, v, v);
+            } else {
+                b.record(p, l, v, v);
+            }
+        }
+        a.merge(&b);
+        for p in 0..2 {
+            for l in 0..3 {
+                let (sc, sn) = serial.cell(p, l);
+                let (ac, an) = a.cell(p, l);
+                assert_eq!(sc.count, ac.count);
+                assert_eq!(sc.p50(), ac.p50());
+                assert_eq!(sc.p999(), ac.p999());
+                assert_eq!(sn.p99(), an.p99());
+            }
+        }
+    }
+
+    #[test]
+    fn lane_cells_round_trip_through_from_lanes() {
+        let mut l0 = LaneCells::new(2);
+        let mut l1 = LaneCells::new(2);
+        l0.record(0, 5, 50);
+        l1.record(1, 9, 90);
+        let t = Telemetry::from_lanes(2, vec![l0, l1]);
+        assert_eq!(t.lanes(), 2);
+        assert_eq!(t.cell(0, 0).0.count, 1);
+        assert_eq!(t.cell(1, 1).0.max(), 9);
+        assert_eq!(t.completed(), 2);
     }
 }

@@ -5,29 +5,41 @@
 //! backend (or the same backend in a later PR), and every difference
 //! in the latency report is attributable to the backend — not the
 //! generator. The format is fixed-width little-endian with no
-//! varints, so `encode(decode(x)) == x` byte-for-byte:
+//! varints, so `encode(decode(x)) == x` byte-for-byte for the current
+//! version:
 //!
 //! ```text
 //! header (40 bytes):
-//!   magic    8B  "MONSRV01"
+//!   magic    8B  "MONSRV02"
 //!   version  2B  u16 (TRACE_VERSION)
 //!   reserved 2B  zero
 //!   num_sets 4B  u32
 //!   population 8B u64
 //!   seed     8B  u64   (of the generating config, for provenance)
 //!   count    8B  u64
-//! records (count x 30 bytes):
-//!   arrive u64 | key u64 | value_block u64 | set u32 | class u8 | phase u8
+//! records (count x 35 bytes):
+//!   arrive u64 | key u64 | value_block u64 | set u32
+//!   | class u8 | phase u8 | op u8 | slo u32
 //! ```
+//!
+//! `decode` also reads the legacy `MONSRV01` format (30-byte records,
+//! lookup-only, no SLO, three phases with no warm ingest): each v1
+//! record maps to `op = Lookup`, `slo = 0`, and `phase + 1` — v1 phase
+//! 0 was "steady", which sits at index 1 now that "warm" leads
+//! [`PHASES`]. Old captures therefore replay unchanged; `encode`
+//! always writes v2.
 
 use crate::bail;
-use crate::service::gen::{Class, Request, PHASES};
+use crate::service::gen::{Class, Op, Request, PHASES};
 use crate::util::error::{Context, Result};
 
-pub const MAGIC: [u8; 8] = *b"MONSRV01";
-pub const TRACE_VERSION: u16 = 1;
+pub const MAGIC: [u8; 8] = *b"MONSRV02";
+pub const TRACE_VERSION: u16 = 2;
+/// Legacy magic still accepted by `decode`.
+pub const MAGIC_V1: [u8; 8] = *b"MONSRV01";
 const HEADER_BYTES: usize = 40;
-const RECORD_BYTES: usize = 30;
+const RECORD_BYTES: usize = 35;
+const RECORD_BYTES_V1: usize = 30;
 
 /// Stream-level facts a replayer needs that individual records do not
 /// carry (population/set-space sizes drive planting; the seed is
@@ -39,7 +51,8 @@ pub struct TraceMeta {
     pub seed: u64,
 }
 
-/// Serialize a stream. Infallible: every `Request` is encodable.
+/// Serialize a stream (always as the current version).
+/// Infallible: every `Request` is encodable.
 pub fn encode(meta: &TraceMeta, reqs: &[Request]) -> Vec<u8> {
     let mut out = Vec::with_capacity(HEADER_BYTES + RECORD_BYTES * reqs.len());
     out.extend_from_slice(&MAGIC);
@@ -59,24 +72,34 @@ pub fn encode(meta: &TraceMeta, reqs: &[Request]) -> Vec<u8> {
             Class::Bulk => 1,
         });
         out.push(r.phase);
+        out.push(match r.op {
+            Op::Lookup => 0,
+            Op::Insert => 1,
+            Op::Delete => 2,
+        });
+        out.extend_from_slice(&r.slo.to_le_bytes());
     }
     out
 }
 
-/// Parse a trace, validating magic, version, and framing.
+/// Parse a trace (current or legacy v1), validating magic, version,
+/// and framing.
 pub fn decode(bytes: &[u8]) -> Result<(TraceMeta, Vec<Request>)> {
     if bytes.len() < HEADER_BYTES {
         bail!("trace too short for header: {} bytes", bytes.len());
     }
-    if bytes[..8] != MAGIC {
-        bail!("bad trace magic {:02x?}", &bytes[..8]);
-    }
+    let v1 = match &bytes[..8] {
+        m if *m == MAGIC => false,
+        m if *m == MAGIC_V1 => true,
+        m => bail!("bad trace magic {m:02x?}"),
+    };
     let u16_at = |o: usize| u16::from_le_bytes(bytes[o..o + 2].try_into().unwrap());
     let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
     let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
     let version = u16_at(8);
-    if version != TRACE_VERSION {
-        bail!("trace version {version} (this build reads {TRACE_VERSION})");
+    let expect = if v1 { 1 } else { TRACE_VERSION };
+    if version != expect {
+        bail!("trace version {version} under magic promising {expect}");
     }
     let meta = TraceMeta {
         num_sets: u32_at(12),
@@ -84,17 +107,18 @@ pub fn decode(bytes: &[u8]) -> Result<(TraceMeta, Vec<Request>)> {
         seed: u64_at(24),
     };
     let count = u64_at(32) as usize;
+    let rec_bytes = if v1 { RECORD_BYTES_V1 } else { RECORD_BYTES };
     let body = &bytes[HEADER_BYTES..];
-    if body.len() != count * RECORD_BYTES {
+    if body.len() != count * rec_bytes {
         bail!(
             "trace body is {} bytes, header promises {} records ({})",
             body.len(),
             count,
-            count * RECORD_BYTES
+            count * rec_bytes
         );
     }
     let mut reqs = Vec::with_capacity(count);
-    for (i, rec) in body.chunks_exact(RECORD_BYTES).enumerate() {
+    for (i, rec) in body.chunks_exact(rec_bytes).enumerate() {
         let f64_ = |o: usize| u64::from_le_bytes(rec[o..o + 8].try_into().unwrap());
         let set = u32::from_le_bytes(rec[24..28].try_into().unwrap());
         let class = match rec[28] {
@@ -102,13 +126,26 @@ pub fn decode(bytes: &[u8]) -> Result<(TraceMeta, Vec<Request>)> {
             1 => Class::Bulk,
             c => bail!("record {i}: bad class byte {c}"),
         };
-        let phase = rec[29];
+        // v1 streams had no warm phase: their phase 0 ("steady") and
+        // onward shift up one slot under the four-phase table
+        let phase = if v1 { rec[29] + 1 } else { rec[29] };
         if phase as usize >= PHASES.len() {
-            bail!("record {i}: bad phase byte {phase}");
+            bail!("record {i}: bad phase byte {}", rec[29]);
         }
         if set >= meta.num_sets {
             bail!("record {i}: set {set} outside {} sets", meta.num_sets);
         }
+        let (op, slo) = if v1 {
+            (Op::Lookup, 0)
+        } else {
+            let op = match rec[30] {
+                0 => Op::Lookup,
+                1 => Op::Insert,
+                2 => Op::Delete,
+                o => bail!("record {i}: bad op byte {o}"),
+            };
+            (op, u32::from_le_bytes(rec[31..35].try_into().unwrap()))
+        };
         reqs.push(Request {
             arrive: f64_(0),
             key: f64_(8),
@@ -116,6 +153,8 @@ pub fn decode(bytes: &[u8]) -> Result<(TraceMeta, Vec<Request>)> {
             set,
             class,
             phase,
+            op,
+            slo,
         });
     }
     Ok((meta, reqs))
@@ -151,12 +190,54 @@ mod tests {
     fn roundtrip_is_bit_identical() {
         let cfg = TrafficConfig { seed: 7, ..TrafficConfig::default() };
         let reqs = generate(&cfg);
+        assert!(reqs.iter().any(|r| r.op != Op::Lookup), "want mutations");
+        assert!(reqs.iter().any(|r| r.slo > 0), "want SLO-carrying records");
         let bytes = encode(&meta(), &reqs);
         let (m2, r2) = decode(&bytes).unwrap();
         assert_eq!(m2, meta());
         assert_eq!(r2, reqs);
         // and the re-encode is the same byte stream
         assert_eq!(encode(&m2, &r2), bytes);
+    }
+
+    #[test]
+    fn v1_traces_decode_with_remapped_phases() {
+        // hand-build a v1 trace: two lookup records in v1 phases 0, 2
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC_V1);
+        bytes.extend_from_slice(&1u16.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 2]);
+        bytes.extend_from_slice(&128u32.to_le_bytes());
+        bytes.extend_from_slice(&256u64.to_le_bytes());
+        bytes.extend_from_slice(&7u64.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        for (arrive, class, phase) in [(100u64, 0u8, 0u8), (200, 1, 2)] {
+            bytes.extend_from_slice(&arrive.to_le_bytes());
+            bytes.extend_from_slice(&key_of_17().to_le_bytes());
+            bytes.extend_from_slice(&17u64.to_le_bytes());
+            bytes.extend_from_slice(&8u32.to_le_bytes());
+            bytes.push(class);
+            bytes.push(phase);
+        }
+        let (m, r) = decode(&bytes).unwrap();
+        assert_eq!(m, meta());
+        assert_eq!(r.len(), 2);
+        for req in &r {
+            assert_eq!(req.op, Op::Lookup);
+            assert_eq!(req.slo, 0);
+        }
+        assert_eq!(r[0].phase, 1, "v1 phase 0 (steady) is phase 1 now");
+        assert_eq!(r[1].phase, 3, "v1 phase 2 (burst) is phase 3 now");
+        assert_eq!(r[0].class, Class::Interactive);
+        assert_eq!(r[1].class, Class::Bulk);
+        // v1 phase 3 would map off the table: rejected
+        let last = bytes.len() - 1;
+        bytes[last] = 3;
+        assert!(decode(&bytes).is_err());
+    }
+
+    fn key_of_17() -> u64 {
+        crate::service::gen::key_of(17)
     }
 
     #[test]
@@ -171,11 +252,19 @@ mod tests {
         let mut bad = good.clone();
         bad[8] = 0xEE;
         assert!(decode(&bad).is_err());
+        // v1 magic over a v2 body: version check trips
+        let mut bad = good.clone();
+        bad[..8].copy_from_slice(&MAGIC_V1);
+        assert!(decode(&bad).is_err());
         // truncated body
         assert!(decode(&good[..good.len() - 1]).is_err());
         // bad class byte in the first record
         let mut bad = good.clone();
         bad[40 + 28] = 9;
+        assert!(decode(&bad).is_err());
+        // bad op byte in the first record
+        let mut bad = good.clone();
+        bad[40 + 30] = 7;
         assert!(decode(&bad).is_err());
     }
 

@@ -1,4 +1,4 @@
-//! A tiny scoped worker pool: fan N index-addressed jobs out over OS
+//! A persistent worker pool: fan N index-addressed jobs out over OS
 //! threads and collect the results in job order.
 //!
 //! Extracted from the hand-rolled pool inside `coordinator::
@@ -9,18 +9,34 @@
 //! `Send` bound on the *job descriptions* themselves — only the result
 //! type must be `Send`. Devices and simulators are constructed inside
 //! the worker, which keeps `Rc`-holding types usable per-job.
+//!
+//! Workers are spawned once and parked on a condvar between calls.
+//! The original implementation spawned fresh scoped threads per
+//! `fan_out`, which was fine at sweep granularity (a handful of calls
+//! per process) but ruinous at *wave* granularity: the service
+//! driver's dispatch loop fans out twice per wave, tens of thousands
+//! of times per run, and a thread spawn costs ~50us against per-wave
+//! work in the single-digit microseconds. A dispatched batch is
+//! type-erased to a `&dyn Fn(usize)` whose lifetime is erased while
+//! the submitter blocks until every job completed, so borrowed
+//! closures keep working exactly as they did under `thread::scope`.
 
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Worker budget of [`fan_out`]: `available_parallelism`, overridable
-/// by `MONARCH_THREADS` (clamped to `1..=available_parallelism` — the
-/// override makes bench runs and CI reproducible, it never
-/// oversubscribes the host).
+/// by [`with_workers`] (strongest) or `MONARCH_THREADS` (clamped to
+/// `1..=available_parallelism` — the override makes bench runs and CI
+/// reproducible, it never oversubscribes the host).
 pub fn max_workers() -> usize {
     let avail = std::thread::available_parallelism()
         .map(|p| p.get())
         .unwrap_or(4);
+    let scoped = WORKER_OVERRIDE.load(Ordering::Relaxed);
+    if scoped != 0 {
+        return scoped.clamp(1, avail.max(1));
+    }
     let requested = std::env::var("MONARCH_THREADS")
         .ok()
         .and_then(|v| v.trim().parse::<usize>().ok());
@@ -36,10 +52,162 @@ fn clamp_workers(requested: Option<usize>, avail: usize) -> usize {
     }
 }
 
+/// Scoped worker-count override, taking precedence over the
+/// `MONARCH_THREADS` env var: every `fan_out` reached while `f` runs
+/// uses at most `n` claimants (still clamped to the host). This is how
+/// benches and tests sweep thread counts *within one process* without
+/// mutating process-global env (which races with other test threads).
+/// The override is process-global, so concurrent `fan_out`s on other
+/// threads observe it too — harmless by design, because every result
+/// in this codebase is pinned bit-identical across worker counts; only
+/// the parallelism varies.
+pub fn with_workers<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            WORKER_OVERRIDE.store(self.0, Ordering::Relaxed);
+        }
+    }
+    let _restore =
+        Restore(WORKER_OVERRIDE.swap(n.max(1), Ordering::Relaxed));
+    f()
+}
+
+static WORKER_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// One submitted batch: a type-erased task invoked once per index in
+/// `0..jobs`. `claim_limit` bounds how many threads (submitter
+/// included) may work on it, which is what makes `with_workers(1)`
+/// mean *one* even while the pool holds more parked workers.
+struct Run {
+    task: TaskPtr,
+    jobs: usize,
+    next: AtomicUsize,
+    pending: AtomicUsize,
+    claim_limit: usize,
+    claimers: AtomicUsize,
+}
+
+/// `&dyn Fn(usize)` with the lifetime erased. Safety contract: the
+/// submitter ([`dispatch`]) blocks until `pending == 0` before
+/// returning, so the pointee outlives every invocation.
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for TaskPtr {}
+unsafe impl Sync for TaskPtr {}
+
+struct PoolShared {
+    /// Active runs; exhausted ones are removed by their submitter.
+    runs: Mutex<Vec<Arc<Run>>>,
+    work_cv: Condvar,
+    done: Mutex<()>,
+    done_cv: Condvar,
+}
+
+fn pool() -> &'static PoolShared {
+    static POOL: OnceLock<PoolShared> = OnceLock::new();
+    static SPAWN: std::sync::Once = std::sync::Once::new();
+    let shared = POOL.get_or_init(|| PoolShared {
+        runs: Mutex::new(Vec::new()),
+        work_cv: Condvar::new(),
+        done: Mutex::new(()),
+        done_cv: Condvar::new(),
+    });
+    SPAWN.call_once(|| {
+        let avail = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4);
+        // the submitter itself always participates, so the pool only
+        // needs avail-1 extra threads to saturate the host
+        for _ in 1..avail {
+            std::thread::Builder::new()
+                .name("monarch-pool".into())
+                .spawn(|| worker_loop(pool()))
+                .expect("spawn pool worker");
+        }
+    });
+    shared
+}
+
+fn worker_loop(shared: &'static PoolShared) -> ! {
+    let mut runs = shared.runs.lock().unwrap();
+    loop {
+        let claimed = runs.iter().find(|r| {
+            r.next.load(Ordering::Relaxed) < r.jobs
+                && r.claimers.load(Ordering::Relaxed) < r.claim_limit
+        });
+        match claimed.cloned() {
+            Some(run) => {
+                // claim under the runs lock so claim_limit is a hard
+                // bound, not a race
+                run.claimers.fetch_add(1, Ordering::Relaxed);
+                drop(runs);
+                execute(&run, shared);
+                runs = shared.runs.lock().unwrap();
+            }
+            None => runs = shared.work_cv.wait(runs).unwrap(),
+        }
+    }
+}
+
+/// Claim-and-run indices of one run until it drains; the thread that
+/// completes the final job signals the submitter.
+fn execute(run: &Run, shared: &PoolShared) {
+    let task = unsafe { &*run.task.0 };
+    loop {
+        let i = run.next.fetch_add(1, Ordering::Relaxed);
+        if i >= run.jobs {
+            return;
+        }
+        task(i);
+        if run.pending.fetch_sub(1, Ordering::Release) == 1 {
+            let _g = shared.done.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Submit `jobs` invocations of `task` and block until all complete.
+/// The caller participates (it is one of the `workers` claimants), so
+/// nested dispatch from inside a pool worker always makes progress
+/// even when every other worker is busy.
+fn dispatch(jobs: usize, workers: usize, task: &(dyn Fn(usize) + Sync)) {
+    let shared = pool();
+    // erase the borrow: safe because this function does not return
+    // until pending == 0 (see TaskPtr)
+    let task: &'static (dyn Fn(usize) + Sync) =
+        unsafe { std::mem::transmute(task) };
+    let run = Arc::new(Run {
+        task: TaskPtr(task as *const _),
+        jobs,
+        next: AtomicUsize::new(0),
+        pending: AtomicUsize::new(jobs),
+        claim_limit: workers,
+        claimers: AtomicUsize::new(1), // the submitter
+    });
+    shared.runs.lock().unwrap().push(run.clone());
+    shared.work_cv.notify_all();
+    execute(&run, shared);
+    if run.pending.load(Ordering::Acquire) > 0 {
+        let mut g = shared.done.lock().unwrap();
+        while run.pending.load(Ordering::Acquire) > 0 {
+            g = shared.done_cv.wait(g).unwrap();
+        }
+    }
+    let mut runs = shared.runs.lock().unwrap();
+    runs.retain(|r| !Arc::ptr_eq(r, &run));
+}
+
+/// Write-once result slots shared across workers. Safety: `dispatch`
+/// hands each index to exactly one claimant (`next.fetch_add`), so no
+/// slot is aliased mutably.
+struct Slots<R>(*const UnsafeCell<Option<R>>);
+unsafe impl<R: Send> Send for Slots<R> {}
+unsafe impl<R: Send> Sync for Slots<R> {}
+
 /// Run `jobs` invocations of `f` (one per index `0..jobs`) across up
-/// to [`max_workers`] OS threads; returns results in index order. `f`
-/// must be `Sync` (it is shared by the workers) and is invoked exactly
-/// once per index.
+/// to [`max_workers`] pool threads; returns results in index order.
+/// `f` must be `Sync` (it is shared by the workers) and is invoked
+/// exactly once per index.
 pub fn fan_out<R, F>(jobs: usize, f: F) -> Vec<R>
 where
     R: Send,
@@ -52,27 +220,49 @@ where
     if workers <= 1 {
         return (0..jobs).map(f).collect();
     }
-    let results: Mutex<Vec<Option<R>>> =
-        Mutex::new((0..jobs).map(|_| None).collect());
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= jobs {
-                    break;
-                }
-                let r = f(i);
-                results.lock().unwrap()[i] = Some(r);
-            });
-        }
+    let slots: Vec<UnsafeCell<Option<R>>> =
+        (0..jobs).map(|_| UnsafeCell::new(None)).collect();
+    let base = Slots(slots.as_ptr());
+    dispatch(jobs, workers, &|i| {
+        let r = f(i);
+        unsafe { *(*base.0.add(i)).get() = Some(r) };
     });
-    results
-        .into_inner()
-        .unwrap()
+    slots
         .into_iter()
-        .map(|r| r.expect("worker completed every claimed job"))
+        .map(|c| {
+            c.into_inner().expect("worker completed every claimed job")
+        })
         .collect()
+}
+
+/// Disjoint slice parallelism: invoke `f(i, &mut items[i])` for every
+/// index, across up to [`max_workers`] pool threads. This is how the
+/// service driver mutates per-lane state (telemetry cells, counters,
+/// scratch buffers) from a wave fan-out without locks: each element is
+/// visited by exactly one claimant, so the `&mut` never aliases.
+pub fn fan_out_mut<T, F>(items: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let jobs = items.len();
+    if jobs == 0 {
+        return;
+    }
+    let workers = max_workers().min(jobs);
+    if workers <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    struct Base<T>(*mut T);
+    unsafe impl<T: Send> Send for Base<T> {}
+    unsafe impl<T: Send> Sync for Base<T> {}
+    let base = Base(items.as_mut_ptr());
+    dispatch(jobs, workers, &|i| {
+        f(i, unsafe { &mut *base.0.add(i) });
+    });
 }
 
 #[cfg(test)]
@@ -108,7 +298,7 @@ mod tests {
 
     #[test]
     fn single_job_runs_on_the_caller() {
-        // one job never spawns workers (workers.min(jobs) == 1): the
+        // one job never engages the pool (workers.min(jobs) == 1): the
         // serial path must still run it exactly once, in order
         let out = fan_out(1, |i| i + 41);
         assert_eq!(out, vec![41]);
@@ -117,7 +307,7 @@ mod tests {
     #[test]
     fn more_jobs_than_workers_all_complete() {
         // far more jobs than any machine's available_parallelism:
-        // workers loop claiming indices until the range drains, and
+        // claimants loop claiming indices until the range drains, and
         // every slot must be filled in index order
         use std::sync::atomic::AtomicU64;
         let runs = AtomicU64::new(0);
@@ -130,6 +320,27 @@ mod tests {
         assert_eq!(out.len(), jobs);
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i * 3);
+        }
+    }
+
+    #[test]
+    fn repeated_fan_outs_reuse_the_pool() {
+        // wave-granularity usage: thousands of small batches through
+        // the persistent workers must all complete correctly
+        for round in 0..2_000u64 {
+            let out = fan_out(4, move |i| round + i as u64);
+            assert_eq!(out, vec![round, round + 1, round + 2, round + 3]);
+        }
+    }
+
+    #[test]
+    fn nested_fan_out_makes_progress() {
+        // a job that itself fans out: the inner submitter participates
+        // in its own run, so this cannot deadlock even if every other
+        // worker is busy with the outer run
+        let out = fan_out(8, |i| fan_out(8, |j| i * j).iter().sum::<usize>());
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 28);
         }
     }
 
@@ -151,6 +362,40 @@ mod tests {
             .unwrap_or(4);
         let got = max_workers();
         assert!((1..=avail).contains(&got));
+    }
+
+    #[test]
+    fn with_workers_pins_and_restores() {
+        let avail = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4);
+        let before = max_workers();
+        with_workers(1, || {
+            assert_eq!(max_workers(), 1);
+            // results are identical under any pinning
+            assert_eq!(fan_out(16, |i| i * 2), (0..16).map(|i| i * 2).collect::<Vec<_>>());
+            // nested pins are scoped too
+            with_workers(2, || assert_eq!(max_workers(), 2.min(avail)));
+            assert_eq!(max_workers(), 1);
+        });
+        assert_eq!(max_workers(), before);
+    }
+
+    #[test]
+    fn fan_out_mut_visits_every_element_once() {
+        let mut xs: Vec<u64> = (0..257).collect();
+        fan_out_mut(&mut xs, |i, x| {
+            assert_eq!(*x, i as u64);
+            *x += 1_000;
+        });
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(*x, i as u64 + 1_000);
+        }
+        // and the serial paths (empty, single)
+        fan_out_mut::<u64, _>(&mut [], |_, _| unreachable!());
+        let mut one = [7u64];
+        fan_out_mut(&mut one, |_, x| *x = 9);
+        assert_eq!(one, [9]);
     }
 
     #[test]

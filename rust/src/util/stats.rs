@@ -42,6 +42,14 @@ impl Counters {
         }
     }
 
+    /// Keep the larger value per key — the merge rule for watermark
+    /// counters (queue high-water) when combining per-lane bags, where
+    /// summing would overstate the deepest queue ever seen.
+    pub fn set_max(&mut self, key: &'static str, v: u64) {
+        let e = self.map.entry(key).or_insert(0);
+        *e = (*e).max(v);
+    }
+
     pub fn iter(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
         self.map.iter().map(|(k, v)| (*k, *v))
     }
@@ -346,6 +354,11 @@ mod tests {
         assert_eq!(a.get("writes"), 5);
         assert_eq!(a.get("missing"), 0);
         assert!((a.ratio("writes", "reads") - 0.5).abs() < 1e-12);
+        // watermark merge: larger value wins, absent key is created
+        a.set_max("hw", 3);
+        a.set_max("hw", 9);
+        a.set_max("hw", 4);
+        assert_eq!(a.get("hw"), 9);
     }
 
     #[test]

@@ -9,10 +9,11 @@
 //! sharded backend, fingerprint-for-fingerprint.
 
 use monarch::coordinator::{self, Budget};
-use monarch::service::gen::{generate, Request, TrafficConfig};
+use monarch::service::gen::{generate, Class, Op, Request, TrafficConfig};
 use monarch::service::trace::{
     decode, encode, read_trace, write_trace, TraceMeta,
 };
+use monarch::util::pool::with_workers;
 
 fn captured() -> (TraceMeta, Vec<Request>) {
     let budget = Budget { hash_ops: 900, ..Budget::quick() };
@@ -22,12 +23,72 @@ fn captured() -> (TraceMeta, Vec<Request>) {
 #[test]
 fn decoded_stream_is_the_captured_stream() {
     let (meta, reqs) = captured();
+    // the capture must exercise the whole MONSRV02 record vocabulary,
+    // or this round-trip proves less than it claims
+    assert!(reqs.iter().any(|r| r.op == Op::Insert), "no inserts");
+    assert!(reqs.iter().any(|r| r.op == Op::Delete), "no deletes");
+    assert!(reqs.iter().any(|r| r.slo > 0), "no SLO-carrying requests");
     let bytes = encode(&meta, &reqs);
     let (meta2, reqs2) = decode(&bytes).expect("decode own encoding");
     assert_eq!(meta2, meta);
     assert_eq!(reqs2, reqs, "decode must return the captured stream");
     // and the codec is a bijection on its own output
     assert_eq!(encode(&meta2, &reqs2), bytes);
+}
+
+#[test]
+fn committed_v1_fixture_decodes_byte_exact() {
+    // a MONSRV01 capture committed before the format grew mutations:
+    // decoding it must keep producing exactly these requests (lookups,
+    // no SLO, phases shifted past the new warm slot)
+    let bytes = include_bytes!("data/monsrv01.trace");
+    let (meta, reqs) = decode(bytes).expect("v1 fixture must decode");
+    assert_eq!(
+        meta,
+        TraceMeta { population: 256, num_sets: 128, seed: 7 }
+    );
+    let want = [
+        (100u64, 0x1111u64, 17u64, 8u32, Class::Interactive, 1u8),
+        (250, 0x2222, 42, 127, Class::Bulk, 2),
+        (400, 0x3333, 7, 0, Class::Interactive, 3),
+        (650, 0x4444, 99, 64, Class::Bulk, 1),
+    ];
+    assert_eq!(reqs.len(), want.len());
+    for (r, &(arrive, key, vb, set, class, phase)) in reqs.iter().zip(&want) {
+        assert_eq!(r.arrive, arrive);
+        assert_eq!(r.key, key);
+        assert_eq!(r.value_block, vb);
+        assert_eq!(r.set, set);
+        assert_eq!(r.class, class);
+        assert_eq!(r.phase, phase, "v1 phases shift by the warm slot");
+        assert_eq!(r.op, Op::Lookup, "v1 records are lookups");
+        assert_eq!(r.slo, 0, "v1 records carry no SLO");
+    }
+    // upgrading the fixture to v2 is lossless from here on
+    let v2 = encode(&meta, &reqs);
+    let (meta2, reqs2) = decode(&v2).expect("decode upgraded fixture");
+    assert_eq!(meta2, meta);
+    assert_eq!(reqs2, reqs);
+}
+
+#[test]
+fn fingerprint_is_identical_across_worker_counts() {
+    // the MONARCH_THREADS contract: the parallel dispatch loop may
+    // change wall-clock, never the modeled report
+    let (meta, reqs) = captured();
+    let budget = Budget::quick();
+    let fps: Vec<String> = [1usize, 2, 8]
+        .into_iter()
+        .map(|w| {
+            let r = with_workers(w, || {
+                coordinator::service_replay(&budget, 8, &meta, &reqs)
+            });
+            assert!(r.completed_ops > 0, "{w} workers: nothing served");
+            r.modeled_fingerprint()
+        })
+        .collect();
+    assert_eq!(fps[0], fps[1], "2 workers diverged from serial");
+    assert_eq!(fps[0], fps[2], "8 workers diverged from serial");
 }
 
 #[test]

@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Bench snapshot regression gate (stdlib only).
 
-Four modes, all exiting non-zero on failure:
+Five modes, all exiting non-zero on failure:
 
   --service  SNAPSHOT FRESH   modeled serve throughput per (system, load)
                               must stay within TOLERANCE of the snapshot
@@ -14,6 +14,10 @@ Four modes, all exiting non-zero on failure:
                               (workload, cache_vaults) must stay within
                               TOLERANCE, and some strict hybrid split
                               must still beat both extremes
+  --scaling FRESH             the service thread-scaling envelope:
+                              every worker count shares one modeled
+                              fingerprint and the million-key ingest
+                              planted >= 90% of its population
   --replay-check JSON...      every file's summary rows must carry the
                               same modeled_fingerprint (the trace
                               record -> replay acceptance gate)
@@ -86,15 +90,23 @@ def check_service_floors(snap, fresh, snap_path, fresh_path):
             f"{fresh_path}: {len(rows)} summary cells < floor of "
             f"{need} (sweep shrank?)"
         )
+    required = snap.get("require_summary_fields", [])
     for r in rows:
         key = (r.get("system"), r.get("load"))
         if not r.get("ops_per_kcycle", 0) > 0:
             fail(f"{fresh_path}: cell {key} has no modeled throughput")
         if not r.get("modeled_fingerprint"):
             fail(f"{fresh_path}: cell {key} lost its modeled_fingerprint")
+        for field in required:
+            if not r.get(field, 0) > 0:
+                fail(
+                    f"{fresh_path}: cell {key} has no positive "
+                    f"{field!r} (emitter schema shrank?)"
+                )
     print(
         f"bench_regression: service OK ({len(rows)} cells >= floor of "
-        f"{need}, all with throughput + fingerprint)"
+        f"{need}, all with throughput + fingerprint"
+        + (f" + {len(required)} required fields)" if required else ")")
     )
 
 
@@ -316,6 +328,49 @@ def check_replay(paths):
     )
 
 
+def check_scaling(fresh_path):
+    """BENCH_service_scaling.json: the thread-scaling envelope the
+    service_tail bench emits. Machine-portable gates only — the bench
+    itself already gated throughput monotonicity on its own host:
+    every scaling row must share one modeled fingerprint (worker count
+    cannot change the model), worker counts must be distinct with
+    positive host throughput, and the million-key row must have planted
+    >= 90% of its population."""
+    fresh = load(fresh_path)
+    rows = fresh.get("rows", [])
+    scaling = [r for r in rows if r.get("row") == "scaling"]
+    million = [r for r in rows if r.get("row") == "million"]
+    if len(scaling) < 2:
+        fail(f"{fresh_path}: wants >=2 scaling rows, got {len(scaling)}")
+    fps = {r.get("modeled_fingerprint") for r in scaling}
+    if len(fps) != 1 or not fps.pop():
+        fail(
+            f"{fresh_path}: scaling rows disagree on the modeled "
+            f"fingerprint across worker counts"
+        )
+    workers = [r.get("workers") for r in scaling]
+    if len(set(workers)) != len(workers):
+        fail(f"{fresh_path}: duplicate worker counts {workers}")
+    for r in scaling:
+        if not r.get("host_ops_per_sec", 0) > 0:
+            fail(
+                f"{fresh_path}: workers={r.get('workers')} has no "
+                f"host throughput"
+            )
+    if len(million) != 1:
+        fail(f"{fresh_path}: wants 1 million-key row, got {len(million)}")
+    m = million[0]
+    pop, planted = m.get("population", 0), m.get("planted", 0)
+    if pop < 1_000_000:
+        fail(f"{fresh_path}: million-key row population is {pop}")
+    if planted < pop * 0.9:
+        fail(f"{fresh_path}: only {planted} of {pop} keys planted")
+    print(
+        f"bench_regression: scaling OK ({len(scaling)} worker counts "
+        f"share one fingerprint; million-key planted {planted}/{pop})"
+    )
+
+
 def main(argv):
     if len(argv) >= 4 and argv[1] == "--service":
         check_service(argv[2], argv[3])
@@ -323,13 +378,15 @@ def main(argv):
         check_xamsearch(argv[2], argv[3])
     elif len(argv) >= 4 and argv[1] == "--memcache":
         check_memcache(argv[2], argv[3])
+    elif len(argv) >= 3 and argv[1] == "--scaling":
+        check_scaling(argv[2])
     elif len(argv) >= 2 and argv[1] == "--replay-check":
         check_replay(argv[2:])
     else:
         fail(
             "usage: bench_regression.py --service SNAPSHOT FRESH | "
             "--xamsearch SNAPSHOT FRESH | --memcache SNAPSHOT FRESH | "
-            "--replay-check JSON JSON..."
+            "--scaling FRESH | --replay-check JSON JSON..."
         )
 
 
