@@ -1,0 +1,189 @@
+//! Graceful degradation of the service stack under injected faults
+//! (`monarch faults`).
+//!
+//! Three sections:
+//!
+//! 1. **Fault-free pin** — the sweep's `none` row must be bit-identical
+//!    (modeled fingerprint) to an independently constructed fault-free
+//!    run of the same stream on the same backend: arming the fault
+//!    machinery with a disabled config changes nothing.
+//! 2. **Degradation gates** — every campaign serves the identical
+//!    offered stream and must complete above the survival floor with
+//!    ordered percentiles; hits may only fall as campaigns escalate
+//!    (small slack covers retry-ladder reshuffling of the transient
+//!    draw stream), and the heavy campaign must actually retire
+//!    columns and lose hits — injected damage is visible, never
+//!    silently corrected and never a panic.
+//! 3. **Determinism** — the whole sweep re-run under 1 and 4 pool
+//!    workers must reproduce every campaign's fingerprint and fault
+//!    totals bit-identically: fault draws are pure functions of their
+//!    coordinates, not of scheduling.
+//!
+//! Emits `BENCH_faults.json` (gated by `bench_regression.py --faults`).
+
+use monarch::coordinator::{self, Budget, FaultPoint};
+use monarch::util::json::{self, Json};
+use monarch::util::pool::with_workers;
+
+/// Completions / offered each campaign must stay above: degradation
+/// sheds capacity, it does not collapse the service.
+const SURVIVAL_FLOOR: f64 = 0.5;
+
+fn campaign_row(p: &FaultPoint) -> Json {
+    let ft = p.report.fault_totals.unwrap_or_default();
+    Json::obj()
+        .set("row", "campaign")
+        .set("campaign", p.label)
+        .set("system", p.report.system.clone())
+        .set("stuck_per_mille", u64::from(p.stuck_per_mille))
+        .set("transient_pct", p.transient_pct)
+        .set("endurance", p.endurance)
+        .set("offered_ops", p.report.offered_ops)
+        .set("completed_ops", p.report.completed_ops)
+        .set("survival", p.survival())
+        .set("hits", p.report.counters.get("hits"))
+        .set("misses", p.report.counters.get("misses"))
+        .set("ops_per_kcycle", p.report.ops_per_kcycle())
+        .set(
+            "p99_cycles",
+            p.report.cell("all", None).map_or(0, |c| c.p99_cycles),
+        )
+        .set("retired_columns", ft.retired_columns)
+        .set("lost_words", ft.lost_words)
+        .set("transient_faults", ft.transient_faults)
+        .set("stuck_write_faults", ft.stuck_write_faults)
+        .set("retry_writes", ft.retry_writes)
+        .set("degraded_sets", ft.degraded_sets)
+        .set("spares_used", ft.spares_used)
+        .set(
+            "dropped_after_retry",
+            p.report
+                .dropped_after_retry
+                .iter()
+                .map(|c| c.count)
+                .sum::<u64>(),
+        )
+        .set("modeled_fingerprint", p.report.modeled_fingerprint())
+}
+
+fn fault_free_pin(budget: &Budget, none: &FaultPoint) {
+    let (meta, reqs) = coordinator::service_traffic(budget, 1.0);
+    let clean = coordinator::service_replay(budget, 8, &meta, &reqs);
+    assert_eq!(
+        none.report.modeled_fingerprint(),
+        clean.modeled_fingerprint(),
+        "the sweep's fault-free row diverged from a plain fault-free \
+         run — arming a disabled FaultConfig is not zero-cost"
+    );
+    let ft = none.report.fault_totals.expect("Monarch tracks totals");
+    assert!(!ft.any(), "fault-free row reports damage: {ft:?}");
+    println!(
+        "  fault-free pin OK: fingerprint {}",
+        clean.modeled_fingerprint()
+    );
+}
+
+fn degradation_gates(pts: &[FaultPoint]) {
+    let offered = pts[0].report.offered_ops;
+    // retry ladders shift the per-column write-sequence stream between
+    // campaigns, so the transient fault sets are *almost* nested (the
+    // stuck sets are exactly nested); a 1% slack absorbs the residue
+    let slack = offered / 100 + 2;
+    let mut prev_hits = u64::MAX;
+    for p in pts {
+        let r = &p.report;
+        assert_eq!(
+            r.offered_ops, offered,
+            "{}: campaigns must serve the same deterministic stream",
+            p.label
+        );
+        assert!(r.completed_ops > 0, "{}: nothing served", p.label);
+        assert!(
+            r.completed_ops <= r.offered_ops,
+            "{}: served more than offered",
+            p.label
+        );
+        assert!(
+            p.survival() >= SURVIVAL_FLOOR,
+            "{}: survival {:.3} under the floor {SURVIVAL_FLOOR}",
+            p.label,
+            p.survival()
+        );
+        let all = r.cell("all", None).expect("grand total cell");
+        assert!(all.p50_cycles <= all.p99_cycles, "{}", p.label);
+        assert!(all.p99_cycles <= all.p999_cycles, "{}", p.label);
+        let hits = r.counters.get("hits");
+        assert!(
+            hits <= prev_hits.saturating_add(slack),
+            "{}: hits rose as the campaign escalated ({hits} after \
+             {prev_hits})",
+            p.label
+        );
+        prev_hits = hits;
+        println!(
+            "  {}: survival {:.3}, hits {hits}, p99 {}",
+            p.label,
+            p.survival(),
+            all.p99_cycles
+        );
+    }
+    let (none, heavy) = (&pts[0], pts.last().expect("heavy row"));
+    let ft = heavy.report.fault_totals.unwrap_or_default();
+    assert!(
+        ft.retired_columns > 0,
+        "heavy campaign retired no columns — injection is not reaching \
+         the write path"
+    );
+    assert!(
+        heavy.report.counters.get("hits")
+            < none.report.counters.get("hits"),
+        "heavy campaign lost no hits — lost words are being silently \
+         resurrected somewhere"
+    );
+}
+
+fn determinism_across_workers(budget: &Budget, pts: &[FaultPoint]) {
+    for workers in [1usize, 4] {
+        let rerun = with_workers(workers, || coordinator::fault_sweep(budget));
+        for (a, b) in pts.iter().zip(&rerun) {
+            assert_eq!(
+                a.report.modeled_fingerprint(),
+                b.report.modeled_fingerprint(),
+                "{} campaign diverged under {workers} pool worker(s)",
+                a.label
+            );
+            assert_eq!(
+                a.report.fault_totals, b.report.fault_totals,
+                "{} fault totals diverged under {workers} worker(s)",
+                a.label
+            );
+        }
+        println!("  {workers} worker(s): all campaigns bit-identical");
+    }
+}
+
+fn main() {
+    let budget = Budget::default().from_env();
+    let t0 = std::time::Instant::now();
+
+    println!("== fault sweep ==");
+    let pts = coordinator::fault_sweep(&budget);
+    coordinator::fault_table(&pts).print();
+    assert_eq!(pts.len(), coordinator::FAULT_CAMPAIGNS.len());
+
+    println!("== fault-free pin ==");
+    fault_free_pin(&budget, &pts[0]);
+
+    println!("== degradation gates ==");
+    degradation_gates(&pts);
+
+    println!("== determinism across pool workers ==");
+    determinism_across_workers(&budget, &pts);
+
+    let rows: Vec<Json> = pts.iter().map(campaign_row).collect();
+    let payload = json::experiment("faults", rows);
+    json::write_json("BENCH_faults.json", &payload)
+        .expect("writing BENCH_faults.json");
+    println!("wrote BENCH_faults.json");
+    println!("wall time: {:?}", t0.elapsed());
+}

@@ -36,6 +36,7 @@ use monarch::service::trace::TraceMeta;
 use monarch::service::{run_service, ServiceConfig, ServiceReport};
 use monarch::util::json::{self, Json};
 use monarch::util::pool::with_workers;
+use monarch::xam::FaultConfig;
 
 /// Adjacent thread-count steps may lose at most this fraction to
 /// measurement noise before the scaling gate trips.
@@ -51,6 +52,7 @@ fn sharded_run(
         capacity_bytes: 0,
         geom: MonarchGeom::FULL.scaled(budget.scale * 4.0),
         cam_sets: meta.num_sets as usize,
+        faults: FaultConfig::default(),
     };
     let mut dev = DeviceBuilder::new().build_assoc(&spec);
     run_service(dev.as_mut(), &ServiceConfig::default(), meta, reqs)

@@ -6,6 +6,7 @@ pub mod tech;
 
 use crate::bail;
 use crate::util::error::{Context, Result};
+use crate::xam::FaultConfig;
 
 /// Interface timing parameters in CPU cycles (Table 3 rows). The same
 /// struct describes DDR4, in-package DRAM, Monarch/RRAM, and the CMOS
@@ -328,6 +329,10 @@ pub struct SystemConfig {
     pub l2_access_nj: f64,
     pub l3_access_nj: f64,
     pub wear: WearConfig,
+    /// Fault-injection campaign for the resistive stack (default:
+    /// disabled — bit-identical to a fault-free build). Applied by
+    /// `DeviceBuilder::build_cache` to every Monarch cache backend.
+    pub faults: FaultConfig,
     /// Capacity scale factor applied to every memory (simulation size).
     pub scale: f64,
     pub seed: u64,
@@ -364,6 +369,7 @@ impl SystemConfig {
             l2_access_nj: 0.03,
             l3_access_nj: 0.18,
             wear: WearConfig::default_m(3),
+            faults: FaultConfig::default(),
             scale: 1.0,
             seed: 0xA0A0,
         }
@@ -419,6 +425,16 @@ impl SystemConfig {
             "wear.endurance" => self.wear.endurance = vu()?,
             "wear.target_years" => self.wear.target_years = vf()?,
             "wear.dc_limit" => self.wear.dc_limit = vu()?,
+            "faults.seed" => self.faults.seed = vu()?,
+            "faults.stuck_per_mille" => {
+                self.faults.stuck_per_mille = vu()? as u32
+            }
+            "faults.transient_pct" => self.faults.transient_pct = vf()?,
+            "faults.max_retries" => self.faults.max_retries = vu()? as u32,
+            "faults.endurance" => self.faults.endurance = vu()?,
+            "faults.spare_supersets" => {
+                self.faults.spare_supersets = vu()? as u32
+            }
             "l3.size_bytes" => self.l3.size_bytes = vu()? as usize,
             "l3.ways" => self.l3.ways = vu()? as usize,
             "l1.access_nj" => self.l1_access_nj = vf()?,
@@ -521,6 +537,15 @@ mod tests {
         c.parse_overrides("l1.access_nj=0.02, l3.access_nj=0.5").unwrap();
         assert_eq!(c.l1_access_nj, 0.02);
         assert_eq!(c.l3_access_nj, 0.5);
+        assert!(!c.faults.enabled());
+        c.parse_overrides(
+            "faults.seed=7, faults.stuck_per_mille=3, \
+             faults.transient_pct=0.5, faults.max_retries=2",
+        )
+        .unwrap();
+        assert!(c.faults.enabled());
+        assert_eq!(c.faults.seed, 7);
+        assert_eq!(c.faults.stuck_per_mille, 3);
         assert!(c.parse_overrides("nope=1").is_err());
         assert!(c.parse_overrides("cores=abc").is_err());
     }

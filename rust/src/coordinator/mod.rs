@@ -23,6 +23,7 @@ use crate::workloads::stringmatch::{
     run_string_match, StringMatchConfig, StringReport,
 };
 use crate::workloads::{graph, nas, SyntheticStream, TraceWorkload, Workload};
+use crate::xam::FaultConfig;
 
 /// Experiment scale/budget knobs shared by the CLI and benches.
 #[derive(Clone, Copy, Debug)]
@@ -302,6 +303,7 @@ fn hash_system_specs(table_pow2: usize, geom: MonarchGeom) -> Vec<AssocSpec> {
         capacity_bytes,
         geom,
         cam_sets,
+        faults: FaultConfig::default(),
     };
     let specs = vec![
         spec(InPackageKind::DramCache, table_bytes.max(1 << 16)),
@@ -439,7 +441,13 @@ where
     ];
     fan_out(systems.len(), |i| {
         let (kind, capacity_bytes) = systems[i];
-        let spec = AssocSpec { kind, capacity_bytes, geom, cam_sets };
+        let spec = AssocSpec {
+            kind,
+            capacity_bytes,
+            geom,
+            cam_sets,
+            faults: FaultConfig::default(),
+        };
         let mut dev = mk_builder().build_assoc(&spec);
         run_string_match(dev.as_mut(), &cfg)
     })
@@ -514,7 +522,13 @@ where
         let start = (need / 4).max(1);
         let (kind, sets) = kind_of(need);
         let cam_sets = if sets == 0 { start } else { sets };
-        let spec = AssocSpec { kind, capacity_bytes: 0, geom, cam_sets };
+        let spec = AssocSpec {
+            kind,
+            capacity_bytes: 0,
+            geom,
+            cam_sets,
+            faults: FaultConfig::default(),
+        };
         let cfg = YcsbConfig {
             table_pow2: tp,
             window: 32,
@@ -814,6 +828,7 @@ where
             capacity_bytes: 0,
             geom,
             cam_sets,
+            faults: FaultConfig::default(),
         };
         let mut dev = mk_builder().build_assoc(&spec);
         // plant one word per set so some searches hit
@@ -1125,6 +1140,7 @@ fn service_system_specs(geom: MonarchGeom) -> Vec<AssocSpec> {
         capacity_bytes,
         geom,
         cam_sets: SERVICE_SETS as usize,
+        faults: FaultConfig::default(),
     };
     vec![
         spec(InPackageKind::MonarchSharded { shards: 8, m: 3 }, 0),
@@ -1185,6 +1201,7 @@ pub fn service_replay(
         capacity_bytes: 0,
         geom,
         cam_sets: meta.num_sets as usize,
+        faults: FaultConfig::default(),
     };
     let mut dev = DeviceBuilder::new().build_assoc(&spec);
     run_service(dev.as_mut(), &ServiceConfig::default(), meta, reqs)
@@ -1227,6 +1244,132 @@ pub fn service_table(points: &[ServicePoint]) -> Table {
             p999.to_string(),
             shed.to_string(),
             p.report.counters.get("deferred_bulk").to_string(),
+        ]);
+    }
+    t
+}
+
+/// The fault campaigns of the `monarch faults` sweep:
+/// `(label, stuck cells per mille, transient-failure %, endurance
+/// write budget, spare supersets)`. All cells share the budget's seed,
+/// and the stuck/transient draws are threshold comparisons against one
+/// hash stream, so each campaign's fault set CONTAINS the previous
+/// one's — degradation is monotone by construction, not by luck. The
+/// first cell is completely fault-free: its report must be
+/// bit-identical to the serve sweep's Monarch cell at load 1.0.
+pub const FAULT_CAMPAIGNS: &[(&str, u32, f64, u64, u32)] = &[
+    ("none", 0, 0.0, 0, 0),
+    ("light", 2, 0.5, 0, 0),
+    ("moderate", 10, 2.0, 0, 0),
+    ("heavy", 50, 8.0, 2_000, 2),
+];
+
+/// One measured cell of the `monarch faults` sweep: the serve sweep's
+/// Monarch backend at load 1.0 under one injected-fault campaign.
+#[derive(Clone, Debug)]
+pub struct FaultPoint {
+    pub label: &'static str,
+    pub stuck_per_mille: u32,
+    pub transient_pct: f64,
+    pub endurance: u64,
+    pub report: ServiceReport,
+}
+
+impl FaultPoint {
+    /// Completions as a fraction of offered load — the survival floor
+    /// the regression gate holds degraded cells to.
+    pub fn survival(&self) -> f64 {
+        self.report.completed_ops as f64
+            / self.report.offered_ops.max(1) as f64
+    }
+}
+
+/// The `monarch faults` sweep: the serve sweep's Monarch(S=8) cell at
+/// load 1.0 — same traffic, same spec — re-run under each campaign of
+/// [`FAULT_CAMPAIGNS`]. Each cell fans out as its own job and
+/// regenerates the identical deterministic stream, so the only thing
+/// that varies across rows is the injected fault set.
+pub fn fault_sweep(budget: &Budget) -> Vec<FaultPoint> {
+    fault_sweep_with(&DeviceBuilder::new, budget)
+}
+
+/// [`fault_sweep`] through the backend registry, mirroring
+/// [`service_sweep_with`].
+pub fn fault_sweep_with<F>(mk_builder: &F, budget: &Budget) -> Vec<FaultPoint>
+where
+    F: Fn() -> DeviceBuilder + Sync,
+{
+    let geom = MonarchGeom::FULL.scaled(budget.scale * 4.0);
+    fan_out(FAULT_CAMPAIGNS.len(), |i| {
+        let (label, stuck, transient, endurance, spares) =
+            FAULT_CAMPAIGNS[i];
+        let (meta, reqs) = service_traffic(budget, 1.0);
+        let mut spec = service_system_specs(geom).swap_remove(0);
+        if stuck > 0 || transient > 0.0 || endurance > 0 {
+            spec.faults = FaultConfig {
+                seed: budget.seed,
+                stuck_per_mille: stuck,
+                transient_pct: transient,
+                max_retries: 3,
+                endurance,
+                spare_supersets: spares,
+            };
+        }
+        let mut dev = mk_builder().build_assoc(&spec);
+        let report = run_service(
+            dev.as_mut(),
+            &ServiceConfig::default(),
+            &meta,
+            &reqs,
+        );
+        FaultPoint {
+            label,
+            stuck_per_mille: stuck,
+            transient_pct: transient,
+            endurance,
+            report,
+        }
+    })
+}
+
+pub fn fault_table(points: &[FaultPoint]) -> Table {
+    let mut t = Table::new(
+        "Fault sweep — graceful degradation under injected faults \
+         (Monarch S=8, load 1.0)",
+    )
+    .header(vec![
+        "campaign",
+        "stuck.pm",
+        "trans%",
+        "completed",
+        "survival",
+        "hits",
+        "retired",
+        "lost",
+        "degraded",
+        "dropped",
+        "p99",
+    ]);
+    for p in points {
+        let ft = p.report.fault_totals.unwrap_or_default();
+        let dropped: u64 =
+            p.report.dropped_after_retry.iter().map(|c| c.count).sum();
+        let p99 = p
+            .report
+            .cell("all", None)
+            .map_or(0, |c| c.p99_cycles);
+        t.row(vec![
+            p.label.to_string(),
+            p.stuck_per_mille.to_string(),
+            format!("{:.1}", p.transient_pct),
+            p.report.completed_ops.to_string(),
+            format!("{:.3}", p.survival()),
+            p.report.counters.get("hits").to_string(),
+            ft.retired_columns.to_string(),
+            ft.lost_words.to_string(),
+            ft.degraded_sets.to_string(),
+            dropped.to_string(),
+            p99.to_string(),
         ]);
     }
     t

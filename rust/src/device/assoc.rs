@@ -228,6 +228,18 @@ pub trait AssocDevice {
     /// ignore it.
     fn force_isa(&mut self, _isa: crate::xam::Isa) {}
 
+    /// Arm a fault-injection campaign on the device's resistive
+    /// arrays. Conventional backends (no resistive stack) ignore it;
+    /// a default (disabled) config is a no-op everywhere.
+    fn set_fault_config(&mut self, _f: crate::xam::FaultConfig) {}
+
+    /// Aggregate fault/degradation counters; `None` for backends
+    /// without a resistive stack (and zeroed totals when no campaign
+    /// is armed).
+    fn fault_totals(&self) -> Option<crate::xam::faults::FaultTotals> {
+        None
+    }
+
     /// Downcast to the flat-mode controller (tests / diagnostics).
     fn monarch_flat(&self) -> Option<&MonarchFlat> {
         None
@@ -638,6 +650,14 @@ impl AssocDevice for MonarchAssoc {
 
     fn force_isa(&mut self, isa: crate::xam::Isa) {
         self.flat.force_isa(isa);
+    }
+
+    fn set_fault_config(&mut self, f: crate::xam::FaultConfig) {
+        self.flat.set_fault_config(f);
+    }
+
+    fn fault_totals(&self) -> Option<crate::xam::faults::FaultTotals> {
+        Some(self.flat.fault_totals())
     }
 
     fn monarch_flat(&self) -> Option<&MonarchFlat> {

@@ -110,6 +110,11 @@ pub trait CacheDevice: Send {
     /// ignore it.
     fn force_isa(&mut self, _isa: crate::xam::Isa) {}
 
+    /// Arm a fault-injection campaign on the device's resistive
+    /// arrays. Non-XAM devices ignore it; a default (disabled) config
+    /// is a no-op everywhere.
+    fn set_fault_config(&mut self, _f: crate::xam::FaultConfig) {}
+
     /// Downcast to the Monarch cache controller (lifetime estimation
     /// and wear diagnostics need its snapshot APIs).
     fn monarch(&self) -> Option<&MonarchCache> {
@@ -214,6 +219,10 @@ impl CacheDevice for MonarchCache {
 
     fn force_isa(&mut self, isa: crate::xam::Isa) {
         MonarchCache::force_isa(self, isa);
+    }
+
+    fn set_fault_config(&mut self, f: crate::xam::FaultConfig) {
+        MonarchCache::set_fault_config(self, f);
     }
 
     fn counters(&self) -> Option<&Counters> {

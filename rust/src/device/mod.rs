@@ -43,6 +43,7 @@ pub use cache::{CacheDevice, EvictOutcome, FillOutcome};
 pub use sharded::ShardedAssoc;
 
 use crate::config::{InPackageKind, MonarchGeom, SystemConfig};
+use crate::xam::FaultConfig;
 
 /// One flat-CAM search request inside a [`AssocDevice::search_many`]
 /// batch. Semantics are exactly the scalar triple
@@ -108,6 +109,10 @@ pub struct AssocSpec {
     pub geom: MonarchGeom,
     /// Number of real searchable CAM sets.
     pub cam_sets: usize,
+    /// Fault-injection campaign (default: disabled, zero-cost). The
+    /// builder arms every constructed Monarch backend with it;
+    /// conventional backends ignore it.
+    pub faults: FaultConfig,
 }
 
 type CacheMatch = fn(InPackageKind) -> bool;
@@ -171,7 +176,8 @@ impl DeviceBuilder {
 
     /// Construct the in-package cache-mode device `cfg.inpkg` names.
     pub fn build_cache(&self, cfg: &SystemConfig) -> Box<dyn CacheDevice> {
-        self.cache
+        let mut dev = self
+            .cache
             .iter()
             .find(|(m, _)| m(cfg.inpkg))
             .map(|(_, ctor)| ctor(cfg))
@@ -182,7 +188,11 @@ impl DeviceBuilder {
                     cfg.inpkg,
                     self.registered_kinds(true).join(", ")
                 )
-            })
+            });
+        if cfg.faults.enabled() {
+            dev.set_fault_config(cfg.faults);
+        }
+        dev
     }
 
     /// Construct the software-managed device `spec.kind` names.
@@ -202,6 +212,9 @@ impl DeviceBuilder {
             });
         if let Some(engine) = &self.engine {
             dev.attach_engine(engine.clone());
+        }
+        if spec.faults.enabled() {
+            dev.set_fault_config(spec.faults);
         }
         dev
     }
@@ -287,10 +300,58 @@ mod tests {
                 capacity_bytes: 1 << 18,
                 geom,
                 cam_sets: 8,
+                faults: FaultConfig::default(),
             };
             let dev = b.build_assoc(&spec);
             assert!(!dev.label().is_empty(), "{kind:?}");
         }
+    }
+
+    #[test]
+    fn builder_arms_fault_config_on_monarch_backends() {
+        let b = DeviceBuilder::new();
+        let geom = MonarchGeom::FULL.scaled(1.0 / 1024.0);
+        let faults = FaultConfig {
+            seed: 3,
+            stuck_per_mille: 2,
+            transient_pct: 0.5,
+            max_retries: 2,
+            ..FaultConfig::default()
+        };
+        for kind in [
+            InPackageKind::Monarch { m: 3 },
+            InPackageKind::MonarchSharded { shards: 4, m: 3 },
+            InPackageKind::MonarchHybrid { cache_vaults: 2, m: 3 },
+        ] {
+            let spec = AssocSpec {
+                kind,
+                capacity_bytes: 1 << 18,
+                geom,
+                cam_sets: 8,
+                faults,
+            };
+            let dev = b.build_assoc(&spec);
+            let armed = if let Some(sh) = dev.sharded() {
+                (0..sh.num_shards())
+                    .all(|s| sh.shard_flat(s).fault_config().enabled())
+            } else {
+                dev.monarch_flat()
+                    .is_some_and(|f| f.fault_config().enabled())
+            };
+            assert!(
+                armed,
+                "{kind:?} must carry the armed campaign to its flat region"
+            );
+        }
+        // conventional backend: silently ignored, still constructs
+        let spec = AssocSpec {
+            kind: InPackageKind::Sram,
+            capacity_bytes: 1 << 18,
+            geom,
+            cam_sets: 8,
+            faults,
+        };
+        assert!(!b.build_assoc(&spec).label().is_empty());
     }
 
     #[test]

@@ -50,7 +50,8 @@ use crate::mem::ddr4::MainMemory;
 use crate::mem::{Access, MemReq, ReqKind};
 use crate::monarch::MonarchFlat;
 use crate::runtime::SearchEngine;
-use crate::xam::XamArray;
+use crate::xam::faults::FaultTotals;
+use crate::xam::{FaultConfig, XamArray};
 
 pub struct ShardedAssoc {
     shards: Vec<MonarchFlat>,
@@ -635,6 +636,26 @@ impl AssocDevice for ShardedAssoc {
         }
     }
 
+    /// Each shard draws from a seed folded with its shard index, so
+    /// shards never share a fault pattern — while shard 0 keeps the
+    /// campaign seed verbatim, preserving the S=1 ≡ unsharded
+    /// equivalence under an armed campaign.
+    fn set_fault_config(&mut self, f: FaultConfig) {
+        for (k, flat) in self.shards.iter_mut().enumerate() {
+            let mut fk = f;
+            fk.seed = f.seed ^ ((k as u64) << 32);
+            flat.set_fault_config(fk);
+        }
+    }
+
+    fn fault_totals(&self) -> Option<FaultTotals> {
+        let mut t = FaultTotals::default();
+        for flat in &self.shards {
+            t.merge(&flat.fault_totals());
+        }
+        Some(t)
+    }
+
     fn monarch_flat(&self) -> Option<&MonarchFlat> {
         // only meaningful when the device is a single controller;
         // per-shard state is exposed via `shard_flat`
@@ -895,6 +916,26 @@ mod tests {
         // shard 3 really grew
         assert_eq!(d.shard_flat(3).num_cam_sets(), 3);
         assert_eq!(d.shard_flat(0).num_cam_sets(), 3);
+    }
+
+    #[test]
+    fn fault_campaign_arms_every_shard_with_distinct_seeds() {
+        let mut d = ShardedAssoc::new(geom(), 16, 4);
+        let f = FaultConfig {
+            seed: 9,
+            stuck_per_mille: 3,
+            transient_pct: 1.0,
+            max_retries: 2,
+            ..FaultConfig::default()
+        };
+        AssocDevice::set_fault_config(&mut d, f);
+        let seeds: Vec<u64> =
+            (0..4).map(|s| d.shard_flat(s).fault_config().seed).collect();
+        assert_eq!(seeds[0], 9, "shard 0 keeps the campaign seed");
+        for (s, &seed) in seeds.iter().enumerate().skip(1) {
+            assert_ne!(seed, seeds[0], "shard {s} must draw independently");
+        }
+        assert!(AssocDevice::fault_totals(&d).is_some());
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! monarch serve                KV service tail-latency sweep
 //! monarch serve --trace PATH   capture the service stream, then serve it
 //! monarch serve --replay PATH  re-serve a captured trace bit-identically
+//! monarch faults               graceful-degradation sweep under injected faults
 //! monarch table1               technology comparison
 //! monarch selfcheck            load artifacts, kernel-vs-rust check
 //! ```
@@ -152,8 +153,24 @@ fn service_json_rows(load: f64, r: &ServiceReport) -> Vec<Json> {
         .set("shed_deadline", r.counters.get("shed_deadline"))
         .set("deferred_bulk", r.counters.get("deferred_bulk"))
         .set("wear_deferred", r.counters.get("wear_deferred"))
+        .set("wear_dropped", r.counters.get("wear_dropped"))
+        .set(
+            "dropped_after_retry",
+            r.dropped_after_retry.iter().map(|c| c.count).sum::<u64>(),
+        )
         .set("queue_high_water", r.counters.get("queue_high_water"))
         .set("modeled_fingerprint", r.modeled_fingerprint())];
+    for d in &r.dropped_after_retry {
+        rows.push(
+            Json::obj()
+                .set("row", "dropped")
+                .set("system", r.system.clone())
+                .set("load", load)
+                .set("phase", d.phase)
+                .set("shard", d.lane)
+                .set("count", d.count),
+        );
+    }
     for c in &r.cells {
         rows.push(
             Json::obj()
@@ -459,6 +476,76 @@ fn main() -> Result<()> {
                 payload = Some(json::experiment("serve", rows));
             }
         }
+        "faults" => {
+            // graceful-degradation sweep: the serve sweep's Monarch
+            // cell at load 1.0 under escalating fault campaigns. The
+            // fault-free row must fingerprint-match a fault-free run
+            // (checked by bench_regression --faults), the degraded
+            // rows must survive without corrupting results.
+            let pts = coordinator::fault_sweep(&budget);
+            coordinator::fault_table(&pts).print();
+            let base = pts.first().expect("fault-free baseline row");
+            for p in &pts {
+                let ft = p.report.fault_totals.unwrap_or_default();
+                println!(
+                    "  {}: survival {:.3}, hits {} ({:+} vs fault-free), \
+                     {} columns retired, {} words lost, {} sets degraded",
+                    p.label,
+                    p.survival(),
+                    p.report.counters.get("hits"),
+                    p.report.counters.get("hits") as i64
+                        - base.report.counters.get("hits") as i64,
+                    ft.retired_columns,
+                    ft.lost_words,
+                    ft.degraded_sets,
+                );
+            }
+            let jrows = pts
+                .iter()
+                .map(|p| {
+                    let ft = p.report.fault_totals.unwrap_or_default();
+                    Json::obj()
+                        .set("row", "campaign")
+                        .set("campaign", p.label)
+                        .set("system", p.report.system.clone())
+                        .set("stuck_per_mille", u64::from(p.stuck_per_mille))
+                        .set("transient_pct", p.transient_pct)
+                        .set("endurance", p.endurance)
+                        .set("offered_ops", p.report.offered_ops)
+                        .set("completed_ops", p.report.completed_ops)
+                        .set("survival", p.survival())
+                        .set("hits", p.report.counters.get("hits"))
+                        .set("misses", p.report.counters.get("misses"))
+                        .set("ops_per_kcycle", p.report.ops_per_kcycle())
+                        .set(
+                            "p99_cycles",
+                            p.report
+                                .cell("all", None)
+                                .map_or(0, |c| c.p99_cycles),
+                        )
+                        .set("retired_columns", ft.retired_columns)
+                        .set("lost_words", ft.lost_words)
+                        .set("transient_faults", ft.transient_faults)
+                        .set("stuck_write_faults", ft.stuck_write_faults)
+                        .set("retry_writes", ft.retry_writes)
+                        .set("degraded_sets", ft.degraded_sets)
+                        .set("spares_used", ft.spares_used)
+                        .set(
+                            "dropped_after_retry",
+                            p.report
+                                .dropped_after_retry
+                                .iter()
+                                .map(|c| c.count)
+                                .sum::<u64>(),
+                        )
+                        .set(
+                            "modeled_fingerprint",
+                            p.report.modeled_fingerprint(),
+                        )
+                })
+                .collect();
+            payload = Some(json::experiment("faults", jrows));
+        }
         "memcache" => {
             // hybrid MemCache sweep: every boundary position of the
             // vault-partitioned device on every workload, each split
@@ -595,7 +682,7 @@ fn main() -> Result<()> {
             println!(
                 "usage: monarch <table1|fig9|fig10|fig11|fig12|fig13|fig14|\
                  stringmatch|shards|reconfig|memcache|cachewave|xamsearch|\
-                 serve|selfcheck> \
+                 serve|faults|selfcheck> \
                  [--quick] [--scale S] [--trace-ops N] [--hash-ops N] \
                  [--threads N] [--seed N] [--pjrt] [--json PATH]\n\
                  serve extras: [--load L] [--shards N] [--trace PATH] \

@@ -29,7 +29,8 @@ use crate::monarch::vault::{
 };
 use crate::monarch::wear::{WearEvent, WearLeveler};
 use crate::util::stats::{Counters, Log2Hist};
-use crate::xam::{Bank as XamBank, SenseMode, XamArray};
+use crate::xam::faults::FaultTotals;
+use crate::xam::{Bank as XamBank, FaultConfig, SenseMode, XamArray};
 
 const TAG_BITS: u64 = 30;
 const TAG_MASK: u64 = (1 << TAG_BITS) - 1;
@@ -91,6 +92,7 @@ pub struct MonarchCache {
     ways: usize,
     /// `None` disables t_MWW and wear leveling (M-Unbound).
     bounded: bool,
+    faults: FaultConfig,
     wave_scratch: WaveScratch,
     pub stats: Counters,
     pub hit_lat: Log2Hist,
@@ -158,6 +160,7 @@ impl MonarchCache {
             sets_per_vault,
             ways,
             bounded,
+            faults: FaultConfig::default(),
             wave_scratch: WaveScratch::default(),
             stats: Counters::new(),
             hit_lat: Log2Hist::new(),
@@ -185,6 +188,85 @@ impl MonarchCache {
             for a in v.tags.iter_mut() {
                 a.force_isa(isa);
             }
+        }
+    }
+
+    /// Arm (or disarm, with a default config) fault injection on every
+    /// tag array. The salt folds in (vault, array) so each array draws
+    /// an independent, reproducible fault set from one campaign seed.
+    /// Endurance-driven superset remap is a flat/CAM-mode mechanism;
+    /// cache mode already redistributes wear by rotation, so only the
+    /// cell-level knobs (stuck-at, transient) apply here.
+    pub fn set_fault_config(&mut self, f: FaultConfig) {
+        self.faults = f;
+        for (vi, v) in self.vaults.iter_mut().enumerate() {
+            for (ai, a) in v.tags.iter_mut().enumerate() {
+                a.set_fault_plane(&f, ((vi as u64) << 16) | ai as u64);
+            }
+        }
+    }
+
+    pub fn fault_config(&self) -> FaultConfig {
+        self.faults
+    }
+
+    /// Aggregate fault/degradation counters over every tag array.
+    pub fn fault_totals(&self) -> FaultTotals {
+        let mut t = FaultTotals::default();
+        for v in &self.vaults {
+            for a in &v.tags {
+                if let Some(fp) = a.fault_plane() {
+                    t.absorb(fp);
+                }
+            }
+        }
+        t
+    }
+
+    /// Verified tag-column write: energy covers every attempt of the
+    /// retry ladder; stat keys are created only when a fault fires so
+    /// the fault-free report stays bit-identical.
+    fn tag_write_checked(
+        &mut self,
+        vault: usize,
+        array: usize,
+        col: usize,
+        word: u64,
+    ) -> crate::xam::ColWrite {
+        let w = self.vaults[vault].tags[array].write_col_checked(col, word);
+        self.energy_nj += XAM_WRITE_NJ * f64::from(w.attempts.max(1));
+        if w.attempts > 1 {
+            self.stats.add("tag_write_retries", u64::from(w.attempts - 1));
+        }
+        if w.retired_now {
+            self.stats.inc("retired_tag_columns");
+        }
+        if !w.stored {
+            self.stats.inc("tag_write_faulted");
+        }
+        w
+    }
+
+    /// Retire-coherence for a dead tag column: both halves' entries
+    /// leave the tag maps (the fault layer already cleared the column)
+    /// and both halves' valid bits are pinned TRUE — "occupied by a
+    /// dead column" — so the `first_zero` free-slot scan agrees with
+    /// the retired-masked XAM searches and the slot is never re-chosen
+    /// by the free scan.
+    fn retire_tag_entries(
+        &mut self,
+        vault: usize,
+        array: usize,
+        col: usize,
+        old: u64,
+    ) {
+        let v = &mut self.vaults[vault];
+        for half in 0..2usize {
+            let entry = (old >> (32 * half)) & 0xFFFF_FFFF;
+            if entry & VALID_BIT != 0 {
+                v.tag_maps[array][half].remove(&((entry & TAG_MASK) as u32));
+            }
+            v.valid_bits[array][half].set(col, true);
         }
     }
 
@@ -308,9 +390,25 @@ impl MonarchCache {
                     let entry = (old >> (32 * half)) & 0xFFFF_FFFF;
                     let new = entry | DIRTY_BIT;
                     let other = old & (0xFFFF_FFFFu64 << (32 * (1 - half)));
-                    v.tags[set / 2]
-                        .write_col(col, other | (new << (32 * half)));
-                    self.energy_nj += XAM_WRITE_NJ;
+                    let w = self.tag_write_checked(
+                        vault,
+                        set / 2,
+                        col,
+                        other | (new << (32 * half)),
+                    );
+                    if !w.stored {
+                        // the update destroyed the tag column: the
+                        // block leaves the cache and this write is
+                        // demoted to a miss so main memory services it
+                        // (no silent loss of the dirty data)
+                        self.retire_tag_entries(vault, set / 2, col, old);
+                        self.stats.inc("fault_hit_demoted");
+                        return LookupResult {
+                            hit: false,
+                            done_at: tag_done,
+                            energy_nj: 0.0,
+                        };
+                    }
                 }
                 // data access in the RAM part
                 let bank = col % self.geom.banks_per_vault;
@@ -506,11 +604,24 @@ impl MonarchCache {
                 self.stats.inc("install_dedup");
                 return (now, None, false);
             }
-            let v = &mut self.vaults[vault];
-            let old = v.tags[array].read_col(col);
+            let old = self.vaults[vault].tags[array].read_col(col);
             let entry = ((old >> (32 * half)) & 0xFFFF_FFFF) | DIRTY_BIT;
             let other = old & (0xFFFF_FFFFu64 << (32 * (1 - half)));
-            v.tags[array].write_col(col, other | (entry << (32 * half)));
+            let w = self.tag_write_checked(
+                vault,
+                array,
+                col,
+                other | (entry << (32 * half)),
+            );
+            if !w.stored {
+                // tag column died mid-update: the block leaves the
+                // cache and the dirty eviction is forwarded to main
+                // memory instead (graceful degradation, no data loss)
+                self.retire_tag_entries(vault, array, col, old);
+                self.stats.inc("fault_install_forward");
+                return (now, Some(addr), true);
+            }
+            let v = &mut self.vaults[vault];
             let bank = col % self.geom.banks_per_vault;
             let done = self.engine.schedule(
                 &mut v.ram_banks[bank],
@@ -519,7 +630,7 @@ impl MonarchCache {
                 0,
                 now,
             );
-            self.energy_nj += 2.0 * XAM_WRITE_NJ;
+            self.energy_nj += XAM_WRITE_NJ;
             self.stats.inc("install_update");
             self.account_write(vault, ss, true, now);
             return (done, None, false);
@@ -573,9 +684,29 @@ impl MonarchCache {
         let old = v.tags[array].read_col(col);
         let other = old & (0xFFFF_FFFFu64 << (32 * (1 - half)));
         let entry = pack_entry(tag, true, dirty);
-        v.tags[array].write_col(col, other | (entry << (32 * half)));
-        self.energy_nj += XAM_WRITE_NJ;
+        let w = self.tag_write_checked(
+            vault,
+            array,
+            col,
+            other | (entry << (32 * half)),
+        );
+        if !w.stored {
+            // the slot died under us: undo the just-inserted map entry,
+            // pin the column as retired-occupied, and forward the block
+            // to main memory like a locked-superset bypass. If a dirty
+            // rotary victim was evicted in the same step it wins the
+            // single write-back slot; the clipped forward is counted.
+            self.vaults[vault].tag_maps[array][set % 2]
+                .remove(&(tag as u32));
+            self.retire_tag_entries(vault, array, col, old);
+            self.stats.inc("fault_install_forward");
+            if victim.is_some() && dirty {
+                self.stats.inc("fault_forward_clipped");
+            }
+            return (t_read, victim.or(dirty.then_some(addr)), true);
+        }
         // data block write in the RAM part
+        let v = &mut self.vaults[vault];
         let bank = col % self.geom.banks_per_vault;
         let done = self.engine.schedule(
             &mut v.ram_banks[bank],
@@ -620,6 +751,22 @@ impl MonarchCache {
             for bits in &mut v.valid_bits {
                 bits[0].clear();
                 bits[1].clear();
+            }
+            // retired columns survive the flush: re-pin them as
+            // occupied so the free-slot scan keeps agreeing with the
+            // retired-masked XAM searches
+            for (ai, arr) in v.tags.iter().enumerate() {
+                if let Some(fp) = arr.fault_plane() {
+                    if !fp.any_retired() {
+                        continue;
+                    }
+                    for c in 0..arr.cols() {
+                        if fp.is_retired(c) {
+                            v.valid_bits[ai][0].set(c, true);
+                            v.valid_bits[ai][1].set(c, true);
+                        }
+                    }
+                }
             }
             v.last_keymask = None;
         }
@@ -932,6 +1079,76 @@ mod tests {
         }
         assert!(c.rotations() >= 1, "WR signal must have rotated");
         assert!(c.stats.get("rotations") >= 1);
+    }
+
+    #[test]
+    fn fault_campaign_degrades_cache_without_corruption() {
+        // heavy stuck-at + transient campaign over mixed install and
+        // lookup traffic: the controller must never panic (the tag-map
+        // vs XAM debug asserts run throughout) and every retired tag
+        // column must satisfy the retire-coherence convention
+        let mut c = small_unbound();
+        c.set_fault_config(FaultConfig {
+            seed: 7,
+            stuck_per_mille: 12,
+            transient_pct: 5.0,
+            max_retries: 1,
+            ..FaultConfig::default()
+        });
+        let mut t = 0;
+        for i in 0..4000u64 {
+            let addr = (i.wrapping_mul(2654435761) % 500) * 64;
+            if i % 3 == 0 {
+                let (done, _, _) = c.on_l3_evict(
+                    &Eviction { addr, dirty: i % 2 == 0, referenced: true },
+                    t,
+                );
+                t = done;
+            } else {
+                let kind = if i % 5 == 0 {
+                    ReqKind::Write
+                } else {
+                    ReqKind::Read
+                };
+                let r = c.lookup(&req(addr, kind, t));
+                t = r.done_at;
+            }
+        }
+        let ft = c.fault_totals();
+        assert!(ft.any(), "campaign at these rates must fire faults");
+        assert!(ft.retired_columns > 0, "some columns must retire");
+        assert_eq!(
+            c.stats.get("retired_tag_columns"),
+            ft.retired_columns,
+            "stat counter must mirror the plane counters"
+        );
+        for v in &c.vaults {
+            for (ai, a) in v.tags.iter().enumerate() {
+                let Some(fp) = a.fault_plane() else { continue };
+                for col in 0..a.cols() {
+                    if !fp.is_retired(col) {
+                        continue;
+                    }
+                    assert_eq!(a.read_col(col), 0, "retired col cleared");
+                    assert!(
+                        v.valid_bits[ai][0].get(col)
+                            && v.valid_bits[ai][1].get(col),
+                        "retired col pinned occupied in both halves"
+                    );
+                    for half in 0..2 {
+                        assert!(
+                            v.tag_maps[ai][half]
+                                .values()
+                                .all(|&cc| cc as usize != col),
+                            "no tag map entry may point at a retired col"
+                        );
+                    }
+                }
+            }
+        }
+        // disarming detaches every plane again
+        c.set_fault_config(FaultConfig::default());
+        assert!(!c.fault_totals().any());
     }
 
     #[test]

@@ -36,9 +36,10 @@ use crate::mem::Access;
 use crate::monarch::vault::{
     monarch_engine, BankMode, XAM_READ_NJ, XAM_SEARCH_NJ, XAM_WRITE_NJ,
 };
-use crate::monarch::wear::WearLeveler;
+use crate::monarch::wear::{Endure, WearLeveler};
 use crate::util::stats::Counters;
-use crate::xam::{Isa, PortMode, SenseMode, XamArray};
+use crate::xam::faults::FaultTotals;
+use crate::xam::{FaultConfig, Isa, PortMode, SenseMode, XamArray};
 
 /// Outcome of one [`MonarchFlat::repartition`] call.
 #[derive(Clone, Debug)]
@@ -92,6 +93,10 @@ pub struct MonarchFlat {
     /// later (repartition grows) inherit it like `scalar_engine`
     /// (host-speed only, every tier bit-identical).
     isa: Isa,
+    /// Fault campaign knobs; disabled by default (no plane attached,
+    /// zero cost). Sets created by repartition grows inherit it like
+    /// `scalar_engine` / `isa`.
+    faults: FaultConfig,
     pub stats: Counters,
     pub energy_nj: f64,
 }
@@ -128,9 +133,46 @@ impl MonarchFlat {
             bounded,
             scalar_engine: false,
             isa: Isa::active(),
+            faults: FaultConfig::default(),
             stats: Counters::new(),
             energy_nj: 0.0,
         }
+    }
+
+    /// Arm (or disarm) the fault campaign: attach a per-set
+    /// [`FaultPlane`](crate::xam::FaultPlane) salted by the set index
+    /// and arm endurance tracking on the wear leveler. A disabled
+    /// config detaches everything — the controller returns to the
+    /// fault-free fast path.
+    pub fn set_fault_config(&mut self, f: FaultConfig) {
+        self.faults = f;
+        for (i, s) in self.sets.iter_mut().enumerate() {
+            s.set_fault_plane(&f, i as u64);
+        }
+        if f.enabled() {
+            self.wear.set_endurance(f.endurance, f.spare_supersets);
+        } else {
+            self.wear.set_endurance(0, 0);
+        }
+    }
+
+    /// The active fault campaign knobs.
+    pub fn fault_config(&self) -> FaultConfig {
+        self.faults
+    }
+
+    /// Aggregate fault-pipeline counters over every CAM set plus the
+    /// superset-level endurance escalation state.
+    pub fn fault_totals(&self) -> FaultTotals {
+        let mut t = FaultTotals::default();
+        for s in &self.sets {
+            if let Some(p) = s.fault_plane() {
+                t.absorb(p);
+            }
+        }
+        t.degraded_sets = self.wear.degraded_count();
+        t.spares_used = self.wear.spares_used() as u64;
+        t
     }
 
     /// Force the scalar per-column functional search engine on every
@@ -237,6 +279,23 @@ impl MonarchFlat {
                 }
             }
         }
+        // endurance escalation (fault campaigns only): a degraded
+        // superset sheds the write — counted, never corrupted.
+        match self.wear.endure(ss) {
+            Endure::Ok => {}
+            Endure::Remapped => {
+                self.stats.inc("ss_remaps");
+            }
+            Endure::JustDegraded => {
+                self.stats.inc("degraded_sets");
+                self.stats.inc("degraded_cam_writes");
+                return None;
+            }
+            Endure::Blocked => {
+                self.stats.inc("degraded_cam_writes");
+                return None;
+            }
+        }
         let (vault, bank) = self.route_set(set);
         let mut t = now;
         // the superset must be in ColumnIn CAM (§7): activate if not
@@ -249,10 +308,27 @@ impl MonarchFlat {
             let b = &mut self.banks[bank];
             self.engine.schedule(&mut b.state, &mut self.chans[vault], Op::Write, 0, t)
         };
-        self.sets[set].write_col(col, word);
-        self.energy_nj += XAM_WRITE_NJ;
+        // verify-after-write against the fault plane: a clean device
+        // takes exactly the single-attempt path (bit-identical to the
+        // pre-fault controller); retries charge energy per attempt.
+        let w = self.sets[set].write_col_checked(col, word);
+        let nj = XAM_WRITE_NJ * w.attempts.max(1) as f64;
+        self.energy_nj += nj;
         self.stats.inc("cam_writes");
-        Some(Access { done_at, energy_nj: XAM_WRITE_NJ })
+        if w.attempts > 1 {
+            self.stats.add("fault_write_retries", u64::from(w.attempts - 1));
+        }
+        if w.retired_now {
+            self.stats.inc("retired_columns");
+            if word != 0 {
+                self.stats.inc("lost_words");
+            }
+        }
+        if !w.stored {
+            self.stats.inc("cam_write_faulted");
+            return None;
+        }
+        Some(Access { done_at, energy_nj: nj })
     }
 
     /// A read of the match pointer for `set` (§7): issues the search
@@ -417,6 +493,14 @@ impl MonarchFlat {
     /// with history preserved per [`WearLeveler::resize`].
     pub fn adopt_wear(&mut self, mut wear: WearLeveler) {
         wear.resize(self.ss_version.len());
+        if self.faults.enabled() {
+            // endurance knobs are a property of this controller's
+            // campaign; the adopted history keeps its spent budget
+            wear.set_endurance(
+                self.faults.endurance,
+                self.faults.spare_supersets,
+            );
+        }
         self.wear = wear;
     }
 
@@ -495,10 +579,23 @@ impl MonarchFlat {
                 now,
             )
         };
-        self.sets[set].write_col(col, word);
-        self.energy_nj += XAM_WRITE_NJ;
+        // migration goes through the same verify-after-write ladder; a
+        // word that cannot land is lost (counted by the plane) and the
+        // spill path serves it from main memory afterwards.
+        let w = self.sets[set].write_col_checked(col, word);
+        let nj = XAM_WRITE_NJ * w.attempts.max(1) as f64;
+        self.energy_nj += nj;
         self.stats.inc("reconfig_cam_writes");
-        (done_at, XAM_WRITE_NJ)
+        if w.retired_now {
+            self.stats.inc("retired_columns");
+            if word != 0 {
+                self.stats.inc("lost_words");
+            }
+        }
+        if !w.stored {
+            self.stats.inc("migrate_write_faulted");
+        }
+        (done_at, nj)
     }
 
     /// Flat-RAM block relocation for a grow: every 64B block of the
@@ -639,6 +736,12 @@ impl MonarchFlat {
                 a.force_isa(isa);
                 a
             });
+            // new sets inherit the active fault campaign (salted by
+            // their set index, like a construction-time attach)
+            let faults = self.faults;
+            for (i, s) in self.sets.iter_mut().enumerate().skip(from) {
+                s.set_fault_plane(&faults, i as u64);
+            }
         }
         let supersets = target_sets
             .div_ceil(self.geom.sets_per_superset)
@@ -898,6 +1001,86 @@ mod tests {
         assert_eq!(r.energy_nj, 0.0);
         assert_eq!(m.keymask().0, 5, "no-op must not quiesce");
         assert_eq!(m.stats.get("repartitions"), 0);
+    }
+
+    #[test]
+    fn fault_campaign_sheds_writes_and_reports_degradation() {
+        let mut m = flat(8); // 8 sets, sets_per_superset 8 -> 1 superset
+        assert!(!m.fault_config().enabled());
+        assert!(!m.fault_totals().any());
+        m.set_fault_config(FaultConfig {
+            seed: 42,
+            stuck_per_mille: 20,
+            transient_pct: 2.0,
+            max_retries: 1,
+            endurance: 2_000,
+            spare_supersets: 1,
+        });
+        let mut t = 0;
+        let (mut stored, mut shed) = (0u64, 0u64);
+        for i in 0..6000u64 {
+            let set = (i % 8) as usize;
+            let col = ((i / 8) % 512) as usize;
+            match m.cam_write(set, col, i | (1 << 62), t) {
+                Some(a) => {
+                    t = a.done_at;
+                    stored += 1;
+                }
+                None => shed += 1,
+            }
+        }
+        assert_eq!(stored + shed, 6000);
+        // endurance: 2000-write budget, one spare -> remap at 2000,
+        // degrade at 4000, the tail of the campaign is shed+counted
+        assert_eq!(m.wear().spares_used(), 1);
+        assert_eq!(m.wear().degraded_count(), 1);
+        assert!(m.stats.get("ss_remaps") == 1);
+        assert!(m.stats.get("degraded_sets") == 1);
+        assert!(m.stats.get("degraded_cam_writes") > 0);
+        let tot = m.fault_totals();
+        assert_eq!(tot.degraded_sets, 1);
+        assert_eq!(tot.spares_used, 1);
+        // stuck cells at 20 per mille retire real columns
+        assert!(tot.retired_columns > 0, "no columns retired");
+        assert_eq!(m.stats.get("retired_columns"), tot.retired_columns);
+        // every surviving search result is a live column holding the
+        // exact stored word — degraded, never wrong
+        for set in 0..8usize {
+            let a = m.set_array(set);
+            for col in 0..512 {
+                if a.is_col_retired(col) {
+                    assert_eq!(a.read_col(col), 0, "retired col not cleared");
+                }
+            }
+        }
+        // disarming detaches the planes and endurance tracking
+        let mut fresh = flat(2);
+        fresh.set_fault_config(FaultConfig {
+            seed: 1,
+            stuck_per_mille: 500,
+            ..Default::default()
+        });
+        fresh.set_fault_config(FaultConfig::default());
+        assert!(fresh.set_array(0).fault_plane().is_none());
+        assert!(fresh.cam_write(0, 0, !0u64, 0).is_some());
+    }
+
+    #[test]
+    fn repartition_grow_inherits_fault_campaign() {
+        let mut m = flat(4);
+        m.set_fault_config(FaultConfig {
+            seed: 9,
+            transient_pct: 1.0,
+            max_retries: 2,
+            ..Default::default()
+        });
+        m.repartition(8, 0);
+        for set in 0..8 {
+            assert!(
+                m.set_array(set).fault_plane().is_some(),
+                "set {set} lost its fault plane across the grow"
+            );
+        }
     }
 
     #[test]

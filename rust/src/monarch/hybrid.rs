@@ -58,7 +58,8 @@ use crate::monarch::vault::VAULT_STATIC_WATTS;
 use crate::monarch::{MonarchCache, MonarchFlat, WearLeveler};
 use crate::runtime::SearchEngine;
 use crate::util::stats::Counters;
-use crate::xam::XamArray;
+use crate::xam::faults::FaultTotals;
+use crate::xam::{FaultConfig, XamArray};
 
 /// 4KB OS pages over 64B blocks.
 const BLOCKS_PER_PAGE: u64 = 64;
@@ -124,6 +125,7 @@ pub struct MonarchHybrid {
     wear_cfg: WearConfig,
     window_cycles: u64,
     bounded: bool,
+    faults: FaultConfig,
     cache: Option<MonarchCache>,
     flat: Option<MonarchFlat>,
     main: MainMemory,
@@ -165,6 +167,7 @@ impl MonarchHybrid {
             wear_cfg,
             window_cycles,
             bounded,
+            faults: FaultConfig::default(),
             cache: None,
             flat: None,
             main: MainMemory::default(),
@@ -210,10 +213,51 @@ impl MonarchHybrid {
         self.epoch_ops_seen = 0;
         self.cooldown = 0;
         self.recompute_slots();
+        self.apply_faults();
         self.label = format!(
             "Monarch(hybrid,C={cache_vaults},M={})",
             self.wear_cfg.m
         );
+    }
+
+    /// Arm (or disarm) fault injection on both regions. The stored
+    /// config survives boundary moves: [`MonarchHybrid::rebuild`]
+    /// re-applies it to the rebuilt controllers. The cache region
+    /// draws from a shifted seed so the two regions of one package
+    /// never share a fault pattern.
+    pub fn set_fault_config(&mut self, f: FaultConfig) {
+        self.faults = f;
+        self.apply_faults();
+    }
+
+    fn apply_faults(&mut self) {
+        if !self.faults.enabled() {
+            return;
+        }
+        if let Some(c) = self.cache.as_mut() {
+            let mut cf = self.faults;
+            cf.seed = cf.seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            c.set_fault_config(cf);
+        }
+        if let Some(fl) = self.flat.as_mut() {
+            fl.set_fault_config(self.faults);
+        }
+    }
+
+    pub fn fault_config(&self) -> FaultConfig {
+        self.faults
+    }
+
+    /// Aggregate fault/degradation counters over both regions.
+    pub fn fault_totals(&self) -> FaultTotals {
+        let mut t = FaultTotals::default();
+        if let Some(c) = &self.cache {
+            t.merge(&c.fault_totals());
+        }
+        if let Some(f) = &self.flat {
+            t.merge(&f.fault_totals());
+        }
+        t
     }
 
     /// Size the resident-page slot span: the flat-RAM block space
@@ -718,6 +762,10 @@ impl CacheDevice for MonarchHybrid {
         }
     }
 
+    fn set_fault_config(&mut self, f: FaultConfig) {
+        MonarchHybrid::set_fault_config(self, f);
+    }
+
     fn monarch(&self) -> Option<&MonarchCache> {
         self.cache.as_ref()
     }
@@ -963,6 +1011,14 @@ impl AssocDevice for MonarchHybrid {
         CacheDevice::force_isa(self, isa);
     }
 
+    fn set_fault_config(&mut self, f: FaultConfig) {
+        MonarchHybrid::set_fault_config(self, f);
+    }
+
+    fn fault_totals(&self) -> Option<FaultTotals> {
+        Some(MonarchHybrid::fault_totals(self))
+    }
+
     fn monarch_flat(&self) -> Option<&MonarchFlat> {
         self.flat.as_ref()
     }
@@ -1032,6 +1088,28 @@ mod tests {
         assert_eq!(h.resident_pages(), 1);
         assert!(h.stats.get("resident_hit_r") >= 1, "served from flat RAM");
         assert!(CacheDevice::hit_rate(&h) > 0.0);
+    }
+
+    #[test]
+    fn fault_config_survives_boundary_moves() {
+        let mut h = hybrid(2);
+        let f = FaultConfig {
+            seed: 11,
+            stuck_per_mille: 5,
+            transient_pct: 1.0,
+            max_retries: 2,
+            ..FaultConfig::default()
+        };
+        h.set_fault_config(f);
+        assert_eq!(h.fault_config(), f);
+        let r = h.set_boundary(3, 0);
+        assert_eq!(h.fault_config(), f, "config survives the move");
+        assert!(h.flat().unwrap().fault_config().enabled());
+        let cf = h.cache().unwrap().fault_config();
+        assert!(cf.enabled());
+        assert_ne!(cf.seed, f.seed, "regions draw from distinct seeds");
+        let lr = CacheDevice::lookup(&mut h, &read(64, r.done_at));
+        assert!(lr.done_at >= r.done_at);
     }
 
     #[test]

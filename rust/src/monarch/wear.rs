@@ -98,6 +98,23 @@ pub struct WearLeveler {
     /// "recording Monarch snapshots at every rotation") — the lifetime
     /// estimator's input.
     pub snapshots: Vec<Vec<u64>>,
+    /// Endurance budget per superset before its cells exhaust;
+    /// 0 = endurance faults off (the default).
+    endurance: u64,
+    /// Spare supersets available for endurance remapping.
+    spares_total: u32,
+    spares_used: u32,
+    /// Cumulative per-superset block writes over the device lifetime.
+    /// Unlike `interval_writes` this is never reset by a rotation —
+    /// endurance exhaustion is a lifetime property.
+    cum_writes: Vec<u64>,
+    /// Endurance remap history: (superset, spare id). Each remap
+    /// consumes a distinct spare, so no spare ever serves two
+    /// supersets at once.
+    pub remap_log: Vec<(usize, u32)>,
+    /// Supersets that exhausted endurance with no spare left: their
+    /// writes are shed and counted, never silently corrupted.
+    degraded: Vec<bool>,
 }
 
 /// Portable per-superset wear state: the t_MWW window (budget spent,
@@ -109,6 +126,10 @@ pub struct WearLeveler {
 pub struct SupersetWear {
     mww: MwwWindow,
     swt: SwtEntry,
+    /// Cumulative lifetime writes (endurance accounting input).
+    cum_writes: u64,
+    /// Endurance-degraded flag.
+    degraded: bool,
 }
 
 /// What the controller must do after a write is accounted.
@@ -118,6 +139,23 @@ pub enum WearEvent {
     /// Rotate signal fired: flush the listed-dirty supersets, reset
     /// counters, advance offsets (the caller models the flush cost).
     Rotate { dirty_supersets: u32 },
+}
+
+/// Outcome of one endurance-accounted write (see
+/// [`WearLeveler::endure`]): the retire→remap→degrade escalation of
+/// the fault pipeline at superset granularity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Endure {
+    /// Within budget (or endurance tracking off).
+    Ok,
+    /// The write crossed the endurance threshold and the superset
+    /// remapped onto a fresh spare from the pool.
+    Remapped,
+    /// Threshold crossed with no spare left: the superset just
+    /// degraded — this write and all later ones must be shed.
+    JustDegraded,
+    /// The superset was already degraded; the write must not land.
+    Blocked,
 }
 
 impl WearLeveler {
@@ -135,7 +173,76 @@ impl WearLeveler {
             rotate_log: Vec::new(),
             interval_writes: vec![0; supersets],
             snapshots: Vec::new(),
+            endurance: 0,
+            spares_total: 0,
+            spares_used: 0,
+            cum_writes: vec![0; supersets],
+            remap_log: Vec::new(),
+            degraded: vec![false; supersets],
         }
+    }
+
+    /// Arm endurance-exhaustion tracking: `threshold` cumulative block
+    /// writes per superset before its cells fail (0 disarms), with
+    /// `spares` fresh supersets available for remapping.
+    pub fn set_endurance(&mut self, threshold: u64, spares: u32) {
+        self.endurance = threshold;
+        self.spares_total = spares;
+    }
+
+    /// Account one block write against `superset`'s endurance budget
+    /// and run the remap/degrade escalation when it crosses the
+    /// threshold. Call *before* landing the write: [`Endure::Blocked`]
+    /// and [`Endure::JustDegraded`] mean the write must be shed.
+    pub fn endure(&mut self, superset: usize) -> Endure {
+        if self.endurance == 0 {
+            return Endure::Ok;
+        }
+        if self.degraded[superset] {
+            self.stats.inc("endurance_blocked");
+            return Endure::Blocked;
+        }
+        self.cum_writes[superset] += 1;
+        if self.cum_writes[superset] < self.endurance {
+            return Endure::Ok;
+        }
+        if self.spares_used < self.spares_total {
+            // remap to a fresh spare: the address keeps working, the
+            // cells behind it are new. t_MWW window state is
+            // deliberately untouched — the thermal window is a
+            // controller property, not a cell property, so wear
+            // history survives the remap.
+            self.spares_used += 1;
+            self.remap_log.push((superset, self.spares_used));
+            self.cum_writes[superset] = 0;
+            self.stats.inc("ss_remaps");
+            Endure::Remapped
+        } else {
+            self.degraded[superset] = true;
+            self.stats.inc("degraded_sets");
+            Endure::JustDegraded
+        }
+    }
+
+    /// Is `superset` endurance-degraded (writes shed)?
+    #[inline]
+    pub fn is_degraded(&self, superset: usize) -> bool {
+        self.endurance != 0 && self.degraded[superset]
+    }
+
+    /// Degraded supersets so far.
+    pub fn degraded_count(&self) -> u64 {
+        self.degraded.iter().filter(|&&d| d).count() as u64
+    }
+
+    /// Spares consumed by endurance remaps.
+    pub fn spares_used(&self) -> u32 {
+        self.spares_used
+    }
+
+    /// Cumulative lifetime writes of `superset` (endurance input).
+    pub fn cum_writes(&self, superset: usize) -> u64 {
+        self.cum_writes[superset]
     }
 
     pub fn num_supersets(&self) -> usize {
@@ -161,6 +268,8 @@ impl WearLeveler {
         self.swt.resize(supersets, SwtEntry::default());
         self.mww.resize(supersets, MwwWindow::default());
         self.interval_writes.resize(supersets, 0);
+        self.cum_writes.resize(supersets, 0);
+        self.degraded.resize(supersets, false);
         self.superset_counter =
             self.swt.iter().filter(|e| e.written).count() as u64;
         self.dirty_counter =
@@ -270,7 +379,13 @@ impl WearLeveler {
         self.swt
             .iter()
             .zip(&self.mww)
-            .map(|(&swt, &mww)| SupersetWear { mww, swt })
+            .enumerate()
+            .map(|(i, (&swt, &mww))| SupersetWear {
+                mww,
+                swt,
+                cum_writes: self.cum_writes[i],
+                degraded: self.degraded[i],
+            })
             .collect()
     }
 
@@ -287,6 +402,8 @@ impl WearLeveler {
         }
         self.swt[i].written |= s.swt.written;
         self.swt[i].dirty |= s.swt.dirty;
+        self.cum_writes[i] = self.cum_writes[i].max(s.cum_writes);
+        self.degraded[i] |= s.degraded;
         self.superset_counter =
             self.swt.iter().filter(|e| e.written).count() as u64;
         self.dirty_counter =
@@ -458,6 +575,61 @@ mod tests {
         assert!(!dst.locked(0, 10_001), "window still expires");
         // superset 2 aliased onto 0: its dirty flag merged in
         assert!(dst.on_write(1, false, 700).0);
+    }
+
+    #[test]
+    fn endurance_remaps_then_degrades_then_blocks() {
+        let mut wl = WearLeveler::new(cfg(4), 4, u64::MAX);
+        assert_eq!(wl.endure(0), Endure::Ok, "disarmed: always Ok");
+        wl.set_endurance(10, 2);
+        // two threshold crossings remap onto distinct spares
+        for round in 0..2 {
+            for _ in 0..9 {
+                assert_eq!(wl.endure(0), Endure::Ok);
+            }
+            assert_eq!(wl.endure(0), Endure::Remapped, "round {round}");
+            assert_eq!(wl.cum_writes(0), 0, "fresh cells after remap");
+        }
+        assert_eq!(wl.spares_used(), 2);
+        // spares exhausted: the next crossing degrades, then blocks
+        for _ in 0..9 {
+            assert_eq!(wl.endure(0), Endure::Ok);
+        }
+        assert_eq!(wl.endure(0), Endure::JustDegraded);
+        assert!(wl.is_degraded(0));
+        assert_eq!(wl.endure(0), Endure::Blocked);
+        assert!(!wl.is_degraded(1), "other supersets unaffected");
+        // no spare ever serves two supersets: ids are unique
+        let ids: Vec<u32> = wl.remap_log.iter().map(|&(_, id)| id).collect();
+        assert_eq!(ids, vec![1, 2]);
+        assert_eq!(wl.degraded_count(), 1);
+        assert_eq!(wl.stats.get("ss_remaps"), 2);
+        assert_eq!(wl.stats.get("degraded_sets"), 1);
+        assert_eq!(wl.stats.get("endurance_blocked"), 1);
+    }
+
+    #[test]
+    fn endurance_state_survives_implant_and_resize() {
+        let mut src = WearLeveler::new(cfg(1), 4, 10_000);
+        src.set_endurance(5, 0);
+        for _ in 0..4 {
+            assert_eq!(src.endure(2), Endure::Ok);
+        }
+        assert_eq!(src.endure(2), Endure::JustDegraded);
+        let exported = src.export_supersets();
+        let mut dst = WearLeveler::new(cfg(1), 4, 10_000);
+        dst.set_endurance(5, 0);
+        for (i, s) in exported.iter().enumerate() {
+            dst.implant_superset(i, s);
+        }
+        assert!(dst.is_degraded(2), "degraded flag survives the move");
+        assert_eq!(dst.endure(2), Endure::Blocked);
+        assert_eq!(dst.cum_writes(1), exported[1].cum_writes);
+        // resize keeps the flag; new supersets start fresh
+        dst.resize(8);
+        assert!(dst.is_degraded(2));
+        assert!(!dst.is_degraded(7));
+        assert_eq!(dst.endure(7), Endure::Ok);
     }
 
     #[test]

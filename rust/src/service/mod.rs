@@ -82,6 +82,7 @@ use crate::service::trace::TraceMeta;
 use crate::util::pool::fan_out_mut;
 use crate::util::rng::fnv1a64_bytes;
 use crate::util::stats::{Counters, LogHist};
+use crate::xam::faults::FaultTotals;
 
 /// Driver knobs. Defaults are the `monarch serve` sweep's.
 #[derive(Clone, Copy, Debug)]
@@ -130,6 +131,18 @@ pub struct ServiceCell {
     pub p999_host_ns: u64,
 }
 
+/// One (phase, lane) cell of the dropped-after-retry accounting:
+/// t_MWW-deferred mutations whose retry budget exhausted in this lane
+/// during this phase. These requests never complete, so they have no
+/// latency sample — before this field they were only visible as the
+/// run-wide `wear_dropped` counter.
+#[derive(Clone, Copy, Debug)]
+pub struct DroppedCell {
+    pub phase: &'static str,
+    pub lane: usize,
+    pub count: u64,
+}
+
 /// Everything one service run produced.
 #[derive(Clone, Debug)]
 pub struct ServiceReport {
@@ -158,6 +171,15 @@ pub struct ServiceReport {
     /// deferred_bulk / queue_high_water.
     pub counters: Counters,
     pub cells: Vec<ServiceCell>,
+    /// Per-(phase, lane) attribution of `wear_dropped`: only nonzero
+    /// cells appear, and their counts sum to the counter. Derived from
+    /// the same deterministic events as the counter, so it is reported
+    /// alongside the fingerprint rather than hashed into it.
+    pub dropped_after_retry: Vec<DroppedCell>,
+    /// Fault-campaign outcome totals from the device, when the backend
+    /// tracks them (`None` on conventional backends). Fault-free
+    /// Monarch runs report `Some` with every field zero.
+    pub fault_totals: Option<FaultTotals>,
 }
 
 impl ServiceReport {
@@ -674,6 +696,7 @@ pub fn run_service(
                             }
                             None => {
                                 counters.inc("wear_dropped");
+                                lane.cells.record_dropped(r.phase as usize);
                                 if r.phase == 0 {
                                     plant_blocked += 1;
                                 }
@@ -851,6 +874,20 @@ pub fn run_service(
     let completed_ops = cy.count;
     cells.push(cell_row("all", None, &cy, &ns));
 
+    let mut dropped_after_retry = Vec::new();
+    for (p, &name) in PHASES.iter().enumerate() {
+        for lane in 0..lanes_n {
+            let count = tele.dropped(p, lane);
+            if count > 0 {
+                dropped_after_retry.push(DroppedCell {
+                    phase: name,
+                    lane,
+                    count,
+                });
+            }
+        }
+    }
+
     ServiceReport {
         system: dev.label().to_string(),
         lanes: lanes_n,
@@ -863,6 +900,8 @@ pub fn run_service(
         host_wall_ns: wall0.elapsed().as_nanos() as u64,
         counters,
         cells,
+        dropped_after_retry,
+        fault_totals: dev.fault_totals(),
     }
 }
 
@@ -872,6 +911,7 @@ mod tests {
     use crate::config::{InPackageKind, MonarchGeom};
     use crate::device::{AssocSpec, DeviceBuilder};
     use crate::service::gen::{generate, TrafficConfig};
+    use crate::xam::FaultConfig;
 
     fn geom() -> MonarchGeom {
         MonarchGeom {
@@ -907,6 +947,7 @@ mod tests {
             capacity_bytes: 0,
             geom: geom(),
             cam_sets: 32,
+            faults: FaultConfig::default(),
         }
     }
 
@@ -1137,6 +1178,55 @@ mod tests {
         assert!(r.counters.get("wear_deferred") > 0, "no t_MWW deferrals");
         assert!(r.counters.get("wear_dropped") > 0, "no retry exhaustion");
         assert!(r.completed_ops < r.offered_ops);
+        // the per-(phase, lane) attribution accounts for every drop:
+        // all traffic hammers set 0 in the steady phase, so a single
+        // (steady, lane 0) cell carries the whole counter
+        let total: u64 =
+            r.dropped_after_retry.iter().map(|c| c.count).sum();
+        assert_eq!(total, r.counters.get("wear_dropped"));
+        assert_eq!(r.dropped_after_retry.len(), 1);
+        assert_eq!(r.dropped_after_retry[0].phase, "steady");
+        assert_eq!(r.dropped_after_retry[0].lane, 0);
+    }
+
+    #[test]
+    fn fault_campaign_degrades_service_without_corruption() {
+        // same stream, fault-free vs under an aggressive campaign: the
+        // faulted run must complete (no panic, no silent corruption —
+        // every completion is a real device answer), report its damage
+        // through `fault_totals`, and never answer more lookups as
+        // hits than the fault-free run
+        let (meta, reqs) = stream(64.0);
+        let run = |faults: FaultConfig| {
+            let mut dev = DeviceBuilder::new().build_assoc(&AssocSpec {
+                faults,
+                ..sharded_spec(4)
+            });
+            run_service(
+                dev.as_mut(),
+                &ServiceConfig::default(),
+                &meta,
+                &reqs,
+            )
+        };
+        let clean = run(FaultConfig::default());
+        let ft = clean.fault_totals.expect("Monarch tracks fault totals");
+        assert!(!ft.any(), "fault-free run reports zero damage");
+        let faulted = run(FaultConfig {
+            seed: 3,
+            stuck_per_mille: 50,
+            transient_pct: 10.0,
+            max_retries: 1,
+            ..FaultConfig::default()
+        });
+        assert!(faulted.completed_ops > 0);
+        let ft = faulted.fault_totals.expect("fault totals present");
+        assert!(ft.any(), "campaign this aggressive leaves damage");
+        assert!(ft.retired_columns > 0);
+        assert!(
+            faulted.counters.get("hits") <= clean.counters.get("hits"),
+            "faults can only lose words, never invent hits"
+        );
     }
 
     #[test]
@@ -1147,6 +1237,7 @@ mod tests {
             capacity_bytes: 1 << 16,
             geom: geom(),
             cam_sets: 32,
+            faults: FaultConfig::default(),
         };
         let mut dev = DeviceBuilder::new().build_assoc(&spec);
         let r = run_service(

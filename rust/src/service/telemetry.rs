@@ -18,9 +18,13 @@
 use crate::util::stats::LogHist;
 
 /// One lane's telemetry: a `(modeled cycles, host ns)` histogram pair
-/// per phase, owned by whichever worker is scattering that lane.
+/// per phase, owned by whichever worker is scattering that lane, plus
+/// a per-phase count of requests this lane dropped after exhausting
+/// their t_MWW retry budget (dropped requests never complete, so they
+/// have no latency sample — only the count).
 pub struct LaneCells {
     cells: Vec<(LogHist, LogHist)>,
+    dropped: Vec<u64>,
 }
 
 impl LaneCells {
@@ -30,6 +34,7 @@ impl LaneCells {
             cells: (0..phases)
                 .map(|_| (LogHist::new(), LogHist::new()))
                 .collect(),
+            dropped: vec![0; phases],
         }
     }
 
@@ -40,8 +45,18 @@ impl LaneCells {
         cell.1.record(host_ns);
     }
 
+    /// Count one retry-budget exhaustion (`wear_dropped`) in `phase`.
+    #[inline]
+    pub fn record_dropped(&mut self, phase: usize) {
+        self.dropped[phase] += 1;
+    }
+
     pub fn cell(&self, phase: usize) -> &(LogHist, LogHist) {
         &self.cells[phase]
+    }
+
+    pub fn dropped(&self, phase: usize) -> u64 {
+        self.dropped[phase]
     }
 
     /// Exact per-phase histogram merge (bucket sums commute, so merge
@@ -51,6 +66,9 @@ impl LaneCells {
         for (a, b) in self.cells.iter_mut().zip(&other.cells) {
             a.0.merge(&b.0);
             a.1.merge(&b.1);
+        }
+        for (a, b) in self.dropped.iter_mut().zip(&other.dropped) {
+            *a += b;
         }
     }
 }
@@ -95,6 +113,16 @@ impl Telemetry {
     /// One (phase, lane) cell: (modeled cycles, host ns).
     pub fn cell(&self, phase: usize, lane: usize) -> &(LogHist, LogHist) {
         self.lanes[lane].cell(phase)
+    }
+
+    /// Retry-budget drops recorded in one (phase, lane) cell.
+    pub fn dropped(&self, phase: usize, lane: usize) -> u64 {
+        self.lanes[lane].dropped(phase)
+    }
+
+    /// Retry-budget drops of one phase summed across lanes.
+    pub fn phase_dropped(&self, phase: usize) -> u64 {
+        self.lanes.iter().map(|l| l.dropped(phase)).sum()
     }
 
     /// All lanes of one phase merged.
@@ -187,6 +215,26 @@ mod tests {
                 assert_eq!(sn.p99(), an.p99());
             }
         }
+    }
+
+    #[test]
+    fn dropped_counts_track_their_cell_and_merge() {
+        let mut l0 = LaneCells::new(2);
+        let mut l1 = LaneCells::new(2);
+        l0.record_dropped(1);
+        l0.record_dropped(1);
+        l1.record_dropped(0);
+        let mut merged = LaneCells::new(2);
+        merged.merge(&l0);
+        merged.merge(&l1);
+        assert_eq!(merged.dropped(0), 1);
+        assert_eq!(merged.dropped(1), 2);
+        let t = Telemetry::from_lanes(2, vec![l0, l1]);
+        assert_eq!(t.dropped(1, 0), 2);
+        assert_eq!(t.dropped(0, 1), 1);
+        assert_eq!(t.dropped(1, 1), 0);
+        assert_eq!(t.phase_dropped(1), 2);
+        assert_eq!(t.phase_dropped(0), 1);
     }
 
     #[test]

@@ -23,6 +23,7 @@
 
 use crate::config::tech::{DeviceParams, RRAM_DEVICE};
 use crate::util::bitvec::BitVec;
+use crate::xam::faults::{ColWrite, FaultConfig, FaultPlane};
 use crate::xam::simd::{self, Isa};
 
 /// Column-chunk width of the stack-allocated search accumulator
@@ -94,6 +95,9 @@ pub struct XamArray {
     /// SIMD tier of the bit-sliced plane sweep (host-speed only; every
     /// tier is bit-identical — see [`crate::xam::simd`]).
     isa: Isa,
+    /// Fault-injection state; `None` (the default) is the fault-free
+    /// fast path — no plane attached, zero cost on every op.
+    faults: Option<Box<FaultPlane>>,
 }
 
 impl XamArray {
@@ -113,6 +117,7 @@ impl XamArray {
             device: RRAM_DEVICE,
             scalar_engine: false,
             isa: Isa::active(),
+            faults: None,
         }
     }
 
@@ -169,6 +174,95 @@ impl XamArray {
     #[inline]
     pub fn isa(&self) -> Isa {
         self.isa
+    }
+
+    /// Attach a fault plane drawn from `cfg` (salted by the owning
+    /// array's index so siblings fault independently). A config with
+    /// no cell-level fault class armed detaches any plane — the array
+    /// returns to the zero-cost fault-free path.
+    pub fn set_fault_plane(&mut self, cfg: &FaultConfig, salt: u64) {
+        self.faults = (cfg.stuck_per_mille > 0 || cfg.transient_pct > 0.0)
+            .then(|| {
+                Box::new(FaultPlane::new(cfg, salt, self.rows, self.cols))
+            });
+    }
+
+    /// The attached fault plane, if any (counters / diagnostics).
+    #[inline]
+    pub fn fault_plane(&self) -> Option<&FaultPlane> {
+        self.faults.as_deref()
+    }
+
+    /// Has `col` been retired by the fault pipeline?
+    #[inline]
+    pub fn is_col_retired(&self, col: usize) -> bool {
+        self.faults.as_ref().is_some_and(|f| f.is_retired(col))
+    }
+
+    /// The fault plane when at least one column is retired — the only
+    /// case where the search paths need masking.
+    #[inline]
+    fn retired_plane(&self) -> Option<&FaultPlane> {
+        self.faults.as_deref().filter(|f| f.any_retired())
+    }
+
+    /// Checked column write: verify-after-write against the fault
+    /// plane with a bounded rewrite-retry ladder, retiring the column
+    /// on a stuck-at conflict or ladder exhaustion. Without a plane
+    /// this is exactly [`XamArray::write_col`]. The invariant either
+    /// way: the column ends up holding the intended word verified, or
+    /// it is retired (cleared to zero and masked out of every search).
+    pub fn write_col_checked(&mut self, col: usize, word: u64) -> ColWrite {
+        let Some(mut fp) = self.faults.take() else {
+            self.write_col(col, word);
+            return ColWrite::CLEAN;
+        };
+        let out = self.write_col_verified(&mut fp, col, word);
+        self.faults = Some(fp);
+        out
+    }
+
+    fn write_col_verified(
+        &mut self,
+        fp: &mut FaultPlane,
+        col: usize,
+        word: u64,
+    ) -> ColWrite {
+        if fp.is_retired(col) {
+            return ColWrite { attempts: 0, stored: false, retired_now: false };
+        }
+        let want = word & self.row_mask();
+        if fp.effective(col, want) != want {
+            // a stuck cell disagrees with the intended word: the
+            // verify fails identically on every attempt, so the
+            // ladder is pointless — retire immediately.
+            fp.stuck_write_faults += 1;
+            self.write_col(col, 0);
+            fp.retire(col, want != 0);
+            return ColWrite { attempts: 1, stored: false, retired_now: true };
+        }
+        let mut attempts = 0u32;
+        loop {
+            // the per-column write counter doubles as the transient
+            // draw sequence: each attempt redraws deterministically
+            let seq = self.col_writes[col];
+            self.write_col(col, want);
+            attempts += 1;
+            if !fp.transient_hit(col, seq) {
+                fp.retry_writes += u64::from(attempts - 1);
+                return ColWrite { attempts, stored: true, retired_now: false };
+            }
+            fp.transient_faults += 1;
+            if attempts > fp.max_retries() {
+                self.write_col(col, 0);
+                fp.retire(col, want != 0);
+                return ColWrite {
+                    attempts,
+                    stored: false,
+                    retired_now: true,
+                };
+            }
+        }
     }
 
     /// Column-wise write (§4.1.2, ColumnIn mode): store a full word
@@ -285,18 +379,27 @@ impl XamArray {
     /// 512-column chunks with early exit.
     fn bitsliced_first(&self, key: u64, mask: u64) -> Option<usize> {
         if mask == 0 {
-            // nothing compared: every column matches
-            return (self.cols > 0).then_some(0);
+            // nothing compared: every live column matches
+            return match self.retired_plane() {
+                None => (self.cols > 0).then_some(0),
+                Some(fp) => (0..self.cols).find(|&j| !fp.is_retired(j)),
+            };
         }
         let (order, n) = self.plane_order(key, mask)?;
         let pwords = self.plane_words();
         let tail = self.tail_mask();
+        let retired = self.retired_plane();
         let mut start = 0usize;
         while start < pwords {
             let cw = (pwords - start).min(ACC_WORDS);
             let mut acc = [!0u64; ACC_WORDS];
             if start + cw == pwords {
                 acc[cw - 1] &= tail;
+            }
+            if let Some(fp) = retired {
+                for (i, a) in acc[..cw].iter_mut().enumerate() {
+                    *a &= fp.live_word(start + i);
+                }
             }
             let mut live = true;
             for &r in &order[..n] {
@@ -356,7 +459,7 @@ impl XamArray {
             let mut first = None;
             let mut matches = 0usize;
             for (j, &d) in self.data.iter().enumerate() {
-                if (d ^ key) & mask == 0 {
+                if (d ^ key) & mask == 0 && !self.is_col_retired(j) {
                     scratch.match_words[j / 64] |= 1u64 << (j % 64);
                     matches += 1;
                     if first.is_none() {
@@ -374,6 +477,11 @@ impl XamArray {
             *w = !0u64;
         }
         scratch.match_words[pwords - 1] &= self.tail_mask();
+        if let Some(fp) = self.retired_plane() {
+            for (w, m) in scratch.match_words.iter_mut().enumerate() {
+                *m &= fp.live_word(w);
+            }
+        }
         if mask != 0 {
             let Some((order, n)) = self.plane_order(key, mask) else {
                 scratch.match_words.iter_mut().for_each(|w| *w = 0);
@@ -414,7 +522,10 @@ impl XamArray {
         let mask = mask & self.row_mask();
         let key = key & self.row_mask();
         if self.scalar_engine {
-            return self.data.iter().position(|&d| (d ^ key) & mask == 0);
+            return self.data.iter().enumerate().find_map(|(j, &d)| {
+                ((d ^ key) & mask == 0 && !self.is_col_retired(j))
+                    .then_some(j)
+            });
         }
         self.bitsliced_first(key, mask)
     }
@@ -425,7 +536,9 @@ impl XamArray {
     pub fn search_first_scalar(&self, key: u64, mask: u64) -> Option<usize> {
         let mask = mask & self.row_mask();
         let key = key & self.row_mask();
-        self.data.iter().position(|&d| (d ^ key) & mask == 0)
+        self.data.iter().enumerate().find_map(|(j, &d)| {
+            ((d ^ key) & mask == 0 && !self.is_col_retired(j)).then_some(j)
+        })
     }
 
     /// Batched bit-sliced evaluation: ONE plane sweep over this array
@@ -467,6 +580,15 @@ impl XamArray {
             if masks[i] & row_mask == 0 {
                 // nothing compared: the all-ones accumulator stands
                 scratch.alive[i] = false;
+            }
+        }
+        if let Some(fp) = self.retired_plane() {
+            // mask retired columns out at init so even mask-0 keys
+            // (whose accumulator stands untouched) cannot match one
+            for i in 0..k {
+                for w in 0..pwords {
+                    scratch.accs[i * pwords + w] &= fp.live_word(w);
+                }
             }
         }
         let mut remaining =
@@ -520,7 +642,10 @@ impl XamArray {
         let mask = mask & self.row_mask();
         let key = key & self.row_mask();
         let mut min_mism: Option<u32> = None;
-        for &d in &self.data {
+        for (j, &d) in self.data.iter().enumerate() {
+            if self.is_col_retired(j) {
+                continue;
+            }
             let mism = ((d ^ key) & mask).count_ones();
             if mism != 0 {
                 min_mism = Some(min_mism.map_or(mism, |m| m.min(mism)));
@@ -832,6 +957,66 @@ mod tests {
         assert_eq!(a.max_cell_writes(), 2 + 1);
         a.reset_wear();
         assert_eq!(a.total_writes(), 0);
+    }
+
+    #[test]
+    fn checked_write_stores_exactly_or_retires() {
+        let cfg = FaultConfig {
+            seed: 0xFA17,
+            stuck_per_mille: 30,
+            transient_pct: 4.0,
+            max_retries: 2,
+            ..Default::default()
+        };
+        let mut a = XamArray::new(64, 512);
+        a.set_fault_plane(&cfg, 0);
+        let mut rng = Rng::new(77);
+        let mut model: Vec<u64> = vec![0; 512];
+        for _ in 0..4000 {
+            let col = rng.usize_below(512);
+            let word = rng.next_u64() | 1; // nonzero
+            let w = a.write_col_checked(col, word);
+            if w.stored {
+                model[col] = word;
+                assert_eq!(a.read_col(col), word);
+            } else {
+                assert!(a.is_col_retired(col));
+                assert_eq!(a.read_col(col), 0);
+            }
+        }
+        let fp = a.fault_plane().unwrap();
+        assert!(fp.retired_cols > 0, "campaign produced no retirements");
+        assert_eq!(
+            (0..512).filter(|&j| a.is_col_retired(j)).count() as u64,
+            fp.retired_cols
+        );
+        // a retired column rejects all further writes
+        let dead = (0..512).find(|&j| a.is_col_retired(j)).unwrap();
+        let w = a.write_col_checked(dead, 42);
+        assert!(!w.stored && !w.retired_now && w.attempts == 0);
+        assert_eq!(a.read_col(dead), 0);
+        // retired columns never match: bitsliced, scalar and the wave
+        // entry point all agree, and no hit lands on a retired column
+        let mut scalar = a.clone();
+        scalar.force_scalar(true);
+        let keys: Vec<u64> = (0..512).map(|j| model[j]).collect();
+        let masks = vec![!0u64; 512];
+        let mut scratch = SearchScratch::new();
+        let mut out = Vec::new();
+        a.search_many_bitsliced(&keys, &masks, &mut scratch, &mut out);
+        for j in 0..512 {
+            let first = a.search_first(keys[j], !0);
+            assert_eq!(first, scalar.search_first(keys[j], !0), "col {j}");
+            assert_eq!(out[j], first, "wave col {j}");
+            if let Some(c) = first {
+                assert!(!a.is_col_retired(c), "hit on retired col {c}");
+                assert_eq!(a.read_col(c), keys[j]);
+            }
+        }
+        // a mask-0 search (matches everything) still skips retired
+        for probe in [a.search_first(0, 0), a.search(0, 0).first_match] {
+            assert!(!a.is_col_retired(probe.unwrap()));
+        }
     }
 
     #[test]

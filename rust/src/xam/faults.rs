@@ -1,0 +1,368 @@
+//! Deterministic fault injection for the resistive XAM stack.
+//!
+//! The wear machinery models *how fast* cells age, but until this
+//! module nothing ever actually failed. [`FaultPlane`] attaches to an
+//! [`XamArray`](crate::xam::XamArray) and injects three seeded,
+//! reproducible fault classes:
+//!
+//! - **stuck-at cells**: a per-cell hash of `(seed, salt, col, row)`
+//!   marks a configurable per-mille of cells permanently stuck at 0 or
+//!   1. A stuck cell only matters when a write wants the opposite
+//!   value — detection is verify-after-write, and a conflicting column
+//!   retires immediately (retries cannot help a stuck cell).
+//! - **transient write failures**: each write attempt draws a
+//!   stateless hash of `(seed, salt, col, write-sequence#)` against a
+//!   probability knob. Failed attempts re-enter a bounded rewrite
+//!   ladder; exhausting the ladder retires the column.
+//! - **endurance exhaustion**: handled one layer up by
+//!   [`WearLeveler`](crate::monarch::wear::WearLeveler) — cumulative
+//!   per-superset writes crossing a threshold remap the superset to a
+//!   spare, and when spares run out the superset degrades.
+//!
+//! The invariant the whole stack leans on: **a column either stores
+//! exactly the intended word, or it is retired.** Stuck masks are
+//! consulted only at checked-write verify points; the functional
+//! mirror (`data[]` / bit planes) is never corrupted. Retired columns
+//! are cleared to zero and masked out of every search path (bit-sliced
+//! accumulators are AND'd with the live-column word; scalar sweeps
+//! skip them), so a retired column can never produce a match — lookups
+//! against lost words miss, they never lie.
+//!
+//! Everything is behind a zero-cost default: [`FaultConfig::default`]
+//! disables every knob, no plane is attached, and a fault-free run is
+//! bit-identical to a build without this module.
+
+/// Knobs for the fault campaign. The default (all zeros) disables
+/// injection entirely — no [`FaultPlane`] is attached and every device
+/// behaves bit-identically to a fault-free build.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultConfig {
+    /// Campaign seed; all fault draws derive from it deterministically.
+    pub seed: u64,
+    /// Stuck-at cell density, per mille of cells (0 = none).
+    pub stuck_per_mille: u32,
+    /// Transient write-failure probability, percent per attempt.
+    pub transient_pct: f64,
+    /// Rewrite-retry ladder depth after a transient failure.
+    pub max_retries: u32,
+    /// Cumulative per-superset write budget before endurance
+    /// exhaustion (0 = endurance faults off).
+    pub endurance: u64,
+    /// Spare supersets available for endurance remapping.
+    pub spare_supersets: u32,
+}
+
+impl FaultConfig {
+    /// True when any fault class is armed.
+    pub fn enabled(&self) -> bool {
+        self.stuck_per_mille > 0
+            || self.transient_pct > 0.0
+            || self.endurance > 0
+    }
+}
+
+/// Result of one checked (verify-after-write) column write.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ColWrite {
+    /// Write attempts issued (each one charges wear and energy).
+    pub attempts: u32,
+    /// The intended word is in the column (verified).
+    pub stored: bool,
+    /// This write pushed the column into retirement.
+    pub retired_now: bool,
+}
+
+impl ColWrite {
+    /// The fault-free fast path: one attempt, stored, no retirement.
+    pub const CLEAN: ColWrite =
+        ColWrite { attempts: 1, stored: true, retired_now: false };
+}
+
+/// Aggregated fault-pipeline counters across a device's arrays (and,
+/// for the superset-level rows, its wear leveler) — the degradation
+/// surface a driver reports instead of corrupting results.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultTotals {
+    pub retired_columns: u64,
+    pub lost_words: u64,
+    pub transient_faults: u64,
+    pub stuck_write_faults: u64,
+    pub retry_writes: u64,
+    pub degraded_sets: u64,
+    pub spares_used: u64,
+}
+
+impl FaultTotals {
+    /// Fold one array's plane counters in.
+    pub fn absorb(&mut self, p: &FaultPlane) {
+        self.retired_columns += p.retired_cols;
+        self.lost_words += p.lost_words;
+        self.transient_faults += p.transient_faults;
+        self.stuck_write_faults += p.stuck_write_faults;
+        self.retry_writes += p.retry_writes;
+    }
+
+    /// Fold another aggregate in (shard / region merges).
+    pub fn merge(&mut self, o: &FaultTotals) {
+        self.retired_columns += o.retired_columns;
+        self.lost_words += o.lost_words;
+        self.transient_faults += o.transient_faults;
+        self.stuck_write_faults += o.stuck_write_faults;
+        self.retry_writes += o.retry_writes;
+        self.degraded_sets += o.degraded_sets;
+        self.spares_used += o.spares_used;
+    }
+
+    pub fn any(&self) -> bool {
+        *self != FaultTotals::default()
+    }
+}
+
+/// SplitMix64 finalizer — a stateless avalanche mix so every fault
+/// draw is a pure function of its coordinates (deterministic across
+/// thread counts and ISA tiers by construction).
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+const STUCK_SALT: u64 = 0x5AC5_0FF5_E11D_0001;
+const TRANSIENT_SALT: u64 = 0x7A25_1E27_FA17_0002;
+
+/// Per-array fault state: stuck-cell masks, the retired-column bitmap,
+/// and fault counters. One plane per [`XamArray`], distinguished by a
+/// `salt` (the owner's array index) so sibling arrays draw independent
+/// fault sets from one campaign seed.
+#[derive(Clone, Debug)]
+pub struct FaultPlane {
+    seed: u64,
+    salt: u64,
+    transient_pct: f64,
+    max_retries: u32,
+    /// Per-column row-bit masks of cells stuck at 0 / stuck at 1.
+    stuck0: Vec<u64>,
+    stuck1: Vec<u64>,
+    /// Retired-column bitmap, one bit per column.
+    retired: Vec<u64>,
+    any_retired: bool,
+    // ---- counters (surfaced through device stats) ----
+    pub retired_cols: u64,
+    pub lost_words: u64,
+    pub transient_faults: u64,
+    pub stuck_write_faults: u64,
+    pub retry_writes: u64,
+}
+
+impl FaultPlane {
+    /// Build the plane for an array of `rows` x `cols` cells: the
+    /// stuck-cell masks are drawn up front from per-cell hashes so the
+    /// fault set is a pure function of `(config.seed, salt)`.
+    pub fn new(cfg: &FaultConfig, salt: u64, rows: usize, cols: usize) -> Self {
+        let mut stuck0 = vec![0u64; cols];
+        let mut stuck1 = vec![0u64; cols];
+        if cfg.stuck_per_mille > 0 {
+            for (c, (s0, s1)) in
+                stuck0.iter_mut().zip(stuck1.iter_mut()).enumerate()
+            {
+                for r in 0..rows {
+                    let h = mix64(
+                        cfg.seed
+                            ^ STUCK_SALT
+                            ^ salt.rotate_left(17)
+                            ^ ((c as u64) << 8)
+                            ^ r as u64,
+                    );
+                    if h % 1000 < cfg.stuck_per_mille as u64 {
+                        if h & (1 << 60) != 0 {
+                            *s1 |= 1 << r;
+                        } else {
+                            *s0 |= 1 << r;
+                        }
+                    }
+                }
+            }
+        }
+        Self {
+            seed: cfg.seed,
+            salt,
+            transient_pct: cfg.transient_pct,
+            max_retries: cfg.max_retries,
+            stuck0,
+            stuck1,
+            retired: vec![0u64; cols.div_ceil(64)],
+            any_retired: false,
+            retired_cols: 0,
+            lost_words: 0,
+            transient_faults: 0,
+            stuck_write_faults: 0,
+            retry_writes: 0,
+        }
+    }
+
+    /// Stuck-at-0 row mask of `col`.
+    #[inline]
+    pub fn stuck0(&self, col: usize) -> u64 {
+        self.stuck0[col]
+    }
+
+    /// Stuck-at-1 row mask of `col`.
+    #[inline]
+    pub fn stuck1(&self, col: usize) -> u64 {
+        self.stuck1[col]
+    }
+
+    /// What the array would hold after writing `word` to `col` —
+    /// stuck-at cells override the driven value.
+    #[inline]
+    pub fn effective(&self, col: usize, word: u64) -> u64 {
+        (word | self.stuck1[col]) & !self.stuck0[col]
+    }
+
+    /// Stateless transient-failure draw for write-sequence `seq` of
+    /// `col`. Each retry attempt advances `seq` (the array's per-column
+    /// write counter), so redraws are independent yet reproducible.
+    #[inline]
+    pub fn transient_hit(&self, col: usize, seq: u64) -> bool {
+        if self.transient_pct <= 0.0 {
+            return false;
+        }
+        let h = mix64(
+            self.seed
+                ^ TRANSIENT_SALT
+                ^ self.salt.rotate_left(29)
+                ^ ((col as u64) << 20)
+                ^ seq,
+        );
+        let draw = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        draw * 100.0 < self.transient_pct
+    }
+
+    /// Rewrite-retry ladder depth.
+    #[inline]
+    pub fn max_retries(&self) -> u32 {
+        self.max_retries
+    }
+
+    #[inline]
+    pub fn is_retired(&self, col: usize) -> bool {
+        self.retired[col / 64] & (1 << (col % 64)) != 0
+    }
+
+    /// Any column retired yet? Gates the search-path masking so a
+    /// plane with no retirements costs nothing on the sweep.
+    #[inline]
+    pub fn any_retired(&self) -> bool {
+        self.any_retired
+    }
+
+    /// Live-column mask for the bitmap word covering columns
+    /// `[64w, 64w+64)`: bit set = column still in service.
+    #[inline]
+    pub fn live_word(&self, w: usize) -> u64 {
+        !self.retired[w]
+    }
+
+    /// Mark `col` retired. The caller clears the column's functional
+    /// state; `lost` says a nonzero intended word could not be stored.
+    pub fn retire(&mut self, col: usize, lost: bool) {
+        debug_assert!(!self.is_retired(col));
+        self.retired[col / 64] |= 1 << (col % 64);
+        self.any_retired = true;
+        self.retired_cols += 1;
+        if lost {
+            self.lost_words += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_disabled() {
+        assert!(!FaultConfig::default().enabled());
+        let armed = FaultConfig { transient_pct: 0.5, ..Default::default() };
+        assert!(armed.enabled());
+    }
+
+    #[test]
+    fn stuck_masks_are_deterministic_and_salted() {
+        let cfg = FaultConfig {
+            seed: 99,
+            stuck_per_mille: 50,
+            ..Default::default()
+        };
+        let a = FaultPlane::new(&cfg, 7, 64, 512);
+        let b = FaultPlane::new(&cfg, 7, 64, 512);
+        let c = FaultPlane::new(&cfg, 8, 64, 512);
+        assert_eq!(a.stuck0, b.stuck0);
+        assert_eq!(a.stuck1, b.stuck1);
+        assert_ne!(
+            (a.stuck0, a.stuck1),
+            (c.stuck0.clone(), c.stuck1.clone()),
+            "different salts must draw different fault sets"
+        );
+        // no cell is stuck both ways
+        for (s0, s1) in c.stuck0.iter().zip(c.stuck1.iter()) {
+            assert_eq!(s0 & s1, 0);
+        }
+    }
+
+    #[test]
+    fn stuck_density_tracks_knob() {
+        let cfg = FaultConfig {
+            seed: 3,
+            stuck_per_mille: 100, // 10%
+            ..Default::default()
+        };
+        let p = FaultPlane::new(&cfg, 0, 64, 512);
+        let stuck: u32 = p
+            .stuck0
+            .iter()
+            .zip(p.stuck1.iter())
+            .map(|(a, b)| (a | b).count_ones())
+            .sum();
+        let frac = stuck as f64 / (64.0 * 512.0);
+        assert!((0.07..0.13).contains(&frac), "stuck fraction {frac}");
+    }
+
+    #[test]
+    fn transient_draws_are_stateless_and_rate_accurate() {
+        let cfg = FaultConfig {
+            seed: 11,
+            transient_pct: 5.0,
+            max_retries: 2,
+            ..Default::default()
+        };
+        let p = FaultPlane::new(&cfg, 1, 64, 512);
+        let mut hits = 0u32;
+        for seq in 0..20_000u64 {
+            assert_eq!(p.transient_hit(3, seq), p.transient_hit(3, seq));
+            if p.transient_hit(3, seq) {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / 20_000.0;
+        assert!((0.03..0.07).contains(&rate), "transient rate {rate}");
+    }
+
+    #[test]
+    fn retire_sets_bitmap_and_counters() {
+        let cfg =
+            FaultConfig { seed: 1, transient_pct: 1.0, ..Default::default() };
+        let mut p = FaultPlane::new(&cfg, 0, 16, 128);
+        assert!(!p.any_retired());
+        p.retire(70, true);
+        assert!(p.is_retired(70));
+        assert!(!p.is_retired(69));
+        assert!(p.any_retired());
+        assert_eq!(p.retired_cols, 1);
+        assert_eq!(p.lost_words, 1);
+        assert_eq!(p.live_word(1) & (1 << 6), 0);
+        assert_eq!(p.live_word(0), !0);
+    }
+}

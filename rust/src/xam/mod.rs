@@ -4,10 +4,12 @@
 
 pub mod array;
 pub mod bank;
+pub mod faults;
 pub mod simd;
 pub mod superset;
 
 pub use array::{SearchOutcome, SearchScratch, XamArray};
+pub use faults::{ColWrite, FaultConfig, FaultPlane};
 pub use simd::Isa;
 pub use bank::{Bank, SenseMode};
 pub use superset::{PortMode, Superset};

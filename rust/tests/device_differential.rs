@@ -20,7 +20,7 @@ use monarch::sim::System;
 use monarch::util::prop::{check, Gen};
 use monarch::coordinator::{self, Budget};
 use monarch::service::{run_service, ServiceConfig};
-use monarch::xam::Isa;
+use monarch::xam::{FaultConfig, Isa};
 use monarch::workloads::hashing::{
     run_ycsb, run_ycsb_adaptive, ReconfigPolicy, YcsbConfig,
 };
@@ -301,6 +301,7 @@ fn hash_report_identical_across_builder_and_direct_construction() {
         capacity_bytes: 0,
         geom,
         cam_sets,
+        faults: FaultConfig::default(),
     };
     let mut via_registry = DeviceBuilder::new().build_assoc(&spec);
     let mut direct = assoc::monarch(geom, cam_sets);
@@ -498,6 +499,7 @@ fn sharded_registry_preset_builds_and_runs() {
         capacity_bytes: 0,
         geom: small_geom(),
         cam_sets,
+        faults: FaultConfig::default(),
     };
     let mut dev = DeviceBuilder::new().build_assoc(&spec);
     assert_eq!(dev.label(), "Monarch(S=4)");
@@ -933,6 +935,7 @@ fn bitsliced_engine_bit_identical_to_scalar_flat_path() {
                 capacity_bytes: 1 << 18,
                 geom: small_geom(),
                 cam_sets,
+                faults: FaultConfig::default(),
             };
             let mut dev = DeviceBuilder::new().build_assoc(&spec);
             dev.force_scalar_eval(scalar);
@@ -1054,6 +1057,7 @@ fn every_isa_tier_bit_identical_flat_path() {
                 capacity_bytes: 1 << 18,
                 geom: small_geom(),
                 cam_sets,
+                faults: FaultConfig::default(),
             };
             let mut dev = DeviceBuilder::new().build_assoc(&spec);
             dev.force_isa(tier);
@@ -1153,6 +1157,7 @@ fn every_isa_tier_preserves_service_fingerprint() {
             capacity_bytes: 0,
             geom,
             cam_sets: meta.num_sets as usize,
+            faults: FaultConfig::default(),
         };
         let mut dev = DeviceBuilder::new().build_assoc(&spec);
         dev.force_isa(tier);
@@ -1316,6 +1321,145 @@ fn cachewave_monarch_scales_while_scalar_fallback_stays_flat() {
             p.lookups_per_eval, 1.0,
             "scalar fallback cannot aggregate (cap={})",
             p.wave_cap
+        );
+    }
+}
+
+// ---- fault injection (graceful degradation) -------------------------
+
+#[test]
+fn disabled_fault_config_is_bit_identical_to_unarmed() {
+    // The zero-cost pin: explicitly arming a device with the default
+    // (disabled) FaultConfig must leave every observable — completion
+    // cycles, energy bits, hit columns — bit-identical to never
+    // touching the fault surface at all, on both the unsharded and
+    // sharded backends.
+    let cam_sets = 8usize;
+    for kind in [
+        InPackageKind::Monarch { m: 3 },
+        InPackageKind::MonarchSharded { shards: 4, m: 3 },
+    ] {
+        let run = |arm: bool| {
+            let spec = AssocSpec {
+                kind,
+                capacity_bytes: 0,
+                geom: small_geom(),
+                cam_sets,
+                faults: FaultConfig::default(),
+            };
+            let mut dev = DeviceBuilder::new().build_assoc(&spec);
+            if arm {
+                dev.set_fault_config(FaultConfig::default());
+            }
+            let out = drive_sequence(dev.as_mut(), cam_sets, 0xFA17);
+            let clean = dev.fault_totals().is_none_or(|t| !t.any());
+            (out, clean)
+        };
+        let (armed, armed_clean) = run(true);
+        let (unarmed, unarmed_clean) = run(false);
+        assert_eq!(
+            armed, unarmed,
+            "{kind:?}: arming a disabled FaultConfig changed behaviour"
+        );
+        assert!(
+            armed_clean && unarmed_clean,
+            "{kind:?}: fault totals nonzero without injection"
+        );
+    }
+}
+
+#[test]
+fn fault_campaign_degrades_ycsb_without_corruption() {
+    // Stuck-at + transient injection under the YCSB driver: the
+    // faulted run must complete every op with IDENTICAL functional
+    // results — the software table is the source of truth, and a lost
+    // CAM word may only cost time (the lookup falls through to the
+    // main-memory image), never corrupt an answer — while the damage
+    // stays visible in the fault totals.
+    let cfg = YcsbConfig {
+        table_pow2: 12,
+        window: 32,
+        ops: 3000,
+        ..Default::default()
+    };
+    let cam_sets = (1usize << cfg.table_pow2) / 512 + 1;
+    let run = |faults: FaultConfig| {
+        let spec = AssocSpec {
+            kind: InPackageKind::MonarchSharded { shards: 4, m: 3 },
+            capacity_bytes: 0,
+            geom: small_geom(),
+            cam_sets,
+            faults,
+        };
+        let mut dev = DeviceBuilder::new().build_assoc(&spec);
+        let r = run_ycsb(dev.as_mut(), &cfg);
+        (r, dev.fault_totals().expect("sharded Monarch tracks totals"))
+    };
+    let (clean, ct) = run(FaultConfig::default());
+    assert!(!ct.any(), "clean run reports damage: {ct:?}");
+    let (faulted, ft) = run(FaultConfig {
+        seed: 11,
+        stuck_per_mille: 50,
+        transient_pct: 10.0,
+        max_retries: 1,
+        ..FaultConfig::default()
+    });
+    assert_eq!(faulted.ops, clean.ops, "faulted run dropped ops");
+    assert!(faulted.cycles > 0);
+    assert!(ft.any(), "campaign injected nothing");
+    assert!(
+        ft.retired_columns > 0,
+        "heavy campaign retired no columns: {ft:?}"
+    );
+    assert_eq!(
+        faulted.hits, clean.hits,
+        "faulted run changed functional results — fault injection must \
+         degrade timing and capacity, never answers"
+    );
+}
+
+#[test]
+fn every_isa_tier_preserves_faulted_service_fingerprint() {
+    // Fault draws are pure functions of (seed, coordinates), never of
+    // the engine evaluating the search: an armed campaign must yield
+    // the same fingerprint AND the same fault totals on every ISA tier.
+    let budget = Budget { hash_ops: 900, ..Budget::quick() };
+    let (meta, reqs) = coordinator::service_traffic(&budget, 2.0);
+    let geom = MonarchGeom::FULL.scaled(budget.scale * 4.0);
+    let faults = FaultConfig {
+        seed: 7,
+        stuck_per_mille: 20,
+        transient_pct: 5.0,
+        max_retries: 2,
+        ..FaultConfig::default()
+    };
+    let run = |tier: Isa| {
+        let spec = AssocSpec {
+            kind: InPackageKind::MonarchSharded { shards: 4, m: 3 },
+            capacity_bytes: 0,
+            geom,
+            cam_sets: meta.num_sets as usize,
+            faults,
+        };
+        let mut dev = DeviceBuilder::new().build_assoc(&spec);
+        dev.force_isa(tier);
+        run_service(dev.as_mut(), &ServiceConfig::default(), &meta, &reqs)
+    };
+    let s = run(Isa::Scalar);
+    assert!(
+        s.fault_totals.expect("sharded Monarch tracks totals").any(),
+        "campaign injected nothing at this scale"
+    );
+    for tier in Isa::supported_tiers() {
+        let r = run(tier);
+        assert_eq!(
+            r.modeled_fingerprint(),
+            s.modeled_fingerprint(),
+            "faulted service fingerprint isa={tier}"
+        );
+        assert_eq!(
+            r.fault_totals, s.fault_totals,
+            "fault totals diverged isa={tier}"
         );
     }
 }

@@ -9,12 +9,12 @@ use monarch::config::WearConfig;
 use monarch::monarch::alloc::{
     self, space_of, Allocator, Region, Space,
 };
-use monarch::monarch::wear::{MwwWindow, Offsets, WearLeveler};
+use monarch::monarch::wear::{Endure, MwwWindow, Offsets, WearLeveler};
 use monarch::prop_assert;
 use monarch::util::prop::{check, Gen};
 use monarch::workloads::hashing::{Hopscotch, InsertOutcome};
 use monarch::xam::superset::{diagonal_select, diagonal_set};
-use monarch::xam::{Isa, SearchScratch, XamArray};
+use monarch::xam::{ColWrite, FaultConfig, Isa, SearchScratch, XamArray};
 
 #[test]
 fn prop_remap_is_bijective() {
@@ -602,6 +602,264 @@ fn prop_hybrid_boundary_migration_preserves_t_mww_locks() {
         prop_assert!(
             h.ram_access(0, true, later).is_some(),
             "expired window must accept writes again"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fault_plane_deterministic_across_engines_and_tiers() {
+    // The same campaign seed + the same op stream must produce the
+    // identical fault set, counters, retired bitmap, and search
+    // results no matter which engine evaluates the searches (scalar
+    // per-column, bit-sliced, every supported SIMD tier): fault draws
+    // are pure functions of (seed, salt, col, row/seq), never of the
+    // evaluation order. Worker-count determinism is pinned end-to-end
+    // by the fault_tolerance bench and the service differentials.
+    // Also pins the core invariant on every step: a checked write
+    // either stores exactly the intended word, or the column is
+    // retired, zeroed, and never serves a match again.
+    check("fault_plane_determinism", 20, |g: &mut Gen| {
+        let rows = 1 + g.int(64).min(63);
+        let cols = 1 + g.int(300);
+        let row_mask =
+            if rows == 64 { !0u64 } else { (1u64 << rows) - 1 };
+        let mut cfg = FaultConfig {
+            seed: g.u64(),
+            stuck_per_mille: [0, 5, 50][g.int(3)],
+            transient_pct: [0.0, 2.0, 15.0][g.int(3)],
+            max_retries: g.int(3) as u32,
+            ..FaultConfig::default()
+        };
+        if !cfg.enabled() {
+            cfg.transient_pct = 2.0;
+        }
+        let n = 40 + g.int(160);
+        let ops: Vec<(usize, u64)> = (0..n)
+            .map(|_| (g.int(cols).min(cols - 1), g.u64()))
+            .collect();
+        // every step's observables: the ColWrite outcome, the column
+        // image after it, its retired flag, and a whole-array search
+        // for the word just written
+        type Step = (ColWrite, u64, bool, Option<usize>);
+        let run = |scalar: bool, isa: Option<Isa>| -> (
+            Vec<Step>,
+            [u64; 5],
+            Vec<bool>,
+        ) {
+            let mut a = XamArray::new(rows, cols);
+            a.set_fault_plane(&cfg, 3);
+            if scalar {
+                a.force_scalar(true);
+            }
+            if let Some(t) = isa {
+                a.force_isa(t);
+            }
+            let steps = ops
+                .iter()
+                .map(|&(col, word)| {
+                    let w = a.write_col_checked(col, word);
+                    (
+                        w,
+                        a.read_col(col),
+                        a.is_col_retired(col),
+                        a.search_first(word, !0),
+                    )
+                })
+                .collect();
+            let p = a.fault_plane().expect("armed plane stays attached");
+            (
+                steps,
+                [
+                    p.retired_cols,
+                    p.lost_words,
+                    p.transient_faults,
+                    p.stuck_write_faults,
+                    p.retry_writes,
+                ],
+                (0..cols).map(|c| a.is_col_retired(c)).collect(),
+            )
+        };
+        let base = run(true, None);
+        for (i, &(w, img, retired, hit)) in base.0.iter().enumerate() {
+            let (col, word) = ops[i];
+            if w.stored {
+                prop_assert!(
+                    img == word & row_mask,
+                    "op {i}: stored but col {col} holds {img:#x} not \
+                     {:#x}",
+                    word & row_mask
+                );
+            } else {
+                prop_assert!(
+                    retired && img == 0,
+                    "op {i}: unstored col {col} must be retired and \
+                     zeroed (retired={retired}, img={img:#x})"
+                );
+            }
+            if let Some(h) = hit {
+                prop_assert!(
+                    !base.2[h],
+                    "op {i}: search returned retired column {h}"
+                );
+            }
+        }
+        let replay = run(true, None);
+        prop_assert!(
+            replay == base,
+            "same seed + stream must replay bit-identically"
+        );
+        let bitsliced = run(false, None);
+        prop_assert!(
+            bitsliced == base,
+            "bit-sliced engine diverged from scalar under faults"
+        );
+        for tier in Isa::supported_tiers() {
+            let tiered = run(false, Some(tier));
+            prop_assert!(
+                tiered == base,
+                "isa={tier} diverged from scalar under faults"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_endurance_remap_invariants() {
+    // The retire->remap->degrade escalation at superset granularity:
+    // a degraded superset sheds every later write (never silently
+    // accepts one), no spare ever serves two supersets at once (each
+    // remap consumes a fresh spare from the pool, ids strictly
+    // increasing), and the pool is never overdrawn.
+    check("endurance_remap", 30, |g: &mut Gen| {
+        let ss = 2 + g.int(16);
+        let threshold = 20 + g.u64() % 200;
+        let spares = g.int(6) as u32;
+        let cfg = WearConfig {
+            wc_limit: u64::MAX,
+            dc_limit: u64::MAX,
+            wr_shift: 63,
+            ..WearConfig::default_m(4)
+        };
+        let mut wl = WearLeveler::new(cfg, ss, u64::MAX);
+        wl.set_endurance(threshold, spares);
+        let mut degraded = vec![false; ss];
+        for i in 0..500 + g.int(4000) {
+            let s = g.int(ss);
+            match wl.endure(s) {
+                Endure::Blocked => prop_assert!(
+                    degraded[s],
+                    "write {i}: blocked a live superset {s}"
+                ),
+                Endure::JustDegraded => {
+                    prop_assert!(
+                        !degraded[s],
+                        "write {i}: superset {s} degraded twice"
+                    );
+                    degraded[s] = true;
+                }
+                Endure::Remapped => prop_assert!(
+                    !degraded[s],
+                    "write {i}: remapped degraded superset {s}"
+                ),
+                Endure::Ok => prop_assert!(
+                    !degraded[s],
+                    "write {i}: degraded superset {s} accepted a write"
+                ),
+            }
+        }
+        prop_assert!(
+            wl.remap_log.len() as u32 == wl.spares_used(),
+            "remap log {} != spares used {}",
+            wl.remap_log.len(),
+            wl.spares_used()
+        );
+        prop_assert!(
+            wl.spares_used() <= spares,
+            "spare pool overdrawn: {} > {spares}",
+            wl.spares_used()
+        );
+        for (i, &(s, id)) in wl.remap_log.iter().enumerate() {
+            prop_assert!(
+                id == i as u32 + 1,
+                "spare id {id} reused or skipped at remap {i}"
+            );
+            prop_assert!(s < ss, "remap of out-of-range superset {s}");
+        }
+        for s in 0..ss {
+            prop_assert!(
+                wl.is_degraded(s) == degraded[s],
+                "degraded flag diverged at superset {s}"
+            );
+            if degraded[s] {
+                prop_assert!(
+                    wl.endure(s) == Endure::Blocked,
+                    "degraded superset {s} accepted a write"
+                );
+            }
+        }
+        prop_assert!(
+            wl.degraded_count() ==
+                degraded.iter().filter(|&&d| d).count() as u64,
+            "degraded count disagrees with the model"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wear_history_survives_endurance_remap() {
+    // Remapping a superset onto a fresh spare replaces its cells, not
+    // its controller state: the endurance budget resets (new cells)
+    // but the t_MWW thermal lock, the global write counter, and window
+    // expiry behave exactly as if no remap had happened.
+    check("wear_survives_remap", 10, |g: &mut Gen| {
+        let cfg = WearConfig {
+            wc_limit: u64::MAX,
+            dc_limit: u64::MAX,
+            wr_shift: 63,
+            ..WearConfig::default_m(1)
+        };
+        let window = 1_000_000u64;
+        let mut wl = WearLeveler::new(cfg, 4, window);
+        wl.set_endurance(64, 2);
+        // exhaust superset 0's t_MWW budget (m=1: 512 block writes)
+        let mut now = 1u64;
+        for i in 0..512u64 {
+            let (ok, _) = wl.on_write(0, g.int(2) == 0, now);
+            prop_assert!(ok, "write {i} blocked before the budget ran out");
+            now += 1;
+        }
+        prop_assert!(
+            wl.locked(0, now),
+            "exhausted budget must lock the window"
+        );
+        let wc = wl.write_count();
+        // now push it over the endurance threshold -> remap to a spare
+        let mut remapped = false;
+        for _ in 0..64 {
+            if wl.endure(0) == Endure::Remapped {
+                remapped = true;
+                break;
+            }
+        }
+        prop_assert!(remapped, "endurance threshold never crossed");
+        prop_assert!(
+            wl.cum_writes(0) == 0,
+            "endurance budget must reset on the fresh spare"
+        );
+        prop_assert!(
+            wl.locked(0, now),
+            "t_MWW lock lost across the endurance remap"
+        );
+        prop_assert!(
+            wl.write_count() == wc,
+            "remap must not invent block writes"
+        );
+        prop_assert!(
+            !wl.locked(0, now + window),
+            "window expiry must still unlock after the remap"
         );
         Ok(())
     });

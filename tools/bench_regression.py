@@ -21,6 +21,18 @@ Five modes, all exiting non-zero on failure:
   --replay-check JSON...      every file's summary rows must carry the
                               same modeled_fingerprint (the trace
                               record -> replay acceptance gate)
+  --faults SNAPSHOT FRESH [SERVE]
+                              the fault-injection sweep: the zero-fault
+                              campaign must report zero damage (and,
+                              when a fresh serve envelope is given,
+                              fingerprint-match its load-1.0 cell on
+                              the same system), hits must degrade
+                              monotonically as campaigns escalate, and
+                              every campaign must survive above the
+                              snapshot's survival floor
+  --selftest                  run the gate against synthetic envelopes
+                              in a temp dir (exercises the failure
+                              diagnostics end-to-end; used by CI)
 
 Snapshots are committed at the repository root. Two armed shapes:
 
@@ -60,10 +72,23 @@ def load(path):
     except OSError as e:
         fail(f"cannot read {path}: {e}")
     except ValueError as e:
-        fail(f"{path} is not valid JSON: {e}")
+        fail(f"{path} is not valid JSON (truncated emit?): {e}")
+    if not isinstance(doc, dict):
+        fail(f"{path}: top level is {type(doc).__name__}, expected the "
+             "JSON envelope {schema_version, experiment, rows: [...]}")
     if "schema_version" not in doc:
         fail(f"{path}: missing schema_version (pre-envelope emitter?)")
     return doc
+
+
+def rows_of(doc, path):
+    """The envelope's rows list, with a diagnostic instead of a
+    KeyError traceback when an emitter shipped a malformed document."""
+    rows = doc.get("rows")
+    if not isinstance(rows, list):
+        fail(f"{path}: missing 'rows' list — expected the JSON envelope "
+             "{schema_version, experiment, rows: [...]}")
+    return rows
 
 
 def is_bootstrap(doc, path):
@@ -77,13 +102,13 @@ def is_bootstrap(doc, path):
     return False
 
 
-def summaries(doc):
+def summaries(doc, path):
     """serve envelopes carry summary + cell rows; keep the summaries."""
-    return [r for r in doc["rows"] if r.get("row") == "summary"]
+    return [r for r in rows_of(doc, path) if r.get("row") == "summary"]
 
 
 def check_service_floors(snap, fresh, snap_path, fresh_path):
-    rows = summaries(fresh)
+    rows = summaries(fresh, fresh_path)
     need = snap.get("min_cells", 1)
     if len(rows) < need:
         fail(
@@ -113,7 +138,7 @@ def check_service_floors(snap, fresh, snap_path, fresh_path):
 def check_service(snap_path, fresh_path):
     snap, fresh = load(snap_path), load(fresh_path)
     fresh_by_key = {
-        (r["system"], r["load"]): r for r in summaries(fresh)
+        (r["system"], r["load"]): r for r in summaries(fresh, fresh_path)
     }
     if not fresh_by_key:
         fail(f"{fresh_path}: no summary rows")
@@ -122,7 +147,7 @@ def check_service(snap_path, fresh_path):
     if is_bootstrap(snap, snap_path):
         return
     compared = 0
-    for r in summaries(snap):
+    for r in summaries(snap, snap_path):
         key = (r["system"], r["load"])
         cur = fresh_by_key.get(key)
         if cur is None:
@@ -141,7 +166,7 @@ def check_service(snap_path, fresh_path):
 def xam_cells(doc, path):
     """xamsearch rows -> {(engine, workload): (ops_per_sec, isa)}."""
     out = {}
-    for r in doc["rows"]:
+    for r in rows_of(doc, path):
         out[(r["engine"], r["workload"])] = (
             r["ops_per_sec"],
             r.get("isa", "scalar"),
@@ -232,7 +257,7 @@ def hybrid_beats_extremes(doc, path):
     """The memcache acceptance gate: on some workload a strict split
     (0 < cache_vaults < total) wins on total cycles over BOTH extremes."""
     by_wl = {}
-    for r in doc["rows"]:
+    for r in rows_of(doc, path):
         by_wl.setdefault(r["workload"], []).append(r)
     for wl, rows in by_wl.items():
         def best(pred):
@@ -259,7 +284,7 @@ def check_memcache(snap_path, fresh_path):
         )
     if snap.get("mode") == "floors":
         need = snap.get("min_cells", 1)
-        rows = fresh["rows"]
+        rows = rows_of(fresh, fresh_path)
         if len(rows) < need:
             fail(
                 f"{fresh_path}: {len(rows)} sweep cells < floor of "
@@ -277,10 +302,11 @@ def check_memcache(snap_path, fresh_path):
     if is_bootstrap(snap, snap_path):
         return
     fresh_by_key = {
-        (r["workload"], r["cache_vaults"]): r for r in fresh["rows"]
+        (r["workload"], r["cache_vaults"]): r
+        for r in rows_of(fresh, fresh_path)
     }
     compared = 0
-    for r in snap["rows"]:
+    for r in rows_of(snap, snap_path):
         key = (r["workload"], r["cache_vaults"])
         cur = fresh_by_key.get(key)
         if cur is None:
@@ -302,7 +328,7 @@ def check_replay(paths):
         fail("--replay-check needs at least two serve envelopes")
     per_file = []
     for path in paths:
-        rows = summaries(load(path))
+        rows = summaries(load(path), path)
         if not rows:
             fail(f"{path}: no summary rows")
         by_system = {}
@@ -371,6 +397,260 @@ def check_scaling(fresh_path):
     )
 
 
+SURVIVAL_FLOOR_DEFAULT = 0.5
+
+
+def fault_campaigns(doc, path):
+    rows = [r for r in rows_of(doc, path) if r.get("row") == "campaign"]
+    if len(rows) < 2:
+        fail(
+            f"{path}: {len(rows)} campaign rows (expected the escalating "
+            "sweep that `monarch faults` / the fault_tolerance bench "
+            "emits)"
+        )
+    return rows
+
+
+def check_faults(snap_path, fresh_path, serve_path=None):
+    """BENCH_faults.json: graceful degradation under injected faults.
+
+    Machine-portable gates only (the model is deterministic, the host
+    is not): the zero-fault campaign must report zero damage and — when
+    a fresh serve envelope is supplied — fingerprint-match the serve
+    sweep's load-1.0 cell on the same system, proving the fault
+    machinery is zero-cost when disabled; every campaign serves the
+    identical offered stream and survives above the snapshot's floor;
+    hits degrade monotonically as campaigns escalate (1% slack for the
+    retry-ladder reshuffle of the transient draw stream); and the
+    heaviest campaign visibly retires columns."""
+    snap, fresh = load(snap_path), load(fresh_path)
+    rows = fault_campaigns(fresh, fresh_path)
+    if snap.get("mode") == "floors":
+        need = snap.get("min_cells", 2)
+        if len(rows) < need:
+            fail(
+                f"{fresh_path}: {len(rows)} campaign rows < floor of "
+                f"{need} (sweep shrank?)"
+            )
+    else:
+        is_bootstrap(snap, snap_path)
+    floor = snap.get("survival_floor", SURVIVAL_FLOOR_DEFAULT)
+    first = rows[0]
+    if first.get("campaign") != "none":
+        fail(
+            f"{fresh_path}: first campaign is {first.get('campaign')!r}, "
+            "expected the fault-free 'none' row"
+        )
+    for field in (
+        "retired_columns", "lost_words", "degraded_sets",
+        "transient_faults", "stuck_write_faults", "spares_used",
+    ):
+        if first.get(field, 0) != 0:
+            fail(
+                f"{fresh_path}: zero-fault campaign reports "
+                f"{field}={first.get(field)} (fault plane armed while "
+                "disabled?)"
+            )
+    if not first.get("modeled_fingerprint"):
+        fail(f"{fresh_path}: zero-fault campaign lost its "
+             "modeled_fingerprint")
+    offered = first.get("offered_ops", 0)
+    if not offered > 0:
+        fail(f"{fresh_path}: zero-fault campaign offered no ops")
+    slack = offered // 100 + 2
+    prev_hits = None
+    for r in rows:
+        label = r.get("campaign")
+        if r.get("offered_ops") != offered:
+            fail(
+                f"{fresh_path}: campaign {label!r} offered "
+                f"{r.get('offered_ops')} ops != {offered} (campaigns "
+                "must share one deterministic stream)"
+            )
+        done = r.get("completed_ops", 0)
+        if not 0 < done <= offered:
+            fail(
+                f"{fresh_path}: campaign {label!r} completed {done} of "
+                f"{offered} offered ops"
+            )
+        if r.get("survival", 0.0) < floor:
+            fail(
+                f"faults {label!r}: survival {r.get('survival', 0.0):.3f} "
+                f"under the floor {floor}"
+            )
+        hits = r.get("hits", 0)
+        if prev_hits is not None and hits > prev_hits + slack:
+            fail(
+                f"faults {label!r}: hits rose to {hits} from {prev_hits} "
+                "as the campaign escalated (degradation must be "
+                "monotone)"
+            )
+        prev_hits = hits
+    last = rows[-1]
+    if not last.get("retired_columns", 0) > 0:
+        fail(
+            f"{fresh_path}: heaviest campaign {last.get('campaign')!r} "
+            "retired no columns — injection is not reaching the write "
+            "path"
+        )
+    if serve_path:
+        serve = load(serve_path)
+        system = first.get("system")
+        fp = first.get("modeled_fingerprint")
+        cell = next(
+            (
+                r for r in summaries(serve, serve_path)
+                if r.get("system") == system and r.get("load") == 1.0
+            ),
+            None,
+        )
+        if cell is None:
+            fail(
+                f"{serve_path}: no load-1.0 summary cell for {system!r} "
+                "to pin the zero-fault fingerprint against"
+            )
+        if cell.get("modeled_fingerprint") != fp:
+            fail(
+                f"zero-fault fingerprint {fp} != serve sweep "
+                f"{system!r}@load-1.0 fingerprint "
+                f"{cell.get('modeled_fingerprint')} — an armed-but-"
+                "disabled fault plane changed the model"
+            )
+    pin = " + serve fingerprint pin" if serve_path else ""
+    print(
+        f"bench_regression: faults OK ({len(rows)} campaigns survive "
+        f">= {floor}, hits monotone, zero-fault row clean{pin})"
+    )
+
+
+def selftest():
+    """Exercise the gate end-to-end against synthetic envelopes: each
+    failure diagnostic is produced by an actual subprocess invocation
+    of this script, so the selftest covers argv parsing, load(), and
+    the check bodies exactly as CI runs them."""
+    import os
+    import subprocess
+    import tempfile
+
+    me = os.path.abspath(__file__)
+
+    def run(*args):
+        p = subprocess.run(
+            [sys.executable, me, *args],
+            stdout=subprocess.PIPE,
+            stderr=subprocess.STDOUT,
+            text=True,
+        )
+        return p.returncode, p.stdout
+
+    def expect(name, code, out, want_code, needle):
+        if code != want_code:
+            fail(
+                f"selftest {name}: exit {code}, wanted {want_code}; "
+                f"output:\n{out}"
+            )
+        if needle not in out:
+            fail(
+                f"selftest {name}: output is missing {needle!r}; "
+                f"output:\n{out}"
+            )
+        print(f"bench_regression: selftest case OK: {name}")
+
+    def campaign(label, hits, retired, survival):
+        return {
+            "row": "campaign",
+            "campaign": label,
+            "system": "Monarch(S=8)",
+            "offered_ops": 1000,
+            "completed_ops": int(1000 * survival),
+            "survival": survival,
+            "hits": hits,
+            "retired_columns": retired,
+            "lost_words": retired,
+            "degraded_sets": 0,
+            "transient_faults": retired,
+            "stuck_write_faults": retired,
+            "spares_used": 0,
+            "modeled_fingerprint": f"fp-{label}",
+        }
+
+    with tempfile.TemporaryDirectory() as td:
+
+        def write(name, doc):
+            path = os.path.join(td, name)
+            with open(path, "w") as f:
+                json.dump(doc, f)
+            return path
+
+        snap = write("snap.json", {
+            "schema_version": 1, "experiment": "faults",
+            "mode": "floors", "min_cells": 2, "survival_floor": 0.5,
+            "rows": [],
+        })
+        good = write("good.json", {
+            "schema_version": 1, "experiment": "faults", "rows": [
+                campaign("none", 400, 0, 1.0),
+                campaign("heavy", 300, 7, 0.8),
+            ],
+        })
+        serve = write("serve.json", {
+            "schema_version": 1, "experiment": "serve", "rows": [
+                {
+                    "row": "summary", "system": "Monarch(S=8)",
+                    "load": 1.0, "modeled_fingerprint": "fp-none",
+                },
+            ],
+        })
+        expect("pass", *run("--faults", snap, good, serve),
+               0, "faults OK")
+
+        missing = os.path.join(td, "never_emitted.json")
+        expect("missing-file", *run("--faults", snap, missing),
+               1, "cannot read")
+
+        truncated = os.path.join(td, "truncated.json")
+        with open(truncated, "w") as f:
+            f.write('{"schema_version": 1, "rows": [')
+        expect("truncated-json", *run("--faults", snap, truncated),
+               1, "not valid JSON")
+
+        norows = write("norows.json",
+                       {"schema_version": 1, "experiment": "faults"})
+        expect("missing-rows", *run("--faults", snap, norows),
+               1, "missing 'rows' list")
+
+        dirty = write("dirty.json", {
+            "schema_version": 1, "experiment": "faults", "rows": [
+                campaign("none", 400, 3, 1.0),
+                campaign("heavy", 300, 7, 0.8),
+            ],
+        })
+        expect("dirty-zero-fault", *run("--faults", snap, dirty),
+               1, "zero-fault campaign reports")
+
+        rising = write("rising.json", {
+            "schema_version": 1, "experiment": "faults", "rows": [
+                campaign("none", 300, 0, 1.0),
+                campaign("heavy", 900, 7, 0.8),
+            ],
+        })
+        expect("hits-rose", *run("--faults", snap, rising),
+               1, "hits rose")
+
+        drifted = write("drifted_serve.json", {
+            "schema_version": 1, "experiment": "serve", "rows": [
+                {
+                    "row": "summary", "system": "Monarch(S=8)",
+                    "load": 1.0, "modeled_fingerprint": "fp-elsewhere",
+                },
+            ],
+        })
+        expect("fingerprint-drift", *run("--faults", snap, good, drifted),
+               1, "changed the model")
+
+    print("bench_regression: selftest OK (7 scenarios)")
+
+
 def main(argv):
     if len(argv) >= 4 and argv[1] == "--service":
         check_service(argv[2], argv[3])
@@ -382,11 +662,17 @@ def main(argv):
         check_scaling(argv[2])
     elif len(argv) >= 2 and argv[1] == "--replay-check":
         check_replay(argv[2:])
+    elif len(argv) >= 4 and argv[1] == "--faults":
+        check_faults(argv[2], argv[3],
+                     argv[4] if len(argv) > 4 else None)
+    elif len(argv) >= 2 and argv[1] == "--selftest":
+        selftest()
     else:
         fail(
             "usage: bench_regression.py --service SNAPSHOT FRESH | "
             "--xamsearch SNAPSHOT FRESH | --memcache SNAPSHOT FRESH | "
-            "--scaling FRESH | --replay-check JSON JSON..."
+            "--scaling FRESH | --replay-check JSON JSON... | "
+            "--faults SNAPSHOT FRESH [SERVE] | --selftest"
         )
 
 
